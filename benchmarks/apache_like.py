@@ -1,0 +1,81 @@
+"""Apache-style serving — paper Fig. 13.
+
+Apache performs an mmap-read-munmap per request to stream file contents.
+The engine analogue: many short-prompt, short-output requests, each
+allocating its KV blocks at admission and freeing them at completion.
+Baseline fences once per completed request; FPR recycles the stream's
+blocks fence-free.  Runs the REAL model (reduced config) end to end.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import improvement, save
+from repro.configs import get_smoke
+from repro.models import transformer as tfm
+from repro.serving.engine import Engine
+
+
+from repro.core.shootdown import FenceCostModel
+
+#: serving-replica fence cost: the drain interrupts the one in-flight
+#: decode step mid-flight (½ step on average) + table rebroadcast
+COST = FenceCostModel(n_replicas=16, dispatch_depth=1, step_time_s=5e-3,
+                      table_bytes=1 << 20)
+STEP_S = 10e-3     # virtual decode-step time (devices overlap host work)
+
+
+def _run(fpr: bool, n_requests: int = 24, max_batch: int = 4):
+    cfg = get_smoke("granite-3-8b")
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    eng = Engine(cfg, params, num_blocks=96, max_batch=max_batch,
+                 max_seq_len=512, fpr_enabled=fpr, cost_model=COST)
+    rng = np.random.RandomState(7)
+    for i in range(n_requests):
+        prompt = rng.randint(1, cfg.vocab, size=24)
+        eng.submit(prompt, max_new_tokens=8)
+    eng.run()
+    return eng
+
+
+def throughput(stats: dict) -> float:
+    """tokens / (virtual step time + modeled fence drains) — wall time on
+    one CPU core is dominated by the model math, which on the real target
+    overlaps; the fence drain does not (it is the shootdown wait)."""
+    return stats["tokens"] / (stats["steps"] * STEP_S
+                              + stats["fence"]["modeled_s"])
+
+
+def run() -> dict:
+    base = _run(False)
+    fpr = _run(True)
+    sb, sf = base.stats(), fpr.stats()
+    tb, tf = throughput(sb), throughput(sf)
+    out = {
+        "requests": len(base.sched.done),
+        "fences_base": sb["fence"]["fences"],
+        "fences_fpr": sf["fence"]["fences"],
+        "skipped_at_free_fpr": sf["fence"]["skipped_at_free"],
+        "recycled_hits_fpr": sf["fpr"]["recycled_hits"],
+        "tokens": sf["tokens"],
+        "thr_base": tb, "thr_fpr": tf,
+        "improvement_pct": improvement(tf, tb),
+        "identical_tokens": [r.generated for r in sorted(
+            base.sched.done, key=lambda r: r.rid)] == [
+            r.generated for r in sorted(fpr.sched.done,
+                                        key=lambda r: r.rid)],
+    }
+    save("apache_like", out)
+    print(f"  apache-like: +{out['improvement_pct']:.1f}% throughput "
+          f"(paper: 22–28%), fences {out['fences_base']}→"
+          f"{out['fences_fpr']}, identical tokens: "
+          f"{out['identical_tokens']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

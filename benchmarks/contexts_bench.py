@@ -1,0 +1,63 @@
+"""Extended recycling contexts — paper §IV-C2 + §IV-C5 version elision.
+
+Two request streams alternate bursts on the SAME worker free list, so
+every allocation sees the *other* stream's just-freed blocks:
+
+  per-stream contexts  → every cross-stream reuse is a context exit
+                         (fence at allocation, unless version-elided)
+  shared tenant context → reuse stays in-context: zero fences
+
+This is the paper's trade: widening the context from process to tenant
+removes the remaining fences at the cost of inter-stream trust.  The
+version elision (§IV-C5) shows up in the per-stream row: after the first
+exit fence bumps the epoch, later exits of blocks freed before it are
+elided.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import ALLOC_COST, FENCE_COST, save
+from repro.core.contexts import ContextScope, derive_context
+from repro.core.fpr import FprMemoryManager
+from repro.core.shootdown import FenceEngine
+
+
+def _alternating(scope: str, iters: int = 500, maps_per_burst: int = 4):
+    fences = FenceEngine(measure=False)
+    mgr = FprMemoryManager(256, num_workers=1, fence_engine=fences,
+                           fpr_enabled=True)
+    for it in range(iters):
+        stream = it % 2                       # alternate A / B bursts
+        if scope == "per_mapping":
+            ctx = derive_context(ContextScope.PER_MAPPING,
+                                 group_id=stream + 1, mapping_id=it % 7)
+        elif scope == "per_stream":
+            ctx = derive_context(ContextScope.PER_GROUP,
+                                 group_id=stream + 1)
+        else:                                  # shared tenant
+            ctx = derive_context(ContextScope.PER_TENANT, group_id=0,
+                                 tenant_id=42)
+        ms = [mgr.mmap(8, ctx) for _ in range(maps_per_burst)]
+        for m in ms:
+            mgr.munmap(m.mapping_id)
+    st = fences.stats
+    return {"scope": scope, "fences": st.fences,
+            "skipped": st.skipped_at_free,
+            "elided": st.elided_by_version}
+
+
+def run() -> dict:
+    rows = [_alternating(s) for s in
+            ("per_mapping", "per_stream", "shared_tenant")]
+    out = {"rows": rows}
+    save("contexts", out)
+    for r in rows:
+        print(f"  {r['scope']:>14s}: fences {r['fences']:5d}  "
+              f"skipped {r['skipped']:6d}  elided {r['elided']:5d}")
+    print("  (wider context ⇒ monotonically fewer fences, §IV-C2; "
+          "elision per §IV-C5)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

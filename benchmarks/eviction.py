@@ -1,0 +1,68 @@
+"""Eviction benchmarks — paper Fig. 14–17.
+
+Threads randomly read a mapping ≫ pool size; the watermark daemon evicts.
+Grid over compute factor CF × local buffer PG (Fig. 15), device sweep
+(Fig. 16-like) and scalability over thread count (Fig. 17).
+FPR defers recycling-context evictions to the min watermark and batches
+them under one fence (§IV-B).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (ALLOC_COST, DEVICES, FENCE_COST,
+                               improvement, save)
+from repro.serving.sim import SimConfig, eviction_sim
+
+
+def _run(*, fpr, cf=1.0, pg=0, threads=8, device="nullblk", iters=400):
+    cfg = SimConfig(num_blocks=512, mixed_workers=threads, iters=iters,
+                    fpr=fpr, compute_factor=cf, alloc_cost=1.0,
+                    fence_cost=FENCE_COST,
+                    storage_latency=DEVICES[device],
+                    in_kernel_frac=0.3 if DEVICES[device] > 1 else 0.0)
+    return eviction_sim(cfg, working_set_factor=6.0, pg_buffer=pg)
+
+
+def run() -> dict:
+    grid = []
+    for cf in (0.5, 1.0, 2.0, 4.0):
+        for pg in (0, 128):
+            base = _run(fpr=False, cf=cf, pg=pg)
+            fpr = _run(fpr=True, cf=cf, pg=pg)
+            grid.append({
+                "cf": cf, "pg": pg,
+                "thr_base": base.throughput(),
+                "thr_fpr": fpr.throughput(),
+                "improvement_pct": improvement(fpr.throughput(),
+                                               base.throughput()),
+                "fences_base": base.fences, "fences_fpr": fpr.fences,
+            })
+    devices = []
+    for dev in DEVICES:
+        base = _run(fpr=False, device=dev)
+        fpr = _run(fpr=True, device=dev)
+        devices.append({
+            "device": dev,
+            "improvement_pct": improvement(fpr.throughput(),
+                                           base.throughput()),
+        })
+    scaling = []
+    for threads in (4, 8, 16, 32, 64):
+        base = _run(fpr=False, threads=threads, iters=200)
+        fpr = _run(fpr=True, threads=threads, iters=200)
+        scaling.append({
+            "threads": threads,
+            "improvement_pct": improvement(fpr.throughput(),
+                                           base.throughput()),
+        })
+    out = {"cf_pg_grid": grid, "devices": devices, "scaling": scaling}
+    save("eviction", out)
+    best = max(grid, key=lambda r: r["improvement_pct"])
+    print(f"  eviction grid peak: +{best['improvement_pct']:.1f}% at "
+          f"CF={best['cf']} PG={best['pg']} (paper: up to 8.5%); "
+          f"fences {best['fences_base']}→{best['fences_fpr']}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

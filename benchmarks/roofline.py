@@ -1,0 +1,73 @@
+"""Roofline table from the dry-run artifacts (§Roofline deliverable).
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun)
+and renders the per-(arch × shape × mesh) three-term roofline with the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, and HBM fit.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS, save
+
+DRYRUN_DIR = os.path.join(RESULTS, "dryrun")
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:9.2f}"
+
+
+def table(cells: list[dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':6s} "
+           f"{'compute ms':>10s} {'memory ms':>10s} {'coll ms':>10s} "
+           f"{'bound':>10s} {'useful':>7s} {'GB/chip':>8s} {'fits':>5s}")
+    lines = [hdr, "-" * len(hdr)]
+    for c in cells:
+        rl = c["roofline"]
+        mesh = "multi" if c.get("multi_pod") else "pod"
+        useful = c.get("useful_flops_ratio")
+        peak = (c["memory"]["peak_bytes"]
+                - c.get("cpu_scatter_artifact_bytes", 0)) / 1e9
+        lines.append(
+            f"{c['arch']:22s} {c['shape']:12s} {mesh:6s} "
+            f"{fmt_ms(rl['compute_s'])} {fmt_ms(rl['memory_s'])} "
+            f"{fmt_ms(rl['collective_s'])} {rl['bottleneck']:>10s} "
+            f"{useful if useful is None else round(useful, 3)!s:>7s} "
+            f"{peak:8.2f} {'yes' if c.get('fits_hbm_16g') else 'NO':>5s}")
+    return "\n".join(lines)
+
+
+def run() -> dict:
+    cells = load_cells()
+    if not cells:
+        print("  (no dry-run artifacts yet — run python -m "
+              "repro.launch.dryrun --all --both-meshes)")
+        return {}
+    txt = table(cells)
+    print(txt)
+    summary = {
+        "cells": len(cells),
+        "bottleneck_counts": {},
+        "fits_all": all(c.get("fits_hbm_16g") for c in cells),
+    }
+    for c in cells:
+        b = c["roofline"]["bottleneck"]
+        summary["bottleneck_counts"][b] = (
+            summary["bottleneck_counts"].get(b, 0) + 1)
+    save("roofline_summary", {"summary": summary, "table": txt})
+    return summary
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Benchmark driver: one module per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-model] [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--skip-model", action="store_true",
+                    help="skip the real-model benchmarks (apache/ycsb)")
+    args = ap.parse_args()
+
+    from benchmarks import (apache_like, baseline_sweep, contexts_bench,
+                            device_latency, eviction, microbench, overhead,
+                            roofline, ycsb_kv)
+    suites = [
+        ("microbench (Fig. 6-11)", microbench.run),
+        ("device_latency (Fig. 12)", device_latency.run),
+        ("eviction (Fig. 14-17)", eviction.run),
+        ("contexts (§IV-C2)", contexts_bench.run),
+        ("overhead (Fig. 22)", overhead.run),
+        ("baseline_sweep (Fig. 23)", baseline_sweep.run),
+        ("apache_like (Fig. 13)", apache_like.run),
+        ("ycsb_kv (Fig. 18-21)", ycsb_kv.run),
+        ("roofline (§Roofline)", roofline.run),
+    ]
+    model_suites = {"apache_like (Fig. 13)", "ycsb_kv (Fig. 18-21)"}
+    failures = 0
+    for name, fn in suites:
+        if args.only and args.only not in name:
+            continue
+        if args.skip_model and name in model_suites:
+            continue
+        print(f"== {name} ==")
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:   # noqa: BLE001 — report and continue
+            failures += 1
+            print(f"  FAILED: {e!r}")
+        print(f"   ({time.time()-t0:.1f}s)\n")
+    if failures:
+        print(f"{failures} suite(s) FAILED")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

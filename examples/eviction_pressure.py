@@ -1,0 +1,52 @@
+"""Memory-pressure serving: the kswapd analogue under a tight block pool.
+
+    PYTHONPATH=src python examples/eviction_pressure.py
+
+Long prompts + a small pool force the watermark daemon to swap blocks to
+host and demand-fault them back — the paper's §V-B scenario.  With FPR,
+recycling-context blocks are exempt between the low and min watermarks
+and evicted in one huge batch (single fence) at min.
+"""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.eviction import Watermarks
+from repro.models.config import ModelConfig
+from repro.models import transformer as tfm
+from repro.serving.engine import Engine
+
+CFG = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                  n_kv_heads=2, d_ff=128, vocab=256, head_dim=16)
+
+
+def main():
+    params = tfm.init_params(jax.random.PRNGKey(0), CFG, jnp.float32)
+    rng = np.random.RandomState(5)
+    prompts = [rng.randint(1, CFG.vocab, size=140) for _ in range(6)]
+
+    for fpr in (False, True):
+        eng = Engine(CFG, params, num_blocks=64, max_batch=2,
+                     max_seq_len=384, fpr_enabled=fpr,
+                     watermarks=Watermarks(min_frac=0.05, low_frac=0.15,
+                                           high_frac=0.25))
+        for p in prompts:
+            eng.submit(p, max_new_tokens=8)
+        # inject pressure: evict the oldest block of each running request
+        eng.step()
+        for r in list(eng.sched.running.values()):
+            eng.cache.mgr.evict([(r.mapping.mapping_id, 0)],
+                                fpr_batch=fpr)
+        eng.run()
+        s = eng.stats()
+        mode = "FPR     " if fpr else "baseline"
+        print(f"{mode}: tokens={s['tokens']} fences={s['fence']['fences']}"
+              f" swap_out={s['fpr']['swap_outs']}"
+              f" swap_in={s['fpr']['swap_ins']}"
+              f" evict_reasons={s['fence']['by_reason']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end serving driver: batched requests over the FPR paged cache.
+
+    PYTHONPATH=src python examples/serve_fpr.py [--arch granite-3-8b]
+                                                [--requests 16] [--baseline]
+
+Runs a REAL reduced-config model (prefill + continuous-batching decode)
+twice — FPR on and off — and reports throughput, fence counts and that
+the generated tokens are identical.
+"""
+
+import argparse
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_smoke
+from repro.core.shootdown import FenceCostModel
+from repro.models import transformer as tfm
+from repro.serving.engine import Engine
+
+
+def run(arch: str, n_requests: int, fpr: bool, seed: int = 0):
+    cfg = get_smoke(arch)
+    params = tfm.init_params(jax.random.PRNGKey(seed), cfg, jnp.float32)
+    eng = Engine(cfg, params, num_blocks=128, max_batch=4,
+                 max_seq_len=512, fpr_enabled=fpr,
+                 cost_model=FenceCostModel(n_replicas=16, dispatch_depth=2,
+                                           step_time_s=10e-3))
+    rng = np.random.RandomState(42)
+    for _ in range(n_requests):
+        eng.submit(rng.randint(1, cfg.vocab, size=rng.randint(8, 48)),
+                   max_new_tokens=12)
+    eng.run()
+    return eng
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b", choices=ARCH_IDS)
+    ap.add_argument("--requests", type=int, default=16)
+    args = ap.parse_args()
+
+    print(f"serving {args.requests} requests on {args.arch} (reduced)")
+    results = {}
+    for fpr in (False, True):
+        eng = run(args.arch, args.requests, fpr)
+        s = eng.stats()
+        results[fpr] = (eng, s)
+        mode = "FPR     " if fpr else "baseline"
+        print(f"  {mode}: {s['tokens']} tokens in {s['steps']} steps; "
+              f"fences={s['fence']['fences']} "
+              f"skipped={s['fence']['skipped_at_free']} "
+              f"recycled={s['fpr']['recycled_hits']} "
+              f"fence_cost={s['fence']['modeled_s']*1e3:.1f}ms")
+    tok = lambda e: [r.generated for r in
+                     sorted(e.sched.done, key=lambda r: r.rid)]
+    same = tok(results[True][0]) == tok(results[False][0])
+    print(f"  identical tokens: {same}")
+    assert same
+
+
+if __name__ == "__main__":
+    main()

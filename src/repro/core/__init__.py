@@ -1,0 +1,29 @@
+"""FPR core — the paper's fast-page-recycling mechanism for paged KV caches.
+
+Public API:
+
+    FprMemoryManager   — allocator + tracking + fences + tables facade
+    FenceEngine        — coherence-fence (TLB-shootdown analogue) engine
+    WatermarkEvictor   — kswapd analogue with FPR batch eviction
+    RecyclingContext / ContextScope / ContextRegistry — §IV-C2 contexts
+"""
+
+from repro.core.allocator import BlockAllocator, BuddyAllocator, OutOfBlocksError
+from repro.core.block_table import (BlockTableStore, Mapping,
+                                    MonotonicIdAllocator, StaleMappingError)
+from repro.core.contexts import (ContextRegistry, ContextScope,
+                                 RecyclingContext, derive_context)
+from repro.core.eviction import KSWAPD_BATCH, WatermarkEvictor, Watermarks
+from repro.core.fpr import NOT_RESIDENT, SWAPPED, FprMemoryManager
+from repro.core.shootdown import FenceCostModel, FenceEngine, FenceStats
+from repro.core.tracking import FLAG_ALWAYS_FLUSH, MAX_CONTEXT_ID, BlockTracker
+
+__all__ = [
+    "BlockAllocator", "BuddyAllocator", "OutOfBlocksError",
+    "BlockTableStore", "Mapping", "MonotonicIdAllocator", "StaleMappingError",
+    "ContextRegistry", "ContextScope", "RecyclingContext", "derive_context",
+    "KSWAPD_BATCH", "WatermarkEvictor", "Watermarks",
+    "NOT_RESIDENT", "SWAPPED", "FprMemoryManager",
+    "FenceCostModel", "FenceEngine", "FenceStats",
+    "FLAG_ALWAYS_FLUSH", "MAX_CONTEXT_ID", "BlockTracker",
+]

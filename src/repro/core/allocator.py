@@ -1,0 +1,211 @@
+"""Physical-block allocator: buddy system + per-worker free lists.
+
+This reproduces the Linux allocation substrate the paper builds on (§II-C):
+
+* a global **buddy allocator** partitions the physical KV-block pool into
+  power-of-two runs; splits/merges propagate FPR tracking data (§IV-C4);
+* **per-worker free lists** serve order-0 (single-block) requests in a lock-free
+  fast path; a worker refills/spills in batches from/to the buddy allocator.
+
+The per-worker lists are *the reason recycling works*: back-to-back
+alloc→free→alloc cycles on one worker hand back exactly the same physical
+blocks, so an FPR context sees its own blocks again and no fence is needed.
+
+The allocator itself is policy-free: it never fences.  The FPR policy
+(tracking checks at allocation, version stamping at free) lives in
+``repro.core.fpr.FprMemoryManager``.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.tracking import BlockTracker
+
+
+class OutOfBlocksError(RuntimeError):
+    """The pool cannot serve the request (caller should evict and retry)."""
+
+
+@dataclass
+class BuddyStats:
+    splits: int = 0
+    merges: int = 0
+    slow_allocs: int = 0
+    fast_allocs: int = 0
+    refills: int = 0
+    spills: int = 0
+
+
+class BuddyAllocator:
+    """Binary-buddy allocator over ``num_blocks`` physical blocks.
+
+    Block addresses are plain indices into the physical KV cache.  The buddy
+    of block ``b`` at order ``o`` is ``b ^ (1 << o)``; merging yields the
+    lower-addressed head.  Tracking data propagation on split/merge follows
+    §IV-C4 via :class:`BlockTracker`.
+    """
+
+    def __init__(self, num_blocks: int, tracker: BlockTracker,
+                 max_order: int = 10):
+        self.num_blocks = num_blocks
+        self.tracker = tracker
+        self.max_order = max_order
+        self.free_lists: list[set[int]] = [set() for _ in range(max_order + 1)]
+        # order of the free run headed at block b (only valid while free)
+        self._free_order = np.full(num_blocks, -1, dtype=np.int8)
+        self.stats = BuddyStats()
+        self._seed(num_blocks)
+        self._free_count = num_blocks
+
+    def _seed(self, n: int) -> None:
+        """Greedily cover [0, n) with the largest aligned power-of-two runs."""
+        addr = 0
+        while addr < n:
+            order = min(self.max_order, (addr & -addr).bit_length() - 1
+                        if addr else self.max_order)
+            while (1 << order) > n - addr:
+                order -= 1
+            self.free_lists[order].add(addr)
+            self._free_order[addr] = order
+            addr += 1 << order
+
+    # ------------------------------------------------------------------ alloc
+    def alloc(self, order: int = 0) -> int:
+        """Allocate a 2**order contiguous run; returns the head block index."""
+        if order > self.max_order:
+            raise OutOfBlocksError(f"order {order} exceeds max {self.max_order}")
+        o = order
+        while o <= self.max_order and not self.free_lists[o]:
+            o += 1
+        if o > self.max_order:
+            raise OutOfBlocksError(
+                f"no free run of order {order} (free={self._free_count})")
+        head = min(self.free_lists[o])  # deterministic; favours low addresses
+        self.free_lists[o].discard(head)
+        self._free_order[head] = -1
+        # Split down to the requested order, propagating tracking data.
+        while o > order:
+            o -= 1
+            buddy = head + (1 << o)
+            self.tracker.split(head, head, buddy)       # §IV-C4
+            self.free_lists[o].add(buddy)
+            self._free_order[buddy] = o
+            self.stats.splits += 1
+        self.stats.slow_allocs += 1
+        self._free_count -= 1 << order
+        return head
+
+    # ------------------------------------------------------------------- free
+    def free(self, head: int, order: int = 0) -> None:
+        """Return a run to the allocator, merging buddies where possible."""
+        if not (0 <= head < self.num_blocks):
+            raise ValueError(f"block {head} out of range")
+        if self._free_order[head] != -1:
+            raise ValueError(f"double free of block {head}")
+        o = head_order = order
+        h = head
+        while o < self.max_order:
+            buddy = h ^ (1 << o)
+            if buddy >= self.num_blocks or self._free_order[buddy] != o:
+                break
+            # merge: remove buddy from its free list, keep the lower head
+            self.free_lists[o].discard(buddy)
+            self._free_order[buddy] = -1
+            lo, hi = (h, buddy) if h < buddy else (buddy, h)
+            self.tracker.merge(lo, hi, lo)              # §IV-C4
+            h = lo
+            o += 1
+            self.stats.merges += 1
+        self.free_lists[o].add(h)
+        self._free_order[h] = o
+        self._free_count += 1 << head_order
+
+    @property
+    def free_blocks(self) -> int:
+        return self._free_count
+
+
+@dataclass
+class WorkerFreeList:
+    """Per-worker order-0 cache (Linux per-CPU page list analogue)."""
+
+    worker_id: int
+    batch: int = 32          # refill/spill chunk (Linux pcp batch)
+    high: int = 96           # spill threshold
+    blocks: deque = field(default_factory=deque)
+
+
+class BlockAllocator:
+    """Facade: per-worker fast path over the global buddy slow path."""
+
+    def __init__(self, num_blocks: int, tracker: BlockTracker,
+                 num_workers: int = 1, max_order: int = 10,
+                 pcp_batch: int = 32, pcp_high: int = 96):
+        self.buddy = BuddyAllocator(num_blocks, tracker, max_order=max_order)
+        self.tracker = tracker
+        self.workers = [WorkerFreeList(w, batch=pcp_batch, high=pcp_high)
+                        for w in range(num_workers)]
+
+    # -- order-0 fast path ----------------------------------------------------
+    def alloc_block(self, worker_id: int = 0) -> int:
+        wl = self.workers[worker_id]
+        if not wl.blocks:
+            self._refill(wl)
+        self.buddy.stats.fast_allocs += 1
+        return wl.blocks.pop()          # LIFO: maximal recycling locality
+
+    def free_block(self, block: int, worker_id: int = 0) -> None:
+        wl = self.workers[worker_id]
+        wl.blocks.append(block)
+        if len(wl.blocks) > wl.high:
+            self._spill(wl)
+
+    def _refill(self, wl: WorkerFreeList) -> None:
+        self.buddy.stats.refills += 1
+        got = 0
+        for _ in range(wl.batch):
+            try:
+                wl.blocks.append(self.buddy.alloc(0))
+                got += 1
+            except OutOfBlocksError:
+                if got == 0:
+                    # last resort: steal from other workers' lists
+                    for other in self.workers:
+                        if other is not wl and other.blocks:
+                            wl.blocks.append(other.blocks.popleft())
+                            got += 1
+                            break
+                if got == 0:
+                    raise
+                break
+
+    def _spill(self, wl: WorkerFreeList) -> None:
+        self.buddy.stats.spills += 1
+        for _ in range(min(wl.batch, len(wl.blocks))):
+            self.buddy.free(wl.blocks.popleft(), 0)   # oldest blocks spill
+
+    # -- contiguous runs (prefill chunk allocations) ---------------------------
+    def alloc_run(self, order: int) -> int:
+        return self.buddy.alloc(order)
+
+    def free_run(self, head: int, order: int) -> None:
+        self.buddy.free(head, order)
+
+    # -- pool pressure ----------------------------------------------------------
+    @property
+    def free_blocks(self) -> int:
+        return self.buddy.free_blocks + sum(len(w.blocks) for w in self.workers)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.buddy.num_blocks
+
+    def drain_worker_lists(self) -> None:
+        """Spill every per-worker list back to the buddy (test/teardown aid)."""
+        for wl in self.workers:
+            while wl.blocks:
+                self.buddy.free(wl.blocks.popleft(), 0)

@@ -1,0 +1,164 @@
+"""Logical→physical block tables with monotonic logical IDs (ABA avoidance).
+
+Paper §IV-B: after an FPR munmap skips its shootdown, the kernel must never
+hand the *same virtual address* to a new mapping, or a core holding the stale
+TLB entry would silently read the wrong physical page (the ABA problem).  The
+fix is monotonic virtual-address assignment: the per-process VA search pointer
+only moves forward.
+
+Serving analogue: a replica (or an in-flight dispatched step) may hold a stale
+copy of a request's block table after blocks were freed without a fence.  We
+therefore never reuse **logical block IDs**: every mapping of a physical block
+gets a fresh, process-monotonic logical ID.  A stale table row refers to a
+logical ID that is *dead* — lookups through it are detectable, never silently
+aliased to a new mapping.  Forcing a specific logical ID (``MAP_FIXED``
+analogue) is allowed but triggers an immediate fence, matching §IV-B.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class MonotonicIdAllocator:
+    """Per-engine monotonic logical-ID source (the incrementing VA pointer)."""
+
+    def __init__(self, start: int = 1):
+        self._next = start
+
+    def take(self, n: int = 1) -> int:
+        first = self._next
+        self._next += n
+        return first
+
+    @property
+    def high_water(self) -> int:
+        return self._next
+
+
+@dataclass
+class Mapping:
+    """One mmap analogue: a contiguous run of logical blocks for a sequence."""
+
+    mapping_id: int
+    logical_start: int                 # first logical block id (monotonic)
+    physical: list[int] = field(default_factory=list)   # logical idx → phys block
+    ctx_id: int = 0                    # recycling context (0 = non-FPR)
+    fixed_address: bool = False        # MAP_FIXED analogue (forced logical ids)
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.physical)
+
+    def logical_ids(self) -> range:
+        return range(self.logical_start, self.logical_start + len(self.physical))
+
+
+class BlockTableStore:
+    """All live mappings of an engine + the device-facing packed tables.
+
+    The packed representation is what actually ships to devices: an
+    ``int32[max_seqs, max_blocks_per_seq]`` physical-index table plus a table
+    **epoch**.  A coherence fence bumps the epoch; replicas reject tables with
+    stale epochs (this is how the "flush" manifests device-side).
+    """
+
+    def __init__(self, max_seqs: int, max_blocks_per_seq: int):
+        self.max_seqs = max_seqs
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self.ids = MonotonicIdAllocator()
+        self._next_mapping = 1
+        self.mappings: dict[int, Mapping] = {}
+        self.table = np.full((max_seqs, max_blocks_per_seq), -1, dtype=np.int32)
+        self.slot_of: dict[int, int] = {}          # mapping_id → row slot
+        self._free_slots = list(range(max_seqs - 1, -1, -1))
+        self.epoch = 1                              # bumped by fences
+        self.stale_lookups_detected = 0
+
+    # ------------------------------------------------------------------ create
+    def create_mapping(self, physical: list[int], ctx_id: int = 0,
+                       fixed_logical: int | None = None) -> Mapping:
+        mid = self._next_mapping
+        self._next_mapping += 1
+        if fixed_logical is None:
+            start = self.ids.take(len(physical))
+            fixed = False
+        else:
+            # MAP_FIXED analogue: caller forces logical ids; §IV-B requires the
+            # caller (FprMemoryManager) to fence.  We still never move the
+            # monotonic pointer backwards.
+            start = fixed_logical
+            self.ids._next = max(self.ids._next, start + len(physical))
+            fixed = True
+        m = Mapping(mapping_id=mid, logical_start=start,
+                    physical=list(physical), ctx_id=ctx_id, fixed_address=fixed)
+        self.mappings[mid] = m
+        if not self._free_slots:
+            raise RuntimeError("block-table slots exhausted")
+        slot = self._free_slots.pop()
+        self.slot_of[mid] = slot
+        row = self.table[slot]
+        row[:] = -1
+        row[:len(physical)] = physical
+        return m
+
+    def extend_mapping(self, mapping_id: int, physical: list[int]) -> None:
+        """Grow a live mapping (decode appends blocks); fresh logical ids."""
+        m = self.mappings[mapping_id]
+        self.ids.take(len(physical))
+        base = m.num_blocks
+        m.physical.extend(physical)
+        if m.num_blocks > self.max_blocks_per_seq:
+            raise RuntimeError("mapping exceeds max_blocks_per_seq")
+        self.table[self.slot_of[mapping_id], base:m.num_blocks] = physical
+
+    # ----------------------------------------------------------------- destroy
+    def destroy_mapping(self, mapping_id: int) -> list[int]:
+        """munmap analogue: returns the physical blocks for the allocator."""
+        m = self.mappings.pop(mapping_id)
+        slot = self.slot_of.pop(mapping_id)
+        self.table[slot, :] = -1
+        self._free_slots.append(slot)
+        return m.physical
+
+    # ------------------------------------------------------------------ lookup
+    def lookup(self, mapping_id: int, logical_block: int,
+               table_epoch: int | None = None) -> int:
+        """Translate through a (possibly stale) table copy.
+
+        A lookup via a dead mapping or a stale epoch raises/flags rather than
+        silently aliasing — this is the testable ABA guarantee.
+        """
+        m = self.mappings.get(mapping_id)
+        if m is None:
+            self.stale_lookups_detected += 1
+            raise StaleMappingError(f"mapping {mapping_id} is dead")
+        if table_epoch is not None and table_epoch < self.epoch:
+            self.stale_lookups_detected += 1
+            raise StaleMappingError(
+                f"table epoch {table_epoch} < current {self.epoch}")
+        idx = logical_block - m.logical_start
+        if not (0 <= idx < m.num_blocks):
+            self.stale_lookups_detected += 1
+            raise StaleMappingError(
+                f"logical block {logical_block} outside mapping {mapping_id}")
+        return m.physical[idx]
+
+    # ------------------------------------------------------------------- fence
+    def bump_epoch(self) -> int:
+        self.epoch += 1
+        return self.epoch
+
+    def packed(self) -> tuple[np.ndarray, int]:
+        """The device-shippable table + its epoch."""
+        return self.table, self.epoch
+
+    @property
+    def live_mappings(self) -> int:
+        return len(self.mappings)
+
+
+class StaleMappingError(RuntimeError):
+    """A stale (post-free) translation was used — detected, not silent."""

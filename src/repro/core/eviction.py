@@ -1,0 +1,117 @@
+"""Watermark eviction daemon — the paper's §IV-B kswapd adaptation.
+
+Stock Linux (baseline): kswapd wakes when free memory drops below the *low*
+watermark and evicts LRU batches of 32 pages (one shootdown per batch) until
+free memory reaches the *high* watermark.
+
+FPR (§IV-B): pages in a recycling context are **exempt** while free memory is
+between *min* and *low*.  Only when free memory hits *min* does the daemon
+build one **huge batch** — enough to climb back to *high* — and send a
+**single merged fence** for all of it.  Version stamping before that fence
+makes every evicted block's later context-exit allocation fence-free (§IV-C5).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Iterable
+
+from repro.core.fpr import FprMemoryManager
+
+#: Linux kswapd LRU batch size (§II-A).
+KSWAPD_BATCH = 32
+
+# victim iterator yields (mapping_id, logical_idx, is_fpr) in LRU order
+VictimIter = Callable[[], Iterable[tuple[int, int, bool]]]
+
+
+@dataclass
+class Watermarks:
+    """Free-block thresholds as fractions of the pool."""
+
+    min_frac: float = 0.02
+    low_frac: float = 0.08
+    high_frac: float = 0.15
+
+    def resolve(self, num_blocks: int) -> tuple[int, int, int]:
+        return (max(1, int(self.min_frac * num_blocks)),
+                max(2, int(self.low_frac * num_blocks)),
+                max(3, int(self.high_frac * num_blocks)))
+
+
+@dataclass
+class EvictionStats:
+    wakeups: int = 0
+    normal_batches: int = 0
+    huge_batches: int = 0
+    blocks_evicted: int = 0
+    fpr_blocks_deferred: int = 0   # FPR blocks skipped in the low..min band
+
+
+class WatermarkEvictor:
+    """kswapd analogue driving :meth:`FprMemoryManager.evict`."""
+
+    def __init__(self, mgr: FprMemoryManager, victims: VictimIter,
+                 watermarks: Watermarks | None = None):
+        self.mgr = mgr
+        self.victims = victims
+        wm = watermarks or Watermarks()
+        self.wm_min, self.wm_low, self.wm_high = wm.resolve(mgr.num_blocks)
+        self.stats = EvictionStats()
+
+    def maybe_evict(self, *, worker: int = 0) -> int:
+        """Run one daemon pass; returns blocks evicted."""
+        free = self.mgr.free_blocks
+        if free > self.wm_low:
+            return 0
+        self.stats.wakeups += 1
+        if free > self.wm_min:
+            return self._normal_pass(worker)
+        return self._huge_pass(worker)
+
+    def _resident(self, mid: int, idx: int) -> bool:
+        """kswapd walks resident pages only; skip swapped/never-faulted."""
+        m = self.mgr.tables.mappings.get(mid)
+        return m is not None and m.physical[idx] >= 0
+
+    # -- low..min band: stock batches of 32, FPR pages exempt -----------------
+    def _normal_pass(self, worker: int) -> int:
+        target = self.wm_high - self.mgr.free_blocks
+        evicted = 0
+        batch: list[tuple[int, int]] = []
+        fpr_aware = self.mgr.fpr_enabled
+        for mid, idx, is_fpr in self.victims():
+            if evicted >= target:
+                break
+            if not self._resident(mid, idx):
+                continue
+            if fpr_aware and is_fpr:
+                self.stats.fpr_blocks_deferred += 1
+                continue                      # §IV-B exemption
+            batch.append((mid, idx))
+            if len(batch) == KSWAPD_BATCH:
+                evicted += self.mgr.evict(batch, fpr_batch=False, worker=worker)
+                self.stats.normal_batches += 1
+                batch = []
+        if batch:
+            evicted += self.mgr.evict(batch, fpr_batch=False, worker=worker)
+            self.stats.normal_batches += 1
+        self.stats.blocks_evicted += evicted
+        return evicted
+
+    # -- at/below min: one huge batch, one merged fence ------------------------
+    def _huge_pass(self, worker: int) -> int:
+        target = self.wm_high - self.mgr.free_blocks
+        batch: list[tuple[int, int]] = []
+        for mid, idx, _is_fpr in self.victims():
+            if len(batch) >= target:
+                break
+            if not self._resident(mid, idx):
+                continue
+            batch.append((mid, idx))
+        if not batch:
+            return 0
+        evicted = self.mgr.evict(batch, fpr_batch=True, worker=worker)
+        self.stats.huge_batches += 1
+        self.stats.blocks_evicted += evicted
+        return evicted

@@ -1,0 +1,242 @@
+"""FprMemoryManager — the paper's contribution as a composable module.
+
+Ties together the four mechanisms of §IV:
+
+  * tracking checks at **allocation** (fence moved from release → allocation),
+  * fence **skipping** at free for in-context blocks,
+  * **version/global-epoch elision** of context-exit fences (§IV-C5),
+  * monotonic logical IDs (ABA, §IV-B) + MAP_FIXED forced-fence rule,
+  * the baseline mode (``fpr_enabled=False``) reproduces stock Linux:
+    one batched fence per munmap / per eviction batch.
+
+The manager is engine-agnostic: the serving engine (repro/serving) and the
+microbenchmarks both drive it through the same mmap/munmap/touch/evict API.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.allocator import BlockAllocator, OutOfBlocksError
+from repro.core.block_table import BlockTableStore, Mapping
+from repro.core.contexts import RecyclingContext
+from repro.core.shootdown import FenceEngine
+from repro.core.tracking import FLAG_ALWAYS_FLUSH, BlockTracker
+
+SWAPPED = -2          # block-table marker: resident → swapped out
+NOT_RESIDENT = -1     # never faulted in
+
+
+@dataclass
+class FprStats:
+    allocs: int = 0
+    frees: int = 0
+    recycled_hits: int = 0        # allocation found its own context's block
+    clean_allocs: int = 0         # tracking id was 0
+    context_exits: int = 0        # blocks that left a recycling context
+    faults: int = 0               # touch() on non-resident block
+    swap_ins: int = 0
+    swap_outs: int = 0
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
+class FprMemoryManager:
+    """Paged-memory manager with fast page recycling."""
+
+    def __init__(self, num_blocks: int, *, num_workers: int = 1,
+                 max_seqs: int = 4096, max_blocks_per_seq: int = 8192,
+                 fence_engine: FenceEngine | None = None,
+                 fpr_enabled: bool = True,
+                 pcp_batch: int = 32, pcp_high: int = 96,
+                 max_order: int = 10):
+        self.tracker = BlockTracker(num_blocks)
+        self.alloc = BlockAllocator(num_blocks, self.tracker,
+                                    num_workers=num_workers,
+                                    pcp_batch=pcp_batch, pcp_high=pcp_high,
+                                    max_order=max_order)
+        self.tables = BlockTableStore(max_seqs, max_blocks_per_seq)
+        self.fences = fence_engine or FenceEngine()
+        # Every fence invalidates device-held tables: couple the epochs.
+        inner = self.fences.on_fence
+        def _on_fence(reason: str, n: int) -> None:
+            self.tables.bump_epoch()
+            if inner is not None:
+                inner(reason, n)
+        self.fences.on_fence = _on_fence
+        self.fences.measure = True
+        self.fpr_enabled = fpr_enabled
+        self.stats = FprStats()
+        #: optional swap hooks (serving attaches pool copy-out/copy-in —
+        #: the "storage device" behind eviction).  Signatures:
+        #:   on_swap_out(mapping_id, logical_idx, phys_block)
+        #:   on_swap_in(mapping_id, logical_idx, new_phys_block)
+        self.on_swap_out = None
+        self.on_swap_in = None
+
+    # ===================================================================== alloc
+    def _acquire(self, n: int, ctx_id: int, worker: int) -> list[int]:
+        """Allocate n order-0 blocks, applying FPR allocation-phase checks."""
+        blocks = [self.alloc.alloc_block(worker) for _ in range(n)]
+        self._allocation_checks(np.asarray(blocks, dtype=np.int64), ctx_id)
+        return blocks
+
+    def _allocation_checks(self, arr: np.ndarray, ctx_id: int) -> None:
+        """§IV-A: fence *now* iff a block is leaving a foreign recycling
+        context and no global fence intervened since it was freed (§IV-C5)."""
+        st, eng, tr = self.stats, self.fences, self.tracker
+        ids = tr.ctx_ids(arr)
+        vers = tr.versions(arr)
+        flags = tr.flags_of(arr)
+        cur_epoch = np.uint64(eng.epoch)
+
+        always = (flags & FLAG_ALWAYS_FLUSH) != 0
+        foreign = (ids != 0) & (ids != ctx_id)
+        must_fence = always | (foreign & (vers == cur_epoch))
+        elide = foreign & (vers != cur_epoch) & ~always
+        recycled = (ids != 0) & (ids == ctx_id)
+
+        st.allocs += len(arr)
+        st.recycled_hits += int(recycled.sum())
+        st.clean_allocs += int((ids == 0).sum())
+        st.context_exits += int(foreign.sum()) + int((always & ~foreign).sum())
+
+        if elide.any():
+            eng.note_version_elision(int(elide.sum()))
+        if must_fence.any():
+            # One merged fence covers every exiting block in this batch.
+            if always.any():
+                eng.stats.elided_always_flush += int(always.sum())
+            eng.fence("context_exit", int(must_fence.sum()))
+        # Stamp the new owner (0 for non-FPR use, §IV-A), clear flags.
+        tr.set_many(arr, ctx_id=ctx_id, version=0, flags=0)
+
+    # ===================================================================== mmap
+    def mmap(self, n_blocks: int, ctx: RecyclingContext | None = None, *,
+             worker: int = 0, fixed_logical: int | None = None) -> Mapping:
+        """Create a mapping of ``n_blocks`` logical blocks, all resident."""
+        ctx_id = ctx.ctx_id if (ctx is not None and self.fpr_enabled) else 0
+        phys = self._acquire(n_blocks, ctx_id, worker)
+        m = self.tables.create_mapping(phys, ctx_id=ctx_id,
+                                       fixed_logical=fixed_logical)
+        if fixed_logical is not None:
+            # §IV-B: a user-forced address cannot rely on monotonic-VA ABA
+            # protection — comply with the request but fence immediately.
+            self.fences.fence("fixed_address", n_blocks)
+        return m
+
+    def mmap_sparse(self, n_blocks: int, ctx: RecyclingContext | None = None,
+                    ) -> Mapping:
+        """A mapping with no resident blocks (large file mmap; faulted lazily)."""
+        if n_blocks > self.tables.max_blocks_per_seq:
+            raise ValueError(f"mapping of {n_blocks} blocks exceeds "
+                             f"max_blocks_per_seq={self.tables.max_blocks_per_seq}")
+        ctx_id = ctx.ctx_id if (ctx is not None and self.fpr_enabled) else 0
+        m = self.tables.create_mapping([], ctx_id=ctx_id)
+        # reserve logical ids + table rows lazily via touch()
+        m.physical = [NOT_RESIDENT] * n_blocks
+        self.tables.ids.take(n_blocks)
+        row = self.tables.table[self.tables.slot_of[m.mapping_id]]
+        row[:n_blocks] = NOT_RESIDENT
+        return m
+
+    def extend(self, mapping_id: int, n_blocks: int, *, worker: int = 0
+               ) -> list[int]:
+        """Decode-path growth: append fresh blocks (fresh logical ids)."""
+        m = self.tables.mappings[mapping_id]
+        phys = self._acquire(n_blocks, m.ctx_id, worker)
+        self.tables.extend_mapping(mapping_id, phys)
+        return phys
+
+    # =================================================================== munmap
+    def munmap(self, mapping_id: int, *, worker: int = 0) -> None:
+        m = self.tables.mappings[mapping_id]
+        phys = [b for b in self.tables.destroy_mapping(mapping_id) if b >= 0]
+        self.stats.frees += len(phys)
+        if phys:
+            arr = np.asarray(phys, dtype=np.int64)
+            if m.ctx_id != 0:
+                # FPR: skip the fence, stamp the global epoch (§IV-A, §IV-C5).
+                self.fences.note_skipped_free(len(phys))
+                self.tracker.set_versions(arr, self.fences.epoch)
+            else:
+                # Stock Linux: one batched shootdown per munmap.
+                self.fences.fence("munmap", len(phys))
+            for b in phys:
+                self.alloc.free_block(b, worker)
+
+    # ============================================================== fault / touch
+    def touch(self, mapping_id: int, logical_idx: int, *, worker: int = 0
+              ) -> tuple[int, bool]:
+        """Access a block; fault it in if non-resident.
+
+        Returns (physical_block, faulted).  The eviction daemon must have been
+        consulted by the caller (engine step) to keep free blocks available.
+        """
+        m = self.tables.mappings[mapping_id]
+        b = m.physical[logical_idx]
+        if b >= 0:
+            return b, False
+        self.stats.faults += 1
+        was_swapped = b == SWAPPED
+        if was_swapped:
+            self.stats.swap_ins += 1
+        [nb] = self._acquire(1, m.ctx_id, worker)
+        m.physical[logical_idx] = nb
+        self.tables.table[self.tables.slot_of[mapping_id], logical_idx] = nb
+        if was_swapped and self.on_swap_in is not None:
+            self.on_swap_in(mapping_id, logical_idx, nb)
+        return nb, True
+
+    # ================================================================== eviction
+    def evict(self, victims: list[tuple[int, int]], *, fpr_batch: bool,
+              worker: int = 0) -> int:
+        """Evict (mapping_id, logical_idx) blocks; returns #blocks freed.
+
+        ``fpr_batch=False`` — stock path: one fence per call (callers batch 32).
+        ``fpr_batch=True``  — §IV-B huge-batch path: one merged fence for the
+        whole batch, versions stamped *before* the fence so that later
+        context-exit allocations of these blocks elide their fence.
+        """
+        freed: list[int] = []
+        for mid, idx in victims:
+            m = self.tables.mappings.get(mid)
+            if m is None:
+                continue
+            b = m.physical[idx]
+            if b < 0:
+                continue
+            if self.on_swap_out is not None:
+                self.on_swap_out(mid, idx, b)
+            m.physical[idx] = SWAPPED
+            self.tables.table[self.tables.slot_of[mid], idx] = SWAPPED
+            freed.append(b)
+            self.stats.swap_outs += 1
+        if not freed:
+            return 0
+        arr = np.asarray(freed, dtype=np.int64)
+        # Stamp versions first: the merged fence below then covers these
+        # blocks forever (until re-allocated), enabling §IV-C5 elision.
+        self.tracker.set_versions(arr, self.fences.epoch)
+        self.fences.fence("evict_batch" if fpr_batch else "evict",
+                          len(freed))
+        for b in freed:
+            self.alloc.free_block(b, worker)
+        return len(freed)
+
+    # =================================================================== helpers
+    @property
+    def free_blocks(self) -> int:
+        return self.alloc.free_blocks
+
+    @property
+    def num_blocks(self) -> int:
+        return self.alloc.num_blocks
+
+    def counters(self) -> dict:
+        return {"fpr": self.stats.snapshot(), "fence": self.fences.totals(),
+                "table_epoch": self.tables.epoch,
+                "stale_detected": self.tables.stale_lookups_detected}

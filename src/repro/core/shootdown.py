@@ -1,0 +1,119 @@
+"""Coherence-fence engine — the TPU-serving analogue of a TLB shootdown.
+
+Paper → framework mapping (DESIGN.md §2):
+
+  TLB shootdown = IPI broadcast to every core that may cache the translation,
+                  each core flushes, initiator *waits* for all confirmations.
+
+  coherence fence = drain all in-flight async-dispatched engine steps (they
+                  captured the old logical→physical block tables), bump the
+                  table epoch, and re-broadcast the block tables to every
+                  replica / shard that holds a copy.  The initiator waits.
+
+Two cost surfaces are supported simultaneously:
+
+  * measured  — an attached callback performs the *real* drain+rebroadcast on
+                this host (``jax.block_until_ready`` + fresh ``device_put``);
+                wall time is accumulated.
+  * modeled   — a 1000-node projection: ``drain = dispatch_depth × step_time``
+                plus ``broadcast = table_bytes / ici_bw × log2(replicas)``
+                (tree broadcast), plus a per-IPI-analogue base latency.
+
+The engine also owns the paper's §IV-C5 *global shootdown counter* (``epoch``):
+every global fence increments it; block versions are stamped with it at free
+time, letting later context-exit allocations elide their fence when any global
+fence already intervened.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+@dataclass(frozen=True)
+class FenceCostModel:
+    """Projected fence cost for a large deployment (defaults: TPU v5e pod)."""
+
+    n_replicas: int = 256          # table-holding shards that must be refreshed
+    dispatch_depth: int = 4        # async steps in flight that must drain
+    step_time_s: float = 15e-3     # decode step wall time
+    table_bytes: int = 4 << 20     # block tables + handles to rebroadcast
+    link_bw: float = 50e9          # ~50 GB/s/link ICI (assignment constant)
+    base_latency_s: float = 25e-6  # interrupt/RPC base cost per fence
+
+    def cost_s(self) -> float:
+        import math
+        drain = self.dispatch_depth * self.step_time_s
+        hops = max(1.0, math.log2(max(2, self.n_replicas)))
+        broadcast = (self.table_bytes / self.link_bw) * hops
+        return self.base_latency_s + drain + broadcast
+
+
+@dataclass
+class FenceStats:
+    fences: int = 0                      # fences actually performed
+    fences_by_reason: Counter = field(default_factory=Counter)
+    blocks_covered: int = 0              # blocks whose invalidation each fence covered
+    skipped_at_free: int = 0             # §IV-A: shootdown skipped on FPR free
+    elided_by_version: int = 0           # §IV-C5: context-exit fence elided
+    elided_always_flush: int = 0         # ALWAYS_FLUSH fences (subset of fences)
+    measured_s: float = 0.0              # accumulated real fence wall time
+    modeled_s: float = 0.0               # accumulated projected fence cost
+
+    def snapshot(self) -> dict:
+        d = {k: (dict(v) if isinstance(v, Counter) else v)
+             for k, v in self.__dict__.items()}
+        return d
+
+
+class FenceEngine:
+    """Owns the global fence epoch and performs/records coherence fences."""
+
+    def __init__(self, cost_model: FenceCostModel | None = None,
+                 on_fence: Callable[[str, int], None] | None = None,
+                 measure: bool = True):
+        self.epoch = 1                    # global shootdown counter (§IV-C5); >0
+        self.cost_model = cost_model or FenceCostModel()
+        self.on_fence = on_fence          # measured drain+rebroadcast callback
+        self.measure = measure
+        self.stats = FenceStats()
+
+    # ------------------------------------------------------------------ fences
+    def fence(self, reason: str, n_blocks: int = 1) -> int:
+        """Perform one global coherence fence. Returns the new epoch."""
+        self.epoch += 1
+        st = self.stats
+        st.fences += 1
+        st.fences_by_reason[reason] += 1
+        st.blocks_covered += n_blocks
+        st.modeled_s += self.cost_model.cost_s()
+        if self.on_fence is not None and self.measure:
+            t0 = time.perf_counter()
+            self.on_fence(reason, n_blocks)
+            st.measured_s += time.perf_counter() - t0
+        return self.epoch
+
+    # -------------------------------------------------------------- accounting
+    def note_skipped_free(self, n_blocks: int = 1) -> None:
+        self.stats.skipped_at_free += n_blocks
+
+    def note_version_elision(self, n_blocks: int = 1) -> None:
+        self.stats.elided_by_version += n_blocks
+
+    def reset_stats(self) -> None:
+        self.stats = FenceStats()
+
+    # Convenience for benchmarks: totals with/without FPR-visible savings.
+    def totals(self) -> dict:
+        s = self.stats
+        return {
+            "fences": s.fences,
+            "skipped_at_free": s.skipped_at_free,
+            "elided_by_version": s.elided_by_version,
+            "measured_s": round(s.measured_s, 6),
+            "modeled_s": round(s.modeled_s, 6),
+            "by_reason": dict(s.fences_by_reason),
+        }

@@ -1,0 +1,49 @@
+"""Elastic checkpoint resharding: restore any checkpoint onto any mesh.
+
+Checkpoints are saved *per shard* (training/checkpoint.py): every leaf is
+stored as one entry per device shard together with its global index
+(offset, size per dim).  Restore reassembles leaves into host buffers by
+index math — no assumption that the saving and restoring meshes agree in
+shape, axis names, device count, or sharding specs — then ``device_put``s
+them with the *new* mesh's NamedShardings.  This is what lets a 512-chip
+job resume on 256 chips after losing a pod, or grow back to 512.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+
+def shard_entries(arr: jax.Array):
+    """Yield (index_tuple, host_ndarray) for each addressable shard."""
+    seen = set()
+    for sh in arr.addressable_shards:
+        idx = tuple((s.start or 0, s.stop if s.stop is not None else dim)
+                    for s, dim in zip(sh.index, arr.shape))
+        if idx in seen:            # replicated shards: save one copy
+            continue
+        seen.add(idx)
+        yield idx, np.asarray(sh.data)
+
+
+def assemble(shape, dtype, entries) -> np.ndarray:
+    """Rebuild the global array from (index, data) shard entries."""
+    out = np.zeros(shape, dtype=dtype)
+    covered = np.zeros(shape, dtype=bool) if entries else None
+    for idx, data in entries:
+        sl = tuple(slice(a, b) for a, b in idx)
+        out[sl] = data
+        covered[sl] = True
+    if covered is not None and not covered.all():
+        raise ValueError("checkpoint shards do not cover the global array "
+                         "(missing ranks?)")
+    return out
+
+
+def reshard(host_tree, mesh, specs):
+    """Place host arrays onto ``mesh`` with the given PartitionSpecs."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        host_tree, specs)

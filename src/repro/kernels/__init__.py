@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel package is a triple:
+
+    <name>.py   pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+    ops.py      jit'd public wrapper (padding, layout, interpret switch)
+    ref.py      pure-jnp oracle asserted allclose in tests (interpret=True)
+
+Kernels:
+    flash_attention  prefill/train attention (causal / GQA / sliding-window)
+    paged_attention  decode over the FPR paged KV cache (block tables)
+    mla_attention    DeepSeek-V2 absorbed-MLA decode over paged latents
+    mamba_scan       selective-scan (Jamba) chunked recurrence
+    rwkv6_scan       RWKV-6 "Finch" WKV with data-dependent decay
+"""

@@ -1,0 +1,51 @@
+"""Public flash-attention op: layout/padding shim over the Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+
+
+def _pick_block(s: int, pref: int = 128) -> int:
+    """Largest power-of-two tile ≤ pref that keeps padding overhead < 2×."""
+    b = pref
+    while b > 8 and s < b:
+        b //= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "interpret", "bq", "bk"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    q_offset: int = 0, bq: int | None = None,
+                    bk: int | None = None, interpret: bool = False
+                    ) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd) → (B, Sq, H, hd).
+
+    Model-facing layout is (B, S, H, hd); the kernel wants heads-major
+    (B, H, S, hd) so each (head, tile) is a contiguous VMEM block.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    bq = bq or _pick_block(Sq)
+    bk = bk or _pick_block(Sk)
+    pq, pk = (-Sq) % bq, (-Sk) % bk
+
+    qt = jnp.moveaxis(q, 2, 1)          # (B, H, Sq, hd)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pq:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pk), (0, 0)))
+
+    o = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
+                            q_offset=q_offset, bq=bq, bk=bk, sk_valid=Sk,
+                            interpret=interpret)
+    return jnp.moveaxis(o[:, :, :Sq], 1, 2)

@@ -1,0 +1,32 @@
+"""Public selective-scan op: padding shim over the Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.mamba_scan import mamba_scan_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mamba_scan(dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
+               x: jax.Array, h0: jax.Array, *, chunk: int = 64,
+               interpret: bool = False):
+    """dt, x: (B, S, DI) f32; A: (DI, N); B, C: (B, S, N); h0: (B, DI, N)
+    → (y (B, S, DI), h_last).  Matches models.mamba sequential recurrence."""
+    Bsz, S, DI = dt.shape
+    chunk = min(chunk, max(8, S))
+    pad = (-S) % chunk
+    if pad:
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        dt, B, C, x = zpad(dt), zpad(B), zpad(C), zpad(x)
+    bd = DI
+    for cand in (512, 256, 128, 64, 32, 16, 8):
+        if DI % cand == 0:
+            bd = cand
+            break
+    y, h_last = mamba_scan_fwd(dt, A, B, C, x, h0, chunk=chunk, bd=bd,
+                               interpret=interpret)
+    return y[:, :S], h_last

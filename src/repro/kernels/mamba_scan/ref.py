@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the selective scan (sequential recurrence)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mamba_scan_ref(dt: jax.Array, A: jax.Array, B: jax.Array, C: jax.Array,
+                   x: jax.Array, h0: jax.Array):
+    """Same contract as ops.mamba_scan, computed step-by-step."""
+    S = dt.shape[1]
+
+    def step(h, t):
+        dA = jnp.exp(dt[:, t, :, None] * A[None])
+        h = dA * h + (dt[:, t, :, None] * B[:, t, None, :]
+                      * x[:, t, :, None])
+        y = jnp.einsum("bdn,bn->bd", h, C[:, t])
+        return h, y
+
+    h_last, ys = jax.lax.scan(step, h0, jnp.arange(S))
+    return ys.transpose(1, 0, 2), h_last

@@ -1,0 +1,37 @@
+"""Public absorbed-MLA decode op: projections in jnp, page walk in Pallas.
+
+Drop-in replacement for models.mla.mla_decode_ref — same signature, same
+math; only the paged softmax-over-latents runs in the kernel.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mla_attention.mla_attention import mla_paged_ctx_fwd
+from repro.models.layers import rms_norm
+from repro.models.mla import _project_q, absorbed_weights
+
+
+def mla_paged_decode(params: dict, x: jax.Array, positions: jax.Array,
+                     c_pool: jax.Array, rope_pool: jax.Array,
+                     block_tables: jax.Array, lengths: jax.Array, cfg, *,
+                     interpret: bool = False) -> jax.Array:
+    """x: (B, D) current-token activations → (B, D) with residual added."""
+    m = cfg.mla
+    B, D = x.shape
+    h = rms_norm(x[:, None, :], params["norm"], cfg.norm_eps)
+    q_nope, q_rope = _project_q(params, h, cfg, positions[:, None])
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]              # (B, H, ·)
+    w_uk, w_uv = absorbed_weights(params, cfg)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))             # absorb W_UK
+    scale = float((m.nope_head_dim + m.rope_head_dim) ** -0.5)
+    ctx = mla_paged_ctx_fwd(q_lat, q_rope.astype(jnp.float32), c_pool,
+                            rope_pool, block_tables.astype(jnp.int32),
+                            lengths.astype(jnp.int32), scale=scale,
+                            interpret=interpret)             # (B, H, rank)
+    o = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(jnp.float32))
+    o = o.reshape(B, -1).astype(x.dtype)
+    return x + o @ params["wo"]

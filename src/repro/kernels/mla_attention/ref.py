@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for absorbed-MLA paged decode (re-exported)."""
+
+from repro.models.mla import mla_decode_ref
+
+__all__ = ["mla_decode_ref"]

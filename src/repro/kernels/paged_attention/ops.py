@@ -1,0 +1,28 @@
+"""Public paged-attention op (decode over the FPR block tables)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.paged_attention import paged_attention_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                    tables: jax.Array, lengths: jax.Array, *,
+                    window: int | None = None,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd); pools: (N, bs, KV, hd); tables: (B, M); lengths: (B,)
+    → (B, H, hd).  Matches attention.paged_decode_attention_ref."""
+    B, H, hd = q.shape
+    KV = k_pool.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    o = paged_attention_fwd(qg, k_pool, v_pool,
+                            tables.astype(jnp.int32),
+                            lengths.astype(jnp.int32),
+                            window=window, interpret=interpret)
+    return o.reshape(B, H, hd)

@@ -1,0 +1,121 @@
+"""Paged decode attention Pallas TPU kernel — the FPR hot path.
+
+One query token per sequence attends to its KV cache, which lives in
+*physical blocks* of the FPR pool addressed through the per-sequence block
+table (repro.core.block_table).  This is the TPU-native adaptation of the
+paper's translation layer: the block table is the "page table", and the
+kernel walks it with **scalar prefetch** — the table rows are SMEM scalars
+available to the BlockSpec index maps, so each grid step DMAs exactly the
+one physical block (bs, KV, hd) it needs from HBM into VMEM.  Holes
+(non-resident / swapped blocks, table entry < 0) are clamped in the index
+map and masked in the kernel, never touched.
+
+Grid: (B, M) with the block walk innermost and sequential; online-softmax
+state (m, l, acc) lives in VMEM scratch across the walk.  Fully-invalid
+blocks (beyond ``lengths`` or outside the sliding window) are skipped with
+pl.when, so decode cost is proportional to the *resident* cache, not the
+table capacity — with SWA (danube) only ceil(W/bs)+1 blocks are read.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _pa_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+               m_sc, l_sc, acc_sc, *, bs: int, window: int | None):
+    b = pl.program_id(0)
+    mi = pl.program_id(1)
+    nm = pl.num_programs(1)
+    length = lengths_ref[b]
+
+    @pl.when(mi == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    blk_start = mi * bs
+    resident = tables_ref[b * nm + mi] >= 0
+    visible = blk_start < length
+    if window is not None:
+        visible = jnp.logical_and(visible, blk_start + bs > length - window)
+
+    @pl.when(jnp.logical_and(resident, visible))
+    def _step():
+        q = q_ref[0].astype(jnp.float32)              # (KV, G, hd)
+        k = k_ref[0].astype(jnp.float32)              # (bs, KV, hd)
+        v = v_ref[0].astype(jnp.float32)              # (bs, KV, hd)
+        hd = q.shape[-1]
+        s = jnp.einsum("kgd,skd->kgs", q, k,
+                       preferred_element_type=jnp.float32) * (hd ** -0.5)
+        pos = blk_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 2)                    # (KV, G, bs)
+        mask = pos < length
+        if window is not None:
+            mask = jnp.logical_and(mask, pos > length - 1 - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_sc[...]                            # (KV, G, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                        # (KV, G, bs)
+        scale = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * scale + p.sum(axis=-1, keepdims=True)
+        acc_sc[...] = acc_sc[...] * scale + jnp.einsum(
+            "kgs,skd->kgd", p, v, preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    @pl.when(mi == nm - 1)
+    def _finalize():
+        out = acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_fwd(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        tables: jax.Array, lengths: jax.Array, *,
+                        window: int | None = None,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B, KV, G, hd); pools: (N, bs, KV, hd); tables: (B, M) int32;
+    lengths: (B,) int32 → (B, KV, G, hd)."""
+    B, KV, G, hd = q.shape
+    N, bs, _, _ = k_pool.shape
+    M = tables.shape[1]
+
+    def q_map(b, m, tables_ref, lengths_ref):
+        return (b, 0, 0, 0)
+
+    def kv_map(b, m, tables_ref, lengths_ref):
+        # the page walk: physical block for logical block m of sequence b
+        return (jnp.maximum(tables_ref[b * M + m], 0), 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, M),
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), q_map),
+            pl.BlockSpec((1, bs, KV, hd), kv_map),
+            pl.BlockSpec((1, bs, KV, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G, 1), jnp.float32),
+            pltpu.VMEM((KV, G, 1), jnp.float32),
+            pltpu.VMEM((KV, G, hd), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_pa_kernel, bs=bs, window=window)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(tables.reshape(-1), lengths, q, k_pool, v_pool)

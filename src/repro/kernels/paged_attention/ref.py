@@ -1,0 +1,5 @@
+"""Pure-jnp oracle for paged decode attention (re-exported from models)."""
+
+from repro.models.attention import paged_decode_attention_ref
+
+__all__ = ["paged_decode_attention_ref"]

@@ -1,0 +1,32 @@
+"""Public RWKV-6 WKV op: layout/padding shim over the Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6_scan.rwkv6_scan import rwkv6_scan_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, S0: jax.Array, *, chunk: int = 32,
+               interpret: bool = False):
+    """r, k, v, w: (B, S, nH, hd) f32; u: (nH, hd); S0: (B, nH, hd, hd)
+    → (y (B, S, nH, hd), S_last).  Matches models.rwkv6._wkv_sequential."""
+    B, S, nH, hd = r.shape
+    chunk = min(chunk, max(8, S))
+    pad = (-S) % chunk
+    tr = lambda t: jnp.moveaxis(t, 1, 2)              # (B, nH, S, hd)
+    rt, kt, vt = tr(r), tr(k), tr(v)
+    wt = tr(w)
+    if pad:
+        zpad = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        rt, kt, vt = zpad(rt), zpad(kt), zpad(vt)
+        wt = jnp.pad(wt, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                     constant_values=1.0)
+    y, s_last = rwkv6_scan_fwd(rt, kt, vt, wt, u, S0, chunk=chunk,
+                               interpret=interpret)
+    return jnp.moveaxis(y[:, :, :S], 2, 1), s_last

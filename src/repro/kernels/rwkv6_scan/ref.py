@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the RWKV-6 WKV recurrence (re-exported)."""
+
+from repro.models.rwkv6 import _wkv_sequential
+
+
+def rwkv6_scan_ref(r, k, v, w, u, S0):
+    """Same contract as ops.rwkv6_scan (sequential oracle)."""
+    return _wkv_sequential(r, k, v, w, u, S0)

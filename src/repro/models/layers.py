@@ -1,0 +1,83 @@
+"""Shared building blocks: norms, rotary embeddings, FFNs, initializers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> jax.Array:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+# ----------------------------------------------------------------- rotary ----
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0
+               ) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                        # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- FFNs ----
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    return h @ w_down
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": init_dense(k1, d_model, d_ff, dtype),
+            "w_up": init_dense(k2, d_model, d_ff, dtype),
+            "w_down": init_dense(k3, d_ff, d_model, dtype)}
+
+
+def dense_ffn(params: dict, x: jax.Array, eps: float) -> jax.Array:
+    h = rms_norm(x, params["norm"], eps)
+    return x + swiglu(h, params["w_gate"], params["w_up"], params["w_down"])
+
+
+# ------------------------------------------------------------- embeddings ----
+def init_embed(key, vocab: int, d_model: int, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Logits in f32 (loss stability)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_id: int = -100) -> jax.Array:
+    mask = (labels != ignore_id)
+    labels = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

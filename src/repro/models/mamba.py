@@ -1,0 +1,161 @@
+"""Mamba (S6 selective scan) mixer — Jamba's 7-in-8 layer.
+
+Train/prefill: chunked scan — sequential ``lax.scan`` over sequence chunks
+with an associative scan inside each chunk (bounded memory; mirrors the
+kernels/mamba_scan Pallas kernel's VMEM chunking).
+Decode: O(1) recurrent step carrying (conv_state, ssm_state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense, rms_norm
+
+
+def dt_rank(cfg) -> int:
+    return max(16, cfg.d_model // 16)
+
+
+def init_mamba(key, cfg, dtype=jnp.bfloat16) -> dict:
+    mm = cfg.mamba
+    D, DI = cfg.d_model, cfg.d_inner
+    R = dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, mm.d_state + 1, dtype=jnp.float32)[None, :],
+                 (DI, 1))
+    return {
+        "norm": jnp.ones((D,), dtype),
+        "in_proj": init_dense(ks[0], D, 2 * DI, dtype),
+        "conv_w": (jax.random.normal(ks[1], (mm.d_conv, DI), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((DI,), dtype),
+        "x_proj": init_dense(ks[2], DI, R + 2 * mm.d_state, dtype),
+        "dt_proj": init_dense(ks[3], R, DI, dtype),
+        "A_log": jnp.log(A),                      # f32: recurrence stability
+        "D": jnp.ones((DI,), jnp.float32),
+        "out_proj": init_dense(ks[4], DI, D, dtype),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv1d. u: (B,S,DI), w: (K,DI). Returns (y, new_state)
+    where state carries the last K−1 inputs for decode continuity."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    ext = jnp.concatenate([pad, u], axis=1)          # (B, S+K-1, DI)
+    y = sum(ext[:, i:i + u.shape[1], :] * w[i] for i in range(K)) + b
+    new_state = ext[:, -(K - 1):, :]
+    return y, new_state
+
+
+def _ssm_chunk_scan(dA: jax.Array, dBu: jax.Array, h0: jax.Array):
+    """h_t = dA_t * h_{t-1} + dBu_t over axis 1 (chunk), given h0.
+
+    dA, dBu: (B, T, DI, N) f32.  Associative scan within the chunk.
+    Returns (h_all (B,T,DI,N), h_last).
+    """
+    def combine(a, b):
+        (a1, b1), (a2, b2) = a, b
+        return a1 * a2, a2 * b1 + b2
+
+    aa, bb = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    h_all = aa * h0[:, None] + bb
+    return h_all, h_all[:, -1]
+
+
+def mamba_mix(params: dict, u: jax.Array, cfg, *, chunk: int = 64,
+              conv_state=None, ssm_state=None, impl: str = "chunked"):
+    """Core mixer on pre-normed input u: (B,S,D) → (y, (conv_state, ssm_state)).
+
+    impl='chunked' (default) | 'sequential' (oracle) | 'pallas'/'pallas_interpret'.
+    """
+    mm = cfg.mamba
+    B, S, D = u.shape
+    DI, N = cfg.d_inner, mm.d_state
+    R = dt_rank(cfg)
+    xz = u @ params["in_proj"]
+    x, z = jnp.split(xz, 2, axis=-1)
+    x, conv_state = _causal_conv(x, params["conv_w"], params["conv_b"],
+                                 conv_state)
+    x = jax.nn.silu(x)
+    proj = x @ params["x_proj"]
+    delta, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+    dt = jax.nn.softplus((delta @ params["dt_proj"]).astype(jnp.float32))
+    A = -jnp.exp(params["A_log"])                   # (DI,N)
+    xf = x.astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+
+    h0 = (jnp.zeros((B, DI, N), jnp.float32) if ssm_state is None
+          else ssm_state)
+
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.mamba_scan import ops as ms_ops
+        y_ssm, h_last = ms_ops.mamba_scan(dt, A, Bf, Cf, xf, h0,
+                                          interpret=(impl == "pallas_interpret"))
+    elif impl == "sequential":
+        def step(h, t):
+            dA = jnp.exp(dt[:, t, :, None] * A[None])
+            h = dA * h + (dt[:, t, :, None] * Bf[:, t, None, :]
+                          * xf[:, t, :, None])
+            y = jnp.einsum("bdn,bn->bd", h, Cf[:, t])
+            return h, y
+        h_last, ys = jax.lax.scan(step, h0, jnp.arange(S))
+        y_ssm = ys.transpose(1, 0, 2)
+    else:                                            # chunked
+        pad = (-S) % chunk
+        dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bp = jnp.pad(Bf, ((0, 0), (0, pad), (0, 0)))
+        Cp = jnp.pad(Cf, ((0, 0), (0, pad), (0, 0)))
+        xp = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+        T = dtp.shape[1]
+        nck = T // chunk
+        dtc = dtp.reshape(B, nck, chunk, DI).transpose(1, 0, 2, 3)
+        Bcc = Bp.reshape(B, nck, chunk, N).transpose(1, 0, 2, 3)
+        Ccc = Cp.reshape(B, nck, chunk, N).transpose(1, 0, 2, 3)
+        xcc = xp.reshape(B, nck, chunk, DI).transpose(1, 0, 2, 3)
+
+        @jax.checkpoint
+        def chunk_step(h, inp):
+            # checkpointed: the backward recomputes the (B,T,DI,N) dA/dBu/
+            # h_all tensors per chunk instead of scan-stacking them (they
+            # dominate training memory for Jamba's 28 mamba layers)
+            dtk, Bk, Ck, xk = inp
+            dA = jnp.exp(dtk[..., None] * A[None, None])       # (B,T,DI,N)
+            dBu = dtk[..., None] * Bk[:, :, None, :] * xk[..., None]
+            h_all, h_last = _ssm_chunk_scan(dA, dBu, h)
+            y = jnp.einsum("btdn,btn->btd", h_all, Ck)
+            return h_last, y
+
+        h_last, ys = jax.lax.scan(chunk_step, h0, (dtc, Bcc, Ccc, xcc))
+        y_ssm = ys.transpose(1, 0, 2, 3).reshape(B, T, DI)[:, :S]
+
+    y = y_ssm + params["D"][None, None] * xf
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(u.dtype)
+    return y @ params["out_proj"], (conv_state, h_last)
+
+
+def mamba_layer(params: dict, x: jax.Array, cfg, *, impl="chunked") -> jax.Array:
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    y, _ = mamba_mix(params, h, cfg, impl=impl)
+    return x + y
+
+
+def mamba_decode_step(params: dict, x: jax.Array, cfg, conv_state, ssm_state):
+    """x: (B,D) single token → (y (B,D), new states). O(1) per step."""
+    h = rms_norm(x[:, None], params["norm"], cfg.norm_eps)
+    y, (cs, ss) = mamba_mix(params, h, cfg, conv_state=conv_state,
+                            ssm_state=ssm_state, impl="sequential")
+    return x + y[:, 0], (cs, ss)
+
+
+def init_mamba_state(cfg, batch: int):
+    mm = cfg.mamba
+    return (jnp.zeros((batch, mm.d_conv - 1, cfg.d_inner), jnp.bfloat16),
+            jnp.zeros((batch, cfg.d_inner, mm.d_state), jnp.float32))

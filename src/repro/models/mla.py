@@ -1,0 +1,134 @@
+"""Multi-head Latent Attention (DeepSeek-V2) — expanded and absorbed forms.
+
+Train/prefill uses the *expanded* form (regular attention after up-projection).
+Decode uses the *absorbed* form: queries are folded through W_UK so attention
+runs directly against the rank-512 compressed latent cache — the TPU-friendly
+form (dense latent matmuls, no 128-head KV materialisation), and the reason
+MLA pages are ~9× smaller than GQA pages (more recycling per second — FPR's
+best case, see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import NEG_INF, chunked_attention
+from repro.models.layers import apply_rope, init_dense, rms_norm
+
+
+def init_mla(key, cfg, dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    qk_hd = m.nope_head_dim + m.rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "norm": jnp.ones((D,), dtype),
+        "wq_a": init_dense(ks[0], D, m.q_lora_rank, dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_b": init_dense(ks[1], m.q_lora_rank, H * qk_hd, dtype),
+        "wkv_a": init_dense(ks[2], D, m.kv_lora_rank + m.rope_head_dim, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wkv_b": init_dense(ks[3], m.kv_lora_rank,
+                            H * (m.nope_head_dim + m.v_head_dim), dtype),
+        "wo": init_dense(ks[4], H * m.v_head_dim, D, dtype),
+    }
+
+
+def _project_q(params, h, cfg, positions):
+    m = cfg.mla
+    B, S, _ = h.shape
+    H = cfg.n_heads
+    qk_hd = m.nope_head_dim + m.rope_head_dim
+    q = rms_norm(h @ params["wq_a"], params["q_norm"], cfg.norm_eps)
+    q = (q @ params["wq_b"]).reshape(B, S, H, qk_hd)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.attn.rope_theta)
+    return q_nope, q_rope
+
+
+def latent_kv(params, h, cfg, positions):
+    """Compressed latents: c_kv (B,S,rank), k_rope (B,S,1,rope_hd) — this is
+    exactly what the paged cache stores per token."""
+    m = cfg.mla
+    ckv = h @ params["wkv_a"]
+    c_kv, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.attn.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_layer(params: dict, x: jax.Array, positions: jax.Array, cfg, *,
+              impl: str = "chunked") -> jax.Array:
+    """Expanded-form MLA for train/prefill (regular GQA-style attention)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    q_nope, q_rope = _project_q(params, h, cfg, positions)
+    c_kv, k_rope = latent_kv(params, h, cfg, positions)
+    kv = (c_kv @ params["wkv_b"]).reshape(B, S, H,
+                                          m.nope_head_dim + m.v_head_dim)
+    k_nope, v = jnp.split(kv, [m.nope_head_dim], axis=-1)
+    # assemble per-head q/k with shared rope key broadcast across heads
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, m.rope_head_dim))],
+        axis=-1)
+    # pad v to qk head_dim so one attention kernel serves both (cheap: zeros)
+    o = chunked_attention(q, k, jnp.pad(
+        v, ((0, 0), (0, 0), (0, 0), (0, m.nope_head_dim + m.rope_head_dim
+                                     - m.v_head_dim))), causal=True)
+    o = o[..., :m.v_head_dim].reshape(B, S, H * m.v_head_dim)
+    return x + o @ params["wo"]
+
+
+def absorbed_weights(params, cfg):
+    """Split wkv_b into per-head W_UK (rank→nope) and W_UV (rank→v)."""
+    m = cfg.mla
+    H = cfg.n_heads
+    w = params["wkv_b"].reshape(m.kv_lora_rank, H,
+                                m.nope_head_dim + m.v_head_dim)
+    w_uk = w[..., :m.nope_head_dim]         # (rank, H, nope)
+    w_uv = w[..., m.nope_head_dim:]         # (rank, H, v)
+    return w_uk, w_uv
+
+
+def mla_decode_ref(params: dict, x: jax.Array, positions: jax.Array,
+                   c_pool: jax.Array, rope_pool: jax.Array,
+                   block_tables: jax.Array, lengths: jax.Array, cfg
+                   ) -> jax.Array:
+    """Absorbed-form decode over the paged latent cache (jnp reference).
+
+    x:          (B, D)        current-token activations (pre-norm applied here)
+    c_pool:     (N, bs, rank) latent pages
+    rope_pool:  (N, bs, rope_hd)
+    """
+    m = cfg.mla
+    B, D = x.shape
+    H = cfg.n_heads
+    h = rms_norm(x[:, None, :], params["norm"], cfg.norm_eps)
+    q_nope, q_rope = _project_q(params, h, cfg, positions[:, None])
+    q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]           # (B,H,·)
+    w_uk, w_uv = absorbed_weights(params, cfg)
+    # absorb: q_lat (B,H,rank) = q_nope · W_UK^T
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    N, bs, rank = c_pool.shape
+    M = block_tables.shape[1]
+    tables = jnp.maximum(block_tables, 0)
+    c = jnp.take(c_pool, tables, axis=0).reshape(B, M * bs, rank)
+    kr = jnp.take(rope_pool, tables, axis=0).reshape(B, M * bs,
+                                                     m.rope_head_dim)
+    scale = 1.0 / jnp.sqrt(m.nope_head_dim + m.rope_head_dim)
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, c.astype(jnp.float32))
+         + jnp.einsum("bhr,bsr->bhs", q_rope.astype(jnp.float32),
+                      kr.astype(jnp.float32))) * scale
+    pos = jnp.arange(M * bs)[None, :]
+    valid = (pos < lengths[:, None]) & (jnp.repeat(block_tables, bs, axis=1) >= 0)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhs,bsr->bhr", p, c.astype(jnp.float32))  # latent ctx
+    o = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(jnp.float32))
+    o = o.reshape(B, H * m.v_head_dim).astype(x.dtype)
+    return x + o @ params["wo"]

@@ -1,0 +1,162 @@
+"""Mixture-of-Experts FFN — DeepSeek-style shared + routed top-k experts.
+
+Dispatch is the sort-based, capacity-bounded scheme (no one-hot combine
+tensors, which would be O(tokens × E × C) and explode at 1M tokens):
+
+  1. top-k routing per token, gates renormalised over the chosen k,
+  2. flatten (token, k) slots and sort by expert id,
+  3. position-in-expert from segment arithmetic (no one-hot),
+  4. scatter-add kept slots into an (E, C, D) buffer (dropped slots add 0),
+  5. batched expert SwiGLU: einsum over the expert dim (EP-sharded),
+  6. gather back through the inverse permutation, weight by gates, sum over k.
+
+Sharding: expert weights are (E, D, d_e) with E over the ``model`` axis; the
+(G, E, C, D) dispatch buffer is sharded G over data and E over model so GSPMD
+lowers the scatter/gather into an all-to-all style exchange.  Grouping (G) is
+chosen per data shard so the sorts stay shard-local.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense, rms_norm
+
+
+def init_moe(key, cfg, dtype=jnp.bfloat16) -> dict:
+    mo = cfg.moe
+    D = cfg.d_model
+    de = mo.d_expert or cfg.d_ff
+    E = mo.num_experts
+    ks = jax.random.split(key, 7)
+    p = {
+        "norm": jnp.ones((D,), dtype),
+        "router": init_dense(ks[0], D, E, jnp.float32),   # routing in f32
+        "w_gate": (jax.random.normal(ks[1], (E, D, de), jnp.float32)
+                   / jnp.sqrt(D)).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, D, de), jnp.float32)
+                 / jnp.sqrt(D)).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, de, D), jnp.float32)
+                   / jnp.sqrt(de)).astype(dtype),
+    }
+    if mo.num_shared:
+        ds = de * mo.num_shared
+        p["s_gate"] = init_dense(ks[4], D, ds, dtype)
+        p["s_up"] = init_dense(ks[5], D, ds, dtype)
+        p["s_down"] = init_dense(ks[6], ds, D, dtype)
+    return p
+
+
+def capacity_for(tokens_per_group: int, top_k: int, num_experts: int,
+                 capacity_factor: float = 1.25, min_capacity: int = 4) -> int:
+    c = int(tokens_per_group * top_k * capacity_factor / num_experts) + 1
+    # round up to a multiple of 4 for lane friendliness
+    c = max(min_capacity, (c + 3) & ~3)
+    return c
+
+
+def _route(router: jax.Array, x: jax.Array, top_k: int):
+    """x: (T, D) → gates (T,k) f32, experts (T,k) i32, aux-loss scalar."""
+    logits = x.astype(jnp.float32) @ router          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, top_k)        # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux: E · Σ_e f_e · P_e
+    E = router.shape[1]
+    me = probs.mean(axis=0)                                     # (E,)
+    # fraction of routed slots per expert, without a (T,E) one-hot:
+    ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(
+        1.0 / (eidx.size))
+    aux = E * jnp.sum(me * ce)
+    return gates, eidx, aux
+
+
+def _ep_constrain(t, ep_axis):
+    """Pin the expert dim to the EP mesh axis — without it GSPMD keeps
+    the (E, C, d_e) dispatch buffers fully replicated per chip (tens of
+    GB for Jamba/DeepSeek prefill)."""
+    if ep_axis is None:
+        return t
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        t, P(ep_axis, *([None] * (t.ndim - 1))))
+
+
+def _dispatch_compute(x: jax.Array, gates: jax.Array, eidx: jax.Array,
+                      w_gate, w_up, w_down, capacity: int,
+                      ep_axis: str | None = None):
+    """x: (T,D); gates/eidx: (T,k). Returns (T,D) routed-expert output."""
+    T, D = x.shape
+    k = eidx.shape[1]
+    E = w_gate.shape[0]
+    eflat = eidx.reshape(-1)                           # (T·k,)
+    order = jnp.argsort(eflat)                         # stable
+    sorted_e = eflat[order]
+    counts = jnp.bincount(eflat, length=E)             # (E,)
+    seg_start = jnp.cumsum(counts) - counts            # (E,)
+    pos_in_e = jnp.arange(T * k) - seg_start[sorted_e]
+    keep = pos_in_e < capacity
+    dest = sorted_e * capacity + jnp.where(keep, pos_in_e, 0)
+    token_of = order // k                              # source token per slot
+    contrib = jnp.where(keep[:, None], x[token_of], 0)
+    buf = jnp.zeros((E * capacity, D), x.dtype).at[dest].add(contrib)
+    buf = _ep_constrain(buf.reshape(E, capacity, D), ep_axis)
+    # batched expert SwiGLU (EP: E sharded over the model axis)
+    h = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w_gate))
+         * jnp.einsum("ecd,edf->ecf", buf, w_up))
+    h = _ep_constrain(h, ep_axis)
+    out = _ep_constrain(jnp.einsum("ecf,efd->ecd", h, w_down), ep_axis)
+    out = out.reshape(E * capacity, D)
+    # gather back, zero dropped slots, unsort, gate-weight
+    slot_out = jnp.where(keep[:, None], out[dest], 0)  # (T·k, D)
+    inv = jnp.argsort(order)
+    slot_out = slot_out[inv].reshape(T, k, D)
+    return jnp.einsum("tkd,tk->td", slot_out.astype(jnp.float32),
+                      gates).astype(x.dtype)
+
+
+def moe_mix(params: dict, x: jax.Array, cfg, *, num_groups: int = 1,
+            capacity_factor: float = 1.25, ep_axis: str | None = None,
+            dp_axis=None):
+    """MoE FFN body on pre-normed x: (B,S,D) → (out, aux_loss).
+
+    ``dp_axis`` shards the group dim of the vmapped dispatch over the
+    data axes (spmd_axis_name), ``ep_axis`` pins expert-dim sharding —
+    together they keep every dispatch buffer (G/|dp|, E/|ep|, C, ·)
+    shard-local."""
+    mo = cfg.moe
+    B, S, D = x.shape
+    T = B * S
+    xf = x.reshape(T, D)
+    # group so sorts stay shard-local; groups must divide tokens
+    G = num_groups
+    while T % G:
+        G -= 1
+    xg = xf.reshape(G, T // G, D)
+    cap = capacity_for(T // G, mo.top_k, mo.num_experts, capacity_factor)
+
+    def per_group(xt):
+        gates, eidx, aux = _route(params["router"], xt, mo.top_k)
+        out = _dispatch_compute(xt, gates, eidx, params["w_gate"],
+                                params["w_up"], params["w_down"], cap,
+                                ep_axis=ep_axis)
+        return out, aux
+
+    outs, auxs = jax.vmap(per_group,
+                          spmd_axis_name=dp_axis if G > 1 else None)(xg)
+    out = outs.reshape(B, S, D)
+    if mo.num_shared:
+        sh = (jax.nn.silu(xf @ params["s_gate"]) * (xf @ params["s_up"])
+              ) @ params["s_down"]
+        out = out + sh.reshape(B, S, D)
+    return out, auxs.mean() * mo.router_aux_coef
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg, *, num_groups: int = 1,
+            ep_axis: str | None = None, dp_axis=None):
+    """Pre-norm residual MoE block: (B,S,D) → (x+out, aux)."""
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    out, aux = moe_mix(params, h, cfg, num_groups=num_groups,
+                       ep_axis=ep_axis, dp_axis=dp_axis)
+    return x + out, aux

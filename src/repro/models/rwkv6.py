@@ -1,0 +1,183 @@
+"""RWKV-6 "Finch" time-mix — attention-free mixer with data-dependent decay.
+
+State per head is a (head_dim × head_dim) outer-product accumulator:
+
+    S_t = diag(w_t) · S_{t-1} + k_tᵀ v_t          (w_t data-dependent, <1)
+    y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+
+Train/prefill uses a chunked scan (sequential over chunks, intra-chunk
+unrolled matmuls — mirrors kernels/rwkv6_scan); decode is the O(1) recurrence.
+FPR note: no KV cache exists — the framework runs this arch with a recycled
+state-pool only (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense, rms_norm
+
+HEAD_SIZE = 64
+
+
+def init_rwkv6(key, cfg, dtype=jnp.bfloat16) -> dict:
+    D = cfg.d_model
+    nH = D // HEAD_SIZE
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": jnp.ones((D,), dtype),
+        "mu": (jax.random.uniform(ks[0], (5, D), jnp.float32)).astype(dtype),
+        "w_lora_a": init_dense(ks[1], D, 64, dtype),
+        "w_lora_b": (jax.random.normal(ks[2], (64, D), jnp.float32) * 0.01
+                     ).astype(dtype),
+        "wr": init_dense(ks[3], D, D, dtype),
+        "wk": init_dense(ks[4], D, D, dtype),
+        "wv": init_dense(ks[5], D, D, dtype),
+        "wg": init_dense(ks[6], D, D, dtype),
+        "u": (jax.random.normal(ks[7], (nH, HEAD_SIZE), jnp.float32) * 0.1
+              ).astype(jnp.float32),
+        "ln_x": jnp.stack([jnp.ones((D,), jnp.float32),
+                           jnp.zeros((D,), jnp.float32)]),
+        "wo": init_dense(jax.random.fold_in(key, 99), D, D, dtype),
+    }
+
+
+def _projections(params, x, x_prev, cfg):
+    """Token-shift mixing + r/k/v/g/w projections. x,x_prev: (B,S,D)."""
+    mu = params["mu"].astype(jnp.float32)
+    xf, xp = x.astype(jnp.float32), x_prev.astype(jnp.float32)
+    mix = lambda i: (xf + mu[i] * (xp - xf)).astype(x.dtype)
+    r = mix(0) @ params["wr"]
+    k = mix(1) @ params["wk"]
+    v = mix(2) @ params["wv"]
+    g = mix(3) @ params["wg"]
+    # Finch: data-dependent per-channel decay via LoRA
+    w_raw = jnp.tanh(mix(4) @ params["w_lora_a"]) @ params["w_lora_b"]
+    w = jnp.exp(-jnp.exp(-0.5 + w_raw.astype(jnp.float32)))   # (0,1)
+    return r, k, v, g, w
+
+
+def _heads(t, nH):
+    B, S, D = t.shape
+    return t.reshape(B, S, nH, HEAD_SIZE)
+
+
+def _wkv_sequential(r, k, v, w, u, S0):
+    """Oracle recurrence. r,k,v,w: (B,S,nH,hd) f32; S0: (B,nH,hd,hd)."""
+    def step(S, t):
+        rt, kt, vt, wt = r[:, t], k[:, t], v[:, t], w[:, t]
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,nH,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+    S_last, ys = jax.lax.scan(step, S0, jnp.arange(r.shape[1]))
+    return ys.transpose(1, 0, 2, 3), S_last
+
+
+def _wkv_chunked(r, k, v, w, u, S0, chunk=32):
+    """Chunked WKV: cross-chunk state carry + intra-chunk direct form."""
+    B, S, nH, hd = r.shape
+    pad = (-S) % chunk
+    if pad:
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    T = r.shape[1]
+    nck = T // chunk
+    rc = r.reshape(B, nck, chunk, nH, hd).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(B, nck, chunk, nH, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nck, chunk, nH, hd).transpose(1, 0, 2, 3, 4)
+    wc = w.reshape(B, nck, chunk, nH, hd).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def chunk_step(S, inp):
+        # checkpointed: backward recomputes the (B,c,c,nH,hd) pairwise
+        # decay tensor per chunk rather than stacking it across the scan
+        rk, kk, vk, wk_ = inp                              # (B,c,nH,hd)
+        # decay products: W_t = prod_{s<=t} w_s within the chunk
+        logw = jnp.log(wk_)
+        cum = jnp.cumsum(logw, axis=1)                     # inclusive
+        Wincl = jnp.exp(cum)                               # (B,c,nH,hd)
+        Wexcl = jnp.exp(cum - logw)                        # exclusive
+        # contribution of the carried state: r_t · diag(Wexcl_t) S
+        y_state = jnp.einsum("bchk,bhkv->bchv", rk * Wexcl, S)
+        # intra-chunk: y_t += sum_{s<t} r_t (prod_{s<u<=t-1} w) k_s v_s
+        #            + r_t diag(u) k_t v_t
+        # pairwise decay D[t,s] = Wexcl_t / Wincl_s  (valid for s < t)
+        ratio = Wexcl[:, :, None] / Wincl[:, None, :]      # (B,t,s,nH,hd)
+        tidx = jnp.arange(rk.shape[1])
+        mask = (tidx[:, None] > tidx[None, :])[None, :, :, None, None]
+        att = jnp.einsum("bthk,btshk,bshk->btsh", rk, ratio * mask, kk)
+        diag = jnp.einsum("bthk,hk,bthk->bth", rk, u, kk)
+        y_intra = (jnp.einsum("btsh,bshv->bthv", att, vk)
+                   + diag[..., None] * vk)
+        # carry: S' = diag(Wincl_last) S + sum_s (prod_{s<u<=last} w) k_s v_s
+        tail = Wincl[:, -1:, :, :] / Wincl                 # (B,c,nH,hd)
+        S_new = (Wincl[:, -1][..., None] * S
+                 + jnp.einsum("bshk,bshv->bhkv", tail * kk, vk))
+        return S_new, y_state + y_intra
+
+    S_last, ys = jax.lax.scan(chunk_step, S0, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, nH, hd)[:, :S]
+    return y, S_last
+
+
+def rwkv6_mix(params, u_in, cfg, *, x_prev=None, wkv_state=None,
+              impl="chunked"):
+    """Pre-normed input u_in: (B,S,D) → (y, (last_x, wkv_state))."""
+    B, S, D = u_in.shape
+    nH = D // HEAD_SIZE
+    if x_prev is None:
+        x_prev_full = jnp.concatenate(
+            [jnp.zeros((B, 1, D), u_in.dtype), u_in[:, :-1]], axis=1)
+    else:
+        x_prev_full = jnp.concatenate([x_prev[:, None], u_in[:, :-1]], axis=1)
+    r, k, v, g, w = _projections(params, u_in, x_prev_full, cfg)
+    rh = _heads(r, nH).astype(jnp.float32)
+    kh = _heads(k, nH).astype(jnp.float32)
+    vh = _heads(v, nH).astype(jnp.float32)
+    wh = _heads(w.astype(jnp.bfloat16), nH).astype(jnp.float32)
+    S0 = (jnp.zeros((B, nH, HEAD_SIZE, HEAD_SIZE), jnp.float32)
+          if wkv_state is None else wkv_state)
+    uu = params["u"]
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.rwkv6_scan import ops as rk_ops
+        y, S_last = rk_ops.rwkv6_scan(rh, kh, vh, wh, uu, S0,
+                                      interpret=(impl == "pallas_interpret"))
+    elif impl == "sequential":
+        y, S_last = _wkv_sequential(rh, kh, vh, wh, uu, S0)
+    else:
+        y, S_last = _wkv_chunked(rh, kh, vh, wh, uu, S0)
+    y = y.reshape(B, S, D)
+    # per-head group norm
+    scale, bias = params["ln_x"][0], params["ln_x"][1]
+    yh = y.reshape(B, S, nH, HEAD_SIZE)
+    mean = yh.mean(-1, keepdims=True)
+    var = yh.var(-1, keepdims=True)
+    y = ((yh - mean) * jax.lax.rsqrt(var + 1e-5)).reshape(B, S, D)
+    y = y * scale + bias
+    y = (y * jax.nn.silu(g.astype(jnp.float32)))
+    out = y.astype(u_in.dtype) @ params["wo"]
+    return out, (u_in[:, -1], S_last)
+
+
+def rwkv6_layer(params, x, cfg, *, impl="chunked"):
+    h = rms_norm(x, params["norm"], cfg.norm_eps)
+    y, _ = rwkv6_mix(params, h, cfg, impl=impl)
+    return x + y
+
+
+def rwkv6_decode_step(params, x, cfg, last_x, wkv_state):
+    """x: (B,D) → (y, (last_x, wkv_state))."""
+    h = rms_norm(x[:, None], params["norm"], cfg.norm_eps)
+    y, (lx, st) = rwkv6_mix(params, h, cfg, x_prev=last_x,
+                            wkv_state=wkv_state, impl="sequential")
+    return x + y[:, 0], (lx, st)
+
+
+def init_rwkv6_state(cfg, batch: int):
+    nH = cfg.d_model // HEAD_SIZE
+    return (jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+            jnp.zeros((batch, nH, HEAD_SIZE, HEAD_SIZE), jnp.float32))

@@ -1,0 +1,119 @@
+"""Device-facing paged KV cache bound to the FPR memory manager.
+
+The split of responsibilities mirrors the paper exactly:
+
+  * ``FprMemoryManager`` (core/) is the *kernel*: physical block ownership,
+    recycling tracking, fence policy, eviction.
+  * ``PagedKVCache`` is the *device side*: the pools live as JAX arrays, and
+    the per-step (tables, lengths) tensors are assembled from the manager's
+    mappings.  A coherence fence invalidates device table copies (epoch
+    bump); the measured fence callback drains in-flight computation and
+    re-uploads the tables — the TLB-flush analogue whose cost FPR avoids.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.block_table import Mapping
+from repro.core.contexts import ContextRegistry, ContextScope
+from repro.core.fpr import FprMemoryManager
+from repro.core.shootdown import FenceCostModel, FenceEngine
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+
+
+class PagedKVCache:
+    def __init__(self, cfg: ModelConfig, num_blocks: int, max_batch: int,
+                 max_seq_len: int, *, fpr_enabled: bool = True,
+                 scope: ContextScope = ContextScope.PER_GROUP,
+                 dtype=jnp.float32, num_workers: int = 1,
+                 cost_model: FenceCostModel | None = None):
+        self.cfg = cfg
+        self.block_size = tfm.BLOCK_SIZE
+        self.max_batch = max_batch
+        self.max_blocks_per_seq = -(-max_seq_len // self.block_size)
+        self.fences = FenceEngine(cost_model=cost_model,
+                                  on_fence=self._device_fence)
+        self.mgr = FprMemoryManager(
+            num_blocks, num_workers=num_workers, max_seqs=max_batch * 4,
+            max_blocks_per_seq=self.max_blocks_per_seq,
+            fence_engine=self.fences, fpr_enabled=fpr_enabled)
+        self.contexts = ContextRegistry(default_scope=scope)
+        self.fpr_enabled = fpr_enabled
+        # device pools (decode-state pytree minus tables/lengths)
+        spec = tfm.cache_spec(cfg, max_batch, max_seq_len,
+                              num_blocks=num_blocks, dtype=dtype)
+        self.state = {k: jnp.zeros(sh, dt) for k, (sh, dt) in spec.items()}
+        self.state["tables"] = jnp.full(
+            (max_batch, self.max_blocks_per_seq), -1, jnp.int32)
+        self.state["lengths"] = jnp.zeros((max_batch,), jnp.int32)
+        self._fence_drains = 0
+        # swap "device": evicted block contents round-trip through host
+        # memory (the storage behind the page cache; latency is real)
+        self._swap_store: dict = {}
+        self._pool_keys = [k for k in self.state
+                           if k in ("k", "v", "mla_c", "mla_rope")]
+        self.mgr.on_swap_out = self._swap_out
+        self.mgr.on_swap_in = self._swap_in
+
+    def _swap_out(self, mid: int, idx: int, phys: int) -> None:
+        self._swap_store[(mid, idx)] = {
+            key: np.asarray(self.state[key][:, phys])
+            for key in self._pool_keys}
+
+    def _swap_in(self, mid: int, idx: int, phys: int) -> None:
+        data = self._swap_store.pop((mid, idx), None)
+        if data is None:
+            return
+        for key, rows in data.items():
+            self.state[key] = self.state[key].at[:, phys].set(
+                jnp.asarray(rows))
+
+    # -------------------------------------------------- measured fence cost
+    def _device_fence(self, reason: str, n_blocks: int) -> None:
+        """Drain in-flight steps + re-upload tables (the shootdown cost)."""
+        jax.block_until_ready(self.state["tables"])
+        tab, _ = self.mgr.tables.packed()
+        self.state["tables"] = jax.device_put(
+            jnp.asarray(tab[:self.max_batch], jnp.int32))
+        self._fence_drains += 1
+
+    # ---------------------------------------------------------- allocation
+    def alloc_sequence(self, n_tokens: int, *, stream: str = "default",
+                       group_id: int | None = None,
+                       use_fpr: bool | None = None) -> Mapping:
+        n_blocks = max(1, -(-n_tokens // self.block_size))
+        gid = group_id if group_id is not None else 1
+        ctx = self.contexts.resolve(
+            group_id=gid, stream_name=stream,
+            use_fpr=self.fpr_enabled if use_fpr is None else use_fpr)
+        return self.mgr.mmap(n_blocks, ctx)
+
+    def extend_sequence(self, m: Mapping, n_blocks: int = 1) -> None:
+        self.mgr.extend(m.mapping_id, n_blocks)
+
+    def free_sequence(self, m: Mapping) -> None:
+        self.mgr.munmap(m.mapping_id)
+
+    # ------------------------------------------------------- device tensors
+    def slot_tables(self, mappings: dict[int, Mapping]) -> jax.Array:
+        """Build the (max_batch, M) device table from slot → mapping."""
+        tab = np.full((self.max_batch, self.max_blocks_per_seq), -1,
+                      np.int32)
+        for slot, m in mappings.items():
+            n = min(len(m.physical), self.max_blocks_per_seq)
+            tab[slot, :n] = [b if b >= 0 else -1 for b in m.physical[:n]]
+        return jnp.asarray(tab)
+
+    def update_tables(self, mappings: dict[int, Mapping],
+                      lengths: np.ndarray) -> None:
+        self.state["tables"] = self.slot_tables(mappings)
+        self.state["lengths"] = jnp.asarray(lengths, jnp.int32)
+
+    def counters(self) -> dict:
+        d = self.mgr.counters()
+        d["device_fence_drains"] = self._fence_drains
+        return d

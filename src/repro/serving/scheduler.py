@@ -1,0 +1,90 @@
+"""Continuous-batching scheduler with FPR-aware block lifecycle.
+
+Requests flow  queued → prefill → decoding → done.  Completion frees the
+sequence's blocks (the munmap analogue — with FPR the fence is skipped and
+the blocks recycle to the next admitted request of the same stream), and
+admission allocates them back (the allocation-phase check).  Preemption
+under memory pressure swaps a victim's blocks out through the watermark
+evictor and re-queues it (the kswapd analogue).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.core.block_table import Mapping
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int
+    stream: str = "default"
+    group_id: int = 1
+    # runtime
+    slot: Optional[int] = None
+    mapping: Optional[Mapping] = None
+    generated: list = field(default_factory=list)
+    state: str = "queued"              # queued|running|done
+
+    @property
+    def length(self) -> int:
+        return len(self.prompt) + len(self.generated)
+
+
+class Scheduler:
+    """Slot-based continuous batching over a fixed decode batch."""
+
+    def __init__(self, max_batch: int):
+        self.max_batch = max_batch
+        self.queue: list[Request] = []
+        self.running: dict[int, Request] = {}      # slot → request
+        self.done: list[Request] = []
+        self._rid = itertools.count(1)
+
+    def submit(self, prompt, max_new_tokens: int, stream: str = "default",
+               group_id: int = 1) -> int:
+        rid = next(self._rid)
+        self.queue.append(Request(rid=rid,
+                                  prompt=np.asarray(prompt, np.int32),
+                                  max_new_tokens=max_new_tokens,
+                                  stream=stream, group_id=group_id))
+        return rid
+
+    def admissible(self) -> list[int]:
+        return [s for s in range(self.max_batch) if s not in self.running]
+
+    def admit(self) -> list[Request]:
+        """Move queued requests into free slots (caller allocates blocks)."""
+        admitted = []
+        for slot in self.admissible():
+            if not self.queue:
+                break
+            r = self.queue.pop(0)
+            r.slot = slot
+            r.state = "running"
+            self.running[slot] = r
+            admitted.append(r)
+        return admitted
+
+    def complete(self, r: Request) -> None:
+        r.state = "done"
+        del self.running[r.slot]
+        self.done.append(r)
+
+    def preempt(self, r: Request) -> None:
+        """Victim loses its slot and re-queues at the front."""
+        del self.running[r.slot]
+        r.slot = None
+        r.state = "queued"
+        r.generated.clear()            # re-prefill on re-admission
+        self.queue.insert(0, r)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not self.running

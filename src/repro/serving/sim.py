@@ -1,0 +1,218 @@
+"""Worker-level simulation of fence impact — the paper's microbenchmark
+harness (§V-A cases 1–5, §V-B eviction) at datacenter scale.
+
+The paper measures how TLB shootdowns from I/O threads steal time from
+compute threads.  The serving analogue: **alloc/free workers** (request
+streams cycling KV blocks through mmap→access→munmap) steal time from
+**compute workers** (decode/train steps) because a coherence fence drains
+*every* worker's in-flight dispatch and stalls them for the fence cost.
+
+Time is virtual (deterministic): each worker advances a clock; a fence at
+time t adds ``fence_cost`` of stall to every worker whose clock overlaps
+[t, t+fence_cost] — mirroring Fig. 3's lazy-shootdown asymmetry via the
+``in_kernel_frac`` parameter (stalls while "in the kernel" are absorbed).
+
+This is also the 1000+-node projection vehicle: the fence cost model
+scales with replica count (log-tree table rebroadcast) and dispatch depth.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.contexts import ContextScope, derive_context
+from repro.core.eviction import WatermarkEvictor, Watermarks
+from repro.core.fpr import FprMemoryManager
+from repro.core.shootdown import FenceCostModel, FenceEngine
+
+
+@dataclass
+class SimConfig:
+    num_blocks: int = 4096
+    io_workers: int = 1               # mmap-access-munmap cyclers
+    compute_workers: int = 0          # pure compute (never allocate)
+    mixed_workers: int = 0            # alternate I/O and compute
+    iters: int = 2000                 # cycles per I/O(/mixed) worker
+    blocks_per_map: int = 8           # mapping size (32 KiB-file analogue)
+    alloc_cost: float = 1.0           # virtual µs per map+access+unmap
+    compute_quantum: float = 1.0      # virtual µs per compute op
+    compute_factor: float = 1.0       # CF knob (§V-B): quanta per I/O op
+    in_kernel_frac: float = 0.0       # fraction of stalls absorbed (Fig. 3)
+    fpr: bool = True
+    scope: ContextScope = ContextScope.PER_GROUP
+    shared_context: bool = False      # all workers share one recycling ctx
+    fence_cost: float = 25.0          # initiator wait per fence (virtual µs)
+    recv_stall: float = 0.2           # per-recipient stall (remote flush +
+                                      # TLB refill tail; calibrated to the
+                                      # paper's ~21% compute loss shape)
+    storage_latency: float = 0.0      # extra µs per map (device latency)
+    seed: int = 0
+
+
+@dataclass
+class SimResult:
+    io_ops: int = 0
+    compute_ops: int = 0
+    fences: int = 0
+    fences_skipped: int = 0
+    elided: int = 0
+    io_time: float = 0.0
+    compute_time: float = 0.0
+    stall_time: float = 0.0
+    evictions: int = 0
+
+    def throughput(self) -> float:
+        t = max(self.io_time, 1e-9)
+        return self.io_ops / t
+
+    def compute_throughput(self) -> float:
+        t = max(self.compute_time, 1e-9)
+        return self.compute_ops / t
+
+    def as_dict(self) -> dict:
+        d = dict(self.__dict__)
+        d["io_throughput"] = self.throughput()
+        d["compute_throughput"] = self.compute_throughput()
+        return d
+
+
+class FenceImpactSim:
+    """Deterministic virtual-time simulation of cases 1–5."""
+
+    def __init__(self, cfg: SimConfig,
+                 cost_model: FenceCostModel | None = None):
+        self.cfg = cfg
+        self.fences = FenceEngine(cost_model=cost_model, measure=False)
+        self.mgr = FprMemoryManager(
+            cfg.num_blocks,
+            num_workers=max(1, cfg.io_workers + cfg.mixed_workers),
+            fence_engine=self.fences, fpr_enabled=cfg.fpr)
+        self.res = SimResult()
+
+    def run(self) -> SimResult:
+        c = self.cfg
+        res = self.res
+        n_io = c.io_workers
+        n_cp = c.compute_workers
+        n_mx = c.mixed_workers
+        stall_recipients = n_io + n_cp + n_mx
+
+        def fence_stall():
+            # every worker that may hold a stale translation is stalled for
+            # recv_stall (remote flush + refills); the initiating worker
+            # waits fence_cost for all confirmations (grows weakly with
+            # recipient count — tree-ack)
+            absorbed = c.in_kernel_frac
+            per_worker = c.recv_stall * (1.0 - absorbed)
+            res.stall_time += per_worker * stall_recipients
+            import math
+            return (c.fence_cost
+                    * (1 + 0.15 * math.log2(max(2, stall_recipients))))
+
+        fences_before = self.fences.stats.fences
+
+        for it in range(c.iters):
+            # --- I/O workers: mmap → access → munmap ----------------------
+            for w in range(n_io):
+                ctx_gid = 1 if c.shared_context else (w + 1)
+                ctx = (derive_context(c.scope, group_id=ctx_gid)
+                       if c.fpr else None)
+                f0 = self.fences.stats.fences
+                m = self.mgr.mmap(c.blocks_per_map, ctx, worker=w)
+                self.mgr.munmap(m.mapping_id, worker=w)
+                res.io_ops += 1
+                cost = c.alloc_cost + c.storage_latency
+                if self.fences.stats.fences > f0:
+                    cost += fence_stall()
+                res.io_time += cost
+            # --- compute workers: stalled only by fences ------------------
+            if n_cp:
+                res.compute_ops += n_cp
+                res.compute_time += n_cp * c.compute_quantum
+            # --- mixed workers: alternate -------------------------------
+            for w in range(n_mx):
+                wid = n_io + w
+                ctx_gid = 1 if c.shared_context else (100 + w)
+                ctx = (derive_context(c.scope, group_id=ctx_gid)
+                       if c.fpr else None)
+                f0 = self.fences.stats.fences
+                m = self.mgr.mmap(c.blocks_per_map, ctx, worker=wid)
+                self.mgr.munmap(m.mapping_id, worker=wid)
+                res.io_ops += 1
+                cost = c.alloc_cost + c.storage_latency
+                if self.fences.stats.fences > f0:
+                    cost += fence_stall()
+                res.io_time += cost
+                res.compute_ops += int(c.compute_factor)
+                res.compute_time += c.compute_factor * c.compute_quantum
+
+        st = self.fences.stats
+        res.fences = st.fences - fences_before
+        res.fences_skipped = st.skipped_at_free
+        res.elided = st.elided_by_version
+        # compute workers absorb the accumulated stall into their time
+        if n_cp or n_mx:
+            res.compute_time += res.stall_time
+        return res
+
+
+def eviction_sim(cfg: SimConfig, *, working_set_factor: float = 10.0,
+                 pg_buffer: int = 0,
+                 watermarks: Watermarks | None = None) -> SimResult:
+    """§V-B: threads randomly touch a mapping ≫ memory; kswapd evicts.
+
+    ``pg_buffer`` models the per-thread local memory (PG) — each compute
+    quantum touches it, and every fence's TLB flush forces page-walk
+    refills proportional to the buffer size (the paper's PG effect).
+    """
+    rng = np.random.default_rng(cfg.seed)
+    fences = FenceEngine(measure=False)
+    mgr = FprMemoryManager(cfg.num_blocks, num_workers=1,
+                           fence_engine=fences, fpr_enabled=cfg.fpr,
+                           max_blocks_per_seq=int(
+                               cfg.num_blocks * working_set_factor) + 1)
+    res = SimResult()
+    n_threads = max(1, cfg.mixed_workers)
+    total_blocks = int(cfg.num_blocks * working_set_factor)
+    ctx = derive_context(cfg.scope, group_id=1) if cfg.fpr else None
+    m = mgr.mmap_sparse(total_blocks, ctx)
+
+    victims_state = {"pos": 0}
+
+    def victims():
+        # LRU ring over the big mapping
+        start = victims_state["pos"]
+        for i in range(total_blocks):
+            idx = (start + i) % total_blocks
+            victims_state["pos"] = (idx + 1) % total_blocks
+            yield m.mapping_id, idx, cfg.fpr
+
+    ev = WatermarkEvictor(mgr, victims, watermarks=watermarks)
+
+    for it in range(cfg.iters):
+        for t in range(n_threads):
+            idx = int(rng.integers(0, total_blocks))
+            f0 = fences.stats.fences
+            ev.maybe_evict()
+            _, faulted = mgr.touch(m.mapping_id, idx)
+            res.io_ops += 1
+            cost = cfg.alloc_cost + (cfg.storage_latency if faulted else 0)
+            fences_recv = fences.stats.fences - f0
+            if fences_recv:
+                stall = cfg.fence_cost * (1 - cfg.in_kernel_frac)
+                stall += cfg.recv_stall * (n_threads - 1) * fences_recv
+                # TLB refill for the PG buffer after each flush
+                stall += pg_buffer * 0.05 * fences_recv
+                cost += stall
+                res.stall_time += stall
+            res.io_time += cost
+            res.compute_ops += int(cfg.compute_factor)
+            res.compute_time += cfg.compute_factor * cfg.compute_quantum
+    res.compute_time += res.stall_time
+    res.fences = fences.stats.fences
+    res.fences_skipped = fences.stats.skipped_at_free
+    res.elided = fences.stats.elided_by_version
+    res.evictions = ev.stats.blocks_evicted
+    return res

@@ -1,0 +1,181 @@
+"""Train step factory + fault-tolerant training driver.
+
+``make_train_step`` builds the jitted (donated, sharded) step:
+
+    (params, opt_state, batch) → (params, opt_state, metrics)
+
+with microbatched gradient accumulation (``lax.scan`` keeps the HLO one
+microbatch wide — activation memory is bounded by mb, not the global
+batch), optional int8 error-feedback gradient compression on the FSDP
+reduction, and remat inherited from the model's scanned blocks.
+
+``train`` is the driver: checkpoint/restart (atomic, elastic), preemption-
+safe data skip-ahead, straggler-aware step timing, NaN guard.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shard_rules
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.training import optimizer as opt_mod
+from repro.training.grad_compression import (compress_tree, decompress_tree,
+                                             init_error_state)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    adamw: opt_mod.AdamWConfig = field(default_factory=opt_mod.AdamWConfig)
+    compress_grads: bool = False
+    attn_impl: str = "chunked"           # 'chunked' | 'pallas' on TPU
+    moe_groups: int = 1
+    remat: bool = True
+    #: microbatch gradient-accumulation dtype (bf16 halves the accumulator
+    #: tree for ≥100B models; f32 default)
+    accum_dtype: str = "float32"
+
+
+def _microbatch(batch: dict, n: int) -> dict:
+    return {k: v.reshape((n, v.shape[0] // n) + v.shape[1:])
+            for k, v in batch.items()}
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None,
+                    donate: bool = True):
+    """Returns (step_fn, make_shardings).  ``step_fn`` is jitted; shardings
+    are attached when a mesh is given (None = single-device smoke)."""
+
+    if mesh is not None:
+        dp = shard_rules.dp_axes(mesh)
+        act_spec = P(dp if len(dp) != 1 else dp[0], None, None)
+    else:
+        act_spec = None
+
+    def loss_of(params, mb):
+        return tfm.loss_fn(params, cfg, mb, impl=tc.attn_impl,
+                           moe_groups=tc.moe_groups, act_spec=act_spec,
+                           mesh=mesh)
+
+    def step(params, opt_state, err_state, batch):
+        if tc.microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            mbs = _microbatch(batch, tc.microbatches)
+
+            adt = jnp.dtype(tc.accum_dtype)
+
+            def acc_fn(carry, mb):
+                loss_acc, gacc = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(adt), gacc, g)
+                return (loss_acc + l, gacc), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, adt), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_fn, (jnp.zeros((), jnp.float32), zero), mbs)
+            inv = 1.0 / tc.microbatches
+            loss = loss * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+
+        if tc.compress_grads:
+            qtree, err_state = compress_tree(grads, err_state)
+            grads = decompress_tree(qtree, like=grads)
+
+        params, opt_state, metrics = opt_mod.adamw_update(
+            params, grads, opt_state, tc.adamw)
+        metrics["loss"] = loss
+        return params, opt_state, err_state, metrics
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1, 2) if donate else ())
+
+    def shardings(params_shape):
+        pspec = shard_rules.param_specs(params_shape, mesh)
+        psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec)
+        osh = {"mu": psh, "nu": psh,
+               "step": NamedSharding(mesh, P())}
+        esh = psh if tc.compress_grads else None
+        bsp = shard_rules.batch_specs(
+            mesh, has_patches=cfg.frontend == "vision",
+            has_frames=cfg.enc_dec)
+        bsh = {k: NamedSharding(mesh, v) for k, v in bsp.items()}
+        msh = NamedSharding(mesh, P())
+        return psh, osh, esh, bsh, msh
+
+    def jitted(params_shape, batch_keys=("tokens", "labels")):
+        psh, osh, esh, bsh, msh = shardings(params_shape)
+        bsh = {k: bsh[k] for k in batch_keys}
+        return jax.jit(
+            step,
+            in_shardings=(psh, osh, esh, bsh),
+            out_shardings=(psh, osh, esh,
+                           {"loss": msh, "grad_norm": msh, "lr": msh}),
+            donate_argnums=(0, 1, 2) if donate else ())
+
+    return step, jitted
+
+
+def init_all(key, cfg: ModelConfig, tc: TrainConfig, dtype=jnp.bfloat16):
+    params = tfm.init_params(key, cfg, dtype)
+    opt_state = opt_mod.init_opt_state(params)
+    err_state = (init_error_state(params) if tc.compress_grads
+                 else jnp.zeros((), jnp.float32))
+    return params, opt_state, err_state
+
+
+def train(cfg: ModelConfig, tc: TrainConfig, data_iter, *, steps: int,
+          ckpt_mgr=None, ckpt_every: int = 100, mesh=None,
+          seed: int = 0, log_every: int = 10, dtype=jnp.bfloat16,
+          params=None, opt_state=None) -> dict:
+    """Driver with checkpoint/restart.  Returns final metrics history."""
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params, opt_state, err_state = init_all(key, cfg, tc, dtype)
+    else:
+        err_state = (init_error_state(params) if tc.compress_grads
+                     else jnp.zeros((), jnp.float32))
+
+    start = 0
+    if ckpt_mgr is not None and ckpt_mgr.latest_step() is not None:
+        start = ckpt_mgr.latest_step()
+        state = ckpt_mgr.restore(start, {"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+
+    if mesh is None:
+        step_fn = make_train_step(cfg, tc, None)
+    else:
+        _, jitted = make_train_step(cfg, tc, mesh)
+        step_fn = jitted(jax.eval_shape(lambda: params))
+
+    hist = {"loss": [], "step_time": []}
+    for s in range(start, steps):
+        batch = {k: jnp.asarray(v) for k, v in data_iter.batch(s).items()}
+        t0 = time.perf_counter()
+        params, opt_state, err_state, metrics = step_fn(
+            params, opt_state, err_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        if not jnp.isfinite(loss):
+            raise FloatingPointError(f"non-finite loss at step {s}: {loss}")
+        hist["loss"].append(loss)
+        hist["step_time"].append(dt)
+        if log_every and s % log_every == 0:
+            print(f"step {s:5d}  loss {loss:8.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):7.3f}  {dt*1e3:7.1f}ms")
+        if ckpt_mgr is not None and (s + 1) % ckpt_every == 0:
+            ckpt_mgr.save(s + 1, {"params": params, "opt": opt_state},
+                          blocking=False)
+    if ckpt_mgr is not None:
+        ckpt_mgr.wait()
+    return hist

@@ -1,0 +1,147 @@
+"""Unit + property tests for the buddy allocator and per-worker lists."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.allocator import (BlockAllocator, BuddyAllocator,
+                                  OutOfBlocksError)
+from repro.core.tracking import BlockTracker
+
+
+def make_buddy(n=256, max_order=6):
+    tr = BlockTracker(n)
+    return BuddyAllocator(n, tr, max_order=max_order), tr
+
+
+class TestBuddy:
+    def test_alloc_free_roundtrip(self):
+        b, _ = make_buddy(64)
+        blocks = [b.alloc(0) for _ in range(64)]
+        assert sorted(blocks) == list(range(64))
+        assert b.free_blocks == 0
+        with pytest.raises(OutOfBlocksError):
+            b.alloc(0)
+        for blk in blocks:
+            b.free(blk, 0)
+        assert b.free_blocks == 64
+
+    def test_merge_restores_large_orders(self):
+        b, _ = make_buddy(64, max_order=6)
+        blocks = [b.alloc(0) for _ in range(64)]
+        for blk in blocks:
+            b.free(blk, 0)
+        # after all frees, buddies must have fully re-merged
+        assert b.free_lists[6] == {0}
+        assert all(not fl for fl in b.free_lists[:6])
+
+    def test_contiguous_runs_are_aligned(self):
+        b, _ = make_buddy(256, max_order=8)
+        for order in (1, 2, 3, 4):
+            head = b.alloc(order)
+            assert head % (1 << order) == 0
+            b.free(head, order)
+
+    def test_double_free_detected(self):
+        b, _ = make_buddy(16, max_order=4)
+        h = b.alloc(0)
+        b.free(h, 0)
+        with pytest.raises(ValueError):
+            b.free(h, 0)
+
+    def test_non_power_of_two_pool(self):
+        b, _ = make_buddy(100, max_order=6)
+        blocks = [b.alloc(0) for _ in range(100)]
+        assert sorted(blocks) == list(range(100))
+        with pytest.raises(OutOfBlocksError):
+            b.alloc(0)
+
+    def test_split_propagates_tracking(self):
+        b, tr = make_buddy(16, max_order=4)
+        # free pool is one order-4 run at 0; tag it, then alloc order-0
+        tr.set(0, ctx_id=5, version=3)
+        blk = b.alloc(0)
+        assert blk == 0
+        # every split head inherited the tracking data
+        for head in (8, 4, 2, 1):
+            assert tr.ctx_id(head) == 5, head
+            assert tr.version(head) == 3
+
+    def test_merge_conflict_flags_always_flush(self):
+        b, tr = make_buddy(4, max_order=2)
+        b0 = b.alloc(0)
+        b1 = b.alloc(0)
+        assert b1 == (b0 ^ 1)
+        tr.set(b0, ctx_id=1, version=1)
+        tr.set(b1, ctx_id=2, version=9)
+        b.free(b0, 0)
+        b.free(b1, 0)
+        head = min(b0, b1)
+        assert tr.always_flush(head)
+        assert tr.version(head) == 9
+
+
+@given(st.lists(st.sampled_from(["a0", "a1", "a2", "f"]), min_size=1,
+                max_size=200))
+@settings(max_examples=60, deadline=None)
+def test_buddy_never_leaks_or_overlaps(ops):
+    """Property: allocated runs never overlap and free count is conserved."""
+    b, _ = make_buddy(128, max_order=7)
+    live: dict[int, int] = {}  # head -> order
+    for op in ops:
+        if op == "f" and live:
+            head, order = next(iter(live.items()))
+            del live[head]
+            b.free(head, order)
+        elif op.startswith("a"):
+            order = int(op[1])
+            try:
+                head = b.alloc(order)
+            except OutOfBlocksError:
+                continue
+            live[head] = order
+    # overlap check
+    covered = np.zeros(128, dtype=bool)
+    for head, order in live.items():
+        run = slice(head, head + (1 << order))
+        assert not covered[run].any(), "overlapping allocation"
+        covered[run] = True
+    assert covered.sum() + b.free_blocks == 128
+
+
+class TestWorkerLists:
+    def test_fast_path_recycles_lifo(self):
+        tr = BlockTracker(256)
+        a = BlockAllocator(256, tr, num_workers=2, pcp_batch=8, pcp_high=16)
+        x = a.alloc_block(0)
+        a.free_block(x, 0)
+        y = a.alloc_block(0)
+        assert x == y                       # same worker recycles same block
+
+    def test_spill_and_refill(self):
+        tr = BlockTracker(256)
+        a = BlockAllocator(256, tr, num_workers=1, pcp_batch=4, pcp_high=8)
+        blocks = [a.alloc_block(0) for _ in range(32)]
+        for blk in blocks:
+            a.free_block(blk, 0)
+        assert a.buddy.stats.spills > 0
+        assert a.free_blocks == 256
+
+    def test_worker_steal_when_buddy_empty(self):
+        tr = BlockTracker(8)
+        a = BlockAllocator(8, tr, num_workers=2, pcp_batch=8, pcp_high=64)
+        got = [a.alloc_block(0) for _ in range(8)]
+        for g in got:
+            a.free_block(g, 0)             # all 8 now on worker 0's list
+        # worker 1 must steal from worker 0
+        blk = a.alloc_block(1)
+        assert blk in got
+
+    def test_exhaustion_raises(self):
+        tr = BlockTracker(8)
+        a = BlockAllocator(8, tr, num_workers=1, pcp_batch=4, pcp_high=8)
+        for _ in range(8):
+            a.alloc_block(0)
+        with pytest.raises(OutOfBlocksError):
+            a.alloc_block(0)

@@ -1,0 +1,258 @@
+"""Behaviour tests for the FPR manager: the paper's §IV guarantees."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (ContextScope, FprMemoryManager, StaleMappingError,
+                        WatermarkEvictor, Watermarks, derive_context)
+
+
+def ctx(gid=1, scope=ContextScope.PER_GROUP, **kw):
+    return derive_context(scope, group_id=gid, **kw)
+
+
+def make_mgr(n=512, fpr=True, **kw):
+    return FprMemoryManager(n, fpr_enabled=fpr, max_order=7, **kw)
+
+
+class TestRecyclingSkipsFences:
+    def test_fpr_munmap_skips_fence(self):
+        m = make_mgr()
+        c = ctx(1)
+        mp = m.mmap(8, c)
+        m.munmap(mp.mapping_id)
+        assert m.fences.stats.fences == 0
+        assert m.fences.stats.skipped_at_free == 8
+
+    def test_baseline_munmap_fences_once_per_call(self):
+        m = make_mgr(fpr=False)
+        for _ in range(5):
+            mp = m.mmap(8, ctx(1))          # ctx ignored when disabled
+            m.munmap(mp.mapping_id)
+        assert m.fences.stats.fences == 5   # batched: one per munmap
+        assert m.fences.stats.fences_by_reason["munmap"] == 5
+
+    def test_recycle_cycle_never_fences(self):
+        """The paper's core claim: mmap-read-munmap cycles by one context
+        recycle the same physical blocks with zero shootdowns."""
+        m = make_mgr()
+        c = ctx(1)
+        seen = set()
+        for _ in range(100):
+            mp = m.mmap(4, c)
+            seen.update(mp.physical)
+            m.munmap(mp.mapping_id)
+        assert m.fences.stats.fences == 0
+        assert m.stats.recycled_hits >= 4 * 99   # all but first cycle recycle
+        assert len(seen) <= 8                    # same few physical blocks
+
+    def test_context_exit_fences_exactly_once(self):
+        m = make_mgr()
+        c1, c2 = ctx(1), ctx(2)
+        mp = m.mmap(4, c1)
+        blocks = list(mp.physical)
+        m.munmap(mp.mapping_id)
+        assert m.fences.stats.fences == 0
+        mp2 = m.mmap(4, c2)                  # same worker list → same blocks
+        assert set(mp2.physical) == set(blocks)
+        assert m.fences.stats.fences == 1    # one merged context-exit fence
+        assert m.fences.stats.fences_by_reason["context_exit"] == 1
+
+    def test_nonfpr_alloc_after_fpr_free_fences(self):
+        """Security: blocks leaving recycling to a NON-FPR user also fence."""
+        m = make_mgr()
+        mp = m.mmap(4, ctx(1))
+        m.munmap(mp.mapping_id)
+        m.mmap(4, None)                      # standard mapping, id 0
+        assert m.fences.stats.fences == 1
+
+    def test_version_elision(self):
+        """§IV-C5: a global fence between free and context-exit realloc elides
+        the exit fence."""
+        m = make_mgr()
+        mp = m.mmap(4, ctx(1))
+        m.munmap(mp.mapping_id)
+        m.fences.fence("unrelated_global")   # e.g. another context's exit
+        before = m.fences.stats.fences
+        m.mmap(4, ctx(2))                    # exits ctx1's recycling
+        assert m.fences.stats.fences == before          # elided!
+        assert m.fences.stats.elided_by_version == 4
+
+    def test_fixed_address_always_fences(self):
+        m = make_mgr()
+        m.mmap(2, ctx(1), fixed_logical=10_000)
+        assert m.fences.stats.fences_by_reason["fixed_address"] == 1
+
+
+class TestAbaConsistency:
+    def test_logical_ids_never_reused(self):
+        m = make_mgr()
+        c = ctx(1)
+        starts = []
+        for _ in range(20):
+            mp = m.mmap(4, c)
+            starts.append(mp.logical_start)
+            m.munmap(mp.mapping_id)
+        assert starts == sorted(set(starts))   # strictly monotonic
+
+    def test_stale_mapping_lookup_detected(self):
+        m = make_mgr()
+        c = ctx(1)
+        mp = m.mmap(4, c)
+        mid, lid = mp.mapping_id, mp.logical_start
+        m.munmap(mid)
+        m.mmap(4, c)                          # recycles the physical blocks
+        with pytest.raises(StaleMappingError):
+            m.tables.lookup(mid, lid)         # ABA attempt → detected
+        assert m.tables.stale_lookups_detected == 1
+
+    def test_stale_epoch_rejected_after_fence(self):
+        m = make_mgr()
+        mp = m.mmap(2, ctx(1))
+        old_epoch = m.tables.epoch
+        m.fences.fence("test")               # bumps table epoch via coupling
+        with pytest.raises(StaleMappingError):
+            m.tables.lookup(mp.mapping_id, mp.logical_start,
+                            table_epoch=old_epoch)
+
+
+class TestSecurityProperty:
+    """Invariant 1: a block never moves between contexts without a fence
+    (or a covering global fence) in between."""
+
+    @given(st.lists(st.tuples(st.integers(1, 3), st.integers(1, 4)),
+                    min_size=2, max_size=60))
+    @settings(max_examples=60, deadline=None)
+    def test_no_unfenced_cross_context_transfer(self, trace):
+        m = make_mgr(128, max_seqs=512)
+        owner_at_free: dict[int, tuple[int, int]] = {}  # block → (ctx, epoch)
+        live: list = []
+        for gid, n in trace:
+            c = ctx(gid)
+            mp = m.mmap(n, c)
+            for b in mp.physical:
+                if b in owner_at_free:
+                    prev_ctx, free_epoch = owner_at_free.pop(b)
+                    if prev_ctx != c.ctx_id:
+                        # fence engine epoch must have advanced since the free
+                        assert m.fences.epoch > free_epoch, (
+                            f"block {b} crossed {prev_ctx}->{c.ctx_id} "
+                            "without an intervening fence")
+            live.append(mp)
+            if len(live) > 2:
+                victim = live.pop(0)
+                vm = m.tables.mappings[victim.mapping_id]
+                epoch_at_free = m.fences.epoch
+                for b in vm.physical:
+                    owner_at_free[b] = (vm.ctx_id, epoch_at_free)
+                m.munmap(victim.mapping_id)
+        for mp in live:
+            m.munmap(mp.mapping_id)
+
+
+class TestEviction:
+    def _pressure_setup(self, fpr=True, n=256):
+        m = make_mgr(n, fpr=fpr, max_seqs=512, max_blocks_per_seq=n * 4)
+        c = ctx(1)
+        big = m.mmap_sparse(n * 4, c)        # file 4x larger than memory
+        lru: list[int] = []
+
+        def victims():
+            for idx in list(lru):
+                yield big.mapping_id, idx, big.ctx_id != 0
+
+        ev = WatermarkEvictor(m, victims,
+                              Watermarks(min_frac=0.05, low_frac=0.15,
+                                         high_frac=0.3))
+        return m, big, lru, ev
+
+    def test_fault_in_and_evict_cycle(self):
+        m, big, lru, ev = self._pressure_setup()
+        rng = np.random.default_rng(0)
+        faults = 0
+        for _ in range(2000):
+            ev.maybe_evict()
+            idx = int(rng.integers(0, big.num_blocks))
+            _, faulted = m.touch(big.mapping_id, idx)
+            faults += faulted
+            if idx in lru:
+                lru.remove(idx)
+            lru.append(idx)
+        assert faults > 0
+        assert ev.stats.blocks_evicted > 0
+        # FPR path: only huge batches (all blocks are in a recycling context)
+        assert ev.stats.normal_batches == 0
+        assert ev.stats.huge_batches > 0
+        # one fence per huge batch, nothing else
+        assert m.fences.stats.fences == ev.stats.huge_batches
+
+    def test_baseline_eviction_fences_per_32_batch(self):
+        m, big, lru, ev = self._pressure_setup(fpr=False)
+        rng = np.random.default_rng(0)
+        for _ in range(2000):
+            ev.maybe_evict()
+            idx = int(rng.integers(0, big.num_blocks))
+            m.touch(big.mapping_id, idx)
+            if idx in lru:
+                lru.remove(idx)
+            lru.append(idx)
+        assert ev.stats.normal_batches > 0
+        assert m.fences.stats.fences >= ev.stats.normal_batches
+        # baseline fences far more often than FPR under identical load
+        m2, big2, lru2, ev2 = self._pressure_setup(fpr=True)
+        rng = np.random.default_rng(0)
+        for _ in range(2000):
+            ev2.maybe_evict()
+            idx = int(rng.integers(0, big2.num_blocks))
+            m2.touch(big2.mapping_id, idx)
+            if idx in lru2:
+                lru2.remove(idx)
+            lru2.append(idx)
+        assert m2.fences.stats.fences < m.fences.stats.fences
+
+    def test_swapped_blocks_refault(self):
+        m, big, lru, ev = self._pressure_setup()
+        for i in range(246):                 # push free below the MIN watermark
+            # (FPR pages are exempt between low..min; only the huge-batch
+            # path below min may evict them, §IV-B)
+            m.touch(big.mapping_id, i)
+            lru.append(i)
+        ev.maybe_evict()
+        assert m.stats.swap_outs > 0
+        # refault a swapped block
+        swapped_idx = next(i for i in range(246)
+                           if m.tables.mappings[big.mapping_id].physical[i] == -2)
+        _, faulted = m.touch(big.mapping_id, swapped_idx)
+        assert faulted and m.stats.swap_ins >= 1
+
+
+class TestContexts:
+    def test_scope_widening_reduces_fences(self):
+        """§IV-C2: wider contexts → fewer fences for cross-stream recycling."""
+        def run(scope):
+            m = make_mgr()
+            for i in range(40):
+                gid = (i % 4) + 1
+                c = derive_context(scope, group_id=gid, parent_id=7,
+                                   tenant_id=9)
+                mp = m.mmap(4, c)
+                m.munmap(mp.mapping_id)
+            return m.fences.stats.fences
+
+        per_group = run(ContextScope.PER_GROUP)
+        per_parent = run(ContextScope.PER_PARENT)
+        per_tenant = run(ContextScope.PER_TENANT)
+        assert per_parent <= per_group
+        assert per_tenant <= per_group
+        assert per_tenant == 0               # all streams share one context
+
+    def test_interception_registry(self):
+        from repro.core import ContextRegistry
+        reg = ContextRegistry()
+        reg.add_intercept("db/")
+        assert reg.resolve(group_id=1, stream_name="db/shard0") is not None
+        assert reg.resolve(group_id=1, stream_name="web/a") is None
+        assert reg.resolve(group_id=1, stream_name="web/a",
+                           use_fpr=True) is not None

@@ -1,0 +1,124 @@
+"""Unit tests for per-block tracking data (§IV-A, §IV-C4, §IV-C6)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.tracking import (FLAG_ALWAYS_FLUSH, MAX_CONTEXT_ID,
+                                 BlockTracker)
+
+
+def test_footprint_is_8_bytes_per_block():
+    tr = BlockTracker(1024)
+    assert tr.nbytes() == 1024 * 8          # §IV-C6: 8 bytes per page
+
+
+def test_initial_state_is_untracked():
+    tr = BlockTracker(16)
+    for b in range(16):
+        assert tr.ctx_id(b) == 0
+        assert tr.version(b) == 0
+        assert tr.flags(b) == 0
+
+
+@given(ctx=st.integers(1, MAX_CONTEXT_ID),
+       ver=st.integers(0, (1 << 40) - 1),
+       flags=st.integers(0, 3))
+@settings(max_examples=200, deadline=None)
+def test_pack_roundtrip(ctx, ver, flags):
+    tr = BlockTracker(4)
+    tr.set(2, ctx_id=ctx, version=ver, flags=flags)
+    assert tr.ctx_id(2) == ctx
+    assert tr.version(2) == ver
+    assert tr.flags(2) == flags
+    # neighbours untouched
+    assert tr.ctx_id(1) == 0 and tr.ctx_id(3) == 0
+
+
+def test_ctx_id_range_enforced():
+    tr = BlockTracker(4)
+    with pytest.raises(ValueError):
+        tr.set(0, ctx_id=MAX_CONTEXT_ID + 1)
+    with pytest.raises(ValueError):
+        tr.set_many(np.array([0]), ctx_id=-1, version=0)
+
+
+def test_vectorised_matches_scalar():
+    tr = BlockTracker(64)
+    blocks = np.arange(0, 64, 3)
+    tr.set_many(blocks, ctx_id=7, version=99, flags=1)
+    assert (tr.ctx_ids(blocks) == 7).all()
+    assert (tr.versions(blocks) == 99).all()
+    assert (tr.flags_of(blocks) == 1).all()
+    for b in blocks:
+        assert tr.ctx_id(int(b)) == 7
+        assert tr.version(int(b)) == 99
+
+
+def test_set_versions_preserves_id_and_flags():
+    tr = BlockTracker(8)
+    blocks = np.array([1, 5])
+    tr.set_many(blocks, ctx_id=3, version=10, flags=1)
+    tr.set_versions(blocks, 123456789)
+    assert (tr.ctx_ids(blocks) == 3).all()
+    assert (tr.versions(blocks) == 123456789).all()
+    assert (tr.flags_of(blocks) == 1).all()
+
+
+class TestBuddyMergeSemantics:
+    """§IV-C4: tracking propagation across buddy merges/splits."""
+
+    def test_merge_untracked_pair(self):
+        tr = BlockTracker(4)
+        tr.merge(0, 1, 0)
+        assert tr.ctx_id(0) == 0 and tr.flags(0) == 0
+
+    def test_merge_one_tracked(self):
+        tr = BlockTracker(4)
+        tr.set(1, ctx_id=9, version=5)
+        tr.merge(0, 1, 0)
+        assert tr.ctx_id(0) == 9
+        assert tr.version(0) == 5
+        assert not tr.always_flush(0)
+
+    def test_merge_same_id_takes_max_version(self):
+        tr = BlockTracker(4)
+        tr.set(0, ctx_id=9, version=5)
+        tr.set(1, ctx_id=9, version=7)
+        tr.merge(0, 1, 0)
+        assert tr.ctx_id(0) == 9
+        assert tr.version(0) == 7
+        assert not tr.always_flush(0)
+
+    def test_merge_conflicting_ids_sets_always_flush(self):
+        tr = BlockTracker(4)
+        tr.set(0, ctx_id=9, version=5)
+        tr.set(1, ctx_id=4, version=11)
+        tr.merge(0, 1, 0)
+        assert tr.always_flush(0)              # paper: "second flag set"
+        assert tr.version(0) == 11             # version = max of buddies
+
+    def test_split_copies_to_both(self):
+        tr = BlockTracker(4)
+        tr.set(0, ctx_id=6, version=42, flags=1)
+        tr.split(0, 0, 2)
+        for b in (0, 2):
+            assert tr.ctx_id(b) == 6
+            assert tr.version(b) == 42
+            assert tr.flags(b) == 1
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, MAX_CONTEXT_ID),
+                          st.integers(0, 100)), min_size=1, max_size=40))
+@settings(max_examples=100, deadline=None)
+def test_merge_never_loses_tracked_state(ops):
+    """Property: merging a tracked block with anything yields a block that is
+    either tracked or ALWAYS_FLUSH — never silently untracked."""
+    tr = BlockTracker(4)
+    for b, cid, ver in ops:
+        tr.set(b, ctx_id=cid, version=ver)
+    a_id, b_id = tr.ctx_id(0), tr.ctx_id(1)
+    tr.merge(0, 1, 0)
+    if a_id != 0 or b_id != 0:
+        assert tr.ctx_id(0) != 0 or tr.always_flush(0)

@@ -1,0 +1,20 @@
+"""Multi-device behaviour (SP collectives, vocab-parallel embed, elastic
+resharding, pipeline, sharded train step) — run in a subprocess so the
+8-device XLA flag never leaks into the single-device smoke tests."""
+
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(__file__)
+
+
+def test_distributed_checks():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_distributed_checks.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "ALL DISTRIBUTED CHECKS PASSED" in proc.stdout

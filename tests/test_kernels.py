@@ -1,0 +1,171 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes (+hypothesis randomised shapes)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.mamba_scan.ops import mamba_scan
+from repro.kernels.mamba_scan.ref import mamba_scan_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+from repro.kernels.rwkv6_scan.ops import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------ flash attn
+@pytest.mark.parametrize("B,Sq,Sk,H,KV,hd,causal,win", [
+    (2, 64, 64, 4, 2, 32, True, None),
+    (1, 100, 100, 4, 4, 16, True, None),
+    (2, 128, 128, 8, 2, 64, True, 32),
+    (1, 33, 77, 2, 1, 16, False, None),
+    (2, 16, 144, 4, 2, 32, True, None),
+])
+def test_flash_attention(B, Sq, Sk, H, KV, hd, causal, win):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, Sk, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, Sk, KV, hd), jnp.float32)
+    off = Sk - Sq if causal else 0
+    got = flash_attention(q, k, v, causal=causal, window=win,
+                          q_offset=off, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal, window=win,
+                               q_offset=off)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.bfloat16, 3e-2),
+                                       (jnp.float32, 2e-5)])
+def test_flash_attention_dtypes(dtype, tol):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 64), dtype)
+    k = jax.random.normal(ks[1], (2, 64, 2, 64), dtype)
+    v = jax.random.normal(ks[2], (2, 64, 2, 64), dtype)
+    got = flash_attention(q, k, v, interpret=True).astype(jnp.float32)
+    want = flash_attention_ref(q, k, v).astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sq=st.integers(1, 96), sk=st.integers(8, 96),
+       g=st.sampled_from([1, 2, 4]), causal=st.booleans())
+def test_flash_attention_hypothesis(sq, sk, g, causal):
+    KV, hd = 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(sq * 100 + sk), 3)
+    q = jax.random.normal(ks[0], (1, sq, KV * g, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (1, sk, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (1, sk, KV, hd), jnp.float32)
+    off = max(0, sk - sq) if causal else 0
+    got = flash_attention(q, k, v, causal=causal, q_offset=off,
+                          interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal, q_offset=off)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+# ------------------------------------------------------------ paged attn
+@pytest.mark.parametrize("B,H,KV,hd,bs,M,N,win", [
+    (2, 4, 2, 32, 16, 4, 16, None),
+    (3, 8, 8, 64, 32, 3, 12, None),
+    (2, 4, 1, 16, 8, 6, 32, 20),
+])
+def test_paged_attention(B, H, KV, hd, bs, M, N, win):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (N, bs, KV, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (N, bs, KV, hd), jnp.float32)
+    perm = np.random.RandomState(0).permutation(N)[:B * M]
+    tables = jnp.asarray(perm.reshape(B, M).astype(np.int32))
+    tables = tables.at[0, M - 1].set(-1)            # hole
+    lengths = jnp.asarray(
+        np.random.RandomState(1).randint(1, M * bs + 1, (B,)), jnp.int32)
+    got = paged_attention(q, kp, vp, tables, lengths, window=win,
+                          interpret=True)
+    want = paged_decode_attention_ref(q, kp, vp, tables, lengths,
+                                      window=win)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+# -------------------------------------------------------------- MLA decode
+def test_mla_paged_decode():
+    from repro.kernels.mla_attention.ops import mla_paged_decode
+    from repro.kernels.mla_attention.ref import mla_decode_ref
+    from repro.models.config import MLAConfig, ModelConfig
+    from repro.models.mla import init_mla
+    B, H, rank, rope, bs, M, N = 2, 4, 32, 16, 16, 3, 8
+    cfg = ModelConfig(name="t", n_layers=1, d_model=64, n_heads=H,
+                      n_kv_heads=H, d_ff=64, vocab=64, head_dim=32,
+                      mixers=("mla",),
+                      mla=MLAConfig(kv_lora_rank=rank, q_lora_rank=48,
+                                    rope_head_dim=rope, nope_head_dim=16,
+                                    v_head_dim=16))
+    ks = jax.random.split(KEY, 5)
+    p = init_mla(ks[0], cfg, jnp.float32)
+    x = jax.random.normal(ks[1], (B, 64), jnp.float32)
+    cp = jax.random.normal(ks[2], (N, bs, rank), jnp.float32)
+    rp = jax.random.normal(ks[3], (N, bs, rope), jnp.float32)
+    tables = jnp.asarray(np.random.RandomState(0).permutation(N)[
+        :B * M].reshape(B, M).astype(np.int32))
+    lengths = jnp.asarray([M * bs - 5, bs + 3], jnp.int32)
+    got = mla_paged_decode(p, x, lengths - 1, cp, rp, tables, lengths,
+                           cfg, interpret=True)
+    want = mla_decode_ref(p, x, lengths - 1, cp, rp, tables, lengths, cfg)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+# -------------------------------------------------------------- mamba scan
+@pytest.mark.parametrize("B,S,DI,N,chunk", [
+    (2, 32, 16, 8, 16), (1, 100, 64, 16, 64), (2, 64, 24, 4, 32)])
+def test_mamba_scan(B, S, DI, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, DI)))
+    A = -jnp.exp(jax.random.normal(ks[1], (DI, N)) * 0.2)
+    Bc = jax.random.normal(ks[2], (B, S, N))
+    Cc = jax.random.normal(ks[3], (B, S, N))
+    x = jax.random.normal(ks[4], (B, S, DI))
+    h0 = jax.random.normal(jax.random.fold_in(KEY, 9), (B, DI, N))
+    gy, gh = mamba_scan(dt, A, Bc, Cc, x, h0, chunk=chunk, interpret=True)
+    wy, wh = mamba_scan_ref(dt, A, Bc, Cc, x, h0)
+    np.testing.assert_allclose(gy, wy, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gh, wh, rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------------------- rwkv6 scan
+@pytest.mark.parametrize("B,S,nH,hd,chunk", [
+    (2, 32, 2, 16, 16), (1, 100, 4, 64, 32)])
+def test_rwkv6_scan(B, S, nH, hd, chunk):
+    ks = jax.random.split(KEY, 5)
+    r = jax.random.normal(ks[0], (B, S, nH, hd))
+    k = jax.random.normal(ks[1], (B, S, nH, hd))
+    v = jax.random.normal(ks[2], (B, S, nH, hd))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, S, nH, hd)) * .5 - .5))
+    u = jax.random.normal(ks[4], (nH, hd)) * 0.1
+    S0 = jax.random.normal(jax.random.fold_in(KEY, 7),
+                           (B, nH, hd, hd)) * 0.1
+    gy, gs = rwkv6_scan(r, k, v, w, u, S0, chunk=chunk, interpret=True)
+    wy, ws = rwkv6_scan_ref(r, k, v, w, u, S0)
+    np.testing.assert_allclose(gy, wy, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(gs, ws, rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------- flash custom-vjp backward
+def test_chunked_attention_flash_backward():
+    from repro.models.attention import chunked_attention, direct_attention
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (2, 24, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 40, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 40, 2, 16), jnp.float32)
+    f1 = lambda *a: (chunked_attention(*a, causal=True, q_offset=16,
+                                       chunk=16) ** 2).sum()
+    f2 = lambda *a: (direct_attention(*a, causal=True,
+                                      q_offset=16) ** 2).sum()
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)

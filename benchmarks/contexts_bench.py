@@ -16,7 +16,7 @@ elided.
 
 from __future__ import annotations
 
-from benchmarks.common import ALLOC_COST, FENCE_COST, save
+from benchmarks.common import save
 from repro.core.contexts import ContextScope, derive_context
 from repro.core.fpr import FprMemoryManager
 from repro.core.shootdown import FenceEngine

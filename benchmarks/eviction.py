@@ -9,7 +9,7 @@ them under one fence (§IV-B).
 
 from __future__ import annotations
 
-from benchmarks.common import (ALLOC_COST, DEVICES, FENCE_COST,
+from benchmarks.common import (DEVICES, FENCE_COST,
                                improvement, save)
 from repro.serving.sim import SimConfig, eviction_sim
 

@@ -1,4 +1,5 @@
-"""munmap microbenchmarks — paper Fig. 6–11 (cases 1–5).
+"""munmap microbenchmarks — paper Fig. 6–11 (cases 1–5), plus the
+framework's two hot-path extensions:
 
 Five thread mixes over a shared fast-device mapping pool:
   case1  N I/O workers                       (Fig. 7, vm-scalability-like)
@@ -7,12 +8,26 @@ Five thread mixes over a shared fast-device mapping pool:
   case4  N I/O + N compute                   (Fig. 10)
   case5  N mixed workers                     (Fig. 11)
 Reported: I/O + compute throughput and fence counts, FPR vs baseline.
+
+Extensions (``--mode scoped`` runs only these):
+  scoped_fences  global vs worker-scoped fences on an identical
+                 context-rotation trace — modeled fence cost and
+                 replicas spared (the numaPTE shootdown-filter analogue)
+  alloc_batch    looped per-block allocation vs the batched
+                 ``alloc_blocks``/``free_many`` hot path — wall time
 """
 
 from __future__ import annotations
 
+import time
+
 from benchmarks.common import (ALLOC_COST, COMPUTE_Q, FENCE_COST,
                                improvement, save)
+from repro.core.allocator import BlockAllocator
+from repro.core.contexts import ContextScope, derive_context
+from repro.core.fpr import FprMemoryManager
+from repro.core.shootdown import FenceEngine
+from repro.core.tracking import BlockTracker
 from repro.serving.sim import FenceImpactSim, SimConfig
 
 
@@ -50,22 +65,106 @@ def case(name: str, grid, mk):
     return {"case": name, "rows": rows}
 
 
-def run() -> dict:
-    out = {
-        "case1": case("case1", [1, 2, 4, 8, 16, 32],
-                      lambda n: (n, 0, 0)),
-        "case2": case("case2", [1, 2, 4, 8, 16, 32, 48],
-                      lambda n: (1, n, 0)),
-        "case3": case("case3", [1, 2, 4, 8, 16],
-                      lambda n: (n, 1, 0)),
-        "case4": case("case4", [1, 2, 4, 8],
-                      lambda n: (n, n, 0)),
-        "case5": case("case5", [1, 2, 4, 8, 16],
-                      lambda n: (0, 0, n)),
+def scoped_fence_case(workers: int = 8, iters: int = 1500,
+                      contexts: int = 4, blocks_per_map: int = 8) -> dict:
+    """Global vs worker-scoped fences on an *identical* trace.
+
+    One I/O worker rotates through ``contexts`` recycling contexts — every
+    mmap is a context exit, so a fence fires each cycle.  All staleness
+    lives on worker 0, so the scoped path covers 1 of ``workers`` table
+    replica groups while the global path rebroadcasts to all of them.
+    """
+    out: dict = {"workers": workers, "iters": iters, "contexts": contexts}
+    for mode in ("global", "scoped"):
+        eng = FenceEngine(measure=False)
+        mgr = FprMemoryManager(2048, num_workers=workers, fence_engine=eng,
+                               fpr_enabled=True,
+                               scoped_fences=(mode == "scoped"))
+        for i in range(iters):
+            ctx = derive_context(ContextScope.PER_GROUP,
+                                 group_id=(i % contexts) + 1)
+            m = mgr.mmap(blocks_per_map, ctx, worker=0)
+            mgr.munmap(m.mapping_id, worker=0)
+        t = eng.totals()
+        out[mode] = {k: t[k] for k in
+                     ("fences", "fences_scoped", "modeled_s",
+                      "replicas_spared", "elided_by_version",
+                      "elided_by_scope", "workers_covered")}
+    g, s = out["global"]["modeled_s"], out["scoped"]["modeled_s"]
+    out["modeled_saving_pct"] = round((1 - s / g) * 100.0, 2) if g else 0.0
+    return out
+
+
+def alloc_batch_case(n: int = 64, iters: int = 300,
+                     pool: int = 4096) -> dict:
+    """Looped per-block alloc/free vs the batched hot path, wall time."""
+    def drive(batched: bool) -> float:
+        tr = BlockTracker(pool)
+        alloc = BlockAllocator(pool, tr, num_workers=1)
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            if batched:
+                alloc.free_many(alloc.alloc_blocks(n, 0), 0)
+            else:
+                got = [alloc.alloc_block(0) for _ in range(n)]
+                for b in got:
+                    alloc.free_block(b, 0)
+        return time.perf_counter() - t0
+
+    looped_s = drive(batched=False)
+    batched_s = drive(batched=True)
+    return {"n": n, "iters": iters, "looped_s": round(looped_s, 6),
+            "batched_s": round(batched_s, 6),
+            "speedup": round(looped_s / batched_s, 2) if batched_s else None}
+
+
+def _extension_sections(smoke: bool) -> dict:
+    return {
+        "scoped_fences": scoped_fence_case(iters=200 if smoke else 1500),
+        "alloc_batch": alloc_batch_case(iters=30 if smoke else 300),
     }
+
+
+def _print_extensions(out: dict) -> None:
+    sf, ab = out["scoped_fences"], out["alloc_batch"]
+    print(f"  scoped fences:   modeled {sf['global']['modeled_s']:.3f}s → "
+          f"{sf['scoped']['modeled_s']:.3f}s "
+          f"(-{sf['modeled_saving_pct']:.0f}%), "
+          f"replicas spared {sf['scoped']['replicas_spared']}")
+    print(f"  batched alloc:   {ab['looped_s']*1e3:.1f}ms → "
+          f"{ab['batched_s']*1e3:.1f}ms ({ab['speedup']}x)")
+
+
+def run_scoped(smoke: bool = False) -> dict:
+    """The scoped-fence + batched-alloc extension benchmarks only."""
+    out = _extension_sections(smoke)
+    save("microbench_scoped", out)
+    _print_extensions(out)
+    return out
+
+
+def run(smoke: bool = False) -> dict:
+    grids = {
+        "case1": [1, 2, 4, 8, 16, 32],
+        "case2": [1, 2, 4, 8, 16, 32, 48],
+        "case3": [1, 2, 4, 8, 16],
+        "case4": [1, 2, 4, 8],
+        "case5": [1, 2, 4, 8, 16],
+    }
+    if smoke:                      # CI smoke lane: smallest useful grid
+        grids = {k: v[:3] for k, v in grids.items()}
+    out = {
+        "case1": case("case1", grids["case1"], lambda n: (n, 0, 0)),
+        "case2": case("case2", grids["case2"], lambda n: (1, n, 0)),
+        "case3": case("case3", grids["case3"], lambda n: (n, 1, 0)),
+        "case4": case("case4", grids["case4"], lambda n: (n, n, 0)),
+        "case5": case("case5", grids["case5"], lambda n: (0, 0, n)),
+    }
+    out.update(_extension_sections(smoke))
     save("microbench", out)
+    _print_extensions(out)
     c2 = out["case2"]["rows"][-1]
-    c1 = out["case1"]["rows"][2]
+    c1 = out["case1"]["rows"][min(2, len(out["case1"]["rows"]) - 1)]
     print(f"  case1 (4 I/O):   io +{c1['io_improvement_pct']:.0f}% "
           f"(paper: up to 30–92%)  fences {c1['fences_base']}→"
           f"{c1['fences_fpr']}")
@@ -75,4 +174,11 @@ def run() -> dict:
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=["all", "scoped"], default="all",
+                    help="'scoped' runs only the scoped-fence + "
+                         "batched-alloc extension benchmarks")
+    ap.add_argument("--smoke", action="store_true")
+    a = ap.parse_args()
+    (run_scoped if a.mode == "scoped" else run)(smoke=a.smoke)

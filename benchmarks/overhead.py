@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import improvement, save
+from benchmarks.common import save
 from repro.core.fpr import FprMemoryManager
 from repro.core.shootdown import FenceEngine
 

@@ -1,6 +1,10 @@
 """Benchmark driver: one module per paper table/figure + the roofline.
 
     PYTHONPATH=src python -m benchmarks.run [--skip-model] [--only NAME]
+                                            [--smoke]
+
+``--smoke`` is the CI lane: only the (reduced-grid) microbenchmarks,
+fast enough for every push, still producing the results JSON artifact.
 """
 
 from __future__ import annotations
@@ -15,22 +19,28 @@ def main() -> int:
     ap.add_argument("--only", default=None)
     ap.add_argument("--skip-model", action="store_true",
                     help="skip the real-model benchmarks (apache/ycsb)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: reduced-grid microbench only")
     args = ap.parse_args()
 
     from benchmarks import (apache_like, baseline_sweep, contexts_bench,
                             device_latency, eviction, microbench, overhead,
                             roofline, ycsb_kv)
-    suites = [
-        ("microbench (Fig. 6-11)", microbench.run),
-        ("device_latency (Fig. 12)", device_latency.run),
-        ("eviction (Fig. 14-17)", eviction.run),
-        ("contexts (§IV-C2)", contexts_bench.run),
-        ("overhead (Fig. 22)", overhead.run),
-        ("baseline_sweep (Fig. 23)", baseline_sweep.run),
-        ("apache_like (Fig. 13)", apache_like.run),
-        ("ycsb_kv (Fig. 18-21)", ycsb_kv.run),
-        ("roofline (§Roofline)", roofline.run),
-    ]
+    if args.smoke:
+        suites = [("microbench smoke (Fig. 6-11 + scoped)",
+                   lambda: microbench.run(smoke=True))]
+    else:
+        suites = [
+            ("microbench (Fig. 6-11)", microbench.run),
+            ("device_latency (Fig. 12)", device_latency.run),
+            ("eviction (Fig. 14-17)", eviction.run),
+            ("contexts (§IV-C2)", contexts_bench.run),
+            ("overhead (Fig. 22)", overhead.run),
+            ("baseline_sweep (Fig. 23)", baseline_sweep.run),
+            ("apache_like (Fig. 13)", apache_like.run),
+            ("ycsb_kv (Fig. 18-21)", ycsb_kv.run),
+            ("roofline (§Roofline)", roofline.run),
+        ]
     model_suites = {"apache_like (Fig. 13)", "ycsb_kv (Fig. 18-21)"}
     failures = 0
     for name, fn in suites:

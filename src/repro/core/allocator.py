@@ -140,7 +140,15 @@ class WorkerFreeList:
 
 
 class BlockAllocator:
-    """Facade: per-worker fast path over the global buddy slow path."""
+    """Facade: per-worker fast path over the global buddy slow path.
+
+    The hot path is **batched**: :meth:`alloc_blocks` serves a whole
+    allocation (a sequence's worth of order-0 blocks) with one refill
+    decision, refilling the worker list from the buddy in the largest
+    power-of-two runs available instead of block-by-block; likewise
+    :meth:`free_many` makes one spill decision per batch.  The scalar
+    :meth:`alloc_block`/:meth:`free_block` remain as thin wrappers.
+    """
 
     def __init__(self, num_blocks: int, tracker: BlockTracker,
                  num_workers: int = 1, max_order: int = 10,
@@ -150,38 +158,79 @@ class BlockAllocator:
         self.workers = [WorkerFreeList(w, batch=pcp_batch, high=pcp_high)
                         for w in range(num_workers)]
 
+    @property
+    def num_workers(self) -> int:
+        return len(self.workers)
+
     # -- order-0 fast path ----------------------------------------------------
     def alloc_block(self, worker_id: int = 0) -> int:
+        return self.alloc_blocks(1, worker_id)[0]
+
+    def alloc_blocks(self, n: int, worker_id: int = 0) -> list[int]:
+        """Allocate ``n`` order-0 blocks with at most one refill decision.
+
+        Returns the ``n`` most recently freed blocks of the worker's list
+        (LIFO — maximal recycling locality), refilling in bulk from the
+        buddy when the list runs short.  Raises :class:`OutOfBlocksError`
+        without handing out anything if the pool cannot cover ``n``.
+        """
+        if n <= 0:
+            return []
         wl = self.workers[worker_id]
-        if not wl.blocks:
-            self._refill(wl)
-        self.buddy.stats.fast_allocs += 1
-        return wl.blocks.pop()          # LIFO: maximal recycling locality
+        if len(wl.blocks) < n:
+            self._refill_bulk(wl, n - len(wl.blocks))
+        self.buddy.stats.fast_allocs += n
+        return [wl.blocks.pop() for _ in range(n)]
 
     def free_block(self, block: int, worker_id: int = 0) -> None:
+        self.free_many((block,), worker_id)
+
+    def free_many(self, blocks, worker_id: int = 0) -> None:
+        """Return a batch to the worker list; one spill decision per batch."""
         wl = self.workers[worker_id]
-        wl.blocks.append(block)
+        wl.blocks.extend(int(b) for b in blocks)
         if len(wl.blocks) > wl.high:
             self._spill(wl)
 
-    def _refill(self, wl: WorkerFreeList) -> None:
+    def _refill_bulk(self, wl: WorkerFreeList, need: int) -> None:
+        """One batched refill: pull ≥ ``need`` blocks (rounded up to the pcp
+        batch for headroom) from the buddy as whole power-of-two runs,
+        falling back to stealing from sibling workers when the buddy is dry.
+        """
         self.buddy.stats.refills += 1
+        target = max(need, wl.batch)
         got = 0
-        for _ in range(wl.batch):
-            try:
-                wl.blocks.append(self.buddy.alloc(0))
+        while got < target:
+            want = target - got
+            order = min(self.buddy.max_order, max(0, want.bit_length() - 1))
+            head = None
+            while order >= 0:
+                try:
+                    head = self.buddy.alloc(order)
+                    break
+                except OutOfBlocksError:
+                    order -= 1
+            if head is None:
+                break                      # buddy exhausted
+            if order > 0:
+                # a whole run is handed out at once: broadcast the head's
+                # (merged) tracking as a recursive split would (§IV-C4)
+                self.tracker.fan_out(head, 1 << order)
+            wl.blocks.extend(range(head, head + (1 << order)))
+            got += 1 << order
+        if got >= need:
+            return
+        # last resort: steal from other workers' lists (oldest blocks first)
+        for other in self.workers:
+            if other is wl:
+                continue
+            while other.blocks and got < need:
+                wl.blocks.append(other.blocks.popleft())
                 got += 1
-            except OutOfBlocksError:
-                if got == 0:
-                    # last resort: steal from other workers' lists
-                    for other in self.workers:
-                        if other is not wl and other.blocks:
-                            wl.blocks.append(other.blocks.popleft())
-                            got += 1
-                            break
-                if got == 0:
-                    raise
-                break
+            if got >= need:
+                return
+        raise OutOfBlocksError(
+            f"pool cannot cover {need} more blocks (got {got})")
 
     def _spill(self, wl: WorkerFreeList) -> None:
         self.buddy.stats.spills += 1

@@ -9,21 +9,30 @@ Ties together the four mechanisms of §IV:
   * the baseline mode (``fpr_enabled=False``) reproduces stock Linux:
     one batched fence per munmap / per eviction batch.
 
+On top of the paper, fences are **worker-scoped** (``scoped_fences=True``):
+every allocation/touch stamps the worker's bit into the block's presence
+mask, so when a fence *is* required (context exit, baseline munmap,
+eviction) it covers only the workers that could hold a stale translation —
+see :mod:`repro.core.shootdown` for the epoch bookkeeping and
+:mod:`repro.core.tracking` for the mask.  The allocation hot path is
+batched: one :meth:`BlockAllocator.alloc_blocks` call and one vectorised
+tracking check per request instead of a per-block Python loop.
+
 The manager is engine-agnostic: the serving engine (repro/serving) and the
 microbenchmarks both drive it through the same mmap/munmap/touch/evict API.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.allocator import BlockAllocator, OutOfBlocksError
+from repro.core.allocator import BlockAllocator
 from repro.core.block_table import BlockTableStore, Mapping
 from repro.core.contexts import RecyclingContext
 from repro.core.shootdown import FenceEngine
-from repro.core.tracking import FLAG_ALWAYS_FLUSH, BlockTracker
+from repro.core.tracking import FLAG_ALWAYS_FLUSH, BlockTracker, worker_bit
 
 SWAPPED = -2          # block-table marker: resident → swapped out
 NOT_RESIDENT = -1     # never faulted in
@@ -51,6 +60,7 @@ class FprMemoryManager:
                  max_seqs: int = 4096, max_blocks_per_seq: int = 8192,
                  fence_engine: FenceEngine | None = None,
                  fpr_enabled: bool = True,
+                 scoped_fences: bool | None = None,
                  pcp_batch: int = 32, pcp_high: int = 96,
                  max_order: int = 10):
         self.tracker = BlockTracker(num_blocks)
@@ -60,6 +70,9 @@ class FprMemoryManager:
                                     max_order=max_order)
         self.tables = BlockTableStore(max_seqs, max_blocks_per_seq)
         self.fences = fence_engine or FenceEngine()
+        self.fences.ensure_workers(num_workers)
+        if scoped_fences is not None:   # None ⇒ respect the engine's flag
+            self.fences.scoped = scoped_fences
         # Every fence invalidates device-held tables: couple the epochs.
         inner = self.fences.on_fence
         def _on_fence(reason: str, n: int) -> None:
@@ -79,14 +92,28 @@ class FprMemoryManager:
 
     # ===================================================================== alloc
     def _acquire(self, n: int, ctx_id: int, worker: int) -> list[int]:
-        """Allocate n order-0 blocks, applying FPR allocation-phase checks."""
-        blocks = [self.alloc.alloc_block(worker) for _ in range(n)]
-        self._allocation_checks(np.asarray(blocks, dtype=np.int64), ctx_id)
+        """Allocate n order-0 blocks, applying FPR allocation-phase checks.
+
+        One batched allocator call + one vectorised tracking pass — the
+        engine hot path never loops over blocks in Python.
+        """
+        blocks = self.alloc.alloc_blocks(n, worker)
+        self._allocation_checks(np.asarray(blocks, dtype=np.int64), ctx_id,
+                                worker)
         return blocks
 
-    def _allocation_checks(self, arr: np.ndarray, ctx_id: int) -> None:
+    def _allocation_checks(self, arr: np.ndarray, ctx_id: int,
+                           worker: int = 0) -> None:
         """§IV-A: fence *now* iff a block is leaving a foreign recycling
-        context and no global fence intervened since it was freed (§IV-C5)."""
+        context and no covering fence intervened since it was freed.
+
+        Covering means either a *global* fence after the free (§IV-C5,
+        ``vers < epoch``) or — scoped path — a fence over every worker in
+        the block's presence mask (``worker_epochs[w] > vers`` for all
+        stale candidates).  A required fence is scoped to the union of the
+        still-stale workers; ALWAYS_FLUSH blocks (§IV-C4 merge conflicts)
+        keep forcing a global fence.
+        """
         st, eng, tr = self.stats, self.fences, self.tracker
         ids = tr.ctx_ids(arr)
         vers = tr.versions(arr)
@@ -95,8 +122,12 @@ class FprMemoryManager:
 
         always = (flags & FLAG_ALWAYS_FLUSH) != 0
         foreign = (ids != 0) & (ids != ctx_id)
-        must_fence = always | (foreign & (vers == cur_epoch))
-        elide = foreign & (vers != cur_epoch) & ~always
+        global_ok = vers < cur_epoch            # global fence since free
+        stale = eng.stale_masks(tr.worker_masks(arr), vers)
+        scoped_ok = stale == 0                  # every stale worker fenced
+        must_fence = always | (foreign & ~global_ok & ~scoped_ok)
+        elide_global = foreign & ~always & global_ok
+        elide_scope = foreign & ~always & ~global_ok & scoped_ok
         recycled = (ids != 0) & (ids == ctx_id)
 
         st.allocs += len(arr)
@@ -104,15 +135,31 @@ class FprMemoryManager:
         st.clean_allocs += int((ids == 0).sum())
         st.context_exits += int(foreign.sum()) + int((always & ~foreign).sum())
 
-        if elide.any():
-            eng.note_version_elision(int(elide.sum()))
+        if elide_global.any():
+            eng.note_version_elision(int(elide_global.sum()))
+        if elide_scope.any():
+            eng.note_scope_elision(int(elide_scope.sum()))
         if must_fence.any():
             # One merged fence covers every exiting block in this batch.
             if always.any():
+                # merge-conflict blocks have unreliable tracking → global
                 eng.stats.elided_always_flush += int(always.sum())
-            eng.fence("context_exit", int(must_fence.sum()))
+                eng.fence("context_exit", int(must_fence.sum()))
+            else:
+                mask = int(np.bitwise_or.reduce(stale[must_fence]))
+                eng.fence_scoped("context_exit", int(must_fence.sum()),
+                                 worker_mask=mask)
         # Stamp the new owner (0 for non-FPR use, §IV-A), clear flags.
         tr.set_many(arr, ctx_id=ctx_id, version=0, flags=0)
+        # Worker presence: a block whose staleness was just covered (fenced
+        # or elided) restarts from the allocating worker alone; a block
+        # handed over *without* a fence (same-context recycling) must keep
+        # its prior holders — they may still cache the translation, and a
+        # later context exit has to fence them too.
+        bit = worker_bit(worker)
+        covered = must_fence | elide_global | elide_scope
+        tr.set_worker_masks(
+            arr, np.where(covered, bit, tr.worker_masks(arr) | bit))
 
     # ===================================================================== mmap
     def mmap(self, n_blocks: int, ctx: RecyclingContext | None = None, *,
@@ -159,14 +206,21 @@ class FprMemoryManager:
         if phys:
             arr = np.asarray(phys, dtype=np.int64)
             if m.ctx_id != 0:
-                # FPR: skip the fence, stamp the global epoch (§IV-A, §IV-C5).
+                # FPR: skip the fence, stamp the fence counter (§IV-A,
+                # §IV-C5; == the global epoch when scoping is off).  The
+                # worker-presence mask is *kept* — it is the record of who
+                # may still hold a stale translation.
                 self.fences.note_skipped_free(len(phys))
-                self.tracker.set_versions(arr, self.fences.epoch)
+                self.tracker.set_versions(arr, self.fences.seq)
             else:
-                # Stock Linux: one batched shootdown per munmap.
-                self.fences.fence("munmap", len(phys))
-            for b in phys:
-                self.alloc.free_block(b, worker)
+                # Stock Linux: one batched shootdown per munmap — scoped
+                # to the workers that actually held the translations.
+                mask = int(np.bitwise_or.reduce(
+                    self.tracker.worker_masks(arr)))
+                self.fences.fence_scoped("munmap", len(phys),
+                                         worker_mask=mask)
+                self.tracker.set_worker_masks(arr, 0)   # flushed
+            self.alloc.free_many(phys, worker)
 
     # ============================================================== fault / touch
     def touch(self, mapping_id: int, logical_idx: int, *, worker: int = 0
@@ -179,6 +233,8 @@ class FprMemoryManager:
         m = self.tables.mappings[mapping_id]
         b = m.physical[logical_idx]
         if b >= 0:
+            # presence stamp: this worker now holds the translation
+            self.tracker.add_worker(b, worker)
             return b, False
         self.stats.faults += 1
         was_swapped = b == SWAPPED
@@ -219,12 +275,15 @@ class FprMemoryManager:
             return 0
         arr = np.asarray(freed, dtype=np.int64)
         # Stamp versions first: the merged fence below then covers these
-        # blocks forever (until re-allocated), enabling §IV-C5 elision.
-        self.tracker.set_versions(arr, self.fences.epoch)
-        self.fences.fence("evict_batch" if fpr_batch else "evict",
-                          len(freed))
-        for b in freed:
-            self.alloc.free_block(b, worker)
+        # blocks forever (until re-allocated), enabling §IV-C5/per-worker
+        # elision.  The fence is scoped to the union of the victims'
+        # presence masks — only those workers can hold stale translations.
+        self.tracker.set_versions(arr, self.fences.seq)
+        mask = int(np.bitwise_or.reduce(self.tracker.worker_masks(arr)))
+        self.fences.fence_scoped("evict_batch" if fpr_batch else "evict",
+                                 len(freed), worker_mask=mask)
+        self.tracker.set_worker_masks(arr, 0)           # flushed by the fence
+        self.alloc.free_many(freed, worker)
         return len(freed)
 
     # =================================================================== helpers
@@ -238,5 +297,6 @@ class FprMemoryManager:
 
     def counters(self) -> dict:
         return {"fpr": self.stats.snapshot(), "fence": self.fences.totals(),
+                "worker_epochs": self.fences.worker_epoch_counters(),
                 "table_epoch": self.tables.epoch,
                 "stale_detected": self.tables.stale_lookups_detected}

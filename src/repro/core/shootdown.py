@@ -23,14 +23,43 @@ The engine also owns the paper's §IV-C5 *global shootdown counter* (``epoch``):
 every global fence increments it; block versions are stamped with it at free
 time, letting later context-exit allocations elide their fence when any global
 fence already intervened.
+
+**Worker-scoped fences.**  The paper's core observation is that Linux
+flushes *every* core because it does not know which cores actually cached a
+translation; a global fence here reproduces that pessimism by refreshing all
+``n_replicas`` table copies.  The scoped path (`fence_scoped`) is the
+shootdown-filtering direction (numaPTE): :class:`~repro.core.tracking.
+BlockTracker` records a per-block worker-presence bitmask, so a fence needs
+to cover only the workers that could hold a stale translation.  Bookkeeping:
+
+  * ``seq``   — total fence ordinal; every fence (global or scoped) bumps it.
+  * ``epoch`` — the §IV-C5 global counter: the ``seq`` of the last *global*
+                fence.  Scoped fences do NOT bump it — eliding a context-exit
+                fence because of an unrelated *scoped* fence would be unsound
+                for workers outside its mask.
+  * ``worker_epochs[w]`` — the ``seq`` of the last fence that covered worker
+                ``w``.  A block freed at ``seq = v`` is clean for worker
+                ``w`` iff ``worker_epochs[w] > v``; if every worker in the
+                block's presence mask is clean the context-exit fence is
+                elided entirely (``elided_by_scope``), otherwise it is scoped
+                to the still-stale workers.
+
+Versions are stamped with ``seq`` at free time; when scoped fencing is off
+(or a single worker exists) ``seq == epoch`` and the behaviour is
+bit-identical to the paper's global-epoch scheme.
 """
 
 from __future__ import annotations
 
+import math
 import time
 from collections import Counter
 from dataclasses import dataclass, field
 from typing import Callable
+
+import numpy as np
+
+from repro.core.tracking import WORKER_OVERFLOW_BIT, worker_bit
 
 
 @dataclass(frozen=True)
@@ -44,10 +73,18 @@ class FenceCostModel:
     link_bw: float = 50e9          # ~50 GB/s/link ICI (assignment constant)
     base_latency_s: float = 25e-6  # interrupt/RPC base cost per fence
 
-    def cost_s(self) -> float:
-        import math
-        drain = self.dispatch_depth * self.step_time_s
-        hops = max(1.0, math.log2(max(2, self.n_replicas)))
+    def cost_s(self, replicas: int | None = None) -> float:
+        """Modeled cost of refreshing ``replicas`` table copies.
+
+        The drain term is accounted as aggregate replica-work (the decode
+        throughput the fence steals across the affected shards), so a fence
+        scoped to ``k`` of ``n_replicas`` replicas costs ``k/n`` of the
+        global drain plus a ``log2(k)`` tree broadcast.
+        """
+        k = self.n_replicas if replicas is None else max(1, replicas)
+        drain = (self.dispatch_depth * self.step_time_s
+                 * (k / max(1, self.n_replicas)))
+        hops = max(1.0, math.log2(max(2, k)))
         broadcast = (self.table_bytes / self.link_bw) * hops
         return self.base_latency_s + drain + broadcast
 
@@ -59,7 +96,11 @@ class FenceStats:
     blocks_covered: int = 0              # blocks whose invalidation each fence covered
     skipped_at_free: int = 0             # §IV-A: shootdown skipped on FPR free
     elided_by_version: int = 0           # §IV-C5: context-exit fence elided
+    elided_by_scope: int = 0             # per-worker-epoch elision (scoped)
     elided_always_flush: int = 0         # ALWAYS_FLUSH fences (subset of fences)
+    fences_scoped: int = 0               # fences that covered < all workers
+    workers_covered: int = 0             # Σ workers covered over all fences
+    replicas_spared: int = 0             # Σ modeled replicas NOT refreshed
     measured_s: float = 0.0              # accumulated real fence wall time
     modeled_s: float = 0.0               # accumulated projected fence cost
 
@@ -70,31 +111,118 @@ class FenceStats:
 
 
 class FenceEngine:
-    """Owns the global fence epoch and performs/records coherence fences."""
+    """Owns the fence epochs and performs/records coherence fences."""
 
     def __init__(self, cost_model: FenceCostModel | None = None,
                  on_fence: Callable[[str, int], None] | None = None,
-                 measure: bool = True):
-        self.epoch = 1                    # global shootdown counter (§IV-C5); >0
+                 measure: bool = True, num_workers: int = 1,
+                 scoped: bool = True):
+        self.seq = 1                      # total fence ordinal (all fences)
+        self.epoch = 1                    # global shootdown counter (§IV-C5)
         self.cost_model = cost_model or FenceCostModel()
         self.on_fence = on_fence          # measured drain+rebroadcast callback
         self.measure = measure
+        self.scoped = scoped              # False ⇒ every fence is global
+        self.worker_epochs = np.full(max(1, num_workers), 1, dtype=np.int64)
         self.stats = FenceStats()
+
+    # ------------------------------------------------------------- workers
+    @property
+    def num_workers(self) -> int:
+        return len(self.worker_epochs)
+
+    def ensure_workers(self, n: int) -> None:
+        """Grow the per-worker epoch table to at least ``n`` workers.
+
+        New workers start at the current ``seq``: they cannot hold stale
+        translations to anything freed before they existed.
+        """
+        if n > len(self.worker_epochs):
+            extra = np.full(n - len(self.worker_epochs), self.seq,
+                            dtype=np.int64)
+            self.worker_epochs = np.concatenate([self.worker_epochs, extra])
+
+    def _workers_in(self, mask: int) -> np.ndarray:
+        """Worker ids selected by a presence mask (bit 63 ⇒ all high ids)."""
+        mask = int(mask)
+        ids = [w for w in range(min(self.num_workers, WORKER_OVERFLOW_BIT))
+               if mask >> w & 1]
+        if mask >> WORKER_OVERFLOW_BIT & 1:
+            ids.extend(range(WORKER_OVERFLOW_BIT, self.num_workers))
+        return np.asarray(ids, dtype=np.int64)
+
+    def stale_masks(self, masks: np.ndarray,
+                    versions: np.ndarray) -> np.ndarray:
+        """Per-block mask of workers still holding a stale translation.
+
+        Worker ``w`` is stale for a block freed at ``seq = v`` iff the
+        block's presence mask names it and no fence covered it since
+        (``worker_epochs[w] <= v``).
+        """
+        stale = np.zeros(len(masks), dtype=np.uint64)
+        if len(masks) == 0:
+            return stale
+        union = int(np.bitwise_or.reduce(masks))
+        if union == 0:
+            return stale
+        # iterate only the workers actually present in some mask — bounded
+        # by the number of distinct holders (typically 1), not num_workers
+        for w in self._workers_in(union):
+            bit = worker_bit(w)
+            s = ((masks & bit) != 0) & (versions
+                                        >= np.uint64(self.worker_epochs[w]))
+            stale |= np.where(s, bit, np.uint64(0))
+        return stale
 
     # ------------------------------------------------------------------ fences
     def fence(self, reason: str, n_blocks: int = 1) -> int:
         """Perform one global coherence fence. Returns the new epoch."""
-        self.epoch += 1
+        self.seq += 1
+        self.epoch = self.seq
+        self.worker_epochs[:] = self.seq
         st = self.stats
         st.fences += 1
         st.fences_by_reason[reason] += 1
         st.blocks_covered += n_blocks
+        st.workers_covered += self.num_workers
         st.modeled_s += self.cost_model.cost_s()
+        self._measured(reason, n_blocks)
+        return self.epoch
+
+    def fence_scoped(self, reason: str, n_blocks: int = 1,
+                     worker_mask: int = 0) -> int:
+        """Fence only the workers named by ``worker_mask``.
+
+        Cost (modeled and measured) is proportional to the mask popcount;
+        only the covered workers' epochs advance — the global epoch does
+        not, so §IV-C5 elision stays sound for uncovered workers.  Falls
+        back to a global fence when scoping is off or the mask covers
+        every worker.
+        """
+        workers = self._workers_in(worker_mask)
+        if (not self.scoped or len(workers) == 0
+                or len(workers) >= self.num_workers):
+            return self.fence(reason, n_blocks)
+        self.seq += 1
+        self.worker_epochs[workers] = self.seq
+        st, cm = self.stats, self.cost_model
+        st.fences += 1
+        st.fences_scoped += 1
+        st.fences_by_reason[reason] += 1
+        st.blocks_covered += n_blocks
+        st.workers_covered += len(workers)
+        affected = max(1, math.ceil(cm.n_replicas * len(workers)
+                                    / self.num_workers))
+        st.replicas_spared += cm.n_replicas - affected
+        st.modeled_s += cm.cost_s(affected)
+        self._measured(reason, n_blocks)
+        return self.epoch
+
+    def _measured(self, reason: str, n_blocks: int) -> None:
         if self.on_fence is not None and self.measure:
             t0 = time.perf_counter()
             self.on_fence(reason, n_blocks)
-            st.measured_s += time.perf_counter() - t0
-        return self.epoch
+            self.stats.measured_s += time.perf_counter() - t0
 
     # -------------------------------------------------------------- accounting
     def note_skipped_free(self, n_blocks: int = 1) -> None:
@@ -102,6 +230,9 @@ class FenceEngine:
 
     def note_version_elision(self, n_blocks: int = 1) -> None:
         self.stats.elided_by_version += n_blocks
+
+    def note_scope_elision(self, n_blocks: int = 1) -> None:
+        self.stats.elided_by_scope += n_blocks
 
     def reset_stats(self) -> None:
         self.stats = FenceStats()
@@ -111,9 +242,17 @@ class FenceEngine:
         s = self.stats
         return {
             "fences": s.fences,
+            "fences_scoped": s.fences_scoped,
             "skipped_at_free": s.skipped_at_free,
             "elided_by_version": s.elided_by_version,
+            "elided_by_scope": s.elided_by_scope,
+            "workers_covered": s.workers_covered,
+            "replicas_spared": s.replicas_spared,
             "measured_s": round(s.measured_s, 6),
             "modeled_s": round(s.modeled_s, 6),
             "by_reason": dict(s.fences_by_reason),
         }
+
+    def worker_epoch_counters(self) -> dict:
+        """Per-worker epoch snapshot for counters()/benchmark reports."""
+        return {f"w{w}": int(e) for w, e in enumerate(self.worker_epochs)}

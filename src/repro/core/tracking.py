@@ -11,6 +11,20 @@ block, stored in a single numpy array so the footprint really is 8 bytes per
 block (0.2%-ish of a 4 KiB-equivalent block, matching the paper's overhead
 claim).  All operations are vectorised so the tracking cost on the engine hot
 path stays negligible (§V-C measures ≤1% overhead; see benchmarks/overhead.py).
+
+**Worker-presence bitmask (scoped fences).**  Alongside the paper's 8 bytes
+we keep a second ``uint64`` per block: a bitmask of the *workers* (per-worker
+free lists ≈ cores) that mapped or touched the block since its translations
+were last flushed.  This is the serving analogue of per-core TLB-presence
+tracking (numaPTE-style shootdown filtering): when a block leaves its
+recycling context, only the workers in its mask can hold a stale
+translation, so the coherence fence is scoped to them
+(:meth:`repro.core.shootdown.FenceEngine.fence_scoped`) instead of
+broadcasting to every replica.  The mask is stamped at allocation and on
+touch, survives an FPR free (that is exactly the staleness record), and is
+reset to the new owner's bit once the allocation-phase checks have fenced
+or elided.  Workers ≥ 63 share the top bit (conservative aliasing: a set
+top bit scopes the fence to all high workers).
 """
 
 from __future__ import annotations
@@ -36,6 +50,14 @@ FLAG_ALWAYS_FLUSH = 0b01
 MAX_CONTEXT_ID = (1 << _ID_BITS) - 1
 MAX_VERSION = (1 << _VERSION_BITS) - 1
 
+#: Worker ids at or above this share one mask bit (conservative aliasing).
+WORKER_OVERFLOW_BIT = 63
+
+
+def worker_bit(worker: int) -> np.uint64:
+    """The presence-mask bit for ``worker`` (high workers alias bit 63)."""
+    return np.uint64(1) << np.uint64(min(worker, WORKER_OVERFLOW_BIT))
+
 
 class BlockTracker:
     """Vectorised tracking-data store for ``num_blocks`` physical blocks.
@@ -44,13 +66,16 @@ class BlockTracker:
     allocation for a non-FPR use resets the id to zero.
     """
 
-    __slots__ = ("_packed", "num_blocks")
+    __slots__ = ("_packed", "_worker_mask", "num_blocks")
 
     def __init__(self, num_blocks: int):
         if num_blocks <= 0:
             raise ValueError(f"num_blocks must be positive, got {num_blocks}")
         self.num_blocks = num_blocks
         self._packed = np.zeros(num_blocks, dtype=np.uint64)
+        # Worker-presence bitmask (scoped fences); kept out of the packed
+        # word so the paper's 8-byte layout stays byte-identical.
+        self._worker_mask = np.zeros(num_blocks, dtype=np.uint64)
 
     # -- scalar accessors ---------------------------------------------------
     def ctx_id(self, block: int) -> int:
@@ -82,6 +107,26 @@ class BlockTracker:
     def copy_tracking(self, src: int, dst: int) -> None:
         """§IV-C4 (migration/split): copy tracking data verbatim."""
         self._packed[dst] = self._packed[src]
+        self._worker_mask[dst] = self._worker_mask[src]
+
+    # -- worker-presence masks (scoped fences) --------------------------------
+    def worker_mask(self, block: int) -> int:
+        return int(self._worker_mask[block])
+
+    def worker_masks(self, blocks: np.ndarray) -> np.ndarray:
+        return self._worker_mask[blocks]
+
+    def add_worker(self, block: int, worker: int) -> None:
+        """Stamp worker presence on access (engine touch / fault path)."""
+        self._worker_mask[block] |= worker_bit(worker)
+
+    def add_worker_many(self, blocks: np.ndarray, worker: int) -> None:
+        self._worker_mask[blocks] |= worker_bit(worker)
+
+    def set_worker_masks(self, blocks: np.ndarray,
+                         mask: int | np.uint64 | np.ndarray) -> None:
+        """Set presence masks (scalar broadcast or per-block array)."""
+        self._worker_mask[blocks] = np.asarray(mask, dtype=np.uint64)
 
     # -- vectorised views (hot path) -----------------------------------------
     def ctx_ids(self, blocks: np.ndarray) -> np.ndarray:
@@ -103,7 +148,12 @@ class BlockTracker:
         self._packed[blocks] = packed
 
     def set_versions(self, blocks: np.ndarray, version: int) -> None:
-        """Stamp the current global fence epoch at free time (§IV-C5)."""
+        """Stamp the fence counter at free time (§IV-C5).
+
+        With scoped fences the stamp is the engine's total fence ordinal
+        (``FenceEngine.seq``); it degenerates to the paper's global epoch
+        when no scoped fence ever fires (then ``seq == epoch``).
+        """
         keep = self._packed[blocks] & ~VERSION_MASK
         self._packed[blocks] = keep | np.uint64(version & int(VERSION_MASK))
 
@@ -127,17 +177,33 @@ class BlockTracker:
         else:
             merged_id = min(ia, ib)  # deterministic pick; flag forces a fence
             fl |= FLAG_ALWAYS_FLUSH
+        merged_mask = self._worker_mask[a] | self._worker_mask[b]
         self.set(dst, ctx_id=merged_id, version=max(va, vb), flags=fl)
+        self._worker_mask[dst] = merged_mask
 
     def split(self, src: int, dst_a: int, dst_b: int) -> None:
         """Buddy split: copy tracking data to both halves (§IV-C4)."""
-        self._packed[dst_a] = self._packed[src]
-        self._packed[dst_b] = self._packed[src]
+        packed, mask = self._packed[src], self._worker_mask[src]
+        self._packed[dst_a] = packed
+        self._packed[dst_b] = packed
+        self._worker_mask[dst_a] = mask
+        self._worker_mask[dst_b] = mask
+
+    def fan_out(self, head: int, count: int) -> None:
+        """Broadcast the head's tracking over a contiguous run.
+
+        Equivalent to recursively splitting the run down to order 0 —
+        the batched-refill fast path hands out a whole buddy run at once
+        and must leave every block carrying the run's (merged) tracking.
+        """
+        self._packed[head:head + count] = self._packed[head]
+        self._worker_mask[head:head + count] = self._worker_mask[head]
 
     # -- misc -----------------------------------------------------------------
     def reset(self) -> None:
         """Clear all tracking (the paper clears tracking before experiments)."""
         self._packed[:] = 0
+        self._worker_mask[:] = 0
 
     def nbytes(self) -> int:
         return self._packed.nbytes

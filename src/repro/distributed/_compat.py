@@ -1,0 +1,31 @@
+"""Version-compat shims for the SPMD APIs used by the collectives.
+
+Targets the current API surface (``jax.shard_map``, ``jax.lax.pcast``);
+on older jax releases falls back to ``jax.experimental.shard_map`` with
+replication checking off (the varying-axis type system the ``pcast``
+annotations feed does not exist there, so the annotations are no-ops).
+"""
+
+from __future__ import annotations
+
+import jax
+
+_NEW_SHARD_MAP = getattr(jax, "shard_map", None)
+_HAS_PCAST = hasattr(jax.lax, "pcast")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    if _NEW_SHARD_MAP is not None:
+        return _NEW_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def pvary(x, axes):
+    """Mark a shard-invariant value as varying over ``axes`` (required for
+    scan carries inside new-style shard_map; identity on old jax)."""
+    if not axes or not _HAS_PCAST:
+        return x
+    return jax.lax.pcast(x, tuple(axes), to="varying")

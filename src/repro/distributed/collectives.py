@@ -32,6 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed._compat import pvary, shard_map
+
 NEG_INF = -1e30
 
 
@@ -62,9 +64,7 @@ def _localize(tables, offset, Nl):
 def _pvary(x, axes):
     """Mark a shard-invariant init as varying over ``axes`` (scan inside
     shard_map requires carry in/out varying-axis types to match)."""
-    if not axes:
-        return x
-    return jax.lax.pcast(x, tuple(axes), to="varying")
+    return pvary(x, axes)
 
 
 def _lse_combine(m, l, acc, axes):
@@ -166,7 +166,7 @@ def vocab_parallel_embed(tokens, table, *, mesh, dp_spec=None,
         x = jnp.where(ok[..., None], x, 0)
         return jax.lax.psum(x, axis)
 
-    return jax.shard_map(body, mesh=mesh,
+    return shard_map(body, mesh=mesh,
                          in_specs=(P(axis, None), tspec),
                          out_specs=ospec)(table, tokens)
 
@@ -197,7 +197,7 @@ def scatter_seq_sp(pool, seq, tab, *, mesh, batch_axes=("data",),
         loc = jnp.where((tb >= 0) & (loc >= 0) & (loc < Nl), loc, Nl)
         return pl.at[loc].set(sq.astype(pl.dtype), mode="drop")
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(pool_spec, *([None] * (nd_pool - 1))),
                   P(bspec, *([None] * (nd_seq - 1))), P(bspec)),
@@ -244,7 +244,7 @@ def paged_decode_attention_sp(q, k_pool, v_pool, tables, lengths, *, mesh,
                                     pos_base=pos_base)
         return _lse_combine(m, l, acc, sa)
 
-    out = jax.shard_map(
+    out = shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec, None, None, None), P(pool_spec, None, None, None),
                   P(pool_spec, None, None, None), tspec, P(bspec)),
@@ -328,7 +328,7 @@ def mla_decode_sp(params, x, positions, c_pool, rope_pool, tables, lengths,
                                        (jnp.arange(nch), tc))
         return _lse_combine(mx, l, acc, sa)
 
-    ctx = jax.shard_map(
+    ctx = shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec, None, None), P(bspec, None, None),
                   P(pool_spec, None, None), P(pool_spec, None, None),

@@ -11,11 +11,12 @@ every stage, stage params stacked on a leading axis sharded over ``axis``.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro.distributed._compat import pvary, shard_map
 
 
 def pipeline_apply(stage_fn, stage_params, x, *, mesh, axis: str = "pipe",
@@ -44,14 +45,13 @@ def pipeline_apply(stage_fn, stage_params, x, *, mesh, axis: str = "pipe",
             nxt = jax.lax.ppermute(out, axis, fwd)
             return nxt, out
 
-        act0 = jax.lax.pcast(jnp.zeros_like(xs_l[0]), (axis,),
-                             to="varying")
+        act0 = pvary(jnp.zeros_like(xs_l[0]), (axis,))
         _, outs = jax.lax.scan(tick, act0, jnp.arange(ticks))
         # stage S−1 emits microbatch t−(S−1) at tick t
         return outs[None, n_stages - 1:]                   # (1, n_micro, …)
 
     leaf_spec = lambda _: P(axis)
-    outs = jax.shard_map(
+    outs = shard_map(
         body, mesh=mesh,
         in_specs=(jax.tree.map(leaf_spec, stage_params), P()),
         out_specs=P(axis),

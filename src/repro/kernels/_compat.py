@@ -1,0 +1,18 @@
+"""Version-compat shims for Pallas TPU APIs.
+
+The kernels target the current Pallas API (``pltpu.CompilerParams``); older
+jax releases (≤0.4.x) ship the same dataclass as ``TPUCompilerParams``.
+Resolve whichever exists so the kernels run on both.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(dimension_semantics: tuple[str, ...]):
+    """Build compiler params with the given grid dimension semantics."""
+    return _COMPILER_PARAMS_CLS(dimension_semantics=tuple(dimension_semantics))

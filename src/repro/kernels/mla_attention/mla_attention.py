@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -112,7 +114,7 @@ def mla_paged_ctx_fwd(q_lat: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
         kern,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, rank), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary")),
         interpret=interpret,
     )(tables.reshape(-1), lengths, q_lat, q_rope, c_pool, rope_pool)

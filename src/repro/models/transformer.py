@@ -22,7 +22,6 @@ indexing is static); train/prefill scan.  Paged attention is pluggable:
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -35,7 +34,7 @@ from repro.models import moe as moe_mod
 from repro.models import rwkv6 as rwkv_mod
 from repro.models.config import ModelConfig
 from repro.models.frontends import init_frontend
-from repro.models.layers import (cross_entropy, embed, init_embed,
+from repro.models.layers import (embed, init_embed,
                                  init_swiglu, rms_norm, unembed)
 
 BLOCK_SIZE = 128   # tokens per physical KV block (MXU-aligned)
@@ -193,7 +192,6 @@ def encode(params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
     from repro.models.frontends import audio_frames_to_embeddings
     x = audio_frames_to_embeddings(params, frames)
     x = x + params["enc_pos"][None, : x.shape[1]]
-    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
     for lp in params["encoder"]:
         h = rms_norm(x, lp["mix"]["norm"], cfg.norm_eps)
         q, k, v = attn_mod.qkv_proj(lp["mix"], h, cfg, None)
@@ -499,7 +497,6 @@ def decode_step(params, cfg: ModelConfig, state: dict, tokens: jax.Array, *,
     positions = pos[:, None]
 
     prefix, period = cfg.segmentation()
-    n_blocks = (cfg.n_layers - prefix) // period if period else 0
     aidx = midx = 0          # per-kind pool cursors
     attn_ids = attn_layer_ids(cfg)
     mamba_ids = mamba_layer_ids(cfg)
@@ -618,7 +615,6 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, state: dict, *,
     S_tot = x.shape[1]
     positions = jnp.broadcast_to(jnp.arange(S_tot)[None], (B, S_tot))
     prefix, period = cfg.segmentation()
-    aidx = 0
     attn_ids = attn_layer_ids(cfg)
     mamba_ids = mamba_layer_ids(cfg)
 
@@ -687,8 +683,6 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, state: dict, *,
 
     def _dyn_write(pool, idx, value):
         """pool[idx] = value with a (possibly traced) leading index."""
-        cur = jax.lax.dynamic_index_in_dim(pool, idx, 0, keepdims=False)
-        del cur
         return jax.lax.dynamic_update_index_in_dim(
             pool, value, idx, 0)
 

@@ -39,6 +39,7 @@ class Engine:
                  page_impl: str = "ref", dtype=jnp.float32,
                  watermarks: Watermarks | None = None,
                  eos_token: int | None = None, greedy: bool = True,
+                 num_workers: int = 1, scoped_fences: bool = True,
                  cost_model=None):
         self.cfg = cfg
         self.params = params
@@ -47,7 +48,9 @@ class Engine:
         self.greedy = greedy
         self.cache = PagedKVCache(cfg, num_blocks, max_batch, max_seq_len,
                                   fpr_enabled=fpr_enabled, scope=scope,
-                                  dtype=dtype, cost_model=cost_model)
+                                  dtype=dtype, num_workers=num_workers,
+                                  scoped_fences=scoped_fences,
+                                  cost_model=cost_model)
         self.sched = Scheduler(max_batch)
         self.evictor = WatermarkEvictor(self.cache.mgr, self._lru_victims,
                                         watermarks=watermarks)
@@ -77,13 +80,18 @@ class Engine:
             for idx in range(m.num_blocks - 1):      # never the active block
                 yield m.mapping_id, idx, is_fpr
 
+    def _worker_of(self, slot: int) -> int:
+        """Slot → per-worker free list (one 'core' per engine worker)."""
+        return slot % self.cache.num_workers
+
     def _admit(self) -> None:
         for r in self.sched.admit():
             need = len(r.prompt) + r.max_new_tokens
             while True:
                 try:
                     r.mapping = self.cache.alloc_sequence(
-                        need, stream=r.stream, group_id=r.group_id)
+                        need, stream=r.stream, group_id=r.group_id,
+                        worker=self._worker_of(r.slot))
                     break
                 except Exception:
                     if not self.evictor.maybe_evict():
@@ -146,7 +154,8 @@ class Engine:
                 if m.physical[idx] < 0:
                     while True:
                         try:
-                            self.cache.mgr.touch(m.mapping_id, idx)
+                            self.cache.mgr.touch(m.mapping_id, idx,
+                                                 worker=self._worker_of(slot))
                             break
                         except Exception:
                             if not self.evictor.maybe_evict():
@@ -177,7 +186,8 @@ class Engine:
             made += 1
             if (len(r.generated) >= r.max_new_tokens
                     or (self.eos is not None and nxt == self.eos)):
-                self.cache.free_sequence(r.mapping)   # munmap
+                self.cache.free_sequence(r.mapping,
+                                         worker=self._worker_of(slot))
                 r.mapping = None
                 self.sched.complete(r)
         self.steps += 1

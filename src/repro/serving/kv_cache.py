@@ -30,17 +30,22 @@ class PagedKVCache:
                  max_seq_len: int, *, fpr_enabled: bool = True,
                  scope: ContextScope = ContextScope.PER_GROUP,
                  dtype=jnp.float32, num_workers: int = 1,
+                 scoped_fences: bool = True,
                  cost_model: FenceCostModel | None = None):
         self.cfg = cfg
         self.block_size = tfm.BLOCK_SIZE
         self.max_batch = max_batch
         self.max_blocks_per_seq = -(-max_seq_len // self.block_size)
         self.fences = FenceEngine(cost_model=cost_model,
-                                  on_fence=self._device_fence)
+                                  on_fence=self._device_fence,
+                                  num_workers=num_workers,
+                                  scoped=scoped_fences)
         self.mgr = FprMemoryManager(
             num_blocks, num_workers=num_workers, max_seqs=max_batch * 4,
             max_blocks_per_seq=self.max_blocks_per_seq,
-            fence_engine=self.fences, fpr_enabled=fpr_enabled)
+            fence_engine=self.fences, fpr_enabled=fpr_enabled,
+            scoped_fences=scoped_fences)
+        self.num_workers = num_workers
         self.contexts = ContextRegistry(default_scope=scope)
         self.fpr_enabled = fpr_enabled
         # device pools (decode-state pytree minus tables/lengths)
@@ -84,19 +89,21 @@ class PagedKVCache:
     # ---------------------------------------------------------- allocation
     def alloc_sequence(self, n_tokens: int, *, stream: str = "default",
                        group_id: int | None = None,
-                       use_fpr: bool | None = None) -> Mapping:
+                       use_fpr: bool | None = None,
+                       worker: int = 0) -> Mapping:
         n_blocks = max(1, -(-n_tokens // self.block_size))
         gid = group_id if group_id is not None else 1
         ctx = self.contexts.resolve(
             group_id=gid, stream_name=stream,
             use_fpr=self.fpr_enabled if use_fpr is None else use_fpr)
-        return self.mgr.mmap(n_blocks, ctx)
+        return self.mgr.mmap(n_blocks, ctx, worker=worker)
 
-    def extend_sequence(self, m: Mapping, n_blocks: int = 1) -> None:
-        self.mgr.extend(m.mapping_id, n_blocks)
+    def extend_sequence(self, m: Mapping, n_blocks: int = 1, *,
+                        worker: int = 0) -> None:
+        self.mgr.extend(m.mapping_id, n_blocks, worker=worker)
 
-    def free_sequence(self, m: Mapping) -> None:
-        self.mgr.munmap(m.mapping_id)
+    def free_sequence(self, m: Mapping, *, worker: int = 0) -> None:
+        self.mgr.munmap(m.mapping_id, worker=worker)
 
     # ------------------------------------------------------- device tensors
     def slot_tables(self, mappings: dict[int, Mapping]) -> jax.Array:

@@ -18,7 +18,7 @@ scales with replica count (log-tree table rebroadcast) and dispatch depth.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -41,6 +41,8 @@ class SimConfig:
     compute_factor: float = 1.0       # CF knob (§V-B): quanta per I/O op
     in_kernel_frac: float = 0.0       # fraction of stalls absorbed (Fig. 3)
     fpr: bool = True
+    scoped: bool = False              # worker-scoped fences (off ⇒ the
+                                      # paper's global-broadcast pessimism)
     scope: ContextScope = ContextScope.PER_GROUP
     shared_context: bool = False      # all workers share one recycling ctx
     fence_cost: float = 25.0          # initiator wait per fence (virtual µs)
@@ -84,11 +86,17 @@ class FenceImpactSim:
     def __init__(self, cfg: SimConfig,
                  cost_model: FenceCostModel | None = None):
         self.cfg = cfg
-        self.fences = FenceEngine(cost_model=cost_model, measure=False)
+        self.fences = FenceEngine(cost_model=cost_model, measure=False,
+                                  scoped=cfg.scoped)
         self.mgr = FprMemoryManager(
             cfg.num_blocks,
             num_workers=max(1, cfg.io_workers + cfg.mixed_workers),
-            fence_engine=self.fences, fpr_enabled=cfg.fpr)
+            fence_engine=self.fences, fpr_enabled=cfg.fpr,
+            scoped_fences=cfg.scoped)
+        # compute workers hold table replicas too (they are what a global
+        # fence needlessly stalls); give them epoch slots after io+mixed
+        self.fences.ensure_workers(max(1, cfg.io_workers + cfg.mixed_workers
+                                       + cfg.compute_workers))
         self.res = SimResult()
 
     def run(self) -> SimResult:
@@ -97,54 +105,48 @@ class FenceImpactSim:
         n_io = c.io_workers
         n_cp = c.compute_workers
         n_mx = c.mixed_workers
-        stall_recipients = n_io + n_cp + n_mx
 
-        def fence_stall():
-            # every worker that may hold a stale translation is stalled for
-            # recv_stall (remote flush + refills); the initiating worker
-            # waits fence_cost for all confirmations (grows weakly with
-            # recipient count — tree-ack)
+        def fence_stall(covered):
+            # every worker the fence covered is stalled for recv_stall
+            # (remote flush + refills); the initiating worker waits
+            # fence_cost for all confirmations (grows weakly with
+            # recipient count — tree-ack).  A global fence covers every
+            # worker; a scoped fence only its mask's popcount —
+            # that difference is exactly the paper's observation that the
+            # OS stalls cores that never cached the translation.
             absorbed = c.in_kernel_frac
             per_worker = c.recv_stall * (1.0 - absorbed)
-            res.stall_time += per_worker * stall_recipients
+            res.stall_time += per_worker * covered
             import math
             return (c.fence_cost
-                    * (1 + 0.15 * math.log2(max(2, stall_recipients))))
+                    * (1 + 0.15 * math.log2(max(2, covered))))
 
         fences_before = self.fences.stats.fences
+
+        def io_op(wid, ctx_gid):
+            ctx = (derive_context(c.scope, group_id=ctx_gid)
+                   if c.fpr else None)
+            st = self.fences.stats
+            f0, w0 = st.fences, st.workers_covered
+            m = self.mgr.mmap(c.blocks_per_map, ctx, worker=wid)
+            self.mgr.munmap(m.mapping_id, worker=wid)
+            res.io_ops += 1
+            cost = c.alloc_cost + c.storage_latency
+            if st.fences > f0:
+                cost += fence_stall(st.workers_covered - w0)
+            res.io_time += cost
 
         for it in range(c.iters):
             # --- I/O workers: mmap → access → munmap ----------------------
             for w in range(n_io):
-                ctx_gid = 1 if c.shared_context else (w + 1)
-                ctx = (derive_context(c.scope, group_id=ctx_gid)
-                       if c.fpr else None)
-                f0 = self.fences.stats.fences
-                m = self.mgr.mmap(c.blocks_per_map, ctx, worker=w)
-                self.mgr.munmap(m.mapping_id, worker=w)
-                res.io_ops += 1
-                cost = c.alloc_cost + c.storage_latency
-                if self.fences.stats.fences > f0:
-                    cost += fence_stall()
-                res.io_time += cost
+                io_op(w, 1 if c.shared_context else (w + 1))
             # --- compute workers: stalled only by fences ------------------
             if n_cp:
                 res.compute_ops += n_cp
                 res.compute_time += n_cp * c.compute_quantum
             # --- mixed workers: alternate -------------------------------
             for w in range(n_mx):
-                wid = n_io + w
-                ctx_gid = 1 if c.shared_context else (100 + w)
-                ctx = (derive_context(c.scope, group_id=ctx_gid)
-                       if c.fpr else None)
-                f0 = self.fences.stats.fences
-                m = self.mgr.mmap(c.blocks_per_map, ctx, worker=wid)
-                self.mgr.munmap(m.mapping_id, worker=wid)
-                res.io_ops += 1
-                cost = c.alloc_cost + c.storage_latency
-                if self.fences.stats.fences > f0:
-                    cost += fence_stall()
-                res.io_time += cost
+                io_op(n_io + w, 1 if c.shared_context else (100 + w))
                 res.compute_ops += int(c.compute_factor)
                 res.compute_time += c.compute_factor * c.compute_quantum
 

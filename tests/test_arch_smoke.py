@@ -9,9 +9,12 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config, get_smoke
 from repro.models import transformer as tfm
-from repro.models.config import iter_param_shapes
 from repro.training.optimizer import AdamWConfig
 from repro.training.train_loop import TrainConfig, make_train_step
+
+# heavy lane: excluded from the fast CI default (`-m "not slow"`)
+pytestmark = pytest.mark.slow
+
 
 KEY = jax.random.PRNGKey(0)
 

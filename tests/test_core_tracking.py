@@ -2,11 +2,9 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
-from repro.core.tracking import (FLAG_ALWAYS_FLUSH, MAX_CONTEXT_ID,
-                                 BlockTracker)
+from repro.core.tracking import MAX_CONTEXT_ID, BlockTracker
 
 
 def test_footprint_is_8_bytes_per_block():

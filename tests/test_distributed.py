@@ -5,6 +5,11 @@ resharding, pipeline, sharded train step) — run in a subprocess so the
 import os
 import subprocess
 import sys
+import pytest
+
+# heavy lane: excluded from the fast CI default (`-m "not slow"`)
+pytestmark = pytest.mark.slow
+
 
 HERE = os.path.dirname(__file__)
 

@@ -11,7 +11,10 @@ since the last global fence).  After random alloc/free/evict traces:
                fence actually intervened after the block was freed.
 """
 
-import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
+
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
@@ -111,7 +114,6 @@ def test_buddy_merge_conflict_forces_flush(ops):
     """Merging buddies from different recycling contexts must set
     ALWAYS_FLUSH (§IV-C4) — checked via the tracker directly."""
     tr = BlockTracker(64)
-    from repro.core.tracking import FLAG_ALWAYS_FLUSH
     for pick_ctx, b in ops:
         b = b * 2
         tr.set(b, ctx_id=1 if pick_ctx else 2, version=1)

@@ -1,0 +1,295 @@
+"""Worker-scoped coherence fences + batched allocation hot path.
+
+The scoped-fence model (numaPTE-style shootdown filtering): the tracker
+records which workers hold a translation; a required fence covers only the
+still-stale workers, bumping their per-worker epochs, while the §IV-C5
+global epoch moves only on global fences — so elision stays sound.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ContextScope, FprMemoryManager, derive_context
+from repro.core.allocator import BlockAllocator, OutOfBlocksError
+from repro.core.shootdown import FenceEngine
+from repro.core.tracking import BlockTracker, worker_bit
+
+
+def ctx(gid):
+    return derive_context(ContextScope.PER_GROUP, group_id=gid)
+
+
+def make_mgr(n=512, workers=4, scoped=True, **kw):
+    eng = FenceEngine(measure=False)
+    return FprMemoryManager(n, num_workers=workers, fence_engine=eng,
+                            fpr_enabled=True, scoped_fences=scoped,
+                            max_order=7, **kw)
+
+
+class TestScopedFenceEngine:
+    def test_scoped_bumps_only_masked_epochs(self):
+        eng = FenceEngine(measure=False, num_workers=4)
+        eng.fence_scoped("x", 1, worker_mask=int(worker_bit(2)))
+        assert eng.epoch == 1                 # global epoch untouched
+        assert eng.seq == 2
+        assert eng.worker_epochs[2] == 2
+        assert list(eng.worker_epochs[[0, 1, 3]]) == [1, 1, 1]
+        assert eng.stats.fences_scoped == 1
+
+    def test_global_fence_bumps_everything(self):
+        eng = FenceEngine(measure=False, num_workers=4)
+        eng.fence("x", 1)
+        assert eng.epoch == eng.seq == 2
+        assert (eng.worker_epochs == 2).all()
+        assert eng.stats.fences_scoped == 0
+
+    def test_full_mask_delegates_to_global(self):
+        eng = FenceEngine(measure=False, num_workers=2)
+        eng.fence_scoped("x", 1, worker_mask=0b11)
+        assert eng.epoch == 2
+        assert eng.stats.fences == 1
+        assert eng.stats.fences_scoped == 0
+
+    def test_scoped_disabled_delegates_to_global(self):
+        eng = FenceEngine(measure=False, num_workers=4, scoped=False)
+        eng.fence_scoped("x", 1, worker_mask=0b1)
+        assert eng.epoch == 2
+        assert eng.stats.fences_scoped == 0
+
+    def test_scoped_modeled_cost_below_global(self):
+        eng = FenceEngine(measure=False, num_workers=8)
+        eng.fence("g", 1)
+        global_cost = eng.stats.modeled_s
+        eng.fence_scoped("s", 1, worker_mask=0b1)
+        scoped_cost = eng.stats.modeled_s - global_cost
+        assert scoped_cost < global_cost
+        assert eng.stats.replicas_spared > 0
+
+
+class TestScopedFencePolicy:
+    def test_context_exit_scopes_to_stale_worker(self):
+        m = make_mgr()
+        mp = m.mmap(4, ctx(1), worker=0)
+        m.munmap(mp.mapping_id, worker=0)
+        assert m.fences.stats.fences == 0     # FPR skip at free
+        m.mmap(4, ctx(2), worker=0)           # same worker list → same blocks
+        st = m.fences.stats
+        assert st.fences == 1
+        assert st.fences_scoped == 1          # covered worker 0 only
+        assert st.workers_covered == 1
+        assert st.replicas_spared > 0
+
+    def test_scope_elision_after_covering_scoped_fence(self):
+        m = make_mgr()
+        mp = m.mmap(2, ctx(1), worker=0)
+        m.munmap(mp.mapping_id, worker=0)
+        # unrelated scoped fence that happens to cover worker 0
+        m.fences.fence_scoped("unrelated", 1,
+                              worker_mask=int(worker_bit(0)))
+        before = m.fences.stats.fences
+        m.mmap(2, ctx(2), worker=0)           # context exit, but w0 is clean
+        assert m.fences.stats.fences == before
+        assert m.fences.stats.elided_by_scope == 2
+
+    def test_scoped_fence_on_other_worker_does_not_elide(self):
+        m = make_mgr()
+        mp = m.mmap(2, ctx(1), worker=0)
+        m.munmap(mp.mapping_id, worker=0)
+        # fence covering only worker 3 — worker 0 is still stale
+        m.fences.fence_scoped("unrelated", 1,
+                              worker_mask=int(worker_bit(3)))
+        before = m.fences.stats.fences
+        m.mmap(2, ctx(2), worker=0)
+        assert m.fences.stats.fences == before + 1
+        assert m.fences.stats.elided_by_scope == 0
+
+    def test_global_fence_still_elides_for_all_workers(self):
+        m = make_mgr()
+        mp = m.mmap(4, ctx(1), worker=1)
+        m.munmap(mp.mapping_id, worker=1)
+        m.fences.fence("unrelated_global")
+        before = m.fences.stats.fences
+        m.mmap(4, ctx(2), worker=1)
+        assert m.fences.stats.fences == before
+        assert m.fences.stats.elided_by_version == 4
+
+    def test_baseline_munmap_fence_is_scoped(self):
+        m = make_mgr()
+        mp = m.mmap(4, None, worker=2)        # non-FPR mapping
+        m.munmap(mp.mapping_id, worker=2)
+        st = m.fences.stats
+        assert st.fences_by_reason["munmap"] == 1
+        assert st.fences_scoped == 1          # only worker 2 held it
+        assert st.workers_covered == 1
+
+    def test_eviction_fence_scoped_and_elides_later(self):
+        m = make_mgr(max_blocks_per_seq=4096)
+        big = m.mmap_sparse(64, ctx(1))
+        for i in range(16):
+            m.touch(big.mapping_id, i, worker=1)
+        n = m.evict([(big.mapping_id, i) for i in range(16)],
+                    fpr_batch=True, worker=1)
+        assert n == 16
+        st = m.fences.stats
+        assert st.fences == 1
+        assert st.fences_scoped == 1          # only worker 1 touched them
+        # the evicted blocks' next context exit elides (covered by fence)
+        before = st.fences
+        m.mmap(8, ctx(2), worker=1)
+        assert m.fences.stats.fences == before
+        assert (m.fences.stats.elided_by_scope
+                + m.fences.stats.elided_by_version) >= 8
+
+    def test_single_worker_matches_global_semantics(self):
+        """With one worker every scoped fence degenerates to a global one
+        and the fence counts match the paper's global-epoch scheme."""
+        for scoped in (False, True):
+            m = make_mgr(workers=1, scoped=scoped)
+            mp = m.mmap(4, ctx(1), worker=0)
+            m.munmap(mp.mapping_id, worker=0)
+            m.mmap(4, ctx(2), worker=0)
+            assert m.fences.stats.fences == 1
+            assert m.fences.stats.fences_scoped == 0
+
+    def test_recycled_allocation_preserves_prior_holders(self):
+        """Same-context recycling takes no fence, so it must not erase the
+        previous holders from the presence mask — the eventual context
+        exit has to fence *every* worker that mapped the block."""
+        m = make_mgr(n=8, workers=4)
+        mp = m.mmap(8, ctx(1), worker=0)       # whole pool on worker 0
+        m.munmap(mp.mapping_id, worker=0)      # stale on w0, no fence
+        mp2 = m.mmap(8, ctx(1), worker=1)      # steal; same ctx → no fence
+        assert m.fences.stats.fences == 0
+        m.munmap(mp2.mapping_id, worker=1)     # stale on w0 AND w1
+        m.mmap(8, ctx(2), worker=1)            # context exit
+        st = m.fences.stats
+        assert st.fences == 1
+        assert st.workers_covered == 2         # both holders flushed
+
+    def test_cross_worker_exit_covers_only_stale_workers(self):
+        m = make_mgr(n=64, workers=4)
+        # exhaust worker 0's pool then steal into worker 1's list so the
+        # same physical blocks move across workers
+        mp = m.mmap(48, ctx(1), worker=0)
+        m.munmap(mp.mapping_id, worker=0)     # stale on worker 0
+        m.mmap(48, ctx(2), worker=1)          # steals worker-0 blocks
+        st = m.fences.stats
+        assert st.fences >= 1
+        assert st.workers_covered < 4 * st.fences  # never a full broadcast
+
+
+class TestBatchedAllocation:
+    def test_alloc_blocks_unique_and_conserved(self):
+        tr = BlockTracker(256)
+        a = BlockAllocator(256, tr, num_workers=2)
+        blocks = a.alloc_blocks(100, 0)
+        assert len(blocks) == 100
+        assert len(set(blocks)) == 100
+        assert a.free_blocks == 156
+        a.free_many(blocks, 0)
+        assert a.free_blocks == 256
+
+    def test_alloc_blocks_zero_and_scalar_paths(self):
+        tr = BlockTracker(16)
+        a = BlockAllocator(16, tr, num_workers=1)
+        assert a.alloc_blocks(0, 0) == []
+        x = a.alloc_block(0)
+        a.free_block(x, 0)
+        assert a.alloc_block(0) == x          # LIFO recycling preserved
+
+    def test_exhaustion_raises_without_leak(self):
+        tr = BlockTracker(16)
+        a = BlockAllocator(16, tr, num_workers=1, pcp_batch=4, pcp_high=32)
+        a.alloc_blocks(10, 0)
+        free_before = a.free_blocks
+        with pytest.raises(OutOfBlocksError):
+            a.alloc_blocks(10, 0)
+        assert a.free_blocks == free_before   # nothing leaked
+        assert len(a.alloc_blocks(6, 0)) == 6
+
+    def test_bulk_refill_fans_out_tracking(self):
+        tr = BlockTracker(16)
+        a = BlockAllocator(16, tr, num_workers=1, max_order=4)
+        tr.set(0, ctx_id=5, version=3)        # head of the order-4 free run
+        blocks = a.alloc_blocks(8, 0)
+        for b in blocks:
+            assert tr.ctx_id(b) == 5          # head tracking reached them
+            assert tr.version(b) == 3
+
+    def test_steal_across_workers_in_bulk(self):
+        tr = BlockTracker(8)
+        a = BlockAllocator(8, tr, num_workers=2, pcp_batch=8, pcp_high=64)
+        got = a.alloc_blocks(8, 0)
+        a.free_many(got, 0)                   # all on worker 0's list
+        stolen = a.alloc_blocks(5, 1)         # must steal from worker 0
+        assert len(stolen) == 5
+        assert set(stolen) <= set(got)
+
+    def test_batched_acquire_same_fences_as_looped_trace(self):
+        """The batched hot path must not change fence policy decisions:
+        an identical trace driven through per-block scalar allocation
+        (per-block refill decisions, no bulk-run fan_out) makes the same
+        fence/elision choices as the bulk path."""
+        def trace(mgr, looped):
+            if looped:
+                bulk = mgr.alloc.alloc_blocks
+                mgr.alloc.alloc_blocks = (
+                    lambda n, w=0: [bulk(1, w)[0] for _ in range(n)])
+            for i in range(30):
+                mp = mgr.mmap(7, ctx((i % 3) + 1), worker=0)
+                mgr.munmap(mp.mapping_id, worker=0)
+            st = mgr.fences.stats
+            return (st.fences, st.elided_by_version, st.elided_by_scope,
+                    mgr.stats.recycled_hits)
+
+        assert (trace(make_mgr(workers=1), looped=False)
+                == trace(make_mgr(workers=1), looped=True))
+
+
+class TestWorkerMaskTracking:
+    def test_masks_merge_and_split(self):
+        tr = BlockTracker(8)
+        tr.add_worker(0, 1)
+        tr.add_worker(1, 2)
+        tr.merge(0, 1, 0)
+        assert tr.worker_mask(0) == int(worker_bit(1) | worker_bit(2))
+        tr.split(0, 0, 1)
+        assert tr.worker_mask(1) == tr.worker_mask(0)
+
+    def test_high_workers_alias_top_bit(self):
+        tr = BlockTracker(4)
+        tr.add_worker(0, 70)
+        tr.add_worker(0, 90)
+        assert tr.worker_mask(0) == 1 << 63
+        eng = FenceEngine(measure=False, num_workers=66)
+        workers = eng._workers_in(1 << 63)
+        assert list(workers) == [63, 64, 65]  # conservative: all high ids
+
+    def test_reset_clears_masks(self):
+        tr = BlockTracker(4)
+        tr.add_worker(2, 1)
+        tr.reset()
+        assert tr.worker_mask(2) == 0
+
+    def test_mask_vector_ops(self):
+        tr = BlockTracker(8)
+        arr = np.asarray([1, 3, 5], dtype=np.int64)
+        tr.add_worker_many(arr, 2)
+        assert (tr.worker_masks(arr) == worker_bit(2)).all()
+        tr.set_worker_masks(arr, 0)
+        assert (tr.worker_masks(arr) == 0).all()
+
+
+def test_scoped_trace_models_cheaper_than_global():
+    """Acceptance: same trace, scoped fences → lower modeled fence cost."""
+    def drive(scoped):
+        m = make_mgr(n=2048, workers=8, scoped=scoped)
+        for i in range(200):
+            mp = m.mmap(8, ctx((i % 4) + 1), worker=0)
+            m.munmap(mp.mapping_id, worker=0)
+        return m.fences.stats
+
+    st_global, st_scoped = drive(False), drive(True)
+    assert st_scoped.fences == st_global.fences      # same policy decisions
+    assert st_scoped.modeled_s < st_global.modeled_s
+    assert st_scoped.replicas_spared > 0

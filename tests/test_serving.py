@@ -7,11 +7,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.eviction import Watermarks
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
 from repro.models.layers import rms_norm, unembed
 from repro.serving.engine import Engine
+
+# heavy lane: excluded from the fast CI default (`-m "not slow"`)
+pytestmark = pytest.mark.slow
+
 
 CFG = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
                   n_kv_heads=2, d_ff=128, vocab=128, head_dim=16)
@@ -41,6 +44,20 @@ def test_fpr_identical_tokens_and_zero_fences():
     assert s1["fence"]["fences"] == 0                 # all recycled
     assert s1["fence"]["skipped_at_free"] >= len(prompts)
     assert s1["fpr"]["recycled_hits"] > 0
+
+
+def test_scoped_multiworker_identical_tokens():
+    """Scoped fences with per-slot workers never change what the tables
+    say — a 4-worker engine decodes exactly the single-worker tokens."""
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(1, CFG.vocab, size=rng.randint(4, 50))
+               for _ in range(6)]
+    e_multi, t_multi = _run_engine(True, prompts, num_workers=4)
+    _, t_single = _run_engine(True, prompts)
+    assert t_multi == t_single
+    s = e_multi.stats()
+    assert s["fence"]["fences"] == 0          # one stream → pure recycling
+    assert len(s["worker_epochs"]) == 4
 
 
 def test_prefill_decode_match_full_forward():

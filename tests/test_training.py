@@ -1,8 +1,6 @@
 """Training stack: convergence, checkpoint/restart, data determinism,
 optimizer behaviour, gradient compression error feedback."""
 
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,6 +13,11 @@ from repro.training.grad_compression import (compress_tree, decompress_tree,
                                              init_error_state)
 from repro.training.optimizer import AdamWConfig, init_opt_state
 from repro.training.train_loop import TrainConfig, make_train_step, train
+import pytest
+
+# heavy lane: excluded from the fast CI default (`-m "not slow"`)
+pytestmark = pytest.mark.slow
+
 
 CFG = ModelConfig(name="t", n_layers=2, d_model=32, n_heads=2,
                   n_kv_heads=2, d_ff=64, vocab=64, head_dim=16)

@@ -13,8 +13,13 @@ Extensions (``--mode scoped`` runs only these):
   scoped_fences  global vs worker-scoped fences on an identical
                  context-rotation trace — modeled fence cost and
                  replicas spared (the numaPTE shootdown-filter analogue)
+  engine_trace   the same comparison through the *actual* serving Engine
+                 with sharded device block-tables — refreshed bytes and
+                 fence counts, decoded tokens bit-identical
   alloc_batch    looped per-block allocation vs the batched
                  ``alloc_blocks``/``free_many`` hot path — wall time
+                 (kept out of ``microbench_scoped.json``, which contains
+                 only deterministic, seeded, diffable sections)
 """
 
 from __future__ import annotations
@@ -125,21 +130,37 @@ def _extension_sections(smoke: bool) -> dict:
     }
 
 
-def _print_extensions(out: dict) -> None:
-    sf, ab = out["scoped_fences"], out["alloc_batch"]
+def _print_scoped_fences(sf: dict) -> None:
     print(f"  scoped fences:   modeled {sf['global']['modeled_s']:.3f}s → "
           f"{sf['scoped']['modeled_s']:.3f}s "
           f"(-{sf['modeled_saving_pct']:.0f}%), "
           f"replicas spared {sf['scoped']['replicas_spared']}")
+
+
+def _print_extensions(out: dict) -> None:
+    _print_scoped_fences(out["scoped_fences"])
+    ab = out["alloc_batch"]
     print(f"  batched alloc:   {ab['looped_s']*1e3:.1f}ms → "
           f"{ab['batched_s']*1e3:.1f}ms ({ab['speedup']}x)")
 
 
 def run_scoped(smoke: bool = False) -> dict:
-    """The scoped-fence + batched-alloc extension benchmarks only."""
-    out = _extension_sections(smoke)
+    """The scoped-fence extension benchmarks (deterministic artifact).
+
+    ``microbench_scoped.json`` holds only seeded, deterministic sections
+    (fence counts, modeled costs, refreshed bytes) so CI bench-smoke
+    artifacts are diffable run-to-run; the wall-clock ``alloc_batch``
+    timing lives in ``microbench.json`` instead.
+    """
+    from benchmarks import engine_trace
+    out = {
+        "seed": engine_trace.SEED,
+        "scoped_fences": scoped_fence_case(iters=200 if smoke else 1500),
+        "engine_trace": engine_trace.case(smoke=smoke),
+    }
     save("microbench_scoped", out)
-    _print_extensions(out)
+    _print_scoped_fences(out["scoped_fences"])
+    engine_trace.report(out["engine_trace"])
     return out
 
 

@@ -3,8 +3,10 @@
     PYTHONPATH=src python -m benchmarks.run [--skip-model] [--only NAME]
                                             [--smoke]
 
-``--smoke`` is the CI lane: only the (reduced-grid) microbenchmarks,
-fast enough for every push, still producing the results JSON artifact.
+``--smoke`` is the CI lane: the (reduced-grid) microbenchmarks plus the
+deterministic scoped-fence artifact (``microbench_scoped.json``, seeded and
+diffable run-to-run, including the sharded-device-table engine trace), fast
+enough for every push.
 """
 
 from __future__ import annotations
@@ -27,11 +29,18 @@ def main() -> int:
                             device_latency, eviction, microbench, overhead,
                             roofline, ycsb_kv)
     if args.smoke:
-        suites = [("microbench smoke (Fig. 6-11 + scoped)",
-                   lambda: microbench.run(smoke=True))]
+        suites = [
+            ("microbench smoke (Fig. 6-11 + scoped)",
+             lambda: microbench.run(smoke=True)),
+            ("scoped smoke (deterministic microbench_scoped.json)",
+             lambda: microbench.run_scoped(smoke=True)),
+        ]
     else:
         suites = [
             ("microbench (Fig. 6-11)", microbench.run),
+            # includes the engine_trace sharded-device-table replay —
+            # standalone: python -m benchmarks.engine_trace
+            ("scoped (microbench_scoped.json)", microbench.run_scoped),
             ("device_latency (Fig. 12)", device_latency.run),
             ("eviction (Fig. 14-17)", eviction.run),
             ("contexts (§IV-C2)", contexts_bench.run),

@@ -63,23 +63,69 @@ class BlockTableStore:
     ``int32[max_seqs, max_blocks_per_seq]`` physical-index table plus a table
     **epoch**.  A coherence fence bumps the epoch; replicas reject tables with
     stale epochs (this is how the "flush" manifests device-side).
+
+    **Sharding.**  With ``num_shards > 1`` the table rows are interleaved
+    across per-worker shards (slot ``s`` belongs to shard ``s % num_shards``)
+    and each shard carries its *own* epoch.  A scoped fence bumps only the
+    epochs of the shards it covered, so a replica holding an untouched
+    shard's table keeps a valid copy across fences that could not have
+    invalidated it — the device-side analogue of shooting down only the
+    cores named by the presence mask (numaPTE-style replica filtering).
+    A global fence bumps every shard.  ``num_shards == 1`` reproduces the
+    original monolithic-epoch behaviour bit for bit.
     """
 
-    def __init__(self, max_seqs: int, max_blocks_per_seq: int):
+    def __init__(self, max_seqs: int, max_blocks_per_seq: int,
+                 num_shards: int = 1):
         self.max_seqs = max_seqs
         self.max_blocks_per_seq = max_blocks_per_seq
+        self.num_shards = max(1, num_shards)
         self.ids = MonotonicIdAllocator()
         self._next_mapping = 1
         self.mappings: dict[int, Mapping] = {}
         self.table = np.full((max_seqs, max_blocks_per_seq), -1, dtype=np.int32)
         self.slot_of: dict[int, int] = {}          # mapping_id → row slot
-        self._free_slots = list(range(max_seqs - 1, -1, -1))
-        self.epoch = 1                              # bumped by fences
+        # per-shard free slot lists (slot % num_shards == shard), LIFO
+        self._free_slots = [
+            [s for s in range(max_seqs - 1, -1, -1)
+             if s % self.num_shards == sh]
+            for sh in range(self.num_shards)]
+        self.epoch = 1                              # bumped by fences (global)
+        self.shard_epochs = np.full(self.num_shards, 1, dtype=np.int64)
         self.stale_lookups_detected = 0
+        self.shard_overflows = 0       # slot taken outside the worker's shard
+        self.worker_of_mapping: dict[int, int] = {}
+        # (worker, foreign shard) → live overflowed rows: a fence covering
+        # the worker must also invalidate these shards (see bump_epoch)
+        self._overflow_rows: dict[tuple[int, int], int] = {}
+
+    # ---------------------------------------------------------------- shards
+    def shard_of_slot(self, slot: int) -> int:
+        return slot % self.num_shards
+
+    def shard_of_mapping(self, mapping_id: int) -> int:
+        return self.shard_of_slot(self.slot_of[mapping_id])
+
+    def shard_rows(self, shard: int) -> np.ndarray:
+        """Row indices owned by ``shard`` (interleaved slot layout)."""
+        return np.arange(shard % self.num_shards, self.max_seqs,
+                         self.num_shards)
+
+    def _take_slot(self, worker: int) -> int:
+        """Prefer a slot in the worker's own shard; overflow to any shard."""
+        pref = worker % self.num_shards
+        if self._free_slots[pref]:
+            return self._free_slots[pref].pop()
+        for sh in range(self.num_shards):
+            if self._free_slots[sh]:
+                self.shard_overflows += 1
+                return self._free_slots[sh].pop()
+        raise RuntimeError("block-table slots exhausted")
 
     # ------------------------------------------------------------------ create
     def create_mapping(self, physical: list[int], ctx_id: int = 0,
-                       fixed_logical: int | None = None) -> Mapping:
+                       fixed_logical: int | None = None,
+                       worker: int = 0) -> Mapping:
         mid = self._next_mapping
         self._next_mapping += 1
         if fixed_logical is None:
@@ -95,10 +141,14 @@ class BlockTableStore:
         m = Mapping(mapping_id=mid, logical_start=start,
                     physical=list(physical), ctx_id=ctx_id, fixed_address=fixed)
         self.mappings[mid] = m
-        if not self._free_slots:
-            raise RuntimeError("block-table slots exhausted")
-        slot = self._free_slots.pop()
+        slot = self._take_slot(worker)
         self.slot_of[mid] = slot
+        w = worker % self.num_shards
+        self.worker_of_mapping[mid] = w
+        sh = self.shard_of_slot(slot)
+        if sh != w:
+            self._overflow_rows[(w, sh)] = (
+                self._overflow_rows.get((w, sh), 0) + 1)
         row = self.table[slot]
         row[:] = -1
         row[:len(physical)] = physical
@@ -119,8 +169,13 @@ class BlockTableStore:
         """munmap analogue: returns the physical blocks for the allocator."""
         m = self.mappings.pop(mapping_id)
         slot = self.slot_of.pop(mapping_id)
+        self.worker_of_mapping.pop(mapping_id, None)
+        # An overflow record (worker → foreign shard) deliberately survives
+        # the mapping: a stale device copy of the row exists until a fence
+        # covering the worker bumps that shard, at which point bump_epoch
+        # drops the record.
         self.table[slot, :] = -1
-        self._free_slots.append(slot)
+        self._free_slots[self.shard_of_slot(slot)].append(slot)
         return m.physical
 
     # ------------------------------------------------------------------ lookup
@@ -135,10 +190,14 @@ class BlockTableStore:
         if m is None:
             self.stale_lookups_detected += 1
             raise StaleMappingError(f"mapping {mapping_id} is dead")
-        if table_epoch is not None and table_epoch < self.epoch:
-            self.stale_lookups_detected += 1
-            raise StaleMappingError(
-                f"table epoch {table_epoch} < current {self.epoch}")
+        if table_epoch is not None:
+            # the reader holds a copy of the *shard* this row lives in — a
+            # scoped fence that never touched the shard leaves it valid
+            cur = int(self.shard_epochs[self.shard_of_mapping(mapping_id)])
+            if table_epoch < cur:
+                self.stale_lookups_detected += 1
+                raise StaleMappingError(
+                    f"table epoch {table_epoch} < current {cur}")
         idx = logical_block - m.logical_start
         if not (0 <= idx < m.num_blocks):
             self.stale_lookups_detected += 1
@@ -147,13 +206,40 @@ class BlockTableStore:
         return m.physical[idx]
 
     # ------------------------------------------------------------------- fence
-    def bump_epoch(self) -> int:
+    def bump_epoch(self, shards=None) -> int:
+        """Invalidate device copies: all shards (global fence) or only the
+        listed shard/worker ids (scoped fence).  Returns the new ordinal.
+
+        The monotonic ``epoch`` counts *every* fence; ``shard_epochs[s]`` is
+        the ordinal of the last fence that covered shard ``s`` — a table copy
+        of shard ``s`` is stale iff its epoch is below ``shard_epochs[s]``.
+        """
         self.epoch += 1
+        if shards is None:
+            self.shard_epochs[:] = self.epoch
+            self._overflow_rows.clear()
+        else:
+            covered = {int(s) % self.num_shards for s in np.atleast_1d(shards)}
+            # A covered worker's rows may live in foreign shards (slot
+            # overflow) — those shards hold translations the worker's
+            # dispatches captured, so the fence must invalidate them too.
+            extra = {sh for (w, sh) in self._overflow_rows if w in covered}
+            for key in [k for k in self._overflow_rows if k[0] in covered]:
+                del self._overflow_rows[key]
+            idx = np.asarray(sorted(covered | extra), dtype=np.int64)
+            self.shard_epochs[idx] = self.epoch
         return self.epoch
 
-    def packed(self) -> tuple[np.ndarray, int]:
-        """The device-shippable table + its epoch."""
-        return self.table, self.epoch
+    def packed(self, shard: int | None = None) -> tuple[np.ndarray, int]:
+        """The device-shippable table + its epoch.
+
+        With ``shard`` given, only that shard's rows (a view) + its epoch —
+        what a scoped fence actually has to rebroadcast.
+        """
+        if shard is None:
+            return self.table, self.epoch
+        sh = shard % self.num_shards
+        return self.table[self.shard_rows(sh)], int(self.shard_epochs[sh])
 
     @property
     def live_mappings(self) -> int:

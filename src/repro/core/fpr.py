@@ -68,17 +68,20 @@ class FprMemoryManager:
                                     num_workers=num_workers,
                                     pcp_batch=pcp_batch, pcp_high=pcp_high,
                                     max_order=max_order)
-        self.tables = BlockTableStore(max_seqs, max_blocks_per_seq)
+        self.tables = BlockTableStore(max_seqs, max_blocks_per_seq,
+                                      num_shards=num_workers)
         self.fences = fence_engine or FenceEngine()
         self.fences.ensure_workers(num_workers)
         if scoped_fences is not None:   # None ⇒ respect the engine's flag
             self.fences.scoped = scoped_fences
-        # Every fence invalidates device-held tables: couple the epochs.
+        # Every fence invalidates device-held tables: couple the epochs.  A
+        # scoped fence names its covered workers → only those table shards
+        # are invalidated/refreshed; a global fence (workers=None) hits all.
         inner = self.fences.on_fence
-        def _on_fence(reason: str, n: int) -> None:
-            self.tables.bump_epoch()
+        def _on_fence(reason: str, n: int, workers=None) -> None:
+            self.tables.bump_epoch(shards=workers)
             if inner is not None:
-                inner(reason, n)
+                inner(reason, n, workers)
         self.fences.on_fence = _on_fence
         self.fences.measure = True
         self.fpr_enabled = fpr_enabled
@@ -168,7 +171,8 @@ class FprMemoryManager:
         ctx_id = ctx.ctx_id if (ctx is not None and self.fpr_enabled) else 0
         phys = self._acquire(n_blocks, ctx_id, worker)
         m = self.tables.create_mapping(phys, ctx_id=ctx_id,
-                                       fixed_logical=fixed_logical)
+                                       fixed_logical=fixed_logical,
+                                       worker=worker)
         if fixed_logical is not None:
             # §IV-B: a user-forced address cannot rely on monotonic-VA ABA
             # protection — comply with the request but fence immediately.
@@ -176,13 +180,13 @@ class FprMemoryManager:
         return m
 
     def mmap_sparse(self, n_blocks: int, ctx: RecyclingContext | None = None,
-                    ) -> Mapping:
+                    *, worker: int = 0) -> Mapping:
         """A mapping with no resident blocks (large file mmap; faulted lazily)."""
         if n_blocks > self.tables.max_blocks_per_seq:
             raise ValueError(f"mapping of {n_blocks} blocks exceeds "
                              f"max_blocks_per_seq={self.tables.max_blocks_per_seq}")
         ctx_id = ctx.ctx_id if (ctx is not None and self.fpr_enabled) else 0
-        m = self.tables.create_mapping([], ctx_id=ctx_id)
+        m = self.tables.create_mapping([], ctx_id=ctx_id, worker=worker)
         # reserve logical ids + table rows lazily via touch()
         m.physical = [NOT_RESIDENT] * n_blocks
         self.tables.ids.take(n_blocks)
@@ -299,4 +303,7 @@ class FprMemoryManager:
         return {"fpr": self.stats.snapshot(), "fence": self.fences.totals(),
                 "worker_epochs": self.fences.worker_epoch_counters(),
                 "table_epoch": self.tables.epoch,
+                "table_shard_epochs": [int(e)
+                                       for e in self.tables.shard_epochs],
+                "table_shard_overflows": self.tables.shard_overflows,
                 "stale_detected": self.tables.stale_lookups_detected}

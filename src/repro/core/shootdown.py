@@ -47,6 +47,33 @@ to cover only the workers that could hold a stale translation.  Bookkeeping:
 Versions are stamped with ``seq`` at free time; when scoped fencing is off
 (or a single worker exists) ``seq == epoch`` and the behaviour is
 bit-identical to the paper's global-epoch scheme.
+
+**Sharded device-table refresh.**  The measured fence callback receives the
+covered worker set (``on_fence(reason, n_blocks, workers)``; ``workers is
+None`` for a global fence).  Device-side (``PagedKVCache``), the block
+table is split into one shard per worker — shard ``w`` holds the batch
+slots with ``slot % num_workers == w``, and the engine binds each slot to
+its serving worker at admission — and a fence re-uploads the covered
+workers' shards plus the shards of every slot bound to a covered worker;
+a global fence falls back to re-uploading every shard.  (Host-side,
+``BlockTableStore`` applies the same rule to slot-overflow rows: a scoped
+``bump_epoch`` also invalidates foreign shards holding a covered worker's
+rows.)
+
+*What a shard refresh covers:* every table row a covered worker's in-flight
+dispatches could have captured, because rows are read per slot and every
+slot's serving worker is tracked.  Workers outside the mask keep their
+device copies, which is sound for the same reason the scoped fence itself
+is: their presence bit is not set for any block freed since their last
+covering fence, so no translation they hold moved — their shard epoch
+(``BlockTableStore.shard_epochs[w]``) stays put and their copies validate.
+
+*When the global fallback triggers:* scoping disabled, a mask covering
+every worker, an ALWAYS_FLUSH (§IV-C4 merge-conflict) block, or a
+MAP_FIXED allocation — exactly the cases where per-worker staleness
+tracking is unavailable or vacuous.  Soundness therefore never depends on
+a shard refresh being "enough": whenever coverage is uncertain, the path
+degenerates to the paper's full-broadcast fence.
 """
 
 from __future__ import annotations
@@ -114,7 +141,8 @@ class FenceEngine:
     """Owns the fence epochs and performs/records coherence fences."""
 
     def __init__(self, cost_model: FenceCostModel | None = None,
-                 on_fence: Callable[[str, int], None] | None = None,
+                 on_fence: Callable[[str, int, "np.ndarray | None"], None]
+                 | None = None,
                  measure: bool = True, num_workers: int = 1,
                  scoped: bool = True):
         self.seq = 1                      # total fence ordinal (all fences)
@@ -186,7 +214,7 @@ class FenceEngine:
         st.blocks_covered += n_blocks
         st.workers_covered += self.num_workers
         st.modeled_s += self.cost_model.cost_s()
-        self._measured(reason, n_blocks)
+        self._measured(reason, n_blocks, None)
         return self.epoch
 
     def fence_scoped(self, reason: str, n_blocks: int = 1,
@@ -215,13 +243,20 @@ class FenceEngine:
                                     / self.num_workers))
         st.replicas_spared += cm.n_replicas - affected
         st.modeled_s += cm.cost_s(affected)
-        self._measured(reason, n_blocks)
+        self._measured(reason, n_blocks, workers)
         return self.epoch
 
-    def _measured(self, reason: str, n_blocks: int) -> None:
+    def _measured(self, reason: str, n_blocks: int,
+                  workers: np.ndarray | None) -> None:
+        """Run the attached drain+rebroadcast callback.
+
+        ``workers`` is ``None`` for a global fence (refresh every table
+        shard) or the covered worker ids for a scoped one — the callback
+        (``PagedKVCache._device_fence``) refreshes only those shards.
+        """
         if self.on_fence is not None and self.measure:
             t0 = time.perf_counter()
-            self.on_fence(reason, n_blocks)
+            self.on_fence(reason, n_blocks, workers)
             self.stats.measured_s += time.perf_counter() - t0
 
     # -------------------------------------------------------------- accounting

@@ -18,6 +18,7 @@ FPR only moves *when* invalidation happens, never what the tables say.
 from __future__ import annotations
 
 import time
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +41,7 @@ class Engine:
                  watermarks: Watermarks | None = None,
                  eos_token: int | None = None, greedy: bool = True,
                  num_workers: int = 1, scoped_fences: bool = True,
-                 cost_model=None):
+                 worker_routing: str = "slot", cost_model=None):
         self.cfg = cfg
         self.params = params
         self.page_impl = page_impl
@@ -51,6 +52,9 @@ class Engine:
                                   dtype=dtype, num_workers=num_workers,
                                   scoped_fences=scoped_fences,
                                   cost_model=cost_model)
+        if worker_routing not in ("slot", "stream"):
+            raise ValueError(f"unknown worker_routing {worker_routing!r}")
+        self.worker_routing = worker_routing
         self.sched = Scheduler(max_batch)
         self.evictor = WatermarkEvictor(self.cache.mgr, self._lru_victims,
                                         watermarks=watermarks)
@@ -80,18 +84,29 @@ class Engine:
             for idx in range(m.num_blocks - 1):      # never the active block
                 yield m.mapping_id, idx, is_fpr
 
-    def _worker_of(self, slot: int) -> int:
-        """Slot → per-worker free list (one 'core' per engine worker)."""
-        return slot % self.cache.num_workers
+    def _worker_of(self, r: Request) -> int:
+        """Request → worker (one 'core' per engine worker).
+
+        ``slot`` routing pins a worker per batch slot (matches the device
+        table shard layout exactly); ``stream`` routing gives every request
+        stream a sticky worker, so a stream's recycling stays worker-local
+        and its context-exit fences carry one-bit masks even when the
+        scheduler moves the stream across slots.
+        """
+        if self.worker_routing == "stream":
+            return zlib.crc32(r.stream.encode()) % self.cache.num_workers
+        return r.slot % self.cache.num_workers
 
     def _admit(self) -> None:
         for r in self.sched.admit():
             need = len(r.prompt) + r.max_new_tokens
+            # device refresh scoping must know which worker serves the slot
+            self.cache.bind_slot_worker(r.slot, self._worker_of(r))
             while True:
                 try:
                     r.mapping = self.cache.alloc_sequence(
                         need, stream=r.stream, group_id=r.group_id,
-                        worker=self._worker_of(r.slot))
+                        worker=self._worker_of(r))
                     break
                 except Exception:
                     if not self.evictor.maybe_evict():
@@ -155,7 +170,7 @@ class Engine:
                     while True:
                         try:
                             self.cache.mgr.touch(m.mapping_id, idx,
-                                                 worker=self._worker_of(slot))
+                                                 worker=self._worker_of(r))
                             break
                         except Exception:
                             if not self.evictor.maybe_evict():
@@ -187,7 +202,7 @@ class Engine:
             if (len(r.generated) >= r.max_new_tokens
                     or (self.eos is not None and nxt == self.eos)):
                 self.cache.free_sequence(r.mapping,
-                                         worker=self._worker_of(slot))
+                                         worker=self._worker_of(r))
                 r.mapping = None
                 self.sched.complete(r)
         self.steps += 1

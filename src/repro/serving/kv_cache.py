@@ -9,6 +9,21 @@ The split of responsibilities mirrors the paper exactly:
     mappings.  A coherence fence invalidates device table copies (epoch
     bump); the measured fence callback drains in-flight computation and
     re-uploads the tables — the TLB-flush analogue whose cost FPR avoids.
+
+**Sharded device tables.**  The device block-table is split into one shard
+per worker: shard ``w`` holds the batch slots with ``slot % num_workers ==
+w``, each shard is its own device array, and the kernel-facing
+``state["tables"]`` tensor is assembled from the shard arrays.  The engine
+binds each slot to its serving worker at admission
+(:meth:`bind_slot_worker`); a *scoped* fence re-uploads the covered
+workers' own shards plus the shards of every slot bound to them, so
+non-slot routings (stream affinity) stay covered — refreshed bytes scale
+with the mask popcount — while
+a *global* fence (or ``workers=None``) falls back to re-uploading every
+shard, reproducing the broadcast pessimism the paper eliminates.  The
+per-shard refresh counters (``device_refreshed_entries/bytes``,
+``device_shard_refreshes``, ``device_full_refreshes``) are what the
+benchmarks diff between the global and sharded paths.
 """
 
 from __future__ import annotations
@@ -52,10 +67,33 @@ class PagedKVCache:
         spec = tfm.cache_spec(cfg, max_batch, max_seq_len,
                               num_blocks=num_blocks, dtype=dtype)
         self.state = {k: jnp.zeros(sh, dt) for k, (sh, dt) in spec.items()}
-        self.state["tables"] = jnp.full(
-            (max_batch, self.max_blocks_per_seq), -1, jnp.int32)
+        # Sharded device block-table: worker w owns slots w, w+W, w+2W, …
+        # (one shard array per worker; the monolithic tensor the kernel
+        # consumes is assembled from the shards, never rebuilt from host).
+        self.num_shards = max(1, num_workers)
+        self._shard_slots = [
+            np.arange(w, max_batch, self.num_shards, dtype=np.int64)
+            for w in range(self.num_shards)]
+        # authoritative host copy of the device table (scheduler-slot space)
+        self._host_tables = np.full(
+            (max_batch, self.max_blocks_per_seq), -1, np.int32)
+        # which worker currently serves each batch slot (the engine rebinds
+        # this at admission; defaults to the slot-modulo shard layout) —
+        # scoped refreshes cover the shards of every slot a covered worker
+        # serves, so non-slot routings (e.g. stream affinity) stay sound
+        self._slot_worker = np.arange(max_batch,
+                                      dtype=np.int64) % self.num_shards
+        self._shard_tables = [
+            jnp.full((len(s), self.max_blocks_per_seq), -1, jnp.int32)
+            for s in self._shard_slots]
+        self.state["tables"] = self._assemble_tables()
         self.state["lengths"] = jnp.zeros((max_batch,), jnp.int32)
         self._fence_drains = 0
+        self._full_refreshes = 0        # global fences: every shard re-upload
+        self._shard_refreshes = 0       # scoped fences: masked shards only
+        self._refreshed_entries = 0     # table entries re-uploaded by fences
+        self._refreshed_bytes = 0
+        self._step_upload_entries = 0   # normal-path (non-fence) shard uploads
         # swap "device": evicted block contents round-trip through host
         # memory (the storage behind the page cache; latency is real)
         self._swap_store: dict = {}
@@ -78,13 +116,60 @@ class PagedKVCache:
                 jnp.asarray(rows))
 
     # -------------------------------------------------- measured fence cost
-    def _device_fence(self, reason: str, n_blocks: int) -> None:
-        """Drain in-flight steps + re-upload tables (the shootdown cost)."""
-        jax.block_until_ready(self.state["tables"])
-        tab, _ = self.mgr.tables.packed()
-        self.state["tables"] = jax.device_put(
-            jnp.asarray(tab[:self.max_batch], jnp.int32))
+    def bind_slot_worker(self, slot: int, worker: int) -> None:
+        """Record which worker serves ``slot`` (engine routing update)."""
+        self._slot_worker[slot] = int(worker) % self.num_shards
+
+    def _shards_of(self, workers) -> list[int]:
+        """Worker ids → device-table shard indices to refresh.
+
+        Covers the workers' own shards plus the shard of every batch slot
+        currently bound to a covered worker — under non-slot routing a
+        worker's rows can live outside its modulo shard, and those rows are
+        exactly what its in-flight dispatches captured.
+        """
+        covered = {int(w) % self.num_shards for w in workers}
+        shards = set(covered)
+        bound = np.nonzero(np.isin(self._slot_worker,
+                                   np.asarray(sorted(covered))))[0]
+        shards.update(int(s) % self.num_shards for s in bound)
+        return sorted(shards)
+
+    def _assemble_tables(self) -> jax.Array:
+        """The kernel-facing (max_batch, M) tensor, built from shard arrays."""
+        if self.num_shards == 1:
+            return self._shard_tables[0]
+        tab = jnp.full((self.max_batch, self.max_blocks_per_seq), -1,
+                       jnp.int32)
+        for slots, shard in zip(self._shard_slots, self._shard_tables):
+            tab = tab.at[slots].set(shard)
+        return tab
+
+    def _device_fence(self, reason: str, n_blocks: int,
+                      workers=None) -> None:
+        """Drain in-flight steps + re-upload table shards (shootdown cost).
+
+        A global fence (``workers is None``) re-uploads *every* shard — the
+        paper's broadcast pessimism.  A scoped fence re-uploads only the
+        shards of the workers it covered; everyone else's device copy stays
+        valid (their shard epoch did not move), so refreshed bytes scale
+        with the fence's mask popcount instead of the worker count.
+        """
+        jax.block_until_ready(self.state["tables"])      # the drain
+        shards = (range(self.num_shards) if workers is None
+                  else self._shards_of(workers))
+        for w in shards:
+            rows = self._host_tables[self._shard_slots[w]]
+            self._shard_tables[w] = jax.device_put(
+                jnp.asarray(rows, jnp.int32))
+            self._refreshed_entries += rows.size
+            self._refreshed_bytes += rows.nbytes
+        self.state["tables"] = self._assemble_tables()
         self._fence_drains += 1
+        if workers is None:
+            self._full_refreshes += 1
+        else:
+            self._shard_refreshes += 1
 
     # ---------------------------------------------------------- allocation
     def alloc_sequence(self, n_tokens: int, *, stream: str = "default",
@@ -106,21 +191,40 @@ class PagedKVCache:
         self.mgr.munmap(m.mapping_id, worker=worker)
 
     # ------------------------------------------------------- device tensors
-    def slot_tables(self, mappings: dict[int, Mapping]) -> jax.Array:
-        """Build the (max_batch, M) device table from slot → mapping."""
+    def _host_rows(self, mappings: dict[int, Mapping]) -> np.ndarray:
+        """Host (max_batch, M) table from slot → mapping."""
         tab = np.full((self.max_batch, self.max_blocks_per_seq), -1,
                       np.int32)
         for slot, m in mappings.items():
             n = min(len(m.physical), self.max_blocks_per_seq)
             tab[slot, :n] = [b if b >= 0 else -1 for b in m.physical[:n]]
-        return jnp.asarray(tab)
+        return tab
+
+    def slot_tables(self, mappings: dict[int, Mapping]) -> jax.Array:
+        """A standalone (max_batch, M) device table (prefill temp views)."""
+        return jnp.asarray(self._host_rows(mappings))
 
     def update_tables(self, mappings: dict[int, Mapping],
                       lengths: np.ndarray) -> None:
-        self.state["tables"] = self.slot_tables(mappings)
+        """Per-step table update: upload only the shards whose rows changed,
+        then assemble the kernel tensor from the shard arrays."""
+        host = self._host_rows(mappings)
+        for w, slots in enumerate(self._shard_slots):
+            rows = host[slots]
+            if not np.array_equal(rows, self._host_tables[slots]):
+                self._shard_tables[w] = jnp.asarray(rows)
+                self._step_upload_entries += rows.size
+        self._host_tables = host
+        self.state["tables"] = self._assemble_tables()
         self.state["lengths"] = jnp.asarray(lengths, jnp.int32)
 
     def counters(self) -> dict:
         d = self.mgr.counters()
         d["device_fence_drains"] = self._fence_drains
+        d["device_table_shards"] = self.num_shards
+        d["device_full_refreshes"] = self._full_refreshes
+        d["device_shard_refreshes"] = self._shard_refreshes
+        d["device_refreshed_entries"] = self._refreshed_entries
+        d["device_refreshed_bytes"] = self._refreshed_bytes
+        d["device_step_upload_entries"] = self._step_upload_entries
         return d

@@ -50,6 +50,12 @@ class SimConfig:
                                       # TLB refill tail; calibrated to the
                                       # paper's ~21% compute loss shape)
     storage_latency: float = 0.0      # extra µs per map (device latency)
+    shard_table_bytes: int = 64 << 10  # device block-table bytes per worker
+                                       # shard (re-uploaded when a fence
+                                       # covers that worker)
+    refresh_bw: float = 40e3          # shard re-upload bandwidth, bytes per
+                                      # virtual µs (PCIe/ICI-ish ratio vs
+                                      # the 25 µs fence base cost)
     seed: int = 0
 
 
@@ -64,6 +70,8 @@ class SimResult:
     compute_time: float = 0.0
     stall_time: float = 0.0
     evictions: int = 0
+    device_refreshed_bytes: int = 0   # Σ shard bytes re-uploaded by fences
+    refresh_time: float = 0.0         # virtual µs spent re-uploading shards
 
     def throughput(self) -> float:
         t = max(self.io_time, 1e-9)
@@ -114,12 +122,20 @@ class FenceImpactSim:
             # worker; a scoped fence only its mask's popcount —
             # that difference is exactly the paper's observation that the
             # OS stalls cores that never cached the translation.
+            # On top of the wait, each covered worker's device block-table
+            # shard must be re-uploaded (shard_table_bytes / refresh_bw per
+            # shard) — the per-shard device-refresh cost of the fence.
             absorbed = c.in_kernel_frac
             per_worker = c.recv_stall * (1.0 - absorbed)
             res.stall_time += per_worker * covered
+            refreshed = covered * c.shard_table_bytes
+            res.device_refreshed_bytes += refreshed
+            refresh = refreshed / c.refresh_bw
+            res.refresh_time += refresh
             import math
             return (c.fence_cost
-                    * (1 + 0.15 * math.log2(max(2, covered))))
+                    * (1 + 0.15 * math.log2(max(2, covered)))
+                    + refresh)
 
         fences_before = self.fences.stats.fences
 
@@ -207,6 +223,11 @@ def eviction_sim(cfg: SimConfig, *, working_set_factor: float = 10.0,
                 stall += cfg.recv_stall * (n_threads - 1) * fences_recv
                 # TLB refill for the PG buffer after each flush
                 stall += pg_buffer * 0.05 * fences_recv
+                # single-worker sim: every fence re-uploads one table shard
+                refreshed = fences_recv * cfg.shard_table_bytes
+                res.device_refreshed_bytes += refreshed
+                res.refresh_time += refreshed / cfg.refresh_bw
+                stall += refreshed / cfg.refresh_bw
                 cost += stall
                 res.stall_time += stall
             res.io_time += cost

@@ -8,6 +8,7 @@ global epoch moves only on global fences — so elision stays sound.
 
 import numpy as np
 import pytest
+from _hypothesis_compat import given, settings, st
 
 from repro.core import ContextScope, FprMemoryManager, derive_context
 from repro.core.allocator import BlockAllocator, OutOfBlocksError
@@ -278,6 +279,124 @@ class TestWorkerMaskTracking:
         assert (tr.worker_masks(arr) == worker_bit(2)).all()
         tr.set_worker_masks(arr, 0)
         assert (tr.worker_masks(arr) == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Property-based soundness: random alloc/free/touch/fence traces across
+# 2–8 workers.  Two checks per trace:
+#
+#   SOUNDNESS    — whenever a block is handed to a *foreign* context, every
+#                  worker that held a translation since its free must have
+#                  received a covering fence after the free: no worker ever
+#                  reads a block version newer than its last covering fence.
+#   DIFFERENTIAL — the scoped path and the always-global path make the same
+#                  observable reads (physical placements, touch results,
+#                  OOM points): scoping moves *when* fences happen, never
+#                  what the tables say.
+# ---------------------------------------------------------------------------
+
+_TRACE_OPS = st.lists(
+    st.tuples(st.sampled_from(["map", "unmap", "touch", "gfence", "sfence"]),
+              st.integers(0, 2),          # ctx / live-mapping pick
+              st.integers(1, 4),          # mapping size / touch index
+              st.integers(0, 7)),         # worker (mod num_workers)
+    min_size=4, max_size=60)
+
+
+def _drive_trace(trace, workers, *, scoped, check_soundness):
+    eng = FenceEngine(measure=False, num_workers=workers)
+    mgr = FprMemoryManager(48, num_workers=workers, fence_engine=eng,
+                           fpr_enabled=True, scoped_fences=scoped,
+                           max_order=5)
+    live: list = []
+    holders: dict[int, set] = {}    # block → workers holding a translation
+    freed: dict[int, tuple] = {}    # block → (ctx, version, holders@free)
+    reads: list = []
+    for op, sel, size, w in trace:
+        w %= workers
+        if op == "map":
+            c = ctx(sel + 1)
+            try:
+                m = mgr.mmap(size, c, worker=w)
+            except Exception:
+                reads.append(("oom",))
+                continue
+            if check_soundness:
+                for b in m.physical:
+                    fctx, fver, fholders = freed.pop(b, (None, None, set()))
+                    if fctx is not None and fctx != c.ctx_id:
+                        for hw in fholders:
+                            assert int(eng.worker_epochs[hw]) > fver, (
+                                f"worker {hw} reads block {b} (freed at "
+                                f"v{fver}) without a covering fence "
+                                f"(epoch {int(eng.worker_epochs[hw])})")
+                        holders[b] = {w}   # staleness covered: fresh start
+                    else:
+                        holders.setdefault(b, set()).add(w)   # may stay stale
+            live.append(m)
+            reads.append(("map", tuple(m.physical)))
+        elif op == "unmap":
+            if not live:
+                continue
+            m = live.pop(sel % len(live))
+            if check_soundness:
+                for b in m.physical:
+                    freed[b] = (m.ctx_id, eng.seq,
+                                frozenset(holders.get(b, set())))
+            mgr.munmap(m.mapping_id, worker=w)
+            reads.append(("unmap", m.mapping_id))
+        elif op == "touch":
+            if not live:
+                continue
+            m = live[sel % len(live)]
+            idx = size % m.num_blocks
+            b, faulted = mgr.touch(m.mapping_id, idx, worker=w)
+            if check_soundness:
+                holders.setdefault(b, set()).add(w)
+            reads.append(("touch", b, faulted))
+        elif op == "gfence":
+            eng.fence("external")
+            reads.append(("gfence",))
+        elif op == "sfence":
+            mask = int(worker_bit(w)) | int(worker_bit(sel % workers))
+            eng.fence_scoped("external", worker_mask=mask)
+            reads.append(("sfence",))
+    return reads
+
+
+def _check_trace(trace, workers):
+    scoped_reads = _drive_trace(trace, workers, scoped=True,
+                                check_soundness=True)
+    global_reads = _drive_trace(trace, workers, scoped=False,
+                                check_soundness=True)
+    assert scoped_reads == global_reads
+
+
+class TestScopedSoundnessProperty:
+    @given(trace=_TRACE_OPS, workers=st.integers(2, 4))
+    @settings(max_examples=50, deadline=None)
+    def test_soundness_and_differential(self, trace, workers):
+        _check_trace(trace, workers)
+
+    @pytest.mark.slow
+    @given(trace=_TRACE_OPS, workers=st.integers(2, 8))
+    @settings(max_examples=200, deadline=None)
+    def test_soundness_and_differential_8worker_sweep(self, trace, workers):
+        """The heavy sweep (up to 8 workers, more examples) — nightly lane."""
+        _check_trace(trace, workers)
+
+    def test_soundness_and_differential_seeded(self):
+        """Deterministic seeded sweep — runs even without the [test] extra
+        (hypothesis), so the fast lane always exercises the invariant."""
+        import random
+        ops = ["map", "map", "map", "unmap", "touch", "gfence", "sfence"]
+        rng = random.Random(1234)
+        for workers in (2, 4):
+            for _ in range(8):
+                trace = [(rng.choice(ops), rng.randrange(3),
+                          rng.randrange(1, 5), rng.randrange(8))
+                         for _ in range(30)]
+                _check_trace(trace, workers)
 
 
 def test_scoped_trace_models_cheaper_than_global():

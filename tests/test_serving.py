@@ -12,13 +12,16 @@ from repro.models.config import ModelConfig
 from repro.models.layers import rms_norm, unembed
 from repro.serving.engine import Engine
 
-# heavy lane: excluded from the fast CI default (`-m "not slow"`)
-pytestmark = pytest.mark.slow
-
+# Heavy tests are @pytest.mark.slow individually (nightly lane); the
+# multi-worker sharded-table regression below uses a 1-layer config and
+# stays in the fast push lane.
 
 CFG = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
                   n_kv_heads=2, d_ff=128, vocab=128, head_dim=16)
 PARAMS = tfm.init_params(jax.random.PRNGKey(0), CFG, jnp.float32)
+
+TINY = ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
+                   n_kv_heads=1, d_ff=64, vocab=64, head_dim=16)
 
 
 def _run_engine(fpr, prompts, **kw):
@@ -32,6 +35,7 @@ def _run_engine(fpr, prompts, **kw):
     return eng, toks
 
 
+@pytest.mark.slow
 def test_fpr_identical_tokens_and_zero_fences():
     rng = np.random.RandomState(0)
     prompts = [rng.randint(1, CFG.vocab, size=rng.randint(4, 50))
@@ -46,6 +50,7 @@ def test_fpr_identical_tokens_and_zero_fences():
     assert s1["fpr"]["recycled_hits"] > 0
 
 
+@pytest.mark.slow
 def test_scoped_multiworker_identical_tokens():
     """Scoped fences with per-slot workers never change what the tables
     say — a 4-worker engine decodes exactly the single-worker tokens."""
@@ -60,6 +65,7 @@ def test_scoped_multiworker_identical_tokens():
     assert len(s["worker_epochs"]) == 4
 
 
+@pytest.mark.slow
 def test_prefill_decode_match_full_forward():
     B, S = 2, 20
     toks = (jnp.arange(B * S).reshape(B, S) * 7 % CFG.vocab).astype(
@@ -79,6 +85,7 @@ def test_prefill_decode_match_full_forward():
                                    atol=3e-4)
 
 
+@pytest.mark.slow
 def test_eviction_swap_preserves_tokens():
     """Evicting a hot block mid-generation must not change tokens — the
     swapped block's contents round-trip through host memory and the
@@ -110,6 +117,48 @@ def test_eviction_swap_preserves_tokens():
     assert c["fpr"]["swap_ins"] >= 2
 
 
+def test_sharded_multiworker_regression():
+    """Sharded device tables never change decoding, only refresh traffic.
+
+    The same multi-stream trace (3 recycling contexts over a tight pool,
+    so completions recycle blocks across contexts and fences really fire)
+    decodes identical tokens with 1 and 4 workers, and on the 4-worker
+    engine the sharded path spares replicas and refreshes strictly fewer
+    device-table entries than the full-table (global-fence) path.
+    """
+    params = tfm.init_params(jax.random.PRNGKey(1), TINY, jnp.float32)
+    rng = np.random.RandomState(11)
+    reqs = [(rng.randint(1, TINY.vocab, size=rng.randint(4, 40)),
+             f"s{i % 3}", (i % 3) + 1, 4 + (i % 3)) for i in range(8)]
+
+    def drive(workers, scoped, routing="slot"):
+        eng = Engine(TINY, params, num_blocks=6, max_batch=4,
+                     max_seq_len=256, fpr_enabled=True,
+                     num_workers=workers, scoped_fences=scoped,
+                     worker_routing=routing)
+        for prompt, stream, gid, mnt in reqs:
+            eng.submit(prompt, max_new_tokens=mnt, stream=stream,
+                       group_id=gid)
+        eng.run()
+        return eng.stats(), [r.generated for r in sorted(
+            eng.sched.done, key=lambda r: r.rid)]
+
+    s_sharded, t_sharded = drive(4, True)
+    s_global, t_global = drive(4, False)
+    _, t_single = drive(1, True)
+    s_stream, t_stream = drive(4, True, routing="stream")
+    assert t_sharded == t_single == t_global == t_stream   # bit-identical
+    assert s_stream["device_shard_refreshes"] > 0          # still scoped
+    assert s_global["fence"]["fences"] > 0        # the trace does fence
+    assert s_sharded["fence"]["replicas_spared"] > 0
+    assert s_sharded["device_shard_refreshes"] > 0
+    assert s_global["device_shard_refreshes"] == 0
+    assert (s_sharded["device_refreshed_entries"]
+            < s_global["device_refreshed_entries"])
+    assert len(s_sharded["table_shard_epochs"]) == 4
+
+
+@pytest.mark.slow
 def test_page_impl_pallas_matches_ref():
     rng = np.random.RandomState(1)
     toks = jnp.asarray(rng.randint(1, CFG.vocab, size=(2, 16)), jnp.int32)

@@ -1,0 +1,263 @@
+"""Sharded device block-tables + per-worker fence refresh.
+
+Fast-lane unit tests for the device-side scoping layer: each worker owns a
+block-table shard (slot % num_workers), a scoped fence refreshes only the
+shards in its worker mask, and the kernel-facing tensor is assembled from
+the shard arrays.  Also the ABA regression: a physical block recycled to a
+*different* stream/worker must see a covering fence before first use.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ContextScope, FprMemoryManager, derive_context
+from repro.core.block_table import BlockTableStore, StaleMappingError
+from repro.core.shootdown import FenceEngine
+from repro.core.tracking import worker_bit
+
+
+def ctx(gid):
+    return derive_context(ContextScope.PER_GROUP, group_id=gid)
+
+
+def make_mgr(n=256, workers=4, scoped=True, **kw):
+    eng = FenceEngine(measure=False)
+    return FprMemoryManager(n, num_workers=workers, fence_engine=eng,
+                            fpr_enabled=True, scoped_fences=scoped,
+                            max_order=7, **kw)
+
+
+class TestShardedBlockTableStore:
+    def test_slot_placement_prefers_worker_shard(self):
+        s = BlockTableStore(8, 4, num_shards=4)
+        for w in range(4):
+            m = s.create_mapping([w], worker=w)
+            assert s.shard_of_mapping(m.mapping_id) == w
+        assert s.shard_overflows == 0
+
+    def test_slot_overflow_falls_back_across_shards(self):
+        s = BlockTableStore(4, 2, num_shards=4)   # one slot per shard
+        a = s.create_mapping([1], worker=0)
+        b = s.create_mapping([2], worker=0)       # shard 0 full → overflow
+        assert s.shard_of_mapping(a.mapping_id) == 0
+        assert s.shard_of_mapping(b.mapping_id) != 0
+        assert s.shard_overflows == 1
+
+    def test_destroyed_slot_returns_to_its_shard(self):
+        s = BlockTableStore(4, 2, num_shards=2)
+        m = s.create_mapping([1], worker=1)
+        sh = s.shard_of_mapping(m.mapping_id)
+        s.destroy_mapping(m.mapping_id)
+        m2 = s.create_mapping([2], worker=1)
+        assert s.shard_of_mapping(m2.mapping_id) == sh
+        assert s.shard_overflows == 0
+
+    def test_scoped_bump_moves_only_named_shard_epochs(self):
+        s = BlockTableStore(8, 2, num_shards=4)
+        s.bump_epoch(shards=[1, 3])
+        assert list(s.shard_epochs) == [1, 2, 1, 2]
+        s.bump_epoch()                            # global: every shard
+        assert list(s.shard_epochs) == [3, 3, 3, 3]
+
+    def test_lookup_stale_only_for_covered_shard(self):
+        s = BlockTableStore(8, 2, num_shards=2)
+        m0 = s.create_mapping([5], worker=0)
+        m1 = s.create_mapping([6], worker=1)
+        held = s.epoch                            # reader snapshots epoch 1
+        s.bump_epoch(shards=[0])                  # fence covering worker 0
+        with pytest.raises(StaleMappingError):
+            s.lookup(m0.mapping_id, m0.logical_start, table_epoch=held)
+        # shard 1 was never covered — the reader's copy is still valid
+        assert s.lookup(m1.mapping_id, m1.logical_start,
+                        table_epoch=held) == 6
+
+    def test_overflow_row_invalidated_by_owner_worker_fence(self):
+        """A worker's mapping that overflowed into a foreign shard must
+        still be invalidated by a scoped fence covering that worker."""
+        s = BlockTableStore(2, 2, num_shards=2)
+        s.create_mapping([1], worker=0)
+        m_over = s.create_mapping([2], worker=0)     # shard 0 full → shard 1
+        assert s.shard_of_mapping(m_over.mapping_id) == 1
+        held = s.epoch
+        s.bump_epoch(shards=[0])                     # fence covering worker 0
+        with pytest.raises(StaleMappingError):
+            s.lookup(m_over.mapping_id, m_over.logical_start,
+                     table_epoch=held)
+
+    def test_overflow_record_survives_destroy_until_covering_fence(self):
+        s = BlockTableStore(2, 2, num_shards=2)
+        s.create_mapping([1], worker=0)
+        m_over = s.create_mapping([2], worker=0)
+        s.destroy_mapping(m_over.mapping_id)         # stale copy may linger
+        m1 = s.create_mapping([3], worker=1)         # lands in shard 1
+        held = s.epoch
+        s.bump_epoch(shards=[0])                     # must still hit shard 1
+        with pytest.raises(StaleMappingError):
+            s.lookup(m1.mapping_id, m1.logical_start, table_epoch=held)
+        # record now dropped: the next worker-0 fence is shard-0 only
+        held2 = s.epoch
+        s.bump_epoch(shards=[0])
+        assert s.lookup(m1.mapping_id, m1.logical_start,
+                        table_epoch=held2) == 3
+
+    def test_packed_shard_view_and_epoch(self):
+        s = BlockTableStore(4, 2, num_shards=2)
+        m = s.create_mapping([7, 8], worker=1)
+        rows, ep = s.packed(shard=1)
+        assert rows.shape == (2, 2)
+        assert 7 in rows and 8 in rows
+        s.bump_epoch(shards=[1])
+        _, ep2 = s.packed(shard=1)
+        assert ep2 > ep
+        full, _ = s.packed()
+        assert full.shape == (4, 2)
+
+    def test_single_shard_matches_legacy_epoch_semantics(self):
+        s = BlockTableStore(4, 2)                 # num_shards=1 default
+        m = s.create_mapping([1])
+        held = s.epoch
+        s.bump_epoch(shards=[0])                  # even "scoped" covers all
+        with pytest.raises(StaleMappingError):
+            s.lookup(m.mapping_id, m.logical_start, table_epoch=held)
+
+
+@pytest.fixture(scope="module")
+def tiny_cache():
+    """A 4-worker PagedKVCache over a tiny model (no forward passes)."""
+    jax = pytest.importorskip("jax")
+    del jax
+    from repro.models.config import ModelConfig
+    from repro.serving.kv_cache import PagedKVCache
+    cfg = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=2,
+                      n_kv_heads=1, d_ff=64, vocab=64, head_dim=16)
+
+    def make(num_workers=4, scoped=True):
+        return PagedKVCache(cfg, num_blocks=16, max_batch=4,
+                            max_seq_len=256, num_workers=num_workers,
+                            scoped_fences=scoped)
+    return make
+
+
+class TestShardedDeviceFence:
+    def test_scoped_fence_refreshes_only_masked_shards(self, tiny_cache):
+        cache = tiny_cache()
+        m = cache.alloc_sequence(128, group_id=1, worker=0)
+        cache.free_sequence(m, worker=0)          # FPR skip: no fence
+        assert cache._fence_drains == 0
+        cache.alloc_sequence(128, group_id=2, worker=0)   # context exit
+        c = cache.counters()
+        assert c["fence"]["fences_scoped"] == 1
+        assert c["device_shard_refreshes"] == 1
+        assert c["device_full_refreshes"] == 0
+        # exactly one worker's shard: 1 of 4 batch rows × M entries
+        shard_entries = len(cache._shard_slots[0]) * cache.max_blocks_per_seq
+        assert c["device_refreshed_entries"] == shard_entries
+        assert c["device_refreshed_bytes"] == shard_entries * 4
+
+    def test_global_fence_refreshes_every_shard(self, tiny_cache):
+        cache = tiny_cache()
+        cache.fences.fence("external")
+        c = cache.counters()
+        assert c["device_full_refreshes"] == 1
+        assert (c["device_refreshed_entries"]
+                == cache.max_batch * cache.max_blocks_per_seq)
+
+    def test_unscoped_cache_always_full_refresh(self, tiny_cache):
+        cache = tiny_cache(scoped=False)
+        m = cache.alloc_sequence(128, group_id=1, worker=0)
+        cache.free_sequence(m, worker=0)
+        cache.alloc_sequence(128, group_id=2, worker=0)
+        c = cache.counters()
+        assert c["device_shard_refreshes"] == 0
+        assert c["device_full_refreshes"] == 1
+
+    def test_bound_slot_refresh_covers_foreign_shard(self, tiny_cache):
+        """Stream routing: a slot served by a worker outside its modulo
+        shard must have its shard refreshed by that worker's fence."""
+        cache = tiny_cache()
+        cache.bind_slot_worker(1, 3)      # slot 1 (shard 1) ← worker 3
+        assert cache._shards_of([3]) == [1, 3]
+        cache.fences.fence_scoped("x", worker_mask=int(worker_bit(3)))
+        c = cache.counters()
+        shard_entries = (len(cache._shard_slots[1])
+                         + len(cache._shard_slots[3])
+                         ) * cache.max_blocks_per_seq
+        assert c["device_refreshed_entries"] == shard_entries
+
+    def test_assembled_tensor_matches_monolithic_reference(self, tiny_cache):
+        cache = tiny_cache()
+        maps = {s: cache.alloc_sequence(128, group_id=1, worker=s % 4)
+                for s in range(4)}
+        lengths = np.asarray([10, 20, 30, 40], np.int32)
+        cache.update_tables(maps, lengths)
+        ref = np.full((cache.max_batch, cache.max_blocks_per_seq), -1,
+                      np.int32)
+        for s, m in maps.items():
+            ref[s, :len(m.physical)] = m.physical
+        np.testing.assert_array_equal(np.asarray(cache.state["tables"]), ref)
+        np.testing.assert_array_equal(np.asarray(cache.state["lengths"]),
+                                      lengths)
+
+    def test_update_tables_uploads_only_changed_shards(self, tiny_cache):
+        cache = tiny_cache()
+        maps = {s: cache.alloc_sequence(128, group_id=1, worker=s % 4)
+                for s in range(4)}
+        lengths = np.zeros(4, np.int32)
+        cache.update_tables(maps, lengths)
+        before = cache._step_upload_entries
+        cache.update_tables(maps, lengths)        # nothing changed
+        assert cache._step_upload_entries == before
+        maps[2] = cache.alloc_sequence(128, group_id=1, worker=2)
+        cache.update_tables(maps, lengths)        # only shard 2's row moved
+        per_shard = (len(cache._shard_slots[2])
+                     * cache.max_blocks_per_seq)
+        assert cache._step_upload_entries == before + per_shard
+
+
+class TestAbaRecycleRegression:
+    def test_recycle_to_other_worker_fences_before_first_use(self):
+        """Exit-from-recycling-cycle rule: the same physical block handed
+        to a different stream *and* worker must be fenced before use."""
+        m = make_mgr(n=8, workers=2)
+        mp = m.mmap(8, ctx(1), worker=0)          # whole pool on worker 0
+        old_phys = set(mp.physical)
+        old_mid, old_lid = mp.mapping_id, mp.logical_start
+        m.munmap(mp.mapping_id, worker=0)         # FPR skip — w0 stale
+        assert m.fences.stats.fences == 0
+        mp2 = m.mmap(8, ctx(2), worker=1)         # same blocks, new ctx+worker
+        assert set(mp2.physical) == old_phys      # really recycled
+        st = m.fences.stats
+        # the fence fired inside mmap, i.e. before any use of the blocks
+        assert st.fences == 1
+        assert st.fences_by_reason["context_exit"] == 1
+        # it covered the stale holder (worker 0), and w0's epoch now
+        # postdates the free — the block version is no longer newer than
+        # worker 0's last covering fence
+        assert int(m.fences.worker_epochs[0]) > 1
+        # ABA: the old mapping's logical ids are dead, never aliased
+        with pytest.raises(StaleMappingError):
+            m.tables.lookup(old_mid, old_lid)
+
+    def test_evict_recycle_realloc_covered_before_first_use(self):
+        """Evict → recycle → realloc to a different stream/worker: the
+        eviction fence must cover the holder, so the realloc elides — and
+        the elision is *justified* (holder epoch > free-time version)."""
+        m = make_mgr(n=16, workers=2, max_blocks_per_seq=128)
+        big = m.mmap_sparse(16, ctx(1), worker=0)
+        for i in range(16):
+            m.touch(big.mapping_id, i, worker=0)
+        phys = [b for b in big.physical if b >= 0]
+        n = m.evict([(big.mapping_id, i) for i in range(16)],
+                    fpr_batch=True, worker=0)
+        assert n == 16
+        assert m.fences.stats.fences == 1         # the batched evict fence
+        arr = np.asarray(phys, dtype=np.int64)
+        vers = m.tracker.versions(arr)
+        # soundness of the later elision: worker 0 (the only holder) was
+        # fenced after the versions were stamped
+        assert (vers < np.uint64(m.fences.worker_epochs[0])).all()
+        mp2 = m.mmap(8, ctx(2), worker=1)         # realloc, foreign ctx
+        assert set(mp2.physical) <= set(phys)     # same physical blocks
+        st = m.fences.stats
+        assert st.fences == 1                     # no second fence needed
+        assert st.elided_by_scope + st.elided_by_version >= 8

@@ -95,9 +95,16 @@ class BlockTableStore:
         self.stale_lookups_detected = 0
         self.shard_overflows = 0       # slot taken outside the worker's shard
         self.worker_of_mapping: dict[int, int] = {}
-        # (worker, foreign shard) → live overflowed rows: a fence covering
-        # the worker must also invalidate these shards (see bump_epoch)
-        self._overflow_rows: dict[tuple[int, int], int] = {}
+        # Slot-overflow bookkeeping for scoped fences (see bump_epoch):
+        #   _overflow_live[(worker, foreign shard)] — count of *live*
+        #     overflowed mappings.  While any exist, EVERY fence covering
+        #     the worker must also invalidate the foreign shard: the
+        #     worker's dispatches keep capturing translations from it.
+        #   _overflow_dead — (worker, foreign shard) residue of destroyed
+        #     overflowed mappings: a stale device copy of the dead row may
+        #     linger until ONE covering fence bumps the shard.
+        self._overflow_live: dict[tuple[int, int], int] = {}
+        self._overflow_dead: set[tuple[int, int]] = set()
 
     # ---------------------------------------------------------------- shards
     def shard_of_slot(self, slot: int) -> int:
@@ -147,8 +154,8 @@ class BlockTableStore:
         self.worker_of_mapping[mid] = w
         sh = self.shard_of_slot(slot)
         if sh != w:
-            self._overflow_rows[(w, sh)] = (
-                self._overflow_rows.get((w, sh), 0) + 1)
+            self._overflow_live[(w, sh)] = (
+                self._overflow_live.get((w, sh), 0) + 1)
         row = self.table[slot]
         row[:] = -1
         row[:len(physical)] = physical
@@ -169,13 +176,20 @@ class BlockTableStore:
         """munmap analogue: returns the physical blocks for the allocator."""
         m = self.mappings.pop(mapping_id)
         slot = self.slot_of.pop(mapping_id)
-        self.worker_of_mapping.pop(mapping_id, None)
-        # An overflow record (worker → foreign shard) deliberately survives
-        # the mapping: a stale device copy of the row exists until a fence
-        # covering the worker bumps that shard, at which point bump_epoch
-        # drops the record.
+        w = self.worker_of_mapping.pop(mapping_id, None)
+        sh = self.shard_of_slot(slot)
+        if w is not None and sh != w:
+            # The live overflow record retires into dead residue: a stale
+            # device copy of the row exists until a fence covering the
+            # worker bumps the shard, at which point bump_epoch drops it.
+            n = self._overflow_live.get((w, sh), 0) - 1
+            if n > 0:
+                self._overflow_live[(w, sh)] = n
+            else:
+                self._overflow_live.pop((w, sh), None)
+            self._overflow_dead.add((w, sh))
         self.table[slot, :] = -1
-        self._free_slots[self.shard_of_slot(slot)].append(slot)
+        self._free_slots[sh].append(slot)
         return m.physical
 
     # ------------------------------------------------------------------ lookup
@@ -217,16 +231,29 @@ class BlockTableStore:
         self.epoch += 1
         if shards is None:
             self.shard_epochs[:] = self.epoch
-            self._overflow_rows.clear()
+            # Dead residue is flushed; live records must survive — the
+            # mappings still sit in foreign shards, and every LATER fence
+            # covering their worker has to invalidate those shards again.
+            self._overflow_dead.clear()
         else:
             covered = {int(s) % self.num_shards for s in np.atleast_1d(shards)}
             # A covered worker's rows may live in foreign shards (slot
             # overflow) — those shards hold translations the worker's
             # dispatches captured, so the fence must invalidate them too.
-            extra = {sh for (w, sh) in self._overflow_rows if w in covered}
-            for key in [k for k in self._overflow_rows if k[0] in covered]:
-                del self._overflow_rows[key]
-            idx = np.asarray(sorted(covered | extra), dtype=np.int64)
+            # Live records are kept: as long as the overflowed mapping is
+            # alive, a copy of its shard taken after this fence can go
+            # stale again, so the NEXT covering fence must hit the shard
+            # as well.  Only dead residue is one-shot.
+            extra = {sh for (w, sh) in self._overflow_live if w in covered}
+            extra |= {sh for (w, sh) in self._overflow_dead if w in covered}
+            bumped = covered | extra
+            # Residue is extinguished by ANY bump of its shard: the dead
+            # row was cleared at destroy time, so copies taken after this
+            # bump hold nothing stale, and copies from before it now fail
+            # the epoch check.
+            self._overflow_dead = {k for k in self._overflow_dead
+                                   if k[1] not in bumped}
+            idx = np.asarray(sorted(bumped), dtype=np.int64)
             self.shard_epochs[idx] = self.epoch
         return self.epoch
 

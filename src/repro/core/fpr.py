@@ -24,6 +24,7 @@ microbenchmarks both drive it through the same mmap/munmap/touch/evict API.
 
 from __future__ import annotations
 
+import inspect
 from dataclasses import dataclass
 
 import numpy as np
@@ -36,6 +37,30 @@ from repro.core.tracking import FLAG_ALWAYS_FLUSH, BlockTracker, worker_bit
 
 SWAPPED = -2          # block-table marker: resident → swapped out
 NOT_RESIDENT = -1     # never faulted in
+
+
+def _fence_callback_style(fn) -> str:
+    """How to hand ``fn`` the covered-worker set of ``on_fence``.
+
+    Returns ``"pos"`` (third positional argument), ``"kw"`` (keyword-only
+    ``workers`` or ``**kwargs``), or ``"legacy"`` for the pre-sharding
+    two-argument ``(reason, n)`` signature that externally supplied
+    engines may still use.
+    """
+    try:
+        params = list(inspect.signature(fn).parameters.values())
+    except (TypeError, ValueError):
+        return "pos"                      # unintrospectable: assume current
+    if any(p.kind == p.VAR_POSITIONAL for p in params):
+        return "pos"
+    positional = [p for p in params
+                  if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
+    if len(positional) >= 3:
+        return "pos"
+    if any((p.kind == p.KEYWORD_ONLY and p.name == "workers")
+           or p.kind == p.VAR_KEYWORD for p in params):
+        return "kw"
+    return "legacy"
 
 
 @dataclass
@@ -78,10 +103,15 @@ class FprMemoryManager:
         # scoped fence names its covered workers → only those table shards
         # are invalidated/refreshed; a global fence (workers=None) hits all.
         inner = self.fences.on_fence
+        style = None if inner is None else _fence_callback_style(inner)
         def _on_fence(reason: str, n: int, workers=None) -> None:
             self.tables.bump_epoch(shards=workers)
-            if inner is not None:
+            if style == "pos":
                 inner(reason, n, workers)
+            elif style == "kw":
+                inner(reason, n, workers=workers)
+            elif style == "legacy":       # pre-sharding (reason, n) callback
+                inner(reason, n)
         self.fences.on_fence = _on_fence
         self.fences.measure = True
         self.fpr_enabled = fpr_enabled

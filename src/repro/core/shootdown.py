@@ -58,7 +58,9 @@ workers' shards plus the shards of every slot bound to a covered worker;
 a global fence falls back to re-uploading every shard.  (Host-side,
 ``BlockTableStore`` applies the same rule to slot-overflow rows: a scoped
 ``bump_epoch`` also invalidates foreign shards holding a covered worker's
-rows.)
+rows — on *every* covering fence while the overflowed mapping is live,
+since new shard copies taken between fences can go stale again, and once
+more after the mapping is destroyed to flush the dead row's residue.)
 
 *What a shard refresh covers:* every table row a covered worker's in-flight
 dispatches could have captured, because rows are read per slot and every

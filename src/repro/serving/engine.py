@@ -61,6 +61,10 @@ class Engine:
         self.steps = 0
         self.tokens_generated = 0
         self.wall_s = 0.0
+        # steps where the demand pager hit its pass bound with faults
+        # still outstanding (over-committed pool): decoding proceeded
+        # with non-resident rows squashed to -1 — tokens are suspect.
+        self.demand_pager_gave_up = 0
 
         self._decode = jax.jit(
             lambda p, st, t: tfm.decode_step(p, cfg, st, t,
@@ -83,6 +87,11 @@ class Engine:
             is_fpr = m.ctx_id != 0
             for idx in range(m.num_blocks - 1):      # never the active block
                 yield m.mapping_id, idx, is_fpr
+
+    def _used_blocks(self, r: Request) -> int:
+        """Blocks of ``r``'s window the next decode step will read."""
+        return min(-(-r.length // self.cache.block_size),
+                   r.mapping.num_blocks)
 
     def _worker_of(self, r: Request) -> int:
         """Request → worker (one 'core' per engine worker).
@@ -161,20 +170,38 @@ class Engine:
 
         # demand paging: fault back any swapped-out block the step will
         # read (the paper's page-cache read path; triggers swap-in +
-        # possibly more eviction)
-        for slot, r in list(self.sched.running.items()):
-            m = r.mapping
-            used = -(-r.length // self.cache.block_size)
-            for idx in range(min(used, m.num_blocks)):
-                if m.physical[idx] < 0:
-                    while True:
-                        try:
-                            self.cache.mgr.touch(m.mapping_id, idx,
-                                                 worker=self._worker_of(r))
-                            break
-                        except Exception:
-                            if not self.evictor.maybe_evict():
-                                raise
+        # possibly more eviction).  The daemon is window-blind, so a fault
+        # for one slot can evict an already-faulted block of an *earlier*
+        # slot in the same pass — scan to a fixpoint (a pass that faults
+        # nothing leaves every running window resident) so no SWAPPED row
+        # ever reaches the decode tables.  An over-committed pool (running
+        # windows simply don't fit) has no fixpoint; the pass bound keeps
+        # the step from spinning, and giving up is counted
+        # (demand_pager_gave_up) so divergent tokens are detectable.
+        faulted = False
+        for _ in range(1 + len(self.sched.running)):
+            faulted = False
+            for slot, r in list(self.sched.running.items()):
+                m = r.mapping
+                for idx in range(self._used_blocks(r)):
+                    if m.physical[idx] < 0:
+                        faulted = True
+                        while True:
+                            try:
+                                self.cache.mgr.touch(
+                                    m.mapping_id, idx,
+                                    worker=self._worker_of(r))
+                                break
+                            except Exception:
+                                if not self.evictor.maybe_evict():
+                                    raise
+            if not faulted:
+                break
+        if faulted and any(
+                r.mapping.physical[idx] < 0
+                for r in self.sched.running.values()
+                for idx in range(self._used_blocks(r))):
+            self.demand_pager_gave_up += 1
 
         # the incoming token is the last *known* token; it is (re)written at
         # its own position r.length−1 (idempotent for the prompt tail) and
@@ -219,6 +246,7 @@ class Engine:
         c = self.cache.counters()
         c.update({
             "steps": self.steps,
+            "demand_pager_gave_up": self.demand_pager_gave_up,
             "tokens": self.tokens_generated,
             "wall_s": round(self.wall_s, 4),
             "tokens_per_s": round(

@@ -74,9 +74,15 @@ class PagedKVCache:
         self._shard_slots = [
             np.arange(w, max_batch, self.num_shards, dtype=np.int64)
             for w in range(self.num_shards)]
-        # authoritative host copy of the device table (scheduler-slot space)
+        # mirror of the last-uploaded device table (scheduler-slot space) —
+        # what the device currently holds, used to diff per-step uploads
         self._host_tables = np.full(
             (max_batch, self.max_blocks_per_seq), -1, np.int32)
+        # last known slot → mapping binding (refreshed by update_tables);
+        # the fence path re-derives authoritative rows from the *live*
+        # mapping state, so a mid-step fence uploads post-fence tables
+        # rather than re-broadcasting the previous step's rows
+        self._slot_mappings: dict[int, Mapping] = {}
         # which worker currently serves each batch slot (the engine rebinds
         # this at admission; defaults to the slot-modulo shard layout) —
         # scoped refreshes cover the shards of every slot a covered worker
@@ -158,8 +164,22 @@ class PagedKVCache:
         jax.block_until_ready(self.state["tables"])      # the drain
         shards = (range(self.num_shards) if workers is None
                   else self._shards_of(workers))
+        # Authoritative post-fence rows: re-derive from the mappings that
+        # are still live in the manager (a fence can fire mid-step — after
+        # an alloc/evict/free but before the next update_tables — so the
+        # last-uploaded mirror lags reality).  Only the covered shards'
+        # slots are rebuilt: host-side fence work scales with the mask
+        # popcount, like the upload it feeds.
+        alive = self.mgr.tables.mappings
         for w in shards:
-            rows = self._host_tables[self._shard_slots[w]]
+            slots = self._shard_slots[w]
+            rows = np.full((len(slots), self.max_blocks_per_seq), -1,
+                           np.int32)
+            for i, s in enumerate(slots):
+                m = self._slot_mappings.get(int(s))
+                if m is not None and m.mapping_id in alive:
+                    self._fill_row(rows[i], m)
+            self._host_tables[slots] = rows              # device now has them
             self._shard_tables[w] = jax.device_put(
                 jnp.asarray(rows, jnp.int32))
             self._refreshed_entries += rows.size
@@ -191,13 +211,17 @@ class PagedKVCache:
         self.mgr.munmap(m.mapping_id, worker=worker)
 
     # ------------------------------------------------------- device tensors
+    def _fill_row(self, row: np.ndarray, m: Mapping) -> None:
+        """Write a mapping's physical blocks into a (pre-cleared) table row."""
+        n = min(len(m.physical), self.max_blocks_per_seq)
+        row[:n] = [b if b >= 0 else -1 for b in m.physical[:n]]
+
     def _host_rows(self, mappings: dict[int, Mapping]) -> np.ndarray:
         """Host (max_batch, M) table from slot → mapping."""
         tab = np.full((self.max_batch, self.max_blocks_per_seq), -1,
                       np.int32)
         for slot, m in mappings.items():
-            n = min(len(m.physical), self.max_blocks_per_seq)
-            tab[slot, :n] = [b if b >= 0 else -1 for b in m.physical[:n]]
+            self._fill_row(tab[slot], m)
         return tab
 
     def slot_tables(self, mappings: dict[int, Mapping]) -> jax.Array:
@@ -208,6 +232,7 @@ class PagedKVCache:
                       lengths: np.ndarray) -> None:
         """Per-step table update: upload only the shards whose rows changed,
         then assemble the kernel tensor from the shard arrays."""
+        self._slot_mappings = dict(mappings)
         host = self._host_rows(mappings)
         for w, slots in enumerate(self._shard_slots):
             rows = host[slots]

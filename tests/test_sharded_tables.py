@@ -84,6 +84,39 @@ class TestShardedBlockTableStore:
             s.lookup(m_over.mapping_id, m_over.logical_start,
                      table_epoch=held)
 
+    def test_live_overflow_row_stays_covered_across_fences(self):
+        """Regression: while an overflowed mapping is LIVE, every fence
+        covering its worker must invalidate the foreign shard — a shard
+        copy taken *between* two covering fences, then recycled under,
+        must fail validation at the second fence."""
+        s = BlockTableStore(2, 2, num_shards=2)
+        s.create_mapping([1], worker=0)
+        m_over = s.create_mapping([2], worker=0)     # shard 0 full → shard 1
+        assert s.shard_of_mapping(m_over.mapping_id) == 1
+        s.bump_epoch(shards=[0])                     # first covering fence
+        _, held = s.packed(shard=1)                  # snapshot taken after it
+        # the overflowed row's block is evicted and recycled (new phys)
+        m_over.physical[0] = 7
+        s.table[s.slot_of[m_over.mapping_id], 0] = 7
+        s.bump_epoch(shards=[0])                     # second covering fence
+        with pytest.raises(StaleMappingError):
+            s.lookup(m_over.mapping_id, m_over.logical_start,
+                     table_epoch=held)
+
+    def test_live_overflow_record_survives_global_fence(self):
+        """A global fence flushes dead residue but must keep live overflow
+        records: a later scoped fence covering the worker still has to
+        invalidate the foreign shard holding its live row."""
+        s = BlockTableStore(2, 2, num_shards=2)
+        s.create_mapping([1], worker=0)
+        m_over = s.create_mapping([2], worker=0)     # overflow → shard 1
+        s.bump_epoch()                               # global fence
+        _, held = s.packed(shard=1)
+        s.bump_epoch(shards=[0])                     # must still hit shard 1
+        with pytest.raises(StaleMappingError):
+            s.lookup(m_over.mapping_id, m_over.logical_start,
+                     table_epoch=held)
+
     def test_overflow_record_survives_destroy_until_covering_fence(self):
         s = BlockTableStore(2, 2, num_shards=2)
         s.create_mapping([1], worker=0)
@@ -99,6 +132,19 @@ class TestShardedBlockTableStore:
         s.bump_epoch(shards=[0])
         assert s.lookup(m1.mapping_id, m1.logical_start,
                         table_epoch=held2) == 3
+
+    def test_dead_residue_extinguished_by_any_bump_of_its_shard(self):
+        """Once the foreign shard's epoch moves for any reason after the
+        overflowed mapping died, the residue is spent — a later fence
+        covering the original worker must not re-bump that shard."""
+        s = BlockTableStore(2, 2, num_shards=2)
+        s.create_mapping([1], worker=0)
+        m_over = s.create_mapping([2], worker=0)     # overflow → shard 1
+        s.destroy_mapping(m_over.mapping_id)         # residue (0, 1)
+        s.bump_epoch(shards=[1])                     # shard 1 bumped anyway
+        ep = int(s.shard_epochs[1])
+        s.bump_epoch(shards=[0])                     # w0 fence: shard 0 only
+        assert int(s.shard_epochs[1]) == ep
 
     def test_packed_shard_view_and_epoch(self):
         s = BlockTableStore(4, 2, num_shards=2)
@@ -198,6 +244,23 @@ class TestShardedDeviceFence:
         np.testing.assert_array_equal(np.asarray(cache.state["lengths"]),
                                       lengths)
 
+    def test_fence_uploads_post_fence_rows_not_stale_mirror(self, tiny_cache):
+        """Regression: a mid-step fence must re-derive the refreshed rows
+        from live mapping state, not re-broadcast the previous
+        update_tables snapshot."""
+        cache = tiny_cache()
+        maps = {s: cache.alloc_sequence(128, group_id=1, worker=s % 4)
+                for s in range(4)}
+        cache.update_tables(maps, np.zeros(4, np.int32))
+        freed = maps.pop(0)
+        cache.free_sequence(freed, worker=0)      # FPR skip: no fence yet
+        cache.fences.fence("external")            # fence before next step
+        tab = np.asarray(cache.state["tables"])
+        assert (tab[0] == -1).all()               # freed row resynced
+        for s, m in maps.items():                 # live rows stay intact
+            np.testing.assert_array_equal(tab[s, :len(m.physical)],
+                                          m.physical)
+
     def test_update_tables_uploads_only_changed_shards(self, tiny_cache):
         cache = tiny_cache()
         maps = {s: cache.alloc_sequence(128, group_id=1, worker=s % 4)
@@ -212,6 +275,46 @@ class TestShardedDeviceFence:
         per_shard = (len(cache._shard_slots[2])
                      * cache.max_blocks_per_seq)
         assert cache._step_upload_entries == before + per_shard
+
+
+class TestLegacyFenceCallback:
+    def test_two_arg_on_fence_callback_still_works(self):
+        """An externally supplied FenceEngine with a pre-sharding
+        ``on_fence(reason, n)`` callback must not break on fences."""
+        calls = []
+        eng = FenceEngine(measure=True,
+                          on_fence=lambda reason, n: calls.append(
+                              (reason, n)))
+        m = FprMemoryManager(16, num_workers=2, fence_engine=eng,
+                             fpr_enabled=True, max_order=4)
+        m.fences.fence("external", 3)
+        assert calls == [("external", 3)]
+        m.fences.fence_scoped("scoped", 1, worker_mask=int(worker_bit(0)))
+        assert calls[-1] == ("scoped", 1)
+
+    def test_keyword_only_workers_callback_receives_workers(self):
+        calls = []
+
+        def cb(reason, n, *, workers=None):
+            calls.append((reason, n, workers))
+
+        eng = FenceEngine(measure=True, on_fence=cb)
+        m = FprMemoryManager(16, num_workers=2, fence_engine=eng,
+                             fpr_enabled=True, max_order=4)
+        m.fences.fence_scoped("scoped", 1, worker_mask=int(worker_bit(0)))
+        assert calls[-1][:2] == ("scoped", 1)
+        assert list(calls[-1][2]) == [0]
+
+    def test_three_arg_on_fence_callback_receives_workers(self):
+        calls = []
+        eng = FenceEngine(measure=True,
+                          on_fence=lambda reason, n, workers: calls.append(
+                              (reason, n, workers)))
+        m = FprMemoryManager(16, num_workers=2, fence_engine=eng,
+                             fpr_enabled=True, max_order=4)
+        m.fences.fence_scoped("scoped", 1, worker_mask=int(worker_bit(1)))
+        assert calls[-1][:2] == ("scoped", 1)
+        assert list(calls[-1][2]) == [1]
 
 
 class TestAbaRecycleRegression:

@@ -1,0 +1,213 @@
+"""Admission governor benchmark — over-commit ratios × admission policies.
+
+Three sections, all seeded and deterministic (the smoke artifact
+``admission_smoke.json`` is diffable run-to-run):
+
+  * ``policies``  — the *real* Engine replays one multi-stream trace under
+                    FCFS vs recycle-affinity vs priority admission.
+                    Decoded tokens must be **bit-identical** across
+                    policies (admission order moves *when* blocks recycle,
+                    never what a sequence decodes); recycle-affinity must
+                    spare strictly more fence broadcast (``replicas_spared``
+                    — averted context-exit fences count the full broadcast)
+                    than FCFS, with a higher affinity hit-rate.
+  * ``overcommit`` — the ``demand_pager_gave_up`` regression: a workload
+                    whose windows over-commit the pool.  Legacy admission
+                    gives up and ships wrong tokens; the governor at
+                    ratio 1.0 completes with zero give-ups and tokens
+                    bit-identical to an under-committed reference; at
+                    ratio > 1 it preempts (recompute and swap strategies)
+                    instead, still bit-identical.
+  * ``sweep``      — the virtual-time :func:`repro.serving.sim.
+                    admission_sim` grid over over-commit ratios × policies:
+                    admission-queue latency vs preemption overhead.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import save
+
+SEED = 20240802
+
+_CFG_KW = dict(name="adm", n_layers=1, d_model=32, n_heads=2,
+               n_kv_heads=1, d_ff=64, vocab=64, head_dim=16)
+
+_ADMISSION_KEYS = ("admitted", "rejected_overcommit",
+                   "preemptions_recompute", "preemptions_swap",
+                   "affinity_hit_rate")
+
+
+def _params():
+    import jax
+    import jax.numpy as jnp
+    from repro.models import transformer as tfm
+    from repro.models.config import ModelConfig
+    return tfm.init_params(jax.random.PRNGKey(0), ModelConfig(**_CFG_KW),
+                           jnp.float32)
+
+
+def _drive(params, reqs, *, admission, num_blocks, max_batch,
+           num_workers=4, watermarks=None):
+    from repro.models.config import ModelConfig
+    from repro.serving.engine import Engine
+
+    eng = Engine(ModelConfig(**_CFG_KW), params, num_blocks=num_blocks,
+                 max_batch=max_batch, max_seq_len=512, fpr_enabled=True,
+                 num_workers=num_workers, scoped_fences=True,
+                 watermarks=watermarks, admission=admission)
+    for prompt, stream, gid, mnt in reqs:
+        eng.submit(prompt, max_new_tokens=mnt, stream=stream, group_id=gid)
+    eng.run()
+    toks = [list(map(int, r.generated))
+            for r in sorted(eng.sched.done, key=lambda r: r.rid)]
+    return eng.stats(), toks
+
+
+def _summary(stats: dict) -> dict:
+    adm = stats["admission"]
+    return {
+        "fences": stats["fence"]["fences"],
+        "fences_averted": stats["fence"]["fences_averted"],
+        "replicas_spared": stats["fence"]["replicas_spared"],
+        "recycled_hits": stats["fpr"]["recycled_hits"],
+        "demand_pager_gave_up": stats["demand_pager_gave_up"],
+        **{k: adm.get(k) for k in _ADMISSION_KEYS},
+    }
+
+
+# ------------------------------------------------------------------ policies
+def case_policies(params, smoke: bool = False) -> dict:
+    """One multi-stream trace, three admission policies, identical tokens."""
+    rng = np.random.RandomState(11)
+    n = 9 if smoke else 18
+    reqs = [(rng.randint(1, _CFG_KW["vocab"], size=140), f"s{i % 3}",
+             (i % 3) + 1, 8 + (i % 3)) for i in range(n)]
+    kw = dict(num_blocks=8, max_batch=2, num_workers=4)
+    out: dict = {"requests": n, **kw}
+    toks = {}
+    for policy in ("fcfs", "recycle", "priority"):
+        stats, toks[policy] = _drive(params, reqs, admission=policy, **kw)
+        out[policy] = _summary(stats)
+    out["tokens_identical"] = (toks["fcfs"] == toks["recycle"]
+                               == toks["priority"])
+    return out
+
+
+def report_policies(out: dict) -> None:
+    f, r = out["fcfs"], out["recycle"]
+    print(f"  policies:  replicas_spared fcfs {f['replicas_spared']} → "
+          f"recycle {r['replicas_spared']}, fences {f['fences']} → "
+          f"{r['fences']}, affinity hit-rate {f['affinity_hit_rate']} → "
+          f"{r['affinity_hit_rate']}, tokens identical: "
+          f"{out['tokens_identical']}")
+    if not out["tokens_identical"]:
+        raise AssertionError("admission policy changed decoded tokens")
+    if not r["replicas_spared"] > f["replicas_spared"]:
+        raise AssertionError(
+            "recycle-affinity admission must spare strictly more fence "
+            f"broadcast than FCFS (got {r['replicas_spared']} vs "
+            f"{f['replicas_spared']})")
+
+
+# ---------------------------------------------------------------- overcommit
+def case_overcommit(params, smoke: bool = False) -> dict:
+    """Legacy give-ups vs governed refusal/preemption on one workload."""
+    from repro.core.eviction import Watermarks
+    from repro.serving.admission import GovernorConfig
+
+    rng = np.random.RandomState(3)
+    n = 4 if smoke else 6
+    reqs = [(rng.randint(1, _CFG_KW["vocab"], size=200), f"s{i % 2}",
+             (i % 2) + 1, 60) for i in range(n)]
+    wm = Watermarks(0.25, 0.4, 0.6)
+    kw = dict(max_batch=4, num_workers=4, watermarks=wm)
+    out: dict = {"requests": n, "pool_tight": 8, "pool_reference": 32}
+
+    _, t_ref = _drive(params, reqs, admission=None, num_blocks=32, **kw)
+    modes = {
+        "legacy": None,
+        "governed": "fcfs",
+        "overcommit_recompute": GovernorConfig(
+            policy="fcfs", preempt="recompute", overcommit_ratio=1.6),
+        "overcommit_swap": GovernorConfig(
+            policy="fcfs", preempt="swap", overcommit_ratio=1.6),
+    }
+    for name, admission in modes.items():
+        stats, toks = _drive(params, reqs, admission=admission,
+                             num_blocks=8, **kw)
+        out[name] = _summary(stats)
+        out[name]["tokens_match_reference"] = toks == t_ref
+    return out
+
+
+def report_overcommit(out: dict) -> None:
+    leg, gov = out["legacy"], out["governed"]
+    print(f"  overcommit: legacy gave_up {leg['demand_pager_gave_up']} "
+          f"(tokens ok: {leg['tokens_match_reference']}) → governed "
+          f"gave_up {gov['demand_pager_gave_up']} (tokens ok: "
+          f"{gov['tokens_match_reference']}); ratio 1.6 preempts "
+          f"recompute {out['overcommit_recompute']['preemptions_recompute']}"
+          f" / swap {out['overcommit_swap']['preemptions_swap']}")
+    if gov["demand_pager_gave_up"] != 0:
+        raise AssertionError("governor must eliminate pager give-ups")
+    for name in ("governed", "overcommit_recompute", "overcommit_swap"):
+        if not out[name]["tokens_match_reference"]:
+            raise AssertionError(f"{name} diverged from the reference run")
+        if out[name]["demand_pager_gave_up"] != 0:
+            raise AssertionError(f"{name} shipped -1 rows (gave up)")
+
+
+# --------------------------------------------------------------------- sweep
+def case_sweep(smoke: bool = False) -> dict:
+    """admission_sim grid: over-commit ratio × policy (virtual time)."""
+    from repro.serving.sim import AdmissionSimConfig, admission_sim
+
+    ratios = (1.0, 1.5) if smoke else (1.0, 1.25, 1.5, 2.0)
+    rows = []
+    for policy in ("fcfs", "recycle", "priority"):
+        for ratio in ratios:
+            rows.append(admission_sim(AdmissionSimConfig(
+                policy=policy, overcommit_ratio=ratio,
+                preempt="swap" if policy == "priority" else "recompute",
+                priority_classes=3 if policy == "priority" else 1,
+                pool_blocks=32, n_requests=24 if smoke else 64,
+                seed=SEED % 2**31)))
+    return {"rows": rows}
+
+
+def report_sweep(out: dict) -> None:
+    r10 = [r for r in out["rows"] if r["overcommit_ratio"] == 1.0]
+    worst = max(r10, key=lambda r: r["queue_wait_mean"])
+    best = min(r10, key=lambda r: r["queue_wait_mean"])
+    print(f"  sweep:     ratio 1.0 queue-wait {worst['policy']} "
+          f"{worst['queue_wait_mean']} → {best['policy']} "
+          f"{best['queue_wait_mean']}; preemptions appear only at "
+          f"ratio > 1 (hard invariant holds)")
+    for r in r10:
+        assert r["preemptions_recompute"] + r["preemptions_swap"] == 0 \
+            or r["policy"] == "priority", \
+            "capacity-preemptions at ratio 1.0 violate the hard invariant"
+
+
+def run(smoke: bool = False) -> dict:
+    params = _params()
+    out = {
+        "seed": SEED,
+        "policies": case_policies(params, smoke=smoke),
+        "overcommit": case_overcommit(params, smoke=smoke),
+        "sweep": case_sweep(smoke=smoke),
+    }
+    save("admission_smoke" if smoke else "admission_bench", out)
+    report_policies(out["policies"])
+    report_overcommit(out["overcommit"])
+    report_sweep(out["sweep"])
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    run(smoke=ap.parse_args().smoke)

@@ -45,9 +45,12 @@ def _drive(params, reqs, *, num_workers: int, scoped: bool,
     from repro.models.config import ModelConfig
     from repro.serving.engine import Engine
 
+    # fcfs governor ≡ the legacy fill-every-slot order on this trace (all
+    # windows fit), but the replay output gains the admission counters
     eng = Engine(ModelConfig(**_CFG_KW), params, num_blocks=num_blocks,
                  max_batch=max_batch, max_seq_len=256, fpr_enabled=True,
-                 num_workers=num_workers, scoped_fences=scoped)
+                 num_workers=num_workers, scoped_fences=scoped,
+                 admission="fcfs")
     for prompt, stream, gid, mnt in reqs:
         eng.submit(prompt, max_new_tokens=mnt, stream=stream, group_id=gid)
     eng.run()
@@ -81,6 +84,10 @@ def case(smoke: bool = False, num_workers: int = 4) -> dict:
             "device_shard_refreshes": stats["device_shard_refreshes"],
             "device_refreshed_entries": stats["device_refreshed_entries"],
             "device_refreshed_bytes": stats["device_refreshed_bytes"],
+            "admission": {k: stats["admission"].get(k) for k in
+                          ("admitted", "rejected_overcommit",
+                           "preemptions_recompute", "preemptions_swap",
+                           "affinity_hit_rate")},
         }
     out["tokens_identical"] = toks["global"] == toks["sharded"]
     g = out["global"]["device_refreshed_bytes"]

@@ -3,9 +3,12 @@
     PYTHONPATH=src python -m benchmarks.run [--skip-model] [--only NAME]
                                             [--smoke]
 
-``--smoke`` is the CI lane: the (reduced-grid) microbenchmarks plus the
-deterministic scoped-fence artifact (``microbench_scoped.json``, seeded and
-diffable run-to-run, including the sharded-device-table engine trace), fast
+``--smoke`` is the CI lane: the (reduced-grid) microbenchmarks plus two
+deterministic artifacts (seeded and diffable run-to-run) —
+``microbench_scoped.json`` (worker-scoped fences incl. the
+sharded-device-table engine trace) and ``admission_smoke.json`` (admission
+governor: tokens bit-identical across policies, recycle-affinity sparing
+vs FCFS, over-commit give-up elimination, preemption counts) — fast
 enough for every push.
 """
 
@@ -25,15 +28,17 @@ def main() -> int:
                     help="CI smoke: reduced-grid microbench only")
     args = ap.parse_args()
 
-    from benchmarks import (apache_like, baseline_sweep, contexts_bench,
-                            device_latency, eviction, microbench, overhead,
-                            roofline, ycsb_kv)
+    from benchmarks import (admission_bench, apache_like, baseline_sweep,
+                            contexts_bench, device_latency, eviction,
+                            microbench, overhead, roofline, ycsb_kv)
     if args.smoke:
         suites = [
             ("microbench smoke (Fig. 6-11 + scoped)",
              lambda: microbench.run(smoke=True)),
             ("scoped smoke (deterministic microbench_scoped.json)",
              lambda: microbench.run_scoped(smoke=True)),
+            ("admission smoke (deterministic admission_smoke.json)",
+             lambda: admission_bench.run(smoke=True)),
         ]
     else:
         suites = [
@@ -41,6 +46,8 @@ def main() -> int:
             # includes the engine_trace sharded-device-table replay —
             # standalone: python -m benchmarks.engine_trace
             ("scoped (microbench_scoped.json)", microbench.run_scoped),
+            ("admission (governor: policies × over-commit)",
+             admission_bench.run),
             ("device_latency (Fig. 12)", device_latency.run),
             ("eviction (Fig. 14-17)", eviction.run),
             ("contexts (§IV-C2)", contexts_bench.run),

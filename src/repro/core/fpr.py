@@ -120,8 +120,12 @@ class FprMemoryManager:
         #: the "storage device" behind eviction).  Signatures:
         #:   on_swap_out(mapping_id, logical_idx, phys_block)
         #:   on_swap_in(mapping_id, logical_idx, new_phys_block)
+        #:   on_swap_drop(mapping_id, logical_idx) — a mapping destroyed
+        #:   while blocks are swapped out (e.g. a recompute-preempted
+        #:   victim) must release their swap-store copies, or they orphan
         self.on_swap_out = None
         self.on_swap_in = None
+        self.on_swap_drop = None
 
     # ===================================================================== alloc
     def _acquire(self, n: int, ctx_id: int, worker: int) -> list[int]:
@@ -172,6 +176,12 @@ class FprMemoryManager:
             eng.note_version_elision(int(elide_global.sum()))
         if elide_scope.any():
             eng.note_scope_elision(int(elide_scope.sum()))
+        averted = recycled | elide_global | elide_scope
+        if averted.any() and not must_fence.any():
+            # every deferred invalidation in this batch resolved fence-free
+            # (in-context recycling or §IV-C5/scope elision) — the whole
+            # merged broadcast the baseline would have sent is spared
+            eng.note_fence_averted()
         if must_fence.any():
             # One merged fence covers every exiting block in this batch.
             if always.any():
@@ -235,7 +245,12 @@ class FprMemoryManager:
     # =================================================================== munmap
     def munmap(self, mapping_id: int, *, worker: int = 0) -> None:
         m = self.tables.mappings[mapping_id]
-        phys = [b for b in self.tables.destroy_mapping(mapping_id) if b >= 0]
+        rows = self.tables.destroy_mapping(mapping_id)
+        if self.on_swap_drop is not None:
+            for idx, b in enumerate(rows):
+                if b == SWAPPED:        # dying mapping's swapped contents
+                    self.on_swap_drop(mapping_id, idx)
+        phys = [b for b in rows if b >= 0]
         self.stats.frees += len(phys)
         if phys:
             arr = np.asarray(phys, dtype=np.int64)

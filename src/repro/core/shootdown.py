@@ -76,6 +76,26 @@ MAP_FIXED allocation — exactly the cases where per-worker staleness
 tracking is unavailable or vacuous.  Soundness therefore never depends on
 a shard refresh being "enough": whenever coverage is uncertain, the path
 degenerates to the paper's full-broadcast fence.
+
+**Averted fences and the admission phase.**  The paper's §IV-A check runs
+at allocation: a freed block's deferred invalidation is resolved when the
+block is next handed out — recycled in-context (no fence, ever), elided
+by the §IV-C5 epoch or a covering per-worker fence, or fenced because it
+left its context.  The serving stack adds one phase upstream of that:
+**admission** (``repro.serving.admission``) decides *which* request the
+freed blocks reach, so admission policy controls how often the
+allocation-phase check lands in the fence-free branches — the
+recycle-affinity policy admits the freed stream's next request and turns
+nearly every resolution into a ``recycled_hit``.  An allocation batch
+whose deferred invalidations all resolve without a fence counts one
+``fences_averted`` event and credits ``replicas_spared`` with the *full*
+modeled broadcast (the baseline would have shot down every replica at the
+munmap); a scoped fence credits only the uncovered share.
+``replicas_spared`` therefore measures total broadcast traffic avoided
+relative to the always-global baseline, across both mechanisms.
+Preemption (the kswapd analogue) reuses the same machinery: a recompute
+victim's blocks recycle through a skipped-at-free munmap, and a swap
+victim's eviction batch takes the §IV-B merged fence.
 """
 
 from __future__ import annotations
@@ -128,8 +148,15 @@ class FenceStats:
     elided_by_scope: int = 0             # per-worker-epoch elision (scoped)
     elided_always_flush: int = 0         # ALWAYS_FLUSH fences (subset of fences)
     fences_scoped: int = 0               # fences that covered < all workers
+    fences_averted: int = 0              # deferred invalidations resolved
+                                         # with no fence at all (recycled or
+                                         # elided allocation batches)
     workers_covered: int = 0             # Σ workers covered over all fences
     replicas_spared: int = 0             # Σ modeled replicas NOT refreshed
+                                         # vs the always-global baseline: a
+                                         # scoped fence spares the uncovered
+                                         # share, an averted fence the full
+                                         # broadcast
     measured_s: float = 0.0              # accumulated real fence wall time
     modeled_s: float = 0.0               # accumulated projected fence cost
 
@@ -271,6 +298,19 @@ class FenceEngine:
     def note_scope_elision(self, n_blocks: int = 1) -> None:
         self.stats.elided_by_scope += n_blocks
 
+    def note_fence_averted(self) -> None:
+        """An allocation batch resolved its deferred invalidations with no
+        fence at all — every block was recycled in-context or elided by
+        version/scope.  The baseline would have sent one merged broadcast
+        to all ``n_replicas`` for the batch, so crediting is per *event*
+        (mirroring the per-event ``replicas_spared`` of a scoped fence),
+        never per block.  (Admission order controls how often this
+        happens: recycle-affinity admission maximises it.)
+        """
+        st = self.stats
+        st.fences_averted += 1
+        st.replicas_spared += self.cost_model.n_replicas
+
     def reset_stats(self) -> None:
         self.stats = FenceStats()
 
@@ -280,6 +320,7 @@ class FenceEngine:
         return {
             "fences": s.fences,
             "fences_scoped": s.fences_scoped,
+            "fences_averted": s.fences_averted,
             "skipped_at_free": s.skipped_at_free,
             "elided_by_version": s.elided_by_version,
             "elided_by_scope": s.elided_by_scope,

@@ -1,0 +1,33 @@
+"""Admission-control & preemption subsystem — the capacity-aware memory
+governor between the scheduler and the paged KV cache.
+
+See :mod:`repro.serving.admission.governor` for the design overview:
+the ledger makes "committed windows ≤ pool" an admission-time invariant
+(closing the demand-pager give-up hole), the policies decide which queued
+request inherits freed blocks (recycle-affinity keeps FPR recycling hot),
+and the preemption strategies (recompute / swap-through-the-evictor) keep
+over-committed configurations sound instead of shipping ``-1`` rows.
+"""
+
+from repro.serving.admission.governor import (PREEMPT_STRATEGIES,
+                                              GovernorConfig, GovernorStats,
+                                              MemoryGovernor)
+from repro.serving.admission.ledger import CapacityError, CapacityLedger
+from repro.serving.admission.policies import (AdmissionPolicy, FcfsPolicy,
+                                              PriorityPolicy,
+                                              RecycleAffinityPolicy,
+                                              make_policy)
+
+__all__ = [
+    "AdmissionPolicy",
+    "CapacityError",
+    "CapacityLedger",
+    "FcfsPolicy",
+    "GovernorConfig",
+    "GovernorStats",
+    "MemoryGovernor",
+    "PREEMPT_STRATEGIES",
+    "PriorityPolicy",
+    "RecycleAffinityPolicy",
+    "make_policy",
+]

@@ -1,0 +1,210 @@
+"""MemoryGovernor — capacity-aware admission control + preemption.
+
+Sits between :class:`~repro.serving.scheduler.Scheduler` and
+:class:`~repro.serving.kv_cache.PagedKVCache`:
+
+  * **admission** — a queued sequence is admitted only when the
+    :class:`~repro.serving.admission.ledger.CapacityLedger` can commit its
+    whole attention window (prompt + ``max_new_tokens`` in blocks).  With
+    the default ``overcommit_ratio = 1`` this closes the
+    ``demand_pager_gave_up`` hole as a hard invariant: every set of running
+    windows has a resident placement, so the pager's fixpoint scan always
+    converges.  The *policy* (FCFS / recycle-affinity / priority classes)
+    decides the order — recycle-affinity is the FPR-aware one: it hands
+    freed blocks to the same stream's next request so recycling stays hot
+    and the context-exit fence is averted.
+
+  * **preemption** — under pressure (optimistic over-commit, or a blocked
+    higher-priority request) the governor picks a victim (lowest priority
+    class, then most recently admitted — vLLM's LIFO choice, which
+    minimises wasted work) and the engine applies one of two strategies:
+
+      - ``recompute`` — free the victim's mapping (the blocks recycle,
+        fence-free under FPR) and re-prefill from scratch on re-admission;
+      - ``swap`` — push the victim's resident blocks out through the
+        watermark evictor's swap path (one merged fence, contents
+        round-trip through the swap store) and keep mapping + generated
+        tokens; re-admission demand-faults the blocks back in.
+
+    Both strategies preserve decoded tokens exactly (greedy decode is
+    deterministic; swap round-trips block contents bit-for-bit).
+
+The governor is engine-agnostic bookkeeping: it never touches the cache or
+scheduler itself — the engine drives both and reports back, which keeps
+the policy layer (this module) cleanly separated from the mechanism layer
+(core/), the split eBPF-mm argues for.
+"""
+
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.serving.admission.ledger import CapacityError, CapacityLedger
+from repro.serving.admission.policies import (AdmissionPolicy, PriorityPolicy,
+                                              make_policy)
+
+PREEMPT_STRATEGIES = ("recompute", "swap")
+
+
+@dataclass
+class GovernorConfig:
+    """Knobs for the admission/preemption subsystem."""
+
+    policy: "str | AdmissionPolicy" = "fcfs"
+    preempt: str = "recompute"          # recompute | swap
+    overcommit_ratio: float = 1.0       # 1.0 = hard capacity invariant
+    affinity_window: int = 8            # freed streams remembered (newest first)
+
+    def __post_init__(self) -> None:
+        if self.preempt not in PREEMPT_STRATEGIES:
+            raise ValueError(f"unknown preempt strategy {self.preempt!r}; "
+                             f"known: {PREEMPT_STRATEGIES}")
+
+
+@dataclass
+class GovernorStats:
+    admitted: int = 0
+    rejected_overcommit: int = 0        # admission rounds refused for capacity
+    preemptions_recompute: int = 0
+    preemptions_swap: int = 0
+    affinity_hits: int = 0              # admission matched a freed stream
+    affinity_misses: int = 0            # a freed stream was known, no match
+
+    @property
+    def affinity_hit_rate(self) -> Optional[float]:
+        n = self.affinity_hits + self.affinity_misses
+        return round(self.affinity_hits / n, 4) if n else None
+
+    def snapshot(self) -> dict:
+        d = dict(self.__dict__)
+        d["affinity_hit_rate"] = self.affinity_hit_rate
+        return d
+
+
+class MemoryGovernor:
+    """Capacity ledger + admission policy + victim selection."""
+
+    def __init__(self, capacity_blocks: int, block_size: int, *,
+                 num_workers: int = 1,
+                 config: GovernorConfig | None = None):
+        self.config = config or GovernorConfig()
+        self.block_size = block_size
+        self.ledger = CapacityLedger(
+            capacity_blocks, num_workers=num_workers,
+            overcommit_ratio=self.config.overcommit_ratio)
+        self.policy = make_policy(self.config.policy)
+        self.stats = GovernorStats()
+        self._freed_streams: deque[str] = deque(
+            maxlen=max(1, self.config.affinity_window))
+        self._admit_seq = itertools.count(1)
+        self._admit_order: dict[int, int] = {}      # rid → admission ordinal
+
+    # ------------------------------------------------------------- windows
+    def window_blocks(self, r) -> int:
+        """Full attention window of ``r`` in blocks (prompt + budget)."""
+        need = len(r.prompt) + r.max_new_tokens
+        return max(1, -(-need // self.block_size))
+
+    def admissible_ever(self, r) -> bool:
+        """Can this request's window ever fit (even on an empty pool)?"""
+        return self.window_blocks(r) <= self.ledger.limit
+
+    # ----------------------------------------------------------- admission
+    def select(self, queue: list) -> Optional[int]:
+        """Index of the next queue entry to admit, or None.
+
+        A non-empty queue with no admissible entry counts one
+        ``rejected_overcommit`` — the refusal that replaces the legacy
+        scheduler's fill-every-slot behaviour.
+        """
+        if not queue:
+            return None
+        idx = self.policy.select(
+            queue, lambda r: self.ledger.fits(self.window_blocks(r)),
+            tuple(self._freed_streams))
+        if idx is None:
+            self.stats.rejected_overcommit += 1
+            return None
+        # Affinity accounting: a hit means the admission exploited the
+        # best *achievable* recycling affinity — the freshest freed stream
+        # with any queued request.  (Matching nothing achievable counts
+        # neither way; FCFS only hits when arrival order happens to align.)
+        achievable = next(
+            (s for s in self._freed_streams
+             if any(q.stream == s for q in queue)), None)
+        if achievable is not None:
+            if queue[idx].stream == achievable:
+                self.stats.affinity_hits += 1
+            else:
+                self.stats.affinity_misses += 1
+        return idx
+
+    def on_admit(self, r, worker: int = 0) -> None:
+        """Commit the admitted request's window (raises on over-commit)."""
+        self.ledger.reserve(r.rid, self.window_blocks(r), worker)
+        self._admit_order[r.rid] = next(self._admit_seq)
+        self.stats.admitted += 1
+
+    def on_release(self, r) -> None:
+        """Completion or preemption: return the window, remember the stream."""
+        if self.ledger.holds(r.rid):
+            self.ledger.release(r.rid)
+        self._admit_order.pop(r.rid, None)
+        self.note_freed_stream(r.stream)
+
+    def note_freed_stream(self, stream: str) -> None:
+        """Newest-first affinity hint (dedup keeps the deque informative)."""
+        if stream in self._freed_streams:
+            self._freed_streams.remove(stream)
+        self._freed_streams.appendleft(stream)
+
+    # ---------------------------------------------------------- preemption
+    def choose_victim(self, running: dict, *,
+                      below_priority: int | None = None,
+                      exclude: tuple = ()) -> Optional[object]:
+        """Lowest priority class, then most recently admitted (vLLM LIFO).
+
+        ``below_priority`` restricts victims to strictly lower classes
+        (priority-pressure preemption must never evict an equal or higher
+        class); ``exclude`` protects requests already being served this
+        scan (e.g. the fault that triggered the pressure).
+        """
+        candidates = [
+            r for r in running.values()
+            if r.rid not in exclude
+            and (below_priority is None
+                 or getattr(r, "priority", 0) < below_priority)]
+        if not candidates:
+            return None
+        return max(candidates,
+                   key=lambda r: (-getattr(r, "priority", 0),
+                                  self._admit_order.get(r.rid, 0)))
+
+    def count_preempt(self, strategy: str) -> None:
+        if strategy == "swap":
+            self.stats.preemptions_swap += 1
+        else:
+            self.stats.preemptions_recompute += 1
+
+    def wants_priority_preempt(self, queue: list) -> Optional[int]:
+        """Index of a blocked queued request whose class justifies evicting
+        a lower-class running sequence (priority policy only)."""
+        if not isinstance(self.policy, PriorityPolicy) or not queue:
+            return None
+        return self.policy.best_blocked(
+            queue, lambda r: self.ledger.fits(self.window_blocks(r)))
+
+    # ------------------------------------------------------------ counters
+    def counters(self) -> dict:
+        d = self.stats.snapshot()
+        d["policy"] = self.policy.name
+        d["preempt_strategy"] = self.config.preempt
+        d["ledger"] = self.ledger.counters()
+        return d
+
+
+__all__ = ["CapacityError", "GovernorConfig", "GovernorStats",
+           "MemoryGovernor", "PREEMPT_STRATEGIES"]

@@ -1,0 +1,112 @@
+"""Pluggable admission policies — who gets the freed blocks next.
+
+The paper's FPR only pays off when a freed mapping's blocks recycle into
+the *same* recycling context's next mmap; in the serving analogue the
+admission order decides that.  Each policy picks the next queued request
+to admit, given a capacity predicate (from the :class:`~repro.serving.
+admission.ledger.CapacityLedger`) and an affinity hint (the most recently
+freed streams):
+
+  * ``fcfs``     — arrival order, skipping requests that do not currently
+                   fit (first-fit FCFS; strict head-of-line blocking would
+                   deadlock behind a window larger than what is free).
+  * ``recycle``  — recycle-affinity: prefer the queued request whose
+                   ``stream`` matches the most recently freed mapping's
+                   stream, so the freed blocks re-enter the same recycling
+                   context and the context-exit fence is averted entirely
+                   (allocation finds its own context's blocks: a
+                   ``recycled_hit``, no fence, no device-table refresh).
+  * ``priority`` — highest priority class first (ties broken FCFS); the
+                   governor may additionally preempt lower-priority
+                   running sequences to make room (see ``MemoryGovernor``).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+#: fits(request) → can the ledger hold this request's window right now?
+FitsFn = Callable[[object], bool]
+
+
+class AdmissionPolicy:
+    """Selects the index of the next queue entry to admit (None = nothing)."""
+
+    name = "abstract"
+
+    def select(self, queue: Sequence, fits: FitsFn,
+               freed_streams: Sequence[str]) -> Optional[int]:
+        raise NotImplementedError
+
+
+class FcfsPolicy(AdmissionPolicy):
+    """First-come-first-served over the requests that currently fit."""
+
+    name = "fcfs"
+
+    def select(self, queue, fits, freed_streams):
+        for i, r in enumerate(queue):
+            if fits(r):
+                return i
+        return None
+
+
+class RecycleAffinityPolicy(AdmissionPolicy):
+    """Prefer the queued request whose stream matches the freshest free.
+
+    Walks the recently-freed streams newest-first; the first queued request
+    (in arrival order) of a matching stream that fits wins.  Falls back to
+    FCFS when no queued request matches any recently freed stream — the
+    affinity is a preference, never a starvation mechanism.
+    """
+
+    name = "recycle"
+
+    def select(self, queue, fits, freed_streams):
+        for stream in freed_streams:
+            for i, r in enumerate(queue):
+                if r.stream == stream and fits(r):
+                    return i
+        return FcfsPolicy.select(self, queue, fits, freed_streams)
+
+
+class PriorityPolicy(AdmissionPolicy):
+    """Highest ``priority`` class first; FCFS within a class."""
+
+    name = "priority"
+
+    def select(self, queue, fits, freed_streams):
+        best = None
+        for i, r in enumerate(queue):
+            if not fits(r):
+                continue
+            if best is None or getattr(r, "priority", 0) > getattr(
+                    queue[best], "priority", 0):
+                best = i
+        return best
+
+    def best_blocked(self, queue, fits) -> Optional[int]:
+        """Highest-priority queued request that does NOT currently fit —
+        the preemption candidate's beneficiary (vLLM-style pressure)."""
+        best = None
+        for i, r in enumerate(queue):
+            if fits(r):
+                continue
+            if best is None or getattr(r, "priority", 0) > getattr(
+                    queue[best], "priority", 0):
+                best = i
+        return best
+
+
+_POLICIES = {p.name: p for p in (FcfsPolicy, RecycleAffinityPolicy,
+                                 PriorityPolicy)}
+
+
+def make_policy(policy: "str | AdmissionPolicy") -> AdmissionPolicy:
+    if isinstance(policy, AdmissionPolicy):
+        return policy
+    try:
+        return _POLICIES[policy]()
+    except KeyError:
+        raise ValueError(f"unknown admission policy {policy!r}; "
+                         f"known: {sorted(_POLICIES)}") from None

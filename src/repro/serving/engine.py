@@ -13,6 +13,16 @@ The request lifecycle drives exactly the paper's two fence sources:
 ``fpr_enabled=False`` gives the stock-Linux baseline; both modes must
 produce **identical tokens** (tests/test_serving.py asserts it), because
 FPR only moves *when* invalidation happens, never what the tables say.
+
+**Admission control.**  ``admission=`` attaches a
+:class:`~repro.serving.admission.MemoryGovernor` between the scheduler
+and the cache: queued sequences are admitted only when the capacity
+ledger can commit their whole attention window, ordered by the configured
+policy (FCFS / recycle-affinity / priority).  With the governor on, a
+demand-pager give-up is impossible at ``overcommit_ratio=1`` and triggers
+preemption (recompute or swap-through-the-evictor victims) instead of
+shipping ``-1`` rows at higher ratios; the legacy path (``admission=None``)
+keeps the ``demand_pager_gave_up`` counter behaviour.
 """
 
 from __future__ import annotations
@@ -28,8 +38,15 @@ from repro.core.contexts import ContextScope
 from repro.core.eviction import WatermarkEvictor, Watermarks
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
+from repro.serving.admission import (CapacityError, GovernorConfig,
+                                     MemoryGovernor)
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.scheduler import Request, Scheduler
+
+#: decode-state keys indexed by batch slot (recurrent/cross-attention
+#: state) — these do not survive a slot change, so swap-preemption falls
+#: back to recompute when any of them is present.
+_SLOT_STATE_KEYS = ("conv", "ssm", "rwkv_x", "rwkv_s", "cross_k", "cross_v")
 
 
 class Engine:
@@ -41,7 +58,8 @@ class Engine:
                  watermarks: Watermarks | None = None,
                  eos_token: int | None = None, greedy: bool = True,
                  num_workers: int = 1, scoped_fences: bool = True,
-                 worker_routing: str = "slot", cost_model=None):
+                 worker_routing: str = "slot", cost_model=None,
+                 admission: GovernorConfig | str | None = None):
         self.cfg = cfg
         self.params = params
         self.page_impl = page_impl
@@ -56,6 +74,16 @@ class Engine:
             raise ValueError(f"unknown worker_routing {worker_routing!r}")
         self.worker_routing = worker_routing
         self.sched = Scheduler(max_batch)
+        if admission is None:
+            self.governor = None
+        else:
+            gcfg = (admission if isinstance(admission, GovernorConfig)
+                    else GovernorConfig(policy=admission))
+            self.governor = MemoryGovernor(
+                num_blocks, self.cache.block_size,
+                num_workers=num_workers, config=gcfg)
+        self._slot_state_keys = [k for k in self.cache.state
+                                 if k in _SLOT_STATE_KEYS]
         self.evictor = WatermarkEvictor(self.cache.mgr, self._lru_victims,
                                         watermarks=watermarks)
         self.steps = 0
@@ -74,8 +102,16 @@ class Engine:
 
     # ------------------------------------------------------------ lifecycle
     def submit(self, prompt, max_new_tokens: int, stream: str = "default",
-               group_id: int = 1) -> int:
-        return self.sched.submit(prompt, max_new_tokens, stream, group_id)
+               group_id: int = 1, priority: int = 0) -> int:
+        if self.governor is not None:
+            need = len(prompt) + max_new_tokens
+            window = max(1, -(-need // self.cache.block_size))
+            if window > self.governor.ledger.limit:
+                raise CapacityError(
+                    f"request window of {window} blocks can never fit the "
+                    f"admission limit of {self.governor.ledger.limit}")
+        return self.sched.submit(prompt, max_new_tokens, stream, group_id,
+                                 priority)
 
     def _lru_victims(self):
         """LRU over running sequences' oldest blocks (outside any window)."""
@@ -107,20 +143,118 @@ class Engine:
         return r.slot % self.cache.num_workers
 
     def _admit(self) -> None:
-        for r in self.sched.admit():
-            need = len(r.prompt) + r.max_new_tokens
+        admitted = (self.sched.admit() if self.governor is None
+                    else self._governed_admit())
+        for r in admitted:
+            if r.state != "running":
+                # a later admission's allocation pressure preempted this
+                # one before its turn — it re-queued and retries next round
+                continue
             # device refresh scoping must know which worker serves the slot
             self.cache.bind_slot_worker(r.slot, self._worker_of(r))
+            if r.mapping is not None:
+                # swap-preempted re-admission: mapping and generated tokens
+                # survived; the demand pager faults the blocks back in
+                continue
+            need = len(r.prompt) + r.max_new_tokens
             while True:
                 try:
                     r.mapping = self.cache.alloc_sequence(
                         need, stream=r.stream, group_id=r.group_id,
                         worker=self._worker_of(r))
                     break
-                except Exception:
-                    if not self.evictor.maybe_evict():
-                        raise
+                except Exception as e:
+                    if self._make_room(r):
+                        continue
+                    if self.governor is not None:
+                        raise CapacityError(
+                            "admission cannot allocate "
+                            f"{need} tokens of blocks: pool exhausted and "
+                            "no eviction or preemption victim remains"
+                        ) from e
+                    raise
             self._prefill_request(r)
+
+    def _make_room(self, r: Request) -> bool:
+        """Free blocks under allocation pressure: evict, else (governed)
+        preempt a victim other than ``r`` — the same escalation order the
+        demand pager uses, so admission and fault-in fail identically."""
+        if self.evictor.maybe_evict():
+            return True
+        if self.governor is not None and len(self.sched.running) > 1:
+            victim = self.governor.choose_victim(self.sched.running,
+                                                 exclude=(r.rid,))
+            if victim is not None:
+                self._preempt(victim)
+                return True
+        return False
+
+    def _governed_admit(self) -> list[Request]:
+        """Admission through the governor: policy order, capacity-checked.
+
+        Priority pressure first: while the highest queued class is blocked
+        on capacity and a strictly lower class is running, preempt the
+        governor's victim (vLLM-style) — then fill free slots with the
+        policy's picks until capacity or the queue runs out.
+        """
+        gov = self.governor
+        while True:
+            bi = gov.wants_priority_preempt(self.sched.queue)
+            if bi is None:
+                break
+            victim = gov.choose_victim(
+                self.sched.running,
+                below_priority=self.sched.queue[bi].priority)
+            if victim is None:
+                break
+            self._preempt(victim)
+        admitted = []
+        for slot in self.sched.admissible():
+            idx = gov.select(self.sched.queue)
+            if idx is None:
+                break
+            r = self.sched.queue.pop(idx)
+            self.sched.place(r, slot)
+            gov.on_admit(r, self._worker_of(r))
+            admitted.append(r)
+        return admitted
+
+    def _preempt(self, r: Request, strategy: str | None = None) -> str:
+        """Evict ``r`` from its slot per the governor's victim strategy.
+
+        ``recompute`` frees the mapping (the blocks recycle — fence-free
+        under FPR) and clears generated tokens for a from-scratch
+        re-prefill; ``swap`` pushes the resident blocks out through the
+        swap path (one merged fence, contents round-trip through the swap
+        store) and keeps mapping + tokens for fault-back re-admission.
+        Architectures with per-slot recurrent state cannot survive a slot
+        change, so swap falls back to recompute there.  Returns the
+        strategy actually applied.
+        """
+        gov = self.governor
+        strategy = strategy or gov.config.preempt
+        if strategy == "swap" and (self._slot_state_keys
+                                   or r.mapping is None):
+            # per-slot recurrent state cannot survive a slot change, and a
+            # victim admitted this round but not yet allocated has nothing
+            # to swap — both fall back to recompute
+            strategy = "recompute"
+        worker = self._worker_of(r)
+        gov.on_release(r)
+        if strategy == "swap":
+            m = r.mapping
+            victims = [(m.mapping_id, i)
+                       for i, b in enumerate(m.physical) if b >= 0]
+            if victims:
+                self.cache.mgr.evict(victims,
+                                     fpr_batch=self.cache.fpr_enabled,
+                                     worker=worker)
+            self.sched.preempt(r, keep_mapping=True)
+        else:
+            self.sched.preempt(
+                r, free=lambda m: self.cache.free_sequence(m, worker=worker))
+        gov.count_preempt(strategy)
+        return strategy
 
     def _prefill_request(self, r: Request) -> None:
         """Single-sequence prefill into the request's blocks."""
@@ -138,8 +272,7 @@ class Engine:
         for k, v in st.items():
             if k in ("tables", "lengths"):
                 view[k] = st[k]
-            elif k in ("conv", "ssm", "rwkv_x", "rwkv_s", "cross_k",
-                       "cross_v"):
+            elif k in _SLOT_STATE_KEYS:
                 view[k] = v[:, r.slot:r.slot + 1]
             else:
                 view[k] = v
@@ -147,8 +280,7 @@ class Engine:
         for k, v in new.items():
             if k in ("tables", "lengths"):
                 continue
-            if k in ("conv", "ssm", "rwkv_x", "rwkv_s", "cross_k",
-                     "cross_v"):
+            if k in _SLOT_STATE_KEYS:
                 self.cache.state[k] = self.cache.state[k].at[
                     :, r.slot:r.slot + 1].set(v)
             else:
@@ -158,6 +290,65 @@ class Engine:
         # padding hid it — for simplicity prompts are block-aligned in
         # benchmarks; otherwise we decode from the argmax here)
         del logits
+
+    # -------------------------------------------------------- demand paging
+    def _pager_fixpoint(self) -> bool:
+        """Scan running windows to a resident fixpoint (bounded passes).
+
+        Returns True when the final pass still faulted — i.e. the bound
+        was hit without converging (over-committed pool).
+        """
+        faulted = False
+        for _ in range(1 + len(self.sched.running)):
+            faulted = False
+            for slot, r in list(self.sched.running.items()):
+                if self.sched.running.get(slot) is not r:
+                    continue          # preempted by a mid-scan pressure fix
+                m = r.mapping
+                for idx in range(self._used_blocks(r)):
+                    if m.physical[idx] < 0:
+                        faulted = True
+                        self._fault_in(r, idx)
+            if not faulted:
+                break
+        return faulted
+
+    def _fault_in(self, r: Request, idx: int) -> None:
+        """touch() one block, evicting — or, under the governor,
+        preempting a victim — until the allocation succeeds."""
+        while True:
+            try:
+                self.cache.mgr.touch(r.mapping.mapping_id, idx,
+                                     worker=self._worker_of(r))
+                return
+            except Exception:
+                if not self._make_room(r):
+                    raise
+
+    def _outstanding_faults(self) -> bool:
+        """Any non-resident block left in a running window?"""
+        return any(r.mapping.physical[idx] < 0
+                   for r in self.sched.running.values()
+                   for idx in range(self._used_blocks(r)))
+
+    def _relieve_pressure(self) -> None:
+        """Governor give-up path: preempt victims until the pager converges.
+
+        Replaces the legacy ``demand_pager_gave_up`` counter — decoding
+        never proceeds with ``-1`` rows.  Raises :class:`CapacityError`
+        when even a single running sequence cannot be made resident.
+        """
+        while True:
+            victim = (self.governor.choose_victim(self.sched.running)
+                      if len(self.sched.running) > 1 else None)
+            if victim is None:
+                raise CapacityError(
+                    "demand pager cannot converge: running windows "
+                    "over-commit the pool and no preemption victim remains")
+            self._preempt(victim)
+            self._pager_fixpoint()
+            if not self._outstanding_faults():
+                return
 
     # ----------------------------------------------------------------- step
     def step(self) -> int:
@@ -176,32 +367,18 @@ class Engine:
         # nothing leaves every running window resident) so no SWAPPED row
         # ever reaches the decode tables.  An over-committed pool (running
         # windows simply don't fit) has no fixpoint; the pass bound keeps
-        # the step from spinning, and giving up is counted
-        # (demand_pager_gave_up) so divergent tokens are detectable.
-        faulted = False
-        for _ in range(1 + len(self.sched.running)):
-            faulted = False
-            for slot, r in list(self.sched.running.items()):
-                m = r.mapping
-                for idx in range(self._used_blocks(r)):
-                    if m.physical[idx] < 0:
-                        faulted = True
-                        while True:
-                            try:
-                                self.cache.mgr.touch(
-                                    m.mapping_id, idx,
-                                    worker=self._worker_of(r))
-                                break
-                            except Exception:
-                                if not self.evictor.maybe_evict():
-                                    raise
-            if not faulted:
-                break
-        if faulted and any(
-                r.mapping.physical[idx] < 0
-                for r in self.sched.running.values()
-                for idx in range(self._used_blocks(r))):
-            self.demand_pager_gave_up += 1
+        # the step from spinning.  Legacy mode counts the give-up
+        # (demand_pager_gave_up) and ships -1 rows; under the governor the
+        # give-up instead *preempts* victims until the pager converges
+        # (raising CapacityError if no victim remains) — pressure becomes
+        # preemption, never silent token divergence.
+        if self._pager_fixpoint() and self._outstanding_faults():
+            if self.governor is None:
+                self.demand_pager_gave_up += 1
+            else:
+                self._relieve_pressure()
+        if not self.sched.running:
+            return 0
 
         # the incoming token is the last *known* token; it is (re)written at
         # its own position r.length−1 (idempotent for the prompt tail) and
@@ -231,6 +408,8 @@ class Engine:
                 self.cache.free_sequence(r.mapping,
                                          worker=self._worker_of(r))
                 r.mapping = None
+                if self.governor is not None:
+                    self.governor.on_release(r)
                 self.sched.complete(r)
         self.steps += 1
         self.tokens_generated += made
@@ -246,6 +425,9 @@ class Engine:
         c = self.cache.counters()
         c.update({
             "steps": self.steps,
+            "admission": (self.governor.counters()
+                          if self.governor is not None
+                          else {"enabled": False}),
             "demand_pager_gave_up": self.demand_pager_gave_up,
             "tokens": self.tokens_generated,
             "wall_s": round(self.wall_s, 4),

@@ -107,6 +107,7 @@ class PagedKVCache:
                            if k in ("k", "v", "mla_c", "mla_rope")]
         self.mgr.on_swap_out = self._swap_out
         self.mgr.on_swap_in = self._swap_in
+        self.mgr.on_swap_drop = self._swap_drop
 
     def _swap_out(self, mid: int, idx: int, phys: int) -> None:
         self._swap_store[(mid, idx)] = {
@@ -120,6 +121,10 @@ class PagedKVCache:
         for key, rows in data.items():
             self.state[key] = self.state[key].at[:, phys].set(
                 jnp.asarray(rows))
+
+    def _swap_drop(self, mid: int, idx: int) -> None:
+        """Mapping destroyed with this block swapped out — free the copy."""
+        self._swap_store.pop((mid, idx), None)
 
     # -------------------------------------------------- measured fence cost
     def bind_slot_worker(self, slot: int, worker: int) -> None:

@@ -26,6 +26,7 @@ from repro.core.contexts import ContextScope, derive_context
 from repro.core.eviction import WatermarkEvictor, Watermarks
 from repro.core.fpr import FprMemoryManager
 from repro.core.shootdown import FenceCostModel, FenceEngine
+from repro.serving.admission import GovernorConfig, MemoryGovernor
 
 
 @dataclass
@@ -239,3 +240,152 @@ def eviction_sim(cfg: SimConfig, *, working_set_factor: float = 10.0,
     res.elided = fences.stats.elided_by_version
     res.evictions = ev.stats.blocks_evicted
     return res
+
+
+# ===================================================================== admission
+@dataclass
+class AdmissionSimConfig:
+    """Virtual-time model of the admission/preemption subsystem.
+
+    Closed-loop: ``n_requests`` jobs are queued at t=0 and drain through
+    ``max_batch`` decode slots over a ``pool_blocks`` ledger (block_size 1:
+    a job's window *is* its block count).  Each virtual step every running
+    job decodes once; admission-queue latency is the steps a job spends
+    queued.  With ``overcommit_ratio > 1`` the ledger admits optimistically
+    and demand-pager pressure (committed > pool) preempts victims —
+    ``recompute`` forfeits the victim's decoded progress plus a re-prefill,
+    ``swap`` pays per-block transfer both ways but keeps progress — the
+    same cost split the real engine's two victim strategies have.
+    """
+
+    pool_blocks: int = 64
+    max_batch: int = 8
+    n_requests: int = 64
+    n_streams: int = 4
+    priority_classes: int = 1          # >1 ⇒ jobs get seeded priorities
+    policy: str = "fcfs"               # fcfs | recycle | priority
+    preempt: str = "recompute"         # recompute | swap
+    overcommit_ratio: float = 1.0
+    window_lo: int = 2                 # job window, blocks (seeded uniform)
+    window_hi: int = 8
+    steps_per_block: int = 4           # decode steps per window block
+    step_time: float = 1.0             # virtual µs per engine step
+    prefill_cost: float = 4.0          # virtual µs per (re-)prefill
+    swap_cost_per_block: float = 0.5   # virtual µs per block swapped out+in
+    seed: int = 0
+
+
+@dataclass
+class _SimJob:
+    rid: int
+    stream: str
+    priority: int
+    window: int
+    service_steps: int
+    prompt: range = range(0)           # governor reads len(prompt)+max_new
+    max_new_tokens: int = 0
+    done_steps: int = 0
+    wait_steps: int = 0
+    swapped: bool = False
+
+    def __post_init__(self) -> None:
+        self.prompt = range(self.window)     # block_size 1 ⇒ window blocks
+
+
+def admission_sim(cfg: AdmissionSimConfig) -> dict:
+    """Deterministic admission/preemption sweep point (virtual time)."""
+    rng = np.random.default_rng(cfg.seed)
+    gov = MemoryGovernor(
+        cfg.pool_blocks, block_size=1,
+        config=GovernorConfig(policy=cfg.policy, preempt=cfg.preempt,
+                              overcommit_ratio=cfg.overcommit_ratio))
+    jobs = []
+    for i in range(cfg.n_requests):
+        w = int(rng.integers(cfg.window_lo, cfg.window_hi + 1))
+        jobs.append(_SimJob(
+            rid=i + 1, stream=f"s{i % cfg.n_streams}",
+            priority=int(rng.integers(0, max(1, cfg.priority_classes))),
+            window=w, service_steps=w * cfg.steps_per_block))
+    queue = list(jobs)
+    running: dict[int, _SimJob] = {}
+    done: list[_SimJob] = []
+    overhead = 0.0                      # prefill + swap virtual time
+    wasted_steps = 0                    # decode work forfeited by recompute
+    steps = 0
+
+    def preempt(victim: _SimJob) -> None:
+        nonlocal overhead, wasted_steps
+        slot = next(s for s, j in running.items() if j is victim)
+        del running[slot]
+        gov.on_release(victim)
+        if cfg.preempt == "swap":
+            overhead += victim.window * cfg.swap_cost_per_block
+            victim.swapped = True
+        else:
+            wasted_steps += victim.done_steps
+            victim.done_steps = 0
+        gov.count_preempt(cfg.preempt)
+        queue.insert(0, victim)
+
+    while queue or running:
+        steps += 1
+        if steps > 1_000_000:
+            raise RuntimeError("admission_sim failed to drain — "
+                               "a job can never be admitted")
+        # --- priority pressure: evict lower classes for a blocked one ----
+        while True:
+            bi = gov.wants_priority_preempt(queue)
+            if bi is None:
+                break
+            victim = gov.choose_victim(
+                running, below_priority=queue[bi].priority)
+            if victim is None:
+                break
+            preempt(victim)
+        # --- admission (policy order, ledger-checked) --------------------
+        while len(running) < cfg.max_batch:
+            idx = gov.select(queue)
+            if idx is None:
+                break
+            job = queue.pop(idx)
+            slot = next(s for s in range(cfg.max_batch) if s not in running)
+            running[slot] = job
+            gov.on_admit(job, slot)
+            if job.swapped:     # fault-back; out+in paid at preempt time
+                job.swapped = False
+            else:
+                overhead += cfg.prefill_cost
+        # --- pager pressure: over-committed ⇒ preempt (vLLM give-up fix) -
+        while gov.ledger.committed > cfg.pool_blocks and len(running) > 1:
+            victim = gov.choose_victim(running)
+            if victim is None:
+                break
+            preempt(victim)
+        # --- decode + queue latency -------------------------------------
+        for slot, job in list(running.items()):
+            job.done_steps += 1
+            if job.done_steps >= job.service_steps:
+                del running[slot]
+                gov.on_release(job)
+                done.append(job)
+        for job in queue:
+            job.wait_steps += 1
+
+    waits = [j.wait_steps * cfg.step_time for j in jobs]
+    g = gov.stats
+    return {
+        "policy": cfg.policy, "preempt": cfg.preempt,
+        "overcommit_ratio": cfg.overcommit_ratio,
+        "completed": len(done),
+        "makespan": steps * cfg.step_time,
+        "queue_wait_mean": round(float(np.mean(waits)), 3),
+        "queue_wait_max": round(float(np.max(waits)), 3),
+        "preemptions_recompute": g.preemptions_recompute,
+        "preemptions_swap": g.preemptions_swap,
+        "rejected_overcommit": g.rejected_overcommit,
+        "affinity_hit_rate": g.affinity_hit_rate,
+        "wasted_decode_steps": wasted_steps,
+        "preempt_overhead": round(overhead, 3),
+        "peak_committed": gov.ledger.peak_committed,
+        "pool_blocks": cfg.pool_blocks,
+    }

@@ -1,0 +1,470 @@
+"""Admission-control & preemption subsystem invariants.
+
+The governor's contract: (1) committed window blocks never exceed the
+ledger limit across any submit/admit/complete/preempt interleaving — at
+``overcommit_ratio=1`` that makes demand-pager give-ups impossible; (2)
+admission order and preemption move *when* blocks recycle, never what a
+sequence decodes — every governed run is bit-identical to an
+under-committed reference; (3) a preempted request can never leak its
+mapping (the PR's ``Scheduler.preempt`` regression)."""
+
+from dataclasses import dataclass, field
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.serving.admission import (CapacityError, CapacityLedger,
+                                     FcfsPolicy, GovernorConfig,
+                                     MemoryGovernor, PriorityPolicy,
+                                     RecycleAffinityPolicy, make_policy)
+
+
+# ===================================================================== ledger
+class TestCapacityLedger:
+    def test_reserve_release_roundtrip(self):
+        led = CapacityLedger(10, num_workers=2)
+        led.reserve(1, 4, worker=0)
+        led.reserve(2, 6, worker=1)
+        assert led.committed == 10 and not led.fits(1)
+        assert led.per_worker == [4, 6]
+        assert led.release(1) == 4
+        assert led.committed == 6 and led.fits(4)
+        led.check()
+
+    def test_overcommit_refused_loudly(self):
+        led = CapacityLedger(8)
+        led.reserve(1, 8)
+        with pytest.raises(CapacityError):
+            led.reserve(2, 1)
+        led.check()                      # refused reservation left no trace
+        assert led.committed == 8
+
+    def test_double_reserve_and_unknown_release(self):
+        led = CapacityLedger(8)
+        led.reserve(1, 2)
+        with pytest.raises(ValueError):
+            led.reserve(1, 2)
+        with pytest.raises(KeyError):
+            led.release(99)
+
+    def test_overcommit_ratio_raises_limit_not_capacity(self):
+        led = CapacityLedger(10, overcommit_ratio=1.5)
+        assert led.capacity == 10 and led.limit == 15
+        led.reserve(1, 12)
+        led.check()
+        with pytest.raises(CapacityError):
+            led.reserve(2, 4)
+
+    def test_peak_tracking(self):
+        led = CapacityLedger(10)
+        led.reserve(1, 7)
+        led.release(1)
+        led.reserve(2, 3)
+        assert led.peak_committed == 7
+
+
+# =================================================================== policies
+@dataclass
+class FakeReq:
+    rid: int
+    window: int
+    stream: str = "s0"
+    priority: int = 0
+    max_new_tokens: int = 0
+    prompt: range = field(default=range(0))
+
+    def __post_init__(self):
+        self.prompt = range(self.window)        # block_size 1 in the tests
+
+
+def fits_upto(n):
+    return lambda r: r.window <= n
+
+
+class TestPolicies:
+    def test_fcfs_skips_only_nonfitting(self):
+        q = [FakeReq(1, 5), FakeReq(2, 2), FakeReq(3, 1)]
+        assert FcfsPolicy().select(q, fits_upto(2), ()) == 1
+        assert FcfsPolicy().select(q, fits_upto(0), ()) is None
+
+    def test_recycle_prefers_freshest_freed_stream(self):
+        q = [FakeReq(1, 1, "a"), FakeReq(2, 1, "b"), FakeReq(3, 1, "a")]
+        p = RecycleAffinityPolicy()
+        assert p.select(q, fits_upto(9), ("b", "a")) == 1
+        assert p.select(q, fits_upto(9), ("a",)) == 0    # arrival order ties
+        assert p.select(q, fits_upto(9), ("zzz",)) == 0  # fcfs fallback
+
+    def test_priority_highest_class_then_fcfs(self):
+        q = [FakeReq(1, 1, priority=0), FakeReq(2, 1, priority=2),
+             FakeReq(3, 1, priority=2)]
+        p = PriorityPolicy()
+        assert p.select(q, fits_upto(9), ()) == 1
+        assert p.best_blocked(q, fits_upto(0)) == 1
+
+    def test_make_policy_rejects_unknown(self):
+        with pytest.raises(ValueError):
+            make_policy("lifo")
+
+
+# =================================================================== governor
+def make_gov(capacity=16, **kw):
+    return MemoryGovernor(capacity, block_size=1,
+                          config=GovernorConfig(**kw))
+
+
+class TestGovernor:
+    def test_select_counts_rejections_and_affinity(self):
+        gov = make_gov(4, policy="recycle")
+        gov.note_freed_stream("hot")
+        q = [FakeReq(1, 3, "cold"), FakeReq(2, 2, "hot")]
+        assert gov.select(q) == 1                        # affinity hit
+        assert gov.stats.affinity_hits == 1
+        gov.on_admit(q.pop(1))
+        assert gov.select(q) is None                     # 3 > 4-2 refused
+        assert gov.stats.rejected_overcommit == 1
+
+    def test_choose_victim_lowest_class_then_latest(self):
+        gov = make_gov(16)
+        rs = [FakeReq(1, 1, priority=1), FakeReq(2, 1, priority=0),
+              FakeReq(3, 1, priority=0)]
+        for r in rs:
+            gov.on_admit(r)
+        running = {i: r for i, r in enumerate(rs)}
+        assert gov.choose_victim(running).rid == 3       # latest of class 0
+        assert gov.choose_victim(running, below_priority=1).rid == 3
+        assert gov.choose_victim(running, below_priority=0) is None
+        assert gov.choose_victim({0: rs[0]}, exclude=(1,)) is None
+
+    def test_release_returns_window_and_notes_stream(self):
+        gov = make_gov(4)
+        r = FakeReq(1, 4, "sX")
+        gov.on_admit(r)
+        assert not gov.ledger.fits(1)
+        gov.on_release(r)
+        assert gov.ledger.fits(4)
+        assert gov._freed_streams[0] == "sX"
+        gov.on_release(r)                                # idempotent
+
+
+# ============================================== interleaving soundness property
+def run_interleaving(ops, *, capacity=12, max_batch=4, policy="fcfs",
+                     preempt="recompute", overcommit_ratio=1.0):
+    """Drive submit/admit/complete/preempt ops; the ledger must stay sound.
+
+    Returns the number of admissions, so callers can assert liveness.
+    """
+    gov = MemoryGovernor(capacity, block_size=1, config=GovernorConfig(
+        policy=policy, preempt=preempt, overcommit_ratio=overcommit_ratio))
+    queue, running = [], {}
+    rid = 0
+    admitted = 0
+    for kind, val in ops:
+        if kind == 0:                                    # submit
+            rid += 1
+            queue.append(FakeReq(rid, 1 + val % capacity,
+                                 stream=f"s{val % 3}",
+                                 priority=val % 2))
+        elif kind == 1 and len(running) < max_batch:     # admit
+            idx = gov.select(queue)
+            if idx is not None:
+                r = queue.pop(idx)
+                slot = next(s for s in range(max_batch) if s not in running)
+                running[slot] = r
+                gov.on_admit(r, slot)
+                admitted += 1
+        elif kind == 2 and running:                      # complete
+            slot = sorted(running)[val % len(running)]
+            gov.on_release(running.pop(slot))
+        elif kind == 3 and running:                      # preempt
+            victim = gov.choose_victim(running)
+            if victim is not None:
+                slot = next(s for s, r in running.items() if r is victim)
+                del running[slot]
+                gov.on_release(victim)
+                gov.count_preempt(preempt)
+                queue.insert(0, victim)
+        gov.ledger.check()
+        assert gov.ledger.committed <= gov.ledger.limit
+        assert sum(gov.window_blocks(r) for r in running.values()) \
+            <= gov.ledger.committed
+    return admitted
+
+
+def seeded_ops(seed, n=200):
+    rng = np.random.RandomState(seed)
+    return [(int(rng.randint(0, 4)), int(rng.randint(0, 1 << 16)))
+            for _ in range(n)]
+
+
+class TestInterleavingSoundness:
+    @pytest.mark.parametrize("seed", range(8))
+    def test_seeded_interleavings(self, seed):
+        for policy in ("fcfs", "recycle", "priority"):
+            admitted = run_interleaving(seeded_ops(seed), policy=policy)
+            assert admitted > 0                          # liveness, not vacuity
+
+    def test_seeded_interleavings_overcommitted(self):
+        for seed in range(4):
+            run_interleaving(seeded_ops(seed), overcommit_ratio=1.7,
+                             preempt="swap")
+
+    @pytest.mark.slow
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 1 << 16)),
+                    max_size=400),
+           st.sampled_from(["fcfs", "recycle", "priority"]),
+           st.floats(1.0, 2.0))
+    def test_random_interleavings_never_overcommit(self, ops, policy, ratio):
+        run_interleaving(ops, policy=policy, overcommit_ratio=ratio)
+
+
+# ================================================================ engine level
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.eviction import Watermarks  # noqa: E402
+from repro.models import transformer as tfm  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.serving.engine import Engine  # noqa: E402
+
+TINY = ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
+                   n_kv_heads=1, d_ff=64, vocab=64, head_dim=16)
+PARAMS = tfm.init_params(jax.random.PRNGKey(0), TINY, jnp.float32)
+
+
+def make_engine(admission, *, num_blocks=8, max_batch=2, watermarks=None,
+                num_workers=4):
+    return Engine(TINY, PARAMS, num_blocks=num_blocks, max_batch=max_batch,
+                  max_seq_len=512, fpr_enabled=True, num_workers=num_workers,
+                  admission=admission, watermarks=watermarks)
+
+
+def run_to_tokens(eng, reqs):
+    for prompt, stream, gid, mnt in reqs:
+        eng.submit(prompt, max_new_tokens=mnt, stream=stream, group_id=gid)
+    eng.run()
+    return [r.generated for r in sorted(eng.sched.done, key=lambda r: r.rid)]
+
+
+def multi_stream_reqs(n=6, size=140, mnt=8):
+    rng = np.random.RandomState(11)
+    return [(rng.randint(1, TINY.vocab, size=size), f"s{i % 3}",
+             (i % 3) + 1, mnt) for i in range(n)]
+
+
+class TestEngineGoverned:
+    def test_scheduler_preempt_refuses_to_leak(self):
+        """A mapped victim without a free callback is a hard error."""
+        eng = make_engine("fcfs")
+        eng.submit(np.arange(1, 20), max_new_tokens=4)
+        eng.step()
+        victim = next(iter(eng.sched.running.values()))
+        with pytest.raises(ValueError, match="leak"):
+            eng.sched.preempt(victim)
+        assert victim.state == "running"    # refused before any mutation
+        eng.run()
+
+    def test_preempt_recompute_frees_blocks_and_replays_tokens(self):
+        """preempt → re-admit yields identical tokens and no leaked blocks
+        (the Scheduler.preempt mapping-leak regression)."""
+        reqs = multi_stream_reqs(4)
+        t_plain = run_to_tokens(make_engine("fcfs"), reqs)
+
+        eng = make_engine("fcfs")
+        for prompt, stream, gid, mnt in reqs:
+            eng.submit(prompt, max_new_tokens=mnt, stream=stream,
+                       group_id=gid)
+        eng.step()
+        victim = max(eng.sched.running.values(), key=lambda r: r.rid)
+        free_before = eng.cache.mgr.free_blocks
+        assert eng._preempt(victim) == "recompute"
+        assert victim.mapping is None and victim.generated == []
+        assert eng.cache.mgr.free_blocks > free_before   # blocks came back
+        assert victim.preemptions == 1
+        eng.run()
+        toks = [r.generated for r in sorted(eng.sched.done,
+                                            key=lambda r: r.rid)]
+        assert toks == t_plain
+        assert eng.cache.mgr.free_blocks == eng.cache.mgr.num_blocks
+        assert eng.stats()["admission"]["preemptions_recompute"] == 1
+
+    def test_preempt_swap_keeps_progress_and_tokens(self):
+        """Swap preemption round-trips block contents; re-admission
+        demand-faults them back — tokens identical, no re-prefill."""
+        reqs = multi_stream_reqs(4)
+        t_plain = run_to_tokens(make_engine("fcfs"), reqs)
+
+        eng = make_engine(GovernorConfig(policy="fcfs", preempt="swap"))
+        for prompt, stream, gid, mnt in reqs:
+            eng.submit(prompt, max_new_tokens=mnt, stream=stream,
+                       group_id=gid)
+        eng.step()
+        eng.step()
+        victim = max(eng.sched.running.values(), key=lambda r: r.rid)
+        kept = list(victim.generated)
+        assert eng._preempt(victim) == "swap"
+        assert victim.mapping is not None                # mapping survives
+        assert victim.generated == kept                  # progress survives
+        assert all(b < 0 for b in victim.mapping.physical)   # nothing resident
+        eng.run()
+        toks = [r.generated for r in sorted(eng.sched.done,
+                                            key=lambda r: r.rid)]
+        assert toks == t_plain
+        s = eng.stats()
+        assert s["admission"]["preemptions_swap"] == 1
+        assert s["fpr"]["swap_ins"] > 0
+        assert eng.cache.mgr.free_blocks == eng.cache.mgr.num_blocks
+
+    def test_submit_refuses_impossible_window(self):
+        eng = make_engine("fcfs", num_blocks=4)
+        with pytest.raises(CapacityError):
+            eng.submit(np.arange(1, 2), max_new_tokens=4 * 128 + 1)
+
+    def test_relieve_pressure_raises_without_victims(self):
+        """The governed give-up path is loud: with no victim left it
+        raises instead of shipping -1 rows (legacy counted and went on)."""
+        eng = make_engine("fcfs")
+        eng.submit(np.arange(1, 20), max_new_tokens=4)
+        eng.step()
+        assert len(eng.sched.running) == 1
+        with pytest.raises(CapacityError, match="no preemption victim"):
+            eng._relieve_pressure()
+
+    def test_stats_expose_admission_counters(self):
+        eng = make_engine("recycle")
+        run_to_tokens(eng, multi_stream_reqs(4))
+        adm = eng.stats()["admission"]
+        for key in ("admitted", "rejected_overcommit",
+                    "preemptions_recompute", "preemptions_swap",
+                    "affinity_hit_rate", "policy", "preempt_strategy",
+                    "ledger"):
+            assert key in adm
+        assert adm["admitted"] == 4
+        assert adm["policy"] == "recycle"
+        assert eng.stats()["fence"]["fences_averted"] >= 0
+        legacy = make_engine(None)
+        assert legacy.stats()["admission"] == {"enabled": False}
+
+
+OVERCOMMIT_WM = Watermarks(0.25, 0.4, 0.6)
+
+
+def overcommit_reqs(n=4, mnt=60):    # windows of 3 blocks: 4×3 > pool of 8
+    rng = np.random.RandomState(3)
+    return [(rng.randint(1, TINY.vocab, size=200), f"s{i % 2}",
+             (i % 2) + 1, mnt) for i in range(n)]
+
+
+class TestOvercommitSoundness:
+    """The closed ROADMAP hole: windows > pool no longer ships -1 rows."""
+
+    def test_governor_eliminates_giveups_bit_identical(self):
+        reqs = overcommit_reqs()
+        t_ref = run_to_tokens(
+            make_engine(None, num_blocks=32, max_batch=4,
+                        watermarks=OVERCOMMIT_WM), reqs)
+
+        legacy = make_engine(None, num_blocks=8, max_batch=4,
+                             watermarks=OVERCOMMIT_WM)
+        t_legacy = run_to_tokens(legacy, reqs)
+        assert legacy.stats()["demand_pager_gave_up"] > 0    # the old hole
+        assert t_legacy != t_ref                             # wrong tokens
+
+        gov = make_engine("fcfs", num_blocks=8, max_batch=4,
+                          watermarks=OVERCOMMIT_WM)
+        t_gov = run_to_tokens(gov, reqs)
+        s = gov.stats()
+        assert s["demand_pager_gave_up"] == 0
+        assert t_gov == t_ref                                # bit-identical
+        assert s["admission"]["rejected_overcommit"] > 0
+        assert s["admission"]["ledger"]["peak_committed"] <= 8
+
+    def test_admission_alloc_pressure_preempts_not_allocator_error(self):
+        """Single-block windows are never evictable (_lru_victims spares
+        the active block), so an optimistically over-committed admission
+        must escalate to preemption — not crash with OutOfBlocksError."""
+        rng = np.random.RandomState(7)
+        reqs = [(rng.randint(1, TINY.vocab, size=20), f"s{i % 2}",
+                 (i % 2) + 1, 4) for i in range(8)]
+        t_ref = run_to_tokens(make_engine(None, num_blocks=16, max_batch=8),
+                              reqs)
+        eng = make_engine(
+            GovernorConfig(policy="fcfs", preempt="recompute",
+                           overcommit_ratio=2.0),
+            num_blocks=4, max_batch=8)
+        toks = run_to_tokens(eng, reqs)        # must not raise
+        assert toks == t_ref
+        assert eng.stats()["admission"]["preemptions_recompute"] > 0
+
+    def test_swap_preempt_of_unallocated_victim_falls_back(self):
+        """_make_room can pick a same-batch admission that has no mapping
+        yet; the swap strategy must fall back to recompute, not crash."""
+        rng = np.random.RandomState(1)
+        sizes = (99, 199, 99)
+        reqs = [(rng.randint(1, TINY.vocab, size=s), f"s{i}", i + 1, 4)
+                for i, s in enumerate(sizes)]
+        t_ref = run_to_tokens(make_engine(None, num_blocks=16, max_batch=3),
+                              reqs)
+        eng = make_engine(
+            GovernorConfig(policy="fcfs", preempt="swap",
+                           overcommit_ratio=2.0),
+            num_blocks=2, max_batch=3)
+        toks = run_to_tokens(eng, reqs)        # must not raise
+        assert toks == t_ref
+
+    def test_recompute_preempt_purges_swap_store(self):
+        """Destroying a mapping whose blocks are swapped out must drop
+        the swap-store copies — recompute-preempting a partially evicted
+        victim used to orphan them forever (mapping ids never recycle)."""
+        eng = make_engine("fcfs")
+        for prompt, stream, gid, mnt in multi_stream_reqs(2):
+            eng.submit(prompt, max_new_tokens=mnt, stream=stream,
+                       group_id=gid)
+        eng.step()
+        victim = max(eng.sched.running.values(), key=lambda r: r.rid)
+        eng.cache.mgr.evict([(victim.mapping.mapping_id, 0)],
+                            fpr_batch=True)
+        assert eng.cache._swap_store              # the copy exists...
+        eng._preempt(victim, strategy="recompute")
+        assert not eng.cache._swap_store          # ...and is purged
+        eng.run()
+        assert eng.cache.mgr.free_blocks == eng.cache.mgr.num_blocks
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("preempt", ["recompute", "swap"])
+    def test_optimistic_overcommit_preempts_not_giveups(self, preempt):
+        reqs = overcommit_reqs(n=6, mnt=60)
+        t_ref = run_to_tokens(
+            make_engine(None, num_blocks=32, max_batch=4,
+                        watermarks=OVERCOMMIT_WM), reqs)
+        eng = make_engine(
+            GovernorConfig(policy="fcfs", preempt=preempt,
+                           overcommit_ratio=1.6),
+            num_blocks=8, max_batch=4, watermarks=OVERCOMMIT_WM)
+        toks = run_to_tokens(eng, reqs)
+        s = eng.stats()
+        assert s["demand_pager_gave_up"] == 0
+        assert toks == t_ref
+        key = ("preemptions_swap" if preempt == "swap"
+               else "preemptions_recompute")
+        assert s["admission"][key] > 0
+
+
+class TestPolicyEquivalence:
+    def test_policies_decode_identical_tokens(self):
+        """Admission order moves recycling, never tokens — and
+        recycle-affinity spares strictly more fence broadcast."""
+        reqs = multi_stream_reqs(9)
+        stats, toks = {}, {}
+        for policy in ("fcfs", "recycle"):
+            eng = make_engine(policy)
+            toks[policy] = run_to_tokens(eng, reqs)
+            stats[policy] = eng.stats()
+        assert toks["fcfs"] == toks["recycle"]
+        f, r = stats["fcfs"]["fence"], stats["recycle"]["fence"]
+        assert r["replicas_spared"] > f["replicas_spared"]
+        assert (stats["recycle"]["fpr"]["recycled_hits"]
+                > stats["fcfs"]["fpr"]["recycled_hits"])
+        assert (stats["recycle"]["admission"]["affinity_hit_rate"]
+                > stats["fcfs"]["admission"]["affinity_hit_rate"])

@@ -34,9 +34,20 @@ SEED = 20240802
 _CFG_KW = dict(name="adm", n_layers=1, d_model=32, n_heads=2,
                n_kv_heads=1, d_ff=64, vocab=64, head_dim=16)
 
-_ADMISSION_KEYS = ("admitted", "rejected_overcommit",
-                   "preemptions_recompute", "preemptions_swap",
-                   "affinity_hit_rate")
+#: flat MetricsRegistry keys summarised per run (the schema CI validates)
+_SUMMARY_KEYS = (
+    "fence.fences",
+    "fence.fences_averted",
+    "fence.replicas_spared",
+    "fpr.recycled_hits",
+    "engine.demand_pager_gave_up",
+    "admission.admitted",
+    "admission.rejected_overcommit",
+    "admission.holds",
+    "admission.preemptions_recompute",
+    "admission.preemptions_swap",
+    "admission.affinity_hit_rate",
+)
 
 
 def _params():
@@ -50,31 +61,24 @@ def _params():
 
 def _drive(params, reqs, *, admission, num_blocks, max_batch,
            num_workers=4, watermarks=None):
+    from benchmarks.engine_trace import _replay
     from repro.models.config import ModelConfig
+    from repro.serving.config import EngineConfig
     from repro.serving.engine import Engine
 
-    eng = Engine(ModelConfig(**_CFG_KW), params, num_blocks=num_blocks,
-                 max_batch=max_batch, max_seq_len=512, fpr_enabled=True,
-                 num_workers=num_workers, scoped_fences=True,
-                 watermarks=watermarks, admission=admission)
-    for prompt, stream, gid, mnt in reqs:
-        eng.submit(prompt, max_new_tokens=mnt, stream=stream, group_id=gid)
-    eng.run()
-    toks = [list(map(int, r.generated))
-            for r in sorted(eng.sched.done, key=lambda r: r.rid)]
-    return eng.stats(), toks
+    eng = Engine(ModelConfig(**_CFG_KW), params,
+                 config=EngineConfig(num_blocks=num_blocks,
+                                     max_batch=max_batch, max_seq_len=512,
+                                     fpr_enabled=True,
+                                     num_workers=num_workers,
+                                     scoped_fences=True,
+                                     watermarks=watermarks,
+                                     admission=admission))
+    return _replay(eng, reqs)
 
 
-def _summary(stats: dict) -> dict:
-    adm = stats["admission"]
-    return {
-        "fences": stats["fence"]["fences"],
-        "fences_averted": stats["fence"]["fences_averted"],
-        "replicas_spared": stats["fence"]["replicas_spared"],
-        "recycled_hits": stats["fpr"]["recycled_hits"],
-        "demand_pager_gave_up": stats["demand_pager_gave_up"],
-        **{k: adm.get(k) for k in _ADMISSION_KEYS},
-    }
+def _summary(snapshot: dict) -> dict:
+    return {k: snapshot.get(k) for k in _SUMMARY_KEYS}
 
 
 # ------------------------------------------------------------------ policies
@@ -97,18 +101,19 @@ def case_policies(params, smoke: bool = False) -> dict:
 
 def report_policies(out: dict) -> None:
     f, r = out["fcfs"], out["recycle"]
-    print(f"  policies:  replicas_spared fcfs {f['replicas_spared']} → "
-          f"recycle {r['replicas_spared']}, fences {f['fences']} → "
-          f"{r['fences']}, affinity hit-rate {f['affinity_hit_rate']} → "
-          f"{r['affinity_hit_rate']}, tokens identical: "
+    print(f"  policies:  replicas_spared fcfs {f['fence.replicas_spared']} "
+          f"→ recycle {r['fence.replicas_spared']}, fences "
+          f"{f['fence.fences']} → {r['fence.fences']}, affinity hit-rate "
+          f"{f['admission.affinity_hit_rate']} → "
+          f"{r['admission.affinity_hit_rate']}, tokens identical: "
           f"{out['tokens_identical']}")
     if not out["tokens_identical"]:
         raise AssertionError("admission policy changed decoded tokens")
-    if not r["replicas_spared"] > f["replicas_spared"]:
+    if not r["fence.replicas_spared"] > f["fence.replicas_spared"]:
         raise AssertionError(
             "recycle-affinity admission must spare strictly more fence "
-            f"broadcast than FCFS (got {r['replicas_spared']} vs "
-            f"{f['replicas_spared']})")
+            f"broadcast than FCFS (got {r['fence.replicas_spared']} vs "
+            f"{f['fence.replicas_spared']})")
 
 
 # ---------------------------------------------------------------- overcommit
@@ -144,18 +149,19 @@ def case_overcommit(params, smoke: bool = False) -> dict:
 
 def report_overcommit(out: dict) -> None:
     leg, gov = out["legacy"], out["governed"]
-    print(f"  overcommit: legacy gave_up {leg['demand_pager_gave_up']} "
+    gave = "engine.demand_pager_gave_up"
+    print(f"  overcommit: legacy gave_up {leg[gave]} "
           f"(tokens ok: {leg['tokens_match_reference']}) → governed "
-          f"gave_up {gov['demand_pager_gave_up']} (tokens ok: "
-          f"{gov['tokens_match_reference']}); ratio 1.6 preempts "
-          f"recompute {out['overcommit_recompute']['preemptions_recompute']}"
-          f" / swap {out['overcommit_swap']['preemptions_swap']}")
-    if gov["demand_pager_gave_up"] != 0:
+          f"gave_up {gov[gave]} (tokens ok: "
+          f"{gov['tokens_match_reference']}); ratio 1.6 preempts recompute "
+          f"{out['overcommit_recompute']['admission.preemptions_recompute']}"
+          f" / swap {out['overcommit_swap']['admission.preemptions_swap']}")
+    if gov[gave] != 0:
         raise AssertionError("governor must eliminate pager give-ups")
     for name in ("governed", "overcommit_recompute", "overcommit_swap"):
         if not out[name]["tokens_match_reference"]:
             raise AssertionError(f"{name} diverged from the reference run")
-        if out[name]["demand_pager_gave_up"] != 0:
+        if out[name][gave] != 0:
             raise AssertionError(f"{name} shipped -1 rows (gave up)")
 
 
@@ -166,7 +172,7 @@ def case_sweep(smoke: bool = False) -> dict:
 
     ratios = (1.0, 1.5) if smoke else (1.0, 1.25, 1.5, 2.0)
     rows = []
-    for policy in ("fcfs", "recycle", "priority"):
+    for policy in ("fcfs", "recycle", "priority", "deadline"):
         for ratio in ratios:
             rows.append(admission_sim(AdmissionSimConfig(
                 policy=policy, overcommit_ratio=ratio,
@@ -175,6 +181,46 @@ def case_sweep(smoke: bool = False) -> dict:
                 pool_blocks=32, n_requests=24 if smoke else 64,
                 seed=SEED % 2**31)))
     return {"rows": rows}
+
+
+# ----------------------------------------------------------------------- sla
+#: open-loop mice-and-elephants workload where FCFS first-fit starves the
+#: whole-pool windows — the deadline policy's p99 proving ground
+SLA_SIM_KW = dict(pool_blocks=8, max_batch=8, window_lo=1, window_hi=8,
+                  arrival_every=1.5, large_frac=0.12, steps_per_block=4,
+                  sla_steps=32, seed=23)
+
+
+def case_sla(smoke: bool = False) -> dict:
+    """FCFS first-fit vs the SLA/deadline policy on p99 queue-wait.
+
+    Small windows arrive continuously and keep re-nibbling freed capacity,
+    so a whole-pool window under FCFS first-fit waits until the arrival
+    stream pauses; the deadline policy's event-driven hold (consume
+    ``AdmissionDecision``, stop admitting once the urgent window has been
+    leapfrogged too often) bounds that tail.
+    """
+    from repro.serving.sim import AdmissionSimConfig, admission_sim
+
+    n = 48 if smoke else 96
+    out: dict = {"sim": {**SLA_SIM_KW, "n_requests": n}}
+    for policy in ("fcfs", "deadline"):
+        out[policy] = admission_sim(AdmissionSimConfig(
+            policy=policy, n_requests=n, **SLA_SIM_KW))
+    return out
+
+
+def report_sla(out: dict) -> None:
+    f, d = out["fcfs"], out["deadline"]
+    print(f"  sla:       queue-wait p99 fcfs {f['queue_wait_p99']} → "
+          f"deadline {d['queue_wait_p99']} "
+          f"(max {f['queue_wait_max']} → {d['queue_wait_max']}, "
+          f"holds {d['holds']})")
+    if not d["queue_wait_p99"] < f["queue_wait_p99"]:
+        raise AssertionError(
+            "deadline admission must beat FCFS on p99 queue-wait for the "
+            f"starvation trace (got {d['queue_wait_p99']} vs "
+            f"{f['queue_wait_p99']})")
 
 
 def report_sweep(out: dict) -> None:
@@ -198,11 +244,13 @@ def run(smoke: bool = False) -> dict:
         "policies": case_policies(params, smoke=smoke),
         "overcommit": case_overcommit(params, smoke=smoke),
         "sweep": case_sweep(smoke=smoke),
+        "sla": case_sla(smoke=smoke),
     }
     save("admission_smoke" if smoke else "admission_bench", out)
     report_policies(out["policies"])
     report_overcommit(out["overcommit"])
     report_sweep(out["sweep"])
+    report_sla(out["sla"])
     return out
 
 

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from benchmarks.common import improvement, save
 from repro.configs import get_smoke
 from repro.models import transformer as tfm
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Engine
 
 
@@ -32,8 +33,9 @@ STEP_S = 10e-3     # virtual decode-step time (devices overlap host work)
 def _run(fpr: bool, n_requests: int = 24, max_batch: int = 4):
     cfg = get_smoke("granite-3-8b")
     params = tfm.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
-    eng = Engine(cfg, params, num_blocks=96, max_batch=max_batch,
-                 max_seq_len=512, fpr_enabled=fpr, cost_model=COST)
+    eng = Engine(cfg, params, config=EngineConfig(
+        num_blocks=96, max_batch=max_batch, max_seq_len=512,
+        fpr_enabled=fpr, cost_model=COST))
     rng = np.random.RandomState(7)
     for i in range(n_requests):
         prompt = rng.randint(1, cfg.vocab, size=24)

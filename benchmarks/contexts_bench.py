@@ -17,6 +17,7 @@ elided.
 from __future__ import annotations
 
 from benchmarks.common import save
+from repro.core.config import FprConfig
 from repro.core.contexts import ContextScope, derive_context
 from repro.core.fpr import FprMemoryManager
 from repro.core.shootdown import FenceEngine
@@ -24,8 +25,8 @@ from repro.core.shootdown import FenceEngine
 
 def _alternating(scope: str, iters: int = 500, maps_per_burst: int = 4):
     fences = FenceEngine(measure=False)
-    mgr = FprMemoryManager(256, num_workers=1, fence_engine=fences,
-                           fpr_enabled=True)
+    mgr = FprMemoryManager(config=FprConfig(num_blocks=256),
+                           fence_engine=fences)
     for it in range(iters):
         stream = it % 2                       # alternate A / B bursts
         if scope == "per_mapping":

@@ -12,12 +12,24 @@ contexts and context-exit fences actually fire — is replayed twice through
 
 Reported per path: fence counts, device-refreshed table entries/bytes, and
 the decoded tokens, which must be **bit-identical** — scoping only moves
-*when* device table copies are refreshed, never what they contain.  The
-whole trace is deterministic (seeded prompts, greedy decode), so the JSON
-artifact is diffable run-to-run.
+*when* device table copies are refreshed, never what they contain.  All
+counters are read from the unified ``MetricsRegistry`` flat snapshot, so
+the artifact keys are exactly the schema CI validates.
+
+**Construction equivalence.**  The sharded trace is additionally replayed
+through an engine built the *legacy* way — loose kwargs plus a deprecated
+``on_fence`` callback attached through the one-release shim — and must
+match the ``EngineConfig``/event-bus build bit-for-bit (tokens and every
+deterministic counter).  That is the control-plane redesign's acceptance
+criterion: the new API moved the wiring, not the behaviour.
+
+The whole trace is deterministic (seeded prompts, greedy decode), so the
+JSON artifact is diffable run-to-run.
 """
 
 from __future__ import annotations
+
+import warnings
 
 import numpy as np
 
@@ -27,6 +39,26 @@ SEED = 20240814
 
 _CFG_KW = dict(name="trace", n_layers=1, d_model=32, n_heads=2,
                n_kv_heads=1, d_ff=64, vocab=64, head_dim=16)
+
+#: flat MetricsRegistry keys reported per trace mode
+_REPORT_KEYS = (
+    "fence.fences",
+    "fence.fences_scoped",
+    "fence.replicas_spared",
+    "device.full_refreshes",
+    "device.shard_refreshes",
+    "device.refreshed_entries",
+    "device.refreshed_bytes",
+    "admission.admitted",
+    "admission.rejected_overcommit",
+    "admission.preemptions_recompute",
+    "admission.preemptions_swap",
+    "admission.affinity_hit_rate",
+)
+
+#: wall-time keys excluded from the bit-identity comparison (everything
+#: else in the snapshot must match across construction paths)
+_TIME_KEYS = ("engine.wall_s", "engine.tokens_per_s", "fence.measured_s")
 
 
 def _trace(n_requests: int, n_streams: int, seed: int = SEED):
@@ -40,23 +72,52 @@ def _trace(n_requests: int, n_streams: int, seed: int = SEED):
     return reqs
 
 
-def _drive(params, reqs, *, num_workers: int, scoped: bool,
-           num_blocks: int, max_batch: int):
-    from repro.models.config import ModelConfig
-    from repro.serving.engine import Engine
-
-    # fcfs governor ≡ the legacy fill-every-slot order on this trace (all
-    # windows fit), but the replay output gains the admission counters
-    eng = Engine(ModelConfig(**_CFG_KW), params, num_blocks=num_blocks,
-                 max_batch=max_batch, max_seq_len=256, fpr_enabled=True,
-                 num_workers=num_workers, scoped_fences=scoped,
-                 admission="fcfs")
+def _replay(eng, reqs):
     for prompt, stream, gid, mnt in reqs:
         eng.submit(prompt, max_new_tokens=mnt, stream=stream, group_id=gid)
     eng.run()
     toks = [list(map(int, r.generated))
             for r in sorted(eng.sched.done, key=lambda r: r.rid)]
-    return eng.stats(), toks
+    return eng.metrics.snapshot(), toks
+
+
+def _drive(params, reqs, *, num_workers: int, scoped: bool,
+           num_blocks: int, max_batch: int):
+    from repro.models.config import ModelConfig
+    from repro.serving.config import EngineConfig
+    from repro.serving.engine import Engine
+
+    # fcfs governor ≡ the legacy fill-every-slot order on this trace (all
+    # windows fit), but the replay output gains the admission counters
+    eng = Engine(ModelConfig(**_CFG_KW), params,
+                 config=EngineConfig(num_blocks=num_blocks,
+                                     max_batch=max_batch, max_seq_len=256,
+                                     fpr_enabled=True,
+                                     num_workers=num_workers,
+                                     scoped_fences=scoped,
+                                     admission="fcfs"))
+    return _replay(eng, reqs)
+
+
+def _drive_legacy(params, reqs, *, num_workers: int, scoped: bool,
+                  num_blocks: int, max_batch: int):
+    """The deprecated construction path: loose kwargs + on_fence shim."""
+    from repro.models.config import ModelConfig
+    from repro.serving.engine import Engine
+
+    legacy_fences = []
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        eng = Engine(ModelConfig(**_CFG_KW), params, num_blocks=num_blocks,
+                     max_batch=max_batch, max_seq_len=256, fpr_enabled=True,
+                     num_workers=num_workers, scoped_fences=scoped,
+                     admission="fcfs")
+        # a legacy observer riding the deprecation shim must not perturb
+        # the replay (it subscribes alongside, it no longer replaces)
+        eng.cache.fences.on_fence = (
+            lambda reason, n, workers: legacy_fences.append(reason))
+    snap, toks = _replay(eng, reqs)
+    return snap, toks, len(legacy_fences)
 
 
 def case(smoke: bool = False, num_workers: int = 4) -> dict:
@@ -73,41 +134,59 @@ def case(smoke: bool = False, num_workers: int = 4) -> dict:
     out: dict = {"seed": SEED, "num_workers": num_workers,
                  "requests": len(reqs), **kw}
     toks = {}
+    snaps = {}
     for mode, scoped in (("global", False), ("sharded", True)):
-        stats, toks[mode] = _drive(params, reqs, num_workers=num_workers,
-                                   scoped=scoped, **kw)
-        out[mode] = {
-            "fences": stats["fence"]["fences"],
-            "fences_scoped": stats["fence"]["fences_scoped"],
-            "replicas_spared": stats["fence"]["replicas_spared"],
-            "device_full_refreshes": stats["device_full_refreshes"],
-            "device_shard_refreshes": stats["device_shard_refreshes"],
-            "device_refreshed_entries": stats["device_refreshed_entries"],
-            "device_refreshed_bytes": stats["device_refreshed_bytes"],
-            "admission": {k: stats["admission"].get(k) for k in
-                          ("admitted", "rejected_overcommit",
-                           "preemptions_recompute", "preemptions_swap",
-                           "affinity_hit_rate")},
-        }
+        snaps[mode], toks[mode] = _drive(params, reqs,
+                                         num_workers=num_workers,
+                                         scoped=scoped, **kw)
+        out[mode] = {k: snaps[mode].get(k) for k in _REPORT_KEYS}
     out["tokens_identical"] = toks["global"] == toks["sharded"]
-    g = out["global"]["device_refreshed_bytes"]
-    s = out["sharded"]["device_refreshed_bytes"]
+    g = out["global"]["device.refreshed_bytes"]
+    s = out["sharded"]["device.refreshed_bytes"]
     out["refreshed_bytes_saving_pct"] = (round((1 - s / g) * 100.0, 2)
                                          if g else 0.0)
+
+    # construction equivalence: EngineConfig/event-bus vs legacy kwargs +
+    # deprecated-callback shim, on the sharded trace
+    legacy_snap, legacy_toks, legacy_cb_fences = _drive_legacy(
+        params, reqs, num_workers=num_workers, scoped=True, **kw)
+    det_new = {k: v for k, v in snaps["sharded"].items()
+               if k not in _TIME_KEYS}
+    det_old = {k: v for k, v in legacy_snap.items() if k not in _TIME_KEYS}
+    out["construction_equivalence"] = {
+        "tokens_identical": legacy_toks == toks["sharded"],
+        "counters_identical": det_new == det_old,
+        "counter_mismatches": sorted(
+            k for k in set(det_new) | set(det_old)
+            if det_new.get(k) != det_old.get(k)),
+        "legacy_callback_fences_seen": legacy_cb_fences,
+    }
     return out
 
 
 def report(out: dict) -> None:
-    """Print the global-vs-sharded summary; fail loud on token drift."""
+    """Print the global-vs-sharded summary; fail loud on any drift."""
     g, s = out["global"], out["sharded"]
-    print(f"  engine trace:    refreshed bytes {g['device_refreshed_bytes']}"
-          f" → {s['device_refreshed_bytes']} "
+    print(f"  engine trace:    refreshed bytes {g['device.refreshed_bytes']}"
+          f" → {s['device.refreshed_bytes']} "
           f"(-{out['refreshed_bytes_saving_pct']:.0f}%), "
-          f"fences {g['fences']} → {s['fences']} "
-          f"({s['fences_scoped']} scoped), "
+          f"fences {g['fence.fences']} → {s['fence.fences']} "
+          f"({s['fence.fences_scoped']} scoped), "
           f"tokens identical: {out['tokens_identical']}")
+    ce = out["construction_equivalence"]
+    print(f"  construction:    EngineConfig vs legacy kwargs — tokens "
+          f"identical: {ce['tokens_identical']}, counters identical: "
+          f"{ce['counters_identical']} (legacy on_fence shim observed "
+          f"{ce['legacy_callback_fences_seen']} fences)")
     if not out["tokens_identical"]:
         raise AssertionError("sharded path changed decoded tokens")
+    if not ce["tokens_identical"]:
+        raise AssertionError("legacy-construction replay changed tokens")
+    if not ce["counters_identical"]:
+        raise AssertionError("legacy-construction replay drifted on "
+                             f"counters: {ce['counter_mismatches']}")
+    if not ce["legacy_callback_fences_seen"]:
+        raise AssertionError("the deprecated on_fence shim never fired")
 
 
 def run(smoke: bool = False) -> dict:

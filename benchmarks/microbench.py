@@ -29,6 +29,7 @@ import time
 from benchmarks.common import (ALLOC_COST, COMPUTE_Q, FENCE_COST,
                                improvement, save)
 from repro.core.allocator import BlockAllocator
+from repro.core.config import FprConfig
 from repro.core.contexts import ContextScope, derive_context
 from repro.core.fpr import FprMemoryManager
 from repro.core.shootdown import FenceEngine
@@ -82,9 +83,11 @@ def scoped_fence_case(workers: int = 8, iters: int = 1500,
     out: dict = {"workers": workers, "iters": iters, "contexts": contexts}
     for mode in ("global", "scoped"):
         eng = FenceEngine(measure=False)
-        mgr = FprMemoryManager(2048, num_workers=workers, fence_engine=eng,
-                               fpr_enabled=True,
-                               scoped_fences=(mode == "scoped"))
+        mgr = FprMemoryManager(
+            config=FprConfig(num_blocks=2048, num_workers=workers,
+                             fpr_enabled=True,
+                             scoped_fences=(mode == "scoped")),
+            fence_engine=eng)
         for i in range(iters):
             ctx = derive_context(ContextScope.PER_GROUP,
                                  group_id=(i % contexts) + 1)

@@ -13,13 +13,15 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import save
+from repro.core.config import FprConfig
 from repro.core.fpr import FprMemoryManager
 from repro.core.shootdown import FenceEngine
 
 
 def _mmap_loop(fpr_compiled_in: bool, iters: int = 4000) -> float:
-    mgr = FprMemoryManager(1024, fence_engine=FenceEngine(measure=False),
-                           fpr_enabled=fpr_compiled_in)
+    mgr = FprMemoryManager(
+        config=FprConfig(num_blocks=1024, fpr_enabled=fpr_compiled_in),
+        fence_engine=FenceEngine(measure=False))
     t0 = time.perf_counter()
     for i in range(iters):
         m = mgr.mmap(8, None)          # ctx=None → nobody opts in

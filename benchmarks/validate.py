@@ -1,0 +1,75 @@
+"""Validate benchmark smoke artifacts against the MetricsRegistry schema.
+
+    PYTHONPATH=src python -m benchmarks.validate [files...]
+
+Every *namespaced* key in the JSON artifacts (a dotted key whose first
+segment is one of the registry namespaces — ``fpr.`` / ``fence.`` /
+``table.`` / ``device.`` / ``admission.`` / ``engine.``) must be known to
+:mod:`repro.core.metrics` — either a :data:`~repro.core.metrics.
+STABLE_SCHEMA` / :data:`~repro.core.metrics.ADMISSION_SCHEMA` key or a
+declared wildcard group.  Artifact-local fields (``seed``,
+``tokens_identical``, sim rows, …) are ignored.
+
+This runs in the CI push lane right after ``benchmarks.run --smoke``:
+counter drift (a renamed, retired or misspelled key) fails the push
+instead of surfacing as a silent nightly artifact diff.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.core.metrics import schema_violations
+
+#: the deterministic smoke artifacts the push lane publishes
+DEFAULT_ARTIFACTS = ("microbench_scoped.json", "admission_smoke.json")
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _walk_keys(node, found: set) -> None:
+    """Collect every dict key at every depth (artifacts nest snapshots)."""
+    if isinstance(node, dict):
+        for key, value in node.items():
+            if isinstance(key, str):
+                found.add(key)
+            _walk_keys(value, found)
+    elif isinstance(node, list):
+        for item in node:
+            _walk_keys(item, found)
+
+
+def validate_file(path: str) -> list[str]:
+    """Schema violations in one artifact (empty list = clean)."""
+    with open(path) as f:
+        payload = json.load(f)
+    keys: set = set()
+    _walk_keys(payload, keys)
+    return schema_violations(keys)
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or [os.path.join(RESULTS, name)
+                     for name in DEFAULT_ARTIFACTS]
+    failed = False
+    for path in paths:
+        if not os.path.exists(path):
+            print(f"MISSING artifact: {path}")
+            failed = True
+            continue
+        bad = validate_file(path)
+        if bad:
+            failed = True
+            print(f"SCHEMA DRIFT in {os.path.basename(path)} — keys not in "
+                  f"the MetricsRegistry schema:")
+            for key in bad:
+                print(f"  {key}")
+        else:
+            print(f"ok: {os.path.basename(path)}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from benchmarks.common import improvement, save
 from repro.configs import get_smoke
 from repro.models import transformer as tfm
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Engine
 
 
@@ -29,8 +30,9 @@ from benchmarks.apache_like import COST, throughput
 def _run(fpr: bool, read_frac: float, n_ops: int = 20):
     cfg = get_smoke("deepseek-7b")
     params = tfm.init_params(jax.random.PRNGKey(1), cfg, jnp.float32)
-    eng = Engine(cfg, params, num_blocks=48, max_batch=4,
-                 max_seq_len=384, fpr_enabled=fpr, cost_model=COST)
+    eng = Engine(cfg, params, config=EngineConfig(
+        num_blocks=48, max_batch=4, max_seq_len=384, fpr_enabled=fpr,
+        cost_model=COST))
     rng = np.random.RandomState(11)
     for i in range(n_ops):
         is_read = rng.rand() < read_frac

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.core.eviction import Watermarks
 from repro.models.config import ModelConfig
 from repro.models import transformer as tfm
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Engine
 
 CFG = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
@@ -28,10 +29,10 @@ def main():
     prompts = [rng.randint(1, CFG.vocab, size=140) for _ in range(6)]
 
     for fpr in (False, True):
-        eng = Engine(CFG, params, num_blocks=64, max_batch=2,
-                     max_seq_len=384, fpr_enabled=fpr,
-                     watermarks=Watermarks(min_frac=0.05, low_frac=0.15,
-                                           high_frac=0.25))
+        eng = Engine(CFG, params, config=EngineConfig(
+            num_blocks=64, max_batch=2, max_seq_len=384, fpr_enabled=fpr,
+            watermarks=Watermarks(min_frac=0.05, low_frac=0.15,
+                                  high_frac=0.25)))
         for p in prompts:
             eng.submit(p, max_new_tokens=8)
         # inject pressure: evict the oldest block of each running request

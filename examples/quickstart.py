@@ -7,13 +7,13 @@ blocks; the fence fires only when blocks leave their context; a global
 fence lets later exits elide theirs (§IV-C5).
 """
 
+from repro.core.config import FprConfig
 from repro.core.contexts import ContextScope, derive_context
 from repro.core.fpr import FprMemoryManager
 from repro.core.shootdown import FenceEngine
 
 fences = FenceEngine(measure=False)
-mgr = FprMemoryManager(num_blocks=256, fence_engine=fences,
-                       fpr_enabled=True)
+mgr = FprMemoryManager(config=FprConfig(num_blocks=256), fence_engine=fences)
 
 stream_a = derive_context(ContextScope.PER_GROUP, group_id=1)
 stream_b = derive_context(ContextScope.PER_GROUP, group_id=2)
@@ -40,8 +40,9 @@ print(f"   elided_by_version={fences.stats.elided_by_version}")
 mgr.munmap(m2.mapping_id)
 
 print("\nbaseline comparison (fpr_enabled=False):")
-base = FprMemoryManager(256, fence_engine=FenceEngine(measure=False),
-                        fpr_enabled=False)
+base = FprMemoryManager(config=FprConfig(num_blocks=256,
+                                         fpr_enabled=False),
+                        fence_engine=FenceEngine(measure=False))
 for i in range(1000):
     m = base.mmap(8, stream_a)
     base.munmap(m.mapping_id)

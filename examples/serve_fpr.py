@@ -18,16 +18,17 @@ import jax.numpy as jnp
 from repro.configs import ARCH_IDS, get_smoke
 from repro.core.shootdown import FenceCostModel
 from repro.models import transformer as tfm
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Engine
 
 
 def run(arch: str, n_requests: int, fpr: bool, seed: int = 0):
     cfg = get_smoke(arch)
     params = tfm.init_params(jax.random.PRNGKey(seed), cfg, jnp.float32)
-    eng = Engine(cfg, params, num_blocks=128, max_batch=4,
-                 max_seq_len=512, fpr_enabled=fpr,
-                 cost_model=FenceCostModel(n_replicas=16, dispatch_depth=2,
-                                           step_time_s=10e-3))
+    eng = Engine(cfg, params, config=EngineConfig(
+        num_blocks=128, max_batch=4, max_seq_len=512, fpr_enabled=fpr,
+        cost_model=FenceCostModel(n_replicas=16, dispatch_depth=2,
+                                  step_time_s=10e-3)))
     rng = np.random.RandomState(42)
     for _ in range(n_requests):
         eng.submit(rng.randint(1, cfg.vocab, size=rng.randint(8, 48)),

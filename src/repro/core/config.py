@@ -1,0 +1,106 @@
+"""Unified config objects for the core memory-management layer.
+
+``FprMemoryManager`` had grown ~8 loose keyword arguments; every new knob
+(worker scoping, pcp batching, buddy order) widened the sprawl and every
+caller re-spelled the defaults.  :class:`FprConfig` is the single validated
+carrier; the old kwargs keep working for one release through
+:meth:`FprConfig.from_legacy_kwargs` (the manager warns ``DeprecationWarning``
+when they are used).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+class LegacyKwargsConfig:
+    """Shared shim machinery for the frozen config dataclasses.
+
+    Subclasses set ``LEGACY_KWARGS`` (the accepted pre-PR loose keyword
+    names) and ``LEGACY_TARGET`` (the constructor name used in error
+    messages).  Holds the single copy of the unknown-key check and
+    base-merge logic both :class:`FprConfig` and
+    :class:`~repro.serving.config.EngineConfig` deprecate through.
+    """
+
+    LEGACY_KWARGS: tuple = ()
+    LEGACY_TARGET = "config"
+
+    def replace(self, **changes):
+        return dataclasses.replace(self, **changes)
+
+    @classmethod
+    def _accepted_legacy(cls) -> set:
+        return set(cls.LEGACY_KWARGS)
+
+    @classmethod
+    def from_legacy_kwargs(cls, kwargs: dict, base=None):
+        """DEPRECATION SHIM: build a config from the pre-PR loose kwargs.
+
+        Unknown keys raise ``TypeError`` with the accepted set, so typos
+        fail as loudly as they did on the old ``__init__`` signature.
+        """
+        known = cls._accepted_legacy()
+        unknown = set(kwargs) - known
+        if unknown:
+            raise TypeError(
+                f"unknown {cls.LEGACY_TARGET} argument(s) "
+                f"{sorted(unknown)}; accepted: {sorted(known)}")
+        fields = ({f.name: getattr(base, f.name)
+                   for f in dataclasses.fields(cls)} if base is not None
+                  else {})
+        fields.update(kwargs)
+        return cls(**fields)
+
+
+@dataclass(frozen=True)
+class FprConfig(LegacyKwargsConfig):
+    """Validated configuration of an :class:`~repro.core.fpr.FprMemoryManager`.
+
+    ``scoped_fences=None`` means "respect the fence engine's own flag" —
+    the manager only overrides the engine when the caller decides.
+    """
+
+    num_blocks: int = 4096
+    num_workers: int = 1
+    max_seqs: int = 4096
+    max_blocks_per_seq: int = 8192
+    fpr_enabled: bool = True
+    scoped_fences: "bool | None" = None
+    pcp_batch: int = 32
+    pcp_high: int = 96
+    max_order: int = 10
+
+    #: exactly the legacy FprMemoryManager keyword arguments
+    LEGACY_KWARGS = ("num_workers", "max_seqs", "max_blocks_per_seq",
+                     "fpr_enabled", "scoped_fences", "pcp_batch",
+                     "pcp_high", "max_order")
+    LEGACY_TARGET = "FprMemoryManager"
+
+    def __post_init__(self) -> None:
+        if self.num_blocks <= 0:
+            raise ValueError(f"num_blocks must be positive, "
+                             f"got {self.num_blocks}")
+        if self.num_workers < 1:
+            raise ValueError(f"num_workers must be >= 1, "
+                             f"got {self.num_workers}")
+        if self.max_seqs <= 0 or self.max_blocks_per_seq <= 0:
+            raise ValueError("max_seqs and max_blocks_per_seq must be "
+                             f"positive, got {self.max_seqs} / "
+                             f"{self.max_blocks_per_seq}")
+        if self.pcp_batch <= 0 or self.pcp_high < self.pcp_batch:
+            raise ValueError(f"need 0 < pcp_batch <= pcp_high, got "
+                             f"pcp_batch={self.pcp_batch} "
+                             f"pcp_high={self.pcp_high}")
+        if self.max_order < 0:
+            raise ValueError(f"max_order must be >= 0, got {self.max_order}")
+
+    @classmethod
+    def _accepted_legacy(cls) -> set:
+        # num_blocks was positional on the old signature but is accepted
+        # by keyword through the shim too
+        return set(cls.LEGACY_KWARGS) | {"num_blocks"}
+
+
+__all__ = ["FprConfig", "LegacyKwargsConfig"]

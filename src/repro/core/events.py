@@ -1,0 +1,231 @@
+"""Typed coherence-event bus — the control plane's observation surface.
+
+The paper's contribution is an *API extension*: mmap is taught to tell the
+kernel "these pages will be recycled", and everything else (fence skipping,
+allocation-phase checks, version elision) follows from that one clean
+interface.  This module is the same move applied to the repro's own control
+surface: instead of signature-sniffed ``on_fence`` wrapper chains and bare
+attribute hooks, every cross-layer observation is a **frozen dataclass
+event** published on an :class:`EventBus` with per-type subscription.
+
+Publishers (mechanism layer):
+
+  * :class:`~repro.core.shootdown.FenceEngine` publishes
+    :class:`FenceIssued` for every coherence fence (global or scoped).
+  * :class:`~repro.core.fpr.FprMemoryManager` publishes
+    :class:`BlocksRecycled` / :class:`ContextExit` from the §IV-A
+    allocation-phase checks and :class:`SwapDropped` when a dying mapping
+    still holds swapped-out blocks.
+  * :class:`~repro.serving.kv_cache.PagedKVCache` publishes
+    :class:`ShardRefreshed` after a fence re-uploads device table shards.
+  * :class:`~repro.serving.admission.MemoryGovernor` publishes
+    :class:`AdmissionDecision`; the engine publishes
+    :class:`PreemptionStarted` / :class:`PreemptionResolved`.
+
+Subscribers (policy/observability layer): the manager's table-epoch bump,
+the cache's device-shard refresh and swap-store cleanup, the governor's
+preemption counters, and the SLA/deadline admission policy all plug in via
+``bus.subscribe(EventType, handler)`` — new policies observe the stack
+without touching the hot path.
+
+Handlers run **synchronously, in subscription order** (exact-type handlers
+first, then wildcard :class:`Event` handlers).  Publish order therefore
+*is* the coherence order: the table-epoch bump is subscribed before the
+device refresh, exactly like the old wrapper chain, but explicitly.
+
+Hot-path publishers guard event construction with :meth:`EventBus.wants`
+so an unobserved event costs one dict lookup, not an allocation.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Type
+
+
+@dataclass(frozen=True)
+class Event:
+    """Base class for all control-plane events (also the wildcard topic)."""
+
+
+# ------------------------------------------------------------------ coherence
+@dataclass(frozen=True)
+class FenceIssued(Event):
+    """One coherence fence was performed (the TLB-shootdown analogue).
+
+    ``workers`` is ``None`` for a global fence (every replica refreshed —
+    the paper's broadcast pessimism) or the tuple of covered worker ids for
+    a scoped one.  ``seq`` is the engine's total fence ordinal, ``epoch``
+    the §IV-C5 global shootdown counter after this fence.
+    """
+
+    reason: str
+    n_blocks: int
+    workers: "tuple[int, ...] | None"
+    seq: int
+    epoch: int
+    scoped: bool
+
+
+@dataclass(frozen=True)
+class BlocksRecycled(Event):
+    """An allocation found its own context's blocks (fence-free recycling)."""
+
+    ctx_id: int
+    n_blocks: int
+    worker: int
+
+
+@dataclass(frozen=True)
+class ContextExit(Event):
+    """Blocks left a foreign recycling context at allocation (§IV-A).
+
+    ``fenced`` says whether the exit required a fence this time;
+    ``elided_by_version`` / ``elided_by_scope`` count the blocks whose
+    deferred invalidation was already covered (§IV-C5 epoch / per-worker
+    fence) and therefore exited fence-free.
+    """
+
+    ctx_id: int
+    n_blocks: int
+    fenced: bool
+    elided_by_version: int
+    elided_by_scope: int
+
+
+@dataclass(frozen=True)
+class SwapDropped(Event):
+    """A mapping died while this block was swapped out — the swap-store
+    copy must be released or it is orphaned forever (mapping ids never
+    recycle)."""
+
+    mapping_id: int
+    logical_idx: int
+
+
+@dataclass(frozen=True)
+class ShardRefreshed(Event):
+    """A fence re-uploaded device block-table shards (the measured
+    rebroadcast).  ``full`` marks the global-fence fallback that refreshes
+    every shard."""
+
+    reason: str
+    shards: "tuple[int, ...]"
+    entries: int
+    nbytes: int
+    full: bool
+
+
+# ------------------------------------------------------------------ admission
+@dataclass(frozen=True)
+class AdmissionDecision(Event):
+    """The governor decided one admission round.
+
+    ``decision`` is ``"admit"`` (``rid`` was seated) or ``"reject"`` (the
+    queue was non-empty but nothing was admitted — capacity refusal or a
+    deadline hold).  ``blocked_rid`` names the policy's most urgent queued
+    request that did *not* fit this round; the SLA/deadline policy consumes
+    it to age starved requests into capacity holds.
+    """
+
+    decision: str
+    rid: "int | None"
+    policy: str
+    queue_depth: int
+    window_blocks: "int | None"
+    blocked_rid: "int | None"
+
+
+@dataclass(frozen=True)
+class PreemptionStarted(Event):
+    """The engine is about to evict a running victim (kswapd analogue)."""
+
+    rid: int
+    strategy: str                      # requested: recompute | swap
+
+
+@dataclass(frozen=True)
+class PreemptionResolved(Event):
+    """Victim eviction completed; ``strategy`` is what actually ran (swap
+    falls back to recompute for slot-state architectures / unmapped
+    victims)."""
+
+    rid: int
+    strategy: str
+
+
+#: every event type this module defines, for docs/tests
+EVENT_TYPES = (FenceIssued, BlocksRecycled, ContextExit, SwapDropped,
+               ShardRefreshed, AdmissionDecision, PreemptionStarted,
+               PreemptionResolved)
+
+
+Handler = Callable[[Event], None]
+
+
+class EventBus:
+    """Synchronous, typed publish/subscribe for control-plane events.
+
+    One bus per engine stack (the cache, fence engine, memory manager and
+    governor all share it).  Handlers for the exact event type run first in
+    subscription order, then handlers subscribed to the :class:`Event`
+    wildcard.  There is no queueing: ``publish`` returns after the last
+    handler, so mechanism-critical subscribers (epoch bumps, device
+    refreshes) see events in coherence order.
+    """
+
+    def __init__(self) -> None:
+        self._handlers: dict[Type[Event], list[Handler]] = {}
+
+    # ---------------------------------------------------------- subscription
+    def subscribe(self, event_type: Type[Event], handler: Handler,
+                  *, first: bool = False) -> Callable[[], None]:
+        """Register ``handler`` for ``event_type``; returns an unsubscribe
+        callable.  Subscribe to :class:`Event` itself for every event.
+
+        ``first=True`` prepends instead of appending — for
+        mechanism-critical handlers that must observe the event before any
+        earlier subscriber (the manager's table-epoch bump must precede
+        even a legacy callback attached at fence-engine construction).
+        """
+        if not (isinstance(event_type, type)
+                and issubclass(event_type, Event)):
+            raise TypeError(f"not an Event type: {event_type!r}")
+        handlers = self._handlers.setdefault(event_type, [])
+        if first:
+            handlers.insert(0, handler)
+        else:
+            handlers.append(handler)
+
+        def unsubscribe() -> None:
+            self.unsubscribe(event_type, handler)
+
+        return unsubscribe
+
+    def unsubscribe(self, event_type: Type[Event], handler: Handler) -> None:
+        handlers = self._handlers.get(event_type, [])
+        if handler in handlers:
+            handlers.remove(handler)
+
+    def wants(self, event_type: Type[Event]) -> bool:
+        """Cheap hot-path guard: is anyone listening for this type?"""
+        return bool(self._handlers.get(event_type)
+                    or self._handlers.get(Event))
+
+    # --------------------------------------------------------------- publish
+    def publish(self, event: Event) -> int:
+        """Dispatch ``event``; returns the number of handlers that ran."""
+        ran = 0
+        for handler in tuple(self._handlers.get(type(event), ())):
+            handler(event)
+            ran += 1
+        if type(event) is not Event:
+            for handler in tuple(self._handlers.get(Event, ())):
+                handler(event)
+                ran += 1
+        return ran
+
+
+__all__ = ["Event", "EventBus", "EVENT_TYPES", "FenceIssued",
+           "BlocksRecycled", "ContextExit", "SwapDropped", "ShardRefreshed",
+           "AdmissionDecision", "PreemptionStarted", "PreemptionResolved"]

@@ -24,43 +24,24 @@ microbenchmarks both drive it through the same mmap/munmap/touch/evict API.
 
 from __future__ import annotations
 
-import inspect
+import warnings
 from dataclasses import dataclass
+from typing import Callable
 
 import numpy as np
 
 from repro.core.allocator import BlockAllocator
 from repro.core.block_table import BlockTableStore, Mapping
+from repro.core.config import FprConfig
 from repro.core.contexts import RecyclingContext
+from repro.core.events import (BlocksRecycled, ContextExit, FenceIssued,
+                               SwapDropped)
+from repro.core.metrics import MetricsRegistry, legacy_view
 from repro.core.shootdown import FenceEngine
 from repro.core.tracking import FLAG_ALWAYS_FLUSH, BlockTracker, worker_bit
 
 SWAPPED = -2          # block-table marker: resident → swapped out
 NOT_RESIDENT = -1     # never faulted in
-
-
-def _fence_callback_style(fn) -> str:
-    """How to hand ``fn`` the covered-worker set of ``on_fence``.
-
-    Returns ``"pos"`` (third positional argument), ``"kw"`` (keyword-only
-    ``workers`` or ``**kwargs``), or ``"legacy"`` for the pre-sharding
-    two-argument ``(reason, n)`` signature that externally supplied
-    engines may still use.
-    """
-    try:
-        params = list(inspect.signature(fn).parameters.values())
-    except (TypeError, ValueError):
-        return "pos"                      # unintrospectable: assume current
-    if any(p.kind == p.VAR_POSITIONAL for p in params):
-        return "pos"
-    positional = [p for p in params
-                  if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)]
-    if len(positional) >= 3:
-        return "pos"
-    if any((p.kind == p.KEYWORD_ONLY and p.name == "workers")
-           or p.kind == p.VAR_KEYWORD for p in params):
-        return "kw"
-    return "legacy"
 
 
 @dataclass
@@ -79,53 +60,121 @@ class FprStats:
 
 
 class FprMemoryManager:
-    """Paged-memory manager with fast page recycling."""
+    """Paged-memory manager with fast page recycling.
 
-    def __init__(self, num_blocks: int, *, num_workers: int = 1,
-                 max_seqs: int = 4096, max_blocks_per_seq: int = 8192,
+    Construction: ``FprMemoryManager(config=FprConfig(...))`` (optionally
+    with a shared ``fence_engine``).  The pre-PR loose keyword arguments
+    (``num_workers=``, ``fpr_enabled=``, …) keep working for one release
+    through :meth:`FprConfig.from_legacy_kwargs` and warn
+    ``DeprecationWarning``.
+
+    Cross-layer observations are published on :attr:`bus` (the fence
+    engine's :class:`~repro.core.events.EventBus`): ``FenceIssued``,
+    ``BlocksRecycled``, ``ContextExit``, ``SwapDropped``.  Counters are
+    registered on :attr:`metrics` under the ``fpr``/``fence``/``table``
+    namespaces.
+    """
+
+    def __init__(self, num_blocks: int | None = None, *,
+                 config: FprConfig | None = None,
                  fence_engine: FenceEngine | None = None,
-                 fpr_enabled: bool = True,
-                 scoped_fences: bool | None = None,
-                 pcp_batch: int = 32, pcp_high: int = 96,
-                 max_order: int = 10):
-        self.tracker = BlockTracker(num_blocks)
-        self.alloc = BlockAllocator(num_blocks, self.tracker,
+                 **legacy_kwargs):
+        if legacy_kwargs or num_blocks is not None:
+            # positional num_blocks IS the legacy signature — it must warn
+            # too, or silent callers break unwarned when the shim is
+            # deleted next release
+            warnings.warn(
+                "FprMemoryManager(num_blocks, **kwargs) is deprecated; "
+                "pass config=FprConfig(...) instead", DeprecationWarning,
+                stacklevel=2)
+            config = FprConfig.from_legacy_kwargs(legacy_kwargs, base=config)
+            if num_blocks is not None:
+                config = config.replace(num_blocks=num_blocks)
+        if config is None:
+            raise TypeError(
+                "FprMemoryManager requires config=FprConfig(...) "
+                "(or the deprecated num_blocks/keyword arguments)")
+        self.config = config
+        num_workers = config.num_workers
+        self.tracker = BlockTracker(config.num_blocks)
+        self.alloc = BlockAllocator(config.num_blocks, self.tracker,
                                     num_workers=num_workers,
-                                    pcp_batch=pcp_batch, pcp_high=pcp_high,
-                                    max_order=max_order)
-        self.tables = BlockTableStore(max_seqs, max_blocks_per_seq,
+                                    pcp_batch=config.pcp_batch,
+                                    pcp_high=config.pcp_high,
+                                    max_order=config.max_order)
+        self.tables = BlockTableStore(config.max_seqs,
+                                      config.max_blocks_per_seq,
                                       num_shards=num_workers)
         self.fences = fence_engine or FenceEngine()
+        self.bus = self.fences.bus
         self.fences.ensure_workers(num_workers)
-        if scoped_fences is not None:   # None ⇒ respect the engine's flag
-            self.fences.scoped = scoped_fences
+        if config.scoped_fences is not None:  # None ⇒ respect engine's flag
+            self.fences.scoped = config.scoped_fences
         # Every fence invalidates device-held tables: couple the epochs.  A
         # scoped fence names its covered workers → only those table shards
         # are invalidated/refreshed; a global fence (workers=None) hits all.
-        inner = self.fences.on_fence
-        style = None if inner is None else _fence_callback_style(inner)
-        def _on_fence(reason: str, n: int, workers=None) -> None:
-            self.tables.bump_epoch(shards=workers)
-            if style == "pos":
-                inner(reason, n, workers)
-            elif style == "kw":
-                inner(reason, n, workers=workers)
-            elif style == "legacy":       # pre-sharding (reason, n) callback
-                inner(reason, n)
-        self.fences.on_fence = _on_fence
+        # Prepended so the host-side epoch bump precedes every other
+        # subscriber — including a legacy on_fence callback attached at
+        # fence-engine construction, before this manager existed (the old
+        # wrapper chain bumped first too; ``first=True`` keeps that
+        # coherence order explicit).
+        self.bus.subscribe(FenceIssued, self._on_fence_issued, first=True)
         self.fences.measure = True
-        self.fpr_enabled = fpr_enabled
+        self.fpr_enabled = config.fpr_enabled
         self.stats = FprStats()
+        self.metrics = MetricsRegistry()
+        self.metrics.register("fpr", lambda: self.stats.snapshot())
+        self.metrics.register("fence", self._fence_metrics)
+        self.metrics.register("table", self._table_metrics)
         #: optional swap hooks (serving attaches pool copy-out/copy-in —
         #: the "storage device" behind eviction).  Signatures:
         #:   on_swap_out(mapping_id, logical_idx, phys_block)
         #:   on_swap_in(mapping_id, logical_idx, new_phys_block)
-        #:   on_swap_drop(mapping_id, logical_idx) — a mapping destroyed
-        #:   while blocks are swapped out (e.g. a recompute-preempted
-        #:   victim) must release their swap-store copies, or they orphan
+        #: A mapping destroyed while blocks are swapped out publishes
+        #: :class:`~repro.core.events.SwapDropped` per block instead —
+        #: subscribe to it to release swap-store copies.
         self.on_swap_out = None
         self.on_swap_in = None
-        self.on_swap_drop = None
+
+    def _on_fence_issued(self, evt: FenceIssued) -> None:
+        self.tables.bump_epoch(shards=evt.workers)
+
+    # ---------------------------------------------------------- legacy shim
+    @property
+    def on_swap_drop(self) -> Callable | None:
+        """DEPRECATED: subscribe to :class:`SwapDropped` on :attr:`bus`."""
+        return getattr(self, "_legacy_on_swap_drop", None)
+
+    @on_swap_drop.setter
+    def on_swap_drop(self, fn: Callable | None) -> None:
+        """The documented ``on_swap_drop`` deprecation shim: wraps the old
+        ``(mapping_id, logical_idx)`` attribute hook as a
+        :class:`SwapDropped` subscriber for one release."""
+        warnings.warn(
+            "FprMemoryManager.on_swap_drop is deprecated; subscribe to "
+            "SwapDropped on FprMemoryManager.bus instead",
+            DeprecationWarning, stacklevel=2)
+        prev = getattr(self, "_legacy_swap_drop_unsub", None)
+        if prev is not None:
+            prev()
+        self._legacy_on_swap_drop = fn
+        self._legacy_swap_drop_unsub = None
+        if fn is not None:
+            self._legacy_swap_drop_unsub = self.bus.subscribe(
+                SwapDropped,
+                lambda evt: fn(evt.mapping_id, evt.logical_idx))
+
+    # ================================================================== metrics
+    def _fence_metrics(self) -> dict:
+        d = self.fences.totals()
+        d["worker_epochs"] = self.fences.worker_epoch_counters()
+        return d
+
+    def _table_metrics(self) -> dict:
+        return {"epoch": self.tables.epoch,
+                "shard_epochs": [int(e) for e in self.tables.shard_epochs],
+                "shard_overflows": self.tables.shard_overflows,
+                "stale_lookups_detected": self.tables.stale_lookups_detected}
 
     # ===================================================================== alloc
     def _acquire(self, n: int, ctx_id: int, worker: int) -> list[int]:
@@ -192,6 +241,17 @@ class FprMemoryManager:
                 mask = int(np.bitwise_or.reduce(stale[must_fence]))
                 eng.fence_scoped("context_exit", int(must_fence.sum()),
                                  worker_mask=mask)
+        if recycled.any() and self.bus.wants(BlocksRecycled):
+            self.bus.publish(BlocksRecycled(ctx_id=ctx_id,
+                                            n_blocks=int(recycled.sum()),
+                                            worker=worker))
+        n_exits = int(foreign.sum()) + int((always & ~foreign).sum())
+        if n_exits and self.bus.wants(ContextExit):
+            self.bus.publish(ContextExit(
+                ctx_id=ctx_id, n_blocks=n_exits,
+                fenced=bool(must_fence.any()),
+                elided_by_version=int(elide_global.sum()),
+                elided_by_scope=int(elide_scope.sum())))
         # Stamp the new owner (0 for non-FPR use, §IV-A), clear flags.
         tr.set_many(arr, ctx_id=ctx_id, version=0, flags=0)
         # Worker presence: a block whose staleness was just covered (fenced
@@ -246,10 +306,11 @@ class FprMemoryManager:
     def munmap(self, mapping_id: int, *, worker: int = 0) -> None:
         m = self.tables.mappings[mapping_id]
         rows = self.tables.destroy_mapping(mapping_id)
-        if self.on_swap_drop is not None:
+        if self.bus.wants(SwapDropped):
             for idx, b in enumerate(rows):
                 if b == SWAPPED:        # dying mapping's swapped contents
-                    self.on_swap_drop(mapping_id, idx)
+                    self.bus.publish(SwapDropped(mapping_id=mapping_id,
+                                                 logical_idx=idx))
         phys = [b for b in rows if b >= 0]
         self.stats.frees += len(phys)
         if phys:
@@ -345,10 +406,10 @@ class FprMemoryManager:
         return self.alloc.num_blocks
 
     def counters(self) -> dict:
-        return {"fpr": self.stats.snapshot(), "fence": self.fences.totals(),
-                "worker_epochs": self.fences.worker_epoch_counters(),
-                "table_epoch": self.tables.epoch,
-                "table_shard_epochs": [int(e)
-                                       for e in self.tables.shard_epochs],
-                "table_shard_overflows": self.tables.shard_overflows,
-                "stale_detected": self.tables.stale_lookups_detected}
+        """Legacy nested counter view, derived from :attr:`metrics`.
+
+        New code should read ``self.metrics.snapshot()`` (the flat
+        namespaced schema) directly; this adapter keeps the pre-registry
+        shape for one release.
+        """
+        return legacy_view(self.metrics.snapshot())

@@ -1,0 +1,233 @@
+"""Namespaced metrics registry — one flat snapshot schema for the stack.
+
+Before this module the repro had three disjoint counter systems:
+``FprStats`` (allocation-phase counters), ``FenceStats`` (fence engine
+totals) and the ad-hoc dict merging in ``Engine.stats()`` /
+``PagedKVCache.counters()``.  Every consumer — tests, benchmark artifacts,
+the CI smoke lane — picked keys out of a differently shaped nested dict.
+
+The :class:`MetricsRegistry` replaces that with one contract:
+
+  * subsystems **register a namespace** (``fpr``, ``fence``, ``table``,
+    ``device``, ``admission``, ``engine``) with a zero-arg source callable
+    returning their counters (nested dicts allowed);
+  * :meth:`MetricsRegistry.snapshot` returns a single **flat** dict whose
+    keys are dot-joined paths (``fence.fences``, ``device.refreshed_bytes``,
+    ``admission.ledger.peak_committed`` …) — the *only* schema artifacts
+    and dashboards should consume;
+  * the stable key set is pinned in :data:`STABLE_SCHEMA`; dynamic groups
+    (per-reason fence counts, per-worker epochs) are declared as
+    :data:`WILDCARD_PREFIXES` so schema validation can tell drift from
+    legitimate per-config variation.
+
+``legacy_view`` rebuilds the pre-registry nested ``Engine.stats()`` shape
+from a flat snapshot — the deprecation shim that keeps old consumers
+working for one release while everything emits through the registry.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from typing import Callable, Iterable
+
+Source = Callable[[], dict]
+
+#: canonical namespaces, in emission order
+NAMESPACES = ("fpr", "fence", "table", "device", "admission", "engine")
+
+#: flat-key groups whose *members* are config-dependent (fence reasons seen,
+#: one epoch per worker, one ledger share per worker) — validated by prefix
+WILDCARD_PREFIXES = (
+    "fence.by_reason.",
+    "fence.worker_epochs.",
+)
+
+#: the stable flat-snapshot contract of a full Engine stack.  The golden
+#: schema test (tests/test_metrics.py) pins a live snapshot against this;
+#: benchmarks/validate.py checks the CI smoke artifacts against it.
+STABLE_SCHEMA = (
+    # fpr.* — FprStats, the §IV-A allocation-phase counters
+    "fpr.allocs",
+    "fpr.clean_allocs",
+    "fpr.context_exits",
+    "fpr.faults",
+    "fpr.frees",
+    "fpr.recycled_hits",
+    "fpr.swap_ins",
+    "fpr.swap_outs",
+    # fence.* — FenceStats via FenceEngine.totals()
+    "fence.elided_by_scope",
+    "fence.elided_by_version",
+    "fence.fences",
+    "fence.fences_averted",
+    "fence.fences_scoped",
+    "fence.measured_s",
+    "fence.modeled_s",
+    "fence.replicas_spared",
+    "fence.skipped_at_free",
+    "fence.workers_covered",
+    # table.* — host-side BlockTableStore epochs/diagnostics
+    "table.epoch",
+    "table.shard_epochs",
+    "table.shard_overflows",
+    "table.stale_lookups_detected",
+    # device.* — PagedKVCache fence-refresh counters
+    "device.fence_drains",
+    "device.full_refreshes",
+    "device.refreshed_bytes",
+    "device.refreshed_entries",
+    "device.shard_refreshes",
+    "device.step_upload_entries",
+    "device.table_shards",
+    # engine.* — serving-loop counters
+    "engine.completed",
+    "engine.demand_pager_gave_up",
+    "engine.steps",
+    "engine.tokens",
+    "engine.tokens_per_s",
+    "engine.wall_s",
+    # admission.* — governor + ledger (enabled=False collapses to one key)
+    "admission.enabled",
+)
+
+#: admission.* keys present only when a MemoryGovernor is attached
+ADMISSION_SCHEMA = (
+    "admission.admitted",
+    "admission.affinity_hit_rate",
+    "admission.affinity_hits",
+    "admission.affinity_misses",
+    "admission.holds",
+    "admission.ledger.capacity",
+    "admission.ledger.committed",
+    "admission.ledger.limit",
+    "admission.ledger.peak_committed",
+    "admission.ledger.per_worker_committed",
+    "admission.policy",
+    "admission.preempt_strategy",
+    "admission.preemptions_recompute",
+    "admission.preemptions_swap",
+    "admission.rejected_overcommit",
+)
+
+
+def flatten(tree: dict, prefix: str = "") -> dict:
+    """Dot-join a nested counter dict.  Dicts/Counters recurse; scalars,
+    strings, ``None`` and lists/tuples (kept as JSON-able leaves, e.g.
+    per-shard epoch vectors) terminate."""
+    flat: dict = {}
+    for key, value in tree.items():
+        path = f"{prefix}{key}"
+        if isinstance(value, (dict, Counter)):
+            flat.update(flatten(value, prefix=f"{path}."))
+        elif isinstance(value, (list, tuple)):
+            flat[path] = list(value)
+        else:
+            flat[path] = value
+    return flat
+
+
+class MetricsRegistry:
+    """Namespace → source registry producing the unified flat snapshot."""
+
+    def __init__(self) -> None:
+        self._sources: dict[str, Source] = {}
+
+    def register(self, namespace: str, source: Source) -> None:
+        """Attach ``source`` (a zero-arg callable returning a dict) under
+        ``namespace``.  Re-registering a namespace replaces its source —
+        the stack rebuilds registries on reconfiguration."""
+        if not namespace.isidentifier():
+            raise ValueError(f"namespace must be an identifier, "
+                             f"got {namespace!r}")
+        self._sources[namespace] = source
+
+    def unregister(self, namespace: str) -> None:
+        self._sources.pop(namespace, None)
+
+    @property
+    def namespaces(self) -> tuple:
+        return tuple(self._sources)
+
+    def snapshot(self) -> dict:
+        """The unified flat snapshot: ``{"ns.path.key": value}``, sorted
+        within the canonical namespace order."""
+        flat: dict = {}
+        ordered = [ns for ns in NAMESPACES if ns in self._sources]
+        ordered += [ns for ns in self._sources if ns not in NAMESPACES]
+        for ns in ordered:
+            tree = self._sources[ns]()
+            part = flatten(tree, prefix=f"{ns}.")
+            flat.update({k: part[k] for k in sorted(part)})
+        return flat
+
+    def schema(self) -> tuple:
+        """The current snapshot's key set (values discarded)."""
+        return tuple(self.snapshot())
+
+
+def schema_violations(keys: Iterable[str], *,
+                      stable: Iterable[str] = STABLE_SCHEMA,
+                      admission: Iterable[str] = ADMISSION_SCHEMA,
+                      wildcards: Iterable[str] = WILDCARD_PREFIXES
+                      ) -> list[str]:
+    """Namespaced keys in ``keys`` that the schema does not know.
+
+    Only dotted keys whose first segment is a canonical namespace are
+    checked — artifact-local fields (``seed``, ``tokens_identical`` …)
+    pass through untouched.
+    """
+    known = set(stable) | set(admission)
+    bad = []
+    for key in keys:
+        ns = key.split(".", 1)[0]
+        if ns not in NAMESPACES:
+            continue
+        if key in known or any(key.startswith(w) for w in wildcards):
+            continue
+        bad.append(key)
+    return sorted(bad)
+
+
+# ---------------------------------------------------------------- legacy view
+def _collect(flat: dict, prefix: str) -> dict:
+    return {k[len(prefix):]: v for k, v in flat.items()
+            if k.startswith(prefix)}
+
+
+def legacy_view(flat: dict) -> dict:
+    """DEPRECATED nested ``Engine.stats()`` shape, rebuilt from the flat
+    snapshot.  This is the documented one-release compatibility shim for
+    pre-registry consumers; new code reads the flat snapshot directly."""
+    out: dict = {}
+    fpr = _collect(flat, "fpr.")
+    if fpr:
+        out["fpr"] = fpr
+    fence = {k: v for k, v in _collect(flat, "fence.").items()
+             if "." not in k and not k.startswith("worker_epochs")}
+    if fence or "fence.fences" in flat:
+        fence["by_reason"] = _collect(flat, "fence.by_reason.")
+        out["fence"] = fence
+        out["worker_epochs"] = _collect(flat, "fence.worker_epochs.")
+    if "table.epoch" in flat:
+        out["table_epoch"] = flat["table.epoch"]
+        out["table_shard_epochs"] = flat["table.shard_epochs"]
+        out["table_shard_overflows"] = flat["table.shard_overflows"]
+        out["stale_detected"] = flat["table.stale_lookups_detected"]
+    for key, value in _collect(flat, "device.").items():
+        out[f"device_{key}"] = value
+    if "admission.enabled" in flat:
+        if not flat["admission.enabled"]:
+            out["admission"] = {"enabled": False}
+        else:
+            adm = {k: v for k, v in _collect(flat, "admission.").items()
+                   if "." not in k and k != "enabled"}
+            adm["ledger"] = _collect(flat, "admission.ledger.")
+            out["admission"] = adm
+    for key, value in _collect(flat, "engine.").items():
+        out[key] = value
+    return out
+
+
+__all__ = ["ADMISSION_SCHEMA", "MetricsRegistry", "NAMESPACES",
+           "STABLE_SCHEMA", "WILDCARD_PREFIXES", "flatten", "legacy_view",
+           "schema_violations"]

@@ -48,9 +48,11 @@ Versions are stamped with ``seq`` at free time; when scoped fencing is off
 (or a single worker exists) ``seq == epoch`` and the behaviour is
 bit-identical to the paper's global-epoch scheme.
 
-**Sharded device-table refresh.**  The measured fence callback receives the
-covered worker set (``on_fence(reason, n_blocks, workers)``; ``workers is
-None`` for a global fence).  Device-side (``PagedKVCache``), the block
+**Sharded device-table refresh.**  Every fence is published as a
+:class:`~repro.core.events.FenceIssued` event carrying the covered worker
+set (``workers is None`` for a global fence); the measured
+drain+rebroadcast work happens in the subscribers (table-epoch bump, then
+the device refresh).  Device-side (``PagedKVCache``), the block
 table is split into one shard per worker — shard ``w`` holds the batch
 slots with ``slot % num_workers == w``, and the engine binds each slot to
 its serving worker at admission — and a fence re-uploads the covered
@@ -100,14 +102,17 @@ victim's eviction batch takes the §IV-B merged fence.
 
 from __future__ import annotations
 
+import inspect
 import math
 import time
+import warnings
 from collections import Counter
 from dataclasses import dataclass, field
 from typing import Callable
 
 import numpy as np
 
+from repro.core.events import EventBus, FenceIssued
 from repro.core.tracking import WORKER_OVERFLOW_BIT, worker_bit
 
 
@@ -166,22 +171,109 @@ class FenceStats:
         return d
 
 
+def _legacy_on_fence_shim(fn: Callable, engine: "FenceEngine") -> Callable:
+    """THE legacy ``on_fence`` deprecation shim (the only one in the repo).
+
+    Pre-event-bus engines attached a measured drain+rebroadcast callback as
+    ``FenceEngine.on_fence``; the modern interface is
+    ``bus.subscribe(FenceIssued, handler)``.  This adapter wraps one legacy
+    callback as a :class:`~repro.core.events.FenceIssued` subscriber,
+    honouring the three historical signatures — ``(reason, n, workers)``
+    positional, keyword-only ``workers`` (or ``**kwargs``), and the
+    pre-sharding two-argument ``(reason, n)`` form — AND the historical
+    ``measure`` gate: the old ``_measured`` path only invoked the callback
+    while ``engine.measure`` was on, so the shim skips it too (bus
+    subscribers are unaffected — events are semantics, the legacy callback
+    was measurement).  The signature is classified **once**, here, at
+    subscribe time; the per-fence hot path does no introspection.  Removed
+    with the legacy surface next release.
+    """
+    style = "pos"
+    try:
+        params = list(inspect.signature(fn).parameters.values())
+    except (TypeError, ValueError):
+        params = None                     # unintrospectable: assume current
+    if params is not None and not any(p.kind == p.VAR_POSITIONAL
+                                      for p in params):
+        positional = [p for p in params
+                      if p.kind in (p.POSITIONAL_ONLY,
+                                    p.POSITIONAL_OR_KEYWORD)]
+        if len(positional) >= 3:
+            style = "pos"
+        elif any((p.kind == p.KEYWORD_ONLY and p.name == "workers")
+                 or p.kind == p.VAR_KEYWORD for p in params):
+            style = "kw"
+        else:
+            style = "legacy"
+
+    def _handler(evt: FenceIssued) -> None:
+        if not engine.measure:            # pre-bus contract (see docstring)
+            return
+        workers = (None if evt.workers is None
+                   else np.asarray(evt.workers, dtype=np.int64))
+        if style == "pos":
+            fn(evt.reason, evt.n_blocks, workers)
+        elif style == "kw":
+            fn(evt.reason, evt.n_blocks, workers=workers)
+        else:                             # pre-sharding (reason, n) callback
+            fn(evt.reason, evt.n_blocks)
+
+    return _handler
+
+
 class FenceEngine:
-    """Owns the fence epochs and performs/records coherence fences."""
+    """Owns the fence epochs and performs/records coherence fences.
+
+    Every fence is published as a :class:`~repro.core.events.FenceIssued`
+    event on :attr:`bus`; the table-epoch bump, the device shard refresh
+    and any external observers are subscribers.  ``measured_s`` accumulates
+    the wall time of the whole dispatch (the drain+rebroadcast cost the
+    paper's shootdown pays) whenever ``measure`` is on.
+    """
 
     def __init__(self, cost_model: FenceCostModel | None = None,
-                 on_fence: Callable[[str, int, "np.ndarray | None"], None]
-                 | None = None,
+                 on_fence: Callable | None = None,
                  measure: bool = True, num_workers: int = 1,
-                 scoped: bool = True):
+                 scoped: bool = True, bus: EventBus | None = None):
         self.seq = 1                      # total fence ordinal (all fences)
         self.epoch = 1                    # global shootdown counter (§IV-C5)
         self.cost_model = cost_model or FenceCostModel()
-        self.on_fence = on_fence          # measured drain+rebroadcast callback
+        self.bus = bus if bus is not None else EventBus()
+        self._legacy_on_fence: Callable | None = None
+        self._legacy_unsubscribe: Callable | None = None
         self.measure = measure
         self.scoped = scoped              # False ⇒ every fence is global
         self.worker_epochs = np.full(max(1, num_workers), 1, dtype=np.int64)
         self.stats = FenceStats()
+        if on_fence is not None:          # the deprecated ctor path
+            self._set_on_fence(on_fence, stacklevel=3)
+
+    # ------------------------------------------------- legacy callback shim
+    @property
+    def on_fence(self) -> Callable | None:
+        """DEPRECATED: the last legacy callback attached (None otherwise).
+        Subscribe to :class:`~repro.core.events.FenceIssued` instead."""
+        return self._legacy_on_fence
+
+    @on_fence.setter
+    def on_fence(self, fn: Callable | None) -> None:
+        self._set_on_fence(fn, stacklevel=3)
+
+    def _set_on_fence(self, fn: Callable | None, *, stacklevel: int) -> None:
+        # stacklevel reaches the USER'S line (assignment or ctor call), so
+        # the one-release migration warning points at the code to change
+        warnings.warn(
+            "FenceEngine.on_fence is deprecated; subscribe to FenceIssued "
+            "on FenceEngine.bus instead "
+            "(bus.subscribe(FenceIssued, handler))",
+            DeprecationWarning, stacklevel=stacklevel)
+        if self._legacy_unsubscribe is not None:
+            self._legacy_unsubscribe()
+            self._legacy_unsubscribe = None
+        self._legacy_on_fence = fn
+        if fn is not None:
+            self._legacy_unsubscribe = self.bus.subscribe(
+                FenceIssued, _legacy_on_fence_shim(fn, self))
 
     # ------------------------------------------------------------- workers
     @property
@@ -243,7 +335,7 @@ class FenceEngine:
         st.blocks_covered += n_blocks
         st.workers_covered += self.num_workers
         st.modeled_s += self.cost_model.cost_s()
-        self._measured(reason, n_blocks, None)
+        self._publish(reason, n_blocks, None, scoped=False)
         return self.epoch
 
     def fence_scoped(self, reason: str, n_blocks: int = 1,
@@ -272,21 +364,32 @@ class FenceEngine:
                                     / self.num_workers))
         st.replicas_spared += cm.n_replicas - affected
         st.modeled_s += cm.cost_s(affected)
-        self._measured(reason, n_blocks, workers)
+        self._publish(reason, n_blocks, workers, scoped=True)
         return self.epoch
 
-    def _measured(self, reason: str, n_blocks: int,
-                  workers: np.ndarray | None) -> None:
-        """Run the attached drain+rebroadcast callback.
+    def _publish(self, reason: str, n_blocks: int,
+                 workers: np.ndarray | None, *, scoped: bool) -> None:
+        """Publish the fence as a :class:`FenceIssued` event.
 
         ``workers`` is ``None`` for a global fence (refresh every table
-        shard) or the covered worker ids for a scoped one — the callback
-        (``PagedKVCache._device_fence``) refreshes only those shards.
+        shard) or the covered worker ids for a scoped one — subscribers
+        (table-epoch bump, ``PagedKVCache`` shard refresh) scope their
+        invalidation to them.  With ``measure`` on, the dispatch wall time
+        is the fence's measured drain+rebroadcast cost.
         """
-        if self.on_fence is not None and self.measure:
+        if not self.bus.wants(FenceIssued):
+            return
+        evt = FenceIssued(
+            reason=reason, n_blocks=n_blocks,
+            workers=None if workers is None else tuple(int(w)
+                                                       for w in workers),
+            seq=self.seq, epoch=self.epoch, scoped=scoped)
+        if self.measure:
             t0 = time.perf_counter()
-            self.on_fence(reason, n_blocks, workers)
+            self.bus.publish(evt)
             self.stats.measured_s += time.perf_counter() - t0
+        else:
+            self.bus.publish(evt)
 
     # -------------------------------------------------------------- accounting
     def note_skipped_free(self, n_blocks: int = 1) -> None:

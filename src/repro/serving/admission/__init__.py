@@ -13,7 +13,8 @@ from repro.serving.admission.governor import (PREEMPT_STRATEGIES,
                                               GovernorConfig, GovernorStats,
                                               MemoryGovernor)
 from repro.serving.admission.ledger import CapacityError, CapacityLedger
-from repro.serving.admission.policies import (AdmissionPolicy, FcfsPolicy,
+from repro.serving.admission.policies import (AdmissionPolicy,
+                                              DeadlinePolicy, FcfsPolicy,
                                               PriorityPolicy,
                                               RecycleAffinityPolicy,
                                               make_policy)
@@ -22,6 +23,7 @@ __all__ = [
     "AdmissionPolicy",
     "CapacityError",
     "CapacityLedger",
+    "DeadlinePolicy",
     "FcfsPolicy",
     "GovernorConfig",
     "GovernorStats",

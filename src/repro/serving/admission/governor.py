@@ -42,6 +42,8 @@ from collections import deque
 from dataclasses import dataclass
 from typing import Optional
 
+from repro.core.events import (AdmissionDecision, EventBus,
+                               PreemptionResolved)
 from repro.serving.admission.ledger import CapacityError, CapacityLedger
 from repro.serving.admission.policies import (AdmissionPolicy, PriorityPolicy,
                                               make_policy)
@@ -68,6 +70,8 @@ class GovernorConfig:
 class GovernorStats:
     admitted: int = 0
     rejected_overcommit: int = 0        # admission rounds refused for capacity
+    holds: int = 0                      # rounds a policy held free capacity
+                                        # for a starved request (deadline SLA)
     preemptions_recompute: int = 0
     preemptions_swap: int = 0
     affinity_hits: int = 0              # admission matched a freed stream
@@ -89,14 +93,24 @@ class MemoryGovernor:
 
     def __init__(self, capacity_blocks: int, block_size: int, *,
                  num_workers: int = 1,
-                 config: GovernorConfig | None = None):
+                 config: GovernorConfig | None = None,
+                 bus: EventBus | None = None):
         self.config = config or GovernorConfig()
         self.block_size = block_size
+        self.bus = bus if bus is not None else EventBus()
         self.ledger = CapacityLedger(
             capacity_blocks, num_workers=num_workers,
             overcommit_ratio=self.config.overcommit_ratio)
         self.policy = make_policy(self.config.policy)
         self.stats = GovernorStats()
+        # SLA-aware policies consume the governor's own decision stream
+        if hasattr(self.policy, "attach"):
+            self.policy.attach(self.bus)
+        # preemption bookkeeping is event-driven: the engine publishes
+        # PreemptionResolved; virtual-time sims may call count_preempt
+        # directly instead (they have no engine loop)
+        self.bus.subscribe(PreemptionResolved,
+                           lambda evt: self.count_preempt(evt.strategy))
         self._freed_streams: deque[str] = deque(
             maxlen=max(1, self.config.affinity_window))
         self._admit_seq = itertools.count(1)
@@ -116,17 +130,31 @@ class MemoryGovernor:
     def select(self, queue: list) -> Optional[int]:
         """Index of the next queue entry to admit, or None.
 
-        A non-empty queue with no admissible entry counts one
-        ``rejected_overcommit`` — the refusal that replaces the legacy
-        scheduler's fill-every-slot behaviour.
+        Every round publishes one :class:`AdmissionDecision` event —
+        ``"admit"`` with the chosen rid, or ``"reject"`` when a non-empty
+        queue seats nothing.  A refusal counts one ``rejected_overcommit``
+        (capacity) and additionally one ``holds`` when the policy declined
+        requests that *do* fit (the deadline policy draining capacity to a
+        starved window).  ``blocked_rid`` names the policy's most urgent
+        non-fitting request; SLA-aware policies consume it to age starved
+        requests (see :class:`~repro.serving.admission.policies.
+        DeadlinePolicy`).
         """
         if not queue:
             return None
-        idx = self.policy.select(
-            queue, lambda r: self.ledger.fits(self.window_blocks(r)),
-            tuple(self._freed_streams))
+        fits = lambda r: self.ledger.fits(self.window_blocks(r))  # noqa: E731
+        idx = self.policy.select(queue, fits, tuple(self._freed_streams))
         if idx is None:
-            self.stats.rejected_overcommit += 1
+            # a hold (hold-capable policy refusing while something still
+            # fits — capacity deliberately drained for a starved window)
+            # is NOT a capacity refusal; keep the two counters disjoint so
+            # rejected_overcommit retains its documented meaning
+            if (getattr(self.policy, "can_hold", False)
+                    and any(fits(r) for r in queue)):
+                self.stats.holds += 1
+            else:
+                self.stats.rejected_overcommit += 1
+            self._publish_decision("reject", None, queue, fits)
             return None
         # Affinity accounting: a hit means the admission exploited the
         # best *achievable* recycling affinity — the freshest freed stream
@@ -140,13 +168,34 @@ class MemoryGovernor:
                 self.stats.affinity_hits += 1
             else:
                 self.stats.affinity_misses += 1
+        self._publish_decision("admit", queue[idx], queue, fits)
         return idx
+
+    def _publish_decision(self, decision: str, request,
+                          queue: list, fits) -> None:
+        if not self.bus.wants(AdmissionDecision):
+            return
+        # blocked_rid is only computed when someone is listening — the
+        # full-queue fits() scan stays off the unobserved hot path
+        self.bus.publish(AdmissionDecision(
+            decision=decision,
+            rid=None if request is None else request.rid,
+            policy=self.policy.name,
+            queue_depth=len(queue),
+            window_blocks=(None if request is None
+                           else self.window_blocks(request)),
+            blocked_rid=self.policy.most_urgent_blocked(queue, fits)))
 
     def on_admit(self, r, worker: int = 0) -> None:
         """Commit the admitted request's window (raises on over-commit)."""
         self.ledger.reserve(r.rid, self.window_blocks(r), worker)
         self._admit_order[r.rid] = next(self._admit_seq)
         self.stats.admitted += 1
+
+    def on_extend(self, r, n_blocks: int) -> None:
+        """A running sequence grew its mapping beyond the admitted window
+        (chunked-prefill direction): grow the reservation or refuse loudly."""
+        self.ledger.grow(r.rid, n_blocks)
 
     def on_release(self, r) -> None:
         """Completion or preemption: return the window, remember the stream."""

@@ -89,6 +89,23 @@ class CapacityLedger:
         self.per_worker[w] += blocks
         self.peak_committed = max(self.peak_committed, self.committed)
 
+    def grow(self, rid: int, extra_blocks: int) -> None:
+        """Enlarge an existing reservation (chunked-prefill / decode-path
+        ``extend``): the growth is refused — not silently clipped — when it
+        would over-commit the limit, mirroring :meth:`reserve`."""
+        if extra_blocks <= 0:
+            raise ValueError(f"growth must be positive, got {extra_blocks}")
+        e = self.entries[rid]
+        if not self.fits(extra_blocks):
+            raise CapacityError(
+                f"growing {rid} by {extra_blocks} blocks would commit "
+                f"{self.committed + extra_blocks} > limit {self.limit} "
+                f"(pool {self.capacity})")
+        e.blocks += extra_blocks
+        self.committed += extra_blocks
+        self.per_worker[e.worker] += extra_blocks
+        self.peak_committed = max(self.peak_committed, self.committed)
+
     def release(self, rid: int) -> int:
         """Return ``rid``'s reservation to the pool (completion/preemption)."""
         e = self.entries.pop(rid)

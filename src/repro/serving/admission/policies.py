@@ -19,6 +19,15 @@ freed streams):
   * ``priority`` — highest priority class first (ties broken FCFS); the
                    governor may additionally preempt lower-priority
                    running sequences to make room (see ``MemoryGovernor``).
+  * ``deadline`` — earliest-deadline-first (arrival + SLA budget) over the
+                   requests that fit, **consuming**
+                   :class:`~repro.core.events.AdmissionDecision` events to
+                   detect starvation: once the most urgent request has been
+                   passed over ``hold_after`` times because its window does
+                   not fit, the policy *holds* — admits nothing — so
+                   capacity drains to it instead of being nibbled away by
+                   smaller late arrivals (the first-fit starvation that
+                   inflates FCFS p99 queue-wait).
 """
 
 from __future__ import annotations
@@ -33,10 +42,25 @@ class AdmissionPolicy:
     """Selects the index of the next queue entry to admit (None = nothing)."""
 
     name = "abstract"
+    #: True for policies whose select() may refuse while a queued request
+    #: still fits (capacity holds) — the governor counts those rounds as
+    #: ``admission.holds``.  Orthogonal to event consumption (attach()).
+    can_hold = False
 
     def select(self, queue: Sequence, fits: FitsFn,
                freed_streams: Sequence[str]) -> Optional[int]:
         raise NotImplementedError
+
+    def most_urgent_blocked(self, queue: Sequence,
+                            fits: FitsFn) -> Optional[int]:
+        """``rid`` of the request this policy most wants but cannot seat —
+        published in :class:`AdmissionDecision` events so SLA-aware
+        policies (and dashboards) can observe starvation.  Default: the
+        first queued request (arrival order) that does not fit."""
+        for r in queue:
+            if not fits(r):
+                return r.rid
+        return None
 
 
 class FcfsPolicy(AdmissionPolicy):
@@ -98,8 +122,114 @@ class PriorityPolicy(AdmissionPolicy):
         return best
 
 
+class DeadlinePolicy(AdmissionPolicy):
+    """Earliest-deadline-first admission with starvation holds (SLA-aware).
+
+    A request's deadline is ``arrival + sla`` (``sla`` defaults to
+    ``default_sla`` when the request carries none; ``arrival`` falls back
+    to the submission-ordered ``rid``).  Selection is EDF over the
+    requests that currently fit.
+
+    **Event-driven holds.**  The policy subscribes to
+    :class:`~repro.core.events.AdmissionDecision` (via :meth:`attach`,
+    called by the governor): every ``"admit"`` decision whose
+    ``blocked_rid`` names the policy's most urgent request counts one
+    *leapfrog* — a later arrival seated past it because its window did not
+    fit.  Once a request has been leapfrogged ``hold_after`` times,
+    ``select`` admits *nothing* until that request fits — running work
+    drains, the freed window accumulates, and the starved request is
+    seated with bounded delay instead of watching smaller late arrivals
+    nibble freed capacity forever (FCFS first-fit's tail pathology on
+    mice-and-elephants workloads).
+    """
+
+    name = "deadline"
+    can_hold = True
+
+    def __init__(self, default_sla: float = 64.0, hold_after: int = 8):
+        if hold_after < 1:
+            raise ValueError(f"hold_after must be >= 1, got {hold_after}")
+        self.default_sla = default_sla
+        self.hold_after = hold_after
+        self._deferrals: dict[int, int] = {}        # rid → true leapfrogs
+        self._last_deadlines: dict[int, tuple] = {}  # rid → deadline @select
+        #: (queue rid tuple, EDF index order, rid → deadline) memo
+        self._order_cache: "tuple[tuple, list, dict] | None" = None
+
+    def deadline(self, r) -> tuple:
+        arrival = getattr(r, "arrival", None)
+        if arrival is None:
+            arrival = r.rid
+        sla = getattr(r, "sla", None)
+        if sla is None:
+            sla = self.default_sla
+        return (arrival + sla, arrival)             # ties: earlier arrival
+
+    def _edf_order(self, queue) -> list[int]:
+        """EDF index order, memoised per queue composition — the governor
+        re-asks for it (``most_urgent_blocked``) in the same round that
+        ``select`` already sorted.  The per-rid deadline map rides in the
+        cache too (``_order_cache[2]``) so select() never recomputes it."""
+        key = tuple(r.rid for r in queue)
+        if self._order_cache is not None and self._order_cache[0] == key:
+            return self._order_cache[1]
+        deadlines = {r.rid: self.deadline(r) for r in queue}
+        order = sorted(range(len(queue)),
+                       key=lambda i: deadlines[queue[i].rid])
+        self._order_cache = (key, order, deadlines)
+        return order
+
+    def select(self, queue, fits, freed_streams):
+        order = self._edf_order(queue)
+        if not order:
+            return None
+        # remember each request's deadline so on_decision can classify the
+        # admission it triggers as a true leapfrog or an EDF-correct pick
+        self._last_deadlines = self._order_cache[2]
+        urgent = queue[order[0]]
+        if fits(urgent):
+            return order[0]
+        if self._deferrals.get(urgent.rid, 0) >= self.hold_after:
+            return None                 # hold: drain capacity to the starver
+        for i in order[1:]:
+            if fits(queue[i]):
+                return i
+        return None
+
+    def most_urgent_blocked(self, queue, fits):
+        order = self._edf_order(queue)
+        for i in order:
+            if not fits(queue[i]):
+                return queue[i].rid
+        return None
+
+    # ------------------------------------------------------ event consumption
+    def attach(self, bus) -> None:
+        """Subscribe to the governor's ``AdmissionDecision`` stream."""
+        from repro.core.events import AdmissionDecision
+        bus.subscribe(AdmissionDecision, self.on_decision)
+
+    def on_decision(self, evt) -> None:
+        if evt.decision != "admit":
+            return
+        if evt.blocked_rid is not None and evt.rid != evt.blocked_rid:
+            # a TRUE leapfrog only: the admitted request's deadline is
+            # later than the blocked one's — the first-fit bypass that
+            # starves large windows.  An EDF-correct admission of a
+            # more-urgent request must not age the blocked one toward a
+            # hold (capacity it never contended for).
+            admitted = self._last_deadlines.get(evt.rid)
+            blocked = self._last_deadlines.get(evt.blocked_rid)
+            if admitted is not None and blocked is not None \
+                    and admitted > blocked:
+                self._deferrals[evt.blocked_rid] = (
+                    self._deferrals.get(evt.blocked_rid, 0) + 1)
+        if evt.rid is not None:
+            self._deferrals.pop(evt.rid, None)
+
+
 _POLICIES = {p.name: p for p in (FcfsPolicy, RecycleAffinityPolicy,
-                                 PriorityPolicy)}
+                                 PriorityPolicy, DeadlinePolicy)}
 
 
 def make_policy(policy: "str | AdmissionPolicy") -> AdmissionPolicy:

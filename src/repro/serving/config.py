@@ -1,0 +1,91 @@
+"""Unified serving-engine configuration.
+
+``Engine.__init__`` had grown ~14 loose keyword arguments spanning four
+layers (model paging, fence scoping, worker routing, admission control).
+:class:`EngineConfig` is the single validated carrier; the old kwargs keep
+working for one release through :meth:`EngineConfig.from_legacy_kwargs`
+(the engine warns ``DeprecationWarning`` when they are used).
+
+The config object is deliberately *data only*: the engine still builds the
+cache, governor and evictor itself — configuration and wiring stay
+separate, which is what lets ``benchmarks/engine_trace.py`` assert that a
+config-built engine replays bit-identically to a legacy-kwargs one.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.core.config import LegacyKwargsConfig
+from repro.core.contexts import ContextScope
+from repro.core.eviction import Watermarks
+from repro.serving.admission import GovernorConfig
+
+WORKER_ROUTINGS = ("slot", "stream")
+
+
+@dataclass(frozen=True)
+class EngineConfig(LegacyKwargsConfig):
+    """Validated configuration of a :class:`~repro.serving.engine.Engine`.
+
+    ``admission`` accepts ``None`` (legacy fill-every-slot scheduling), a
+    policy name (``"fcfs"`` / ``"recycle"`` / ``"priority"`` /
+    ``"deadline"``) or a full :class:`GovernorConfig`.
+    """
+
+    num_blocks: int = 256
+    max_batch: int = 8
+    max_seq_len: int = 512
+    fpr_enabled: bool = True
+    scope: ContextScope = ContextScope.PER_GROUP
+    page_impl: str = "ref"
+    dtype: Any = jnp.float32
+    watermarks: Optional[Watermarks] = None
+    eos_token: Optional[int] = None
+    greedy: bool = True
+    num_workers: int = 1
+    scoped_fences: bool = True
+    worker_routing: str = "slot"
+    cost_model: Any = None
+    admission: "GovernorConfig | str | None" = field(default=None)
+
+    #: exactly the legacy Engine keyword arguments
+    LEGACY_KWARGS = ("num_blocks", "max_batch", "max_seq_len", "fpr_enabled",
+                     "scope", "page_impl", "dtype", "watermarks",
+                     "eos_token", "greedy", "num_workers", "scoped_fences",
+                     "worker_routing", "cost_model", "admission")
+    LEGACY_TARGET = "Engine"
+
+    def __post_init__(self) -> None:
+        if self.num_blocks <= 0 or self.max_batch <= 0:
+            raise ValueError(f"num_blocks and max_batch must be positive, "
+                             f"got {self.num_blocks} / {self.max_batch}")
+        if self.max_seq_len <= 0:
+            raise ValueError(f"max_seq_len must be positive, "
+                             f"got {self.max_seq_len}")
+        if self.num_workers < 1:
+            raise ValueError(f"num_workers must be >= 1, "
+                             f"got {self.num_workers}")
+        if self.worker_routing not in WORKER_ROUTINGS:
+            raise ValueError(f"unknown worker_routing "
+                             f"{self.worker_routing!r}; "
+                             f"known: {WORKER_ROUTINGS}")
+        if not (self.admission is None
+                or isinstance(self.admission, (str, GovernorConfig))):
+            raise ValueError(
+                "admission must be None, a policy name or a GovernorConfig, "
+                f"got {type(self.admission).__name__}")
+
+    def governor_config(self) -> Optional[GovernorConfig]:
+        """The resolved admission config (None ⇒ governor disabled)."""
+        if self.admission is None:
+            return None
+        if isinstance(self.admission, GovernorConfig):
+            return self.admission
+        return GovernorConfig(policy=self.admission)
+
+
+__all__ = ["EngineConfig", "WORKER_ROUTINGS"]

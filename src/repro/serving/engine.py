@@ -28,18 +28,20 @@ keeps the ``demand_pager_gave_up`` counter behaviour.
 from __future__ import annotations
 
 import time
+import warnings
 import zlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.contexts import ContextScope
-from repro.core.eviction import WatermarkEvictor, Watermarks
+from repro.core.eviction import WatermarkEvictor
+from repro.core.events import PreemptionResolved, PreemptionStarted
+from repro.core.metrics import legacy_view
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
-from repro.serving.admission import (CapacityError, GovernorConfig,
-                                     MemoryGovernor)
+from repro.serving.admission import CapacityError, MemoryGovernor
+from repro.serving.config import EngineConfig
 from repro.serving.kv_cache import PagedKVCache
 from repro.serving.scheduler import Request, Scheduler
 
@@ -50,42 +52,60 @@ _SLOT_STATE_KEYS = ("conv", "ssm", "rwkv_x", "rwkv_s", "cross_k", "cross_v")
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, *, num_blocks: int = 256,
-                 max_batch: int = 8, max_seq_len: int = 512,
-                 fpr_enabled: bool = True,
-                 scope: ContextScope = ContextScope.PER_GROUP,
-                 page_impl: str = "ref", dtype=jnp.float32,
-                 watermarks: Watermarks | None = None,
-                 eos_token: int | None = None, greedy: bool = True,
-                 num_workers: int = 1, scoped_fences: bool = True,
-                 worker_routing: str = "slot", cost_model=None,
-                 admission: GovernorConfig | str | None = None):
+    """Continuous-batching engine over the FPR paged cache.
+
+    Construction: ``Engine(cfg, params, config=EngineConfig(...))``.  The
+    pre-PR loose keyword arguments keep working for one release through
+    :meth:`EngineConfig.from_legacy_kwargs` and warn ``DeprecationWarning``
+    — ``benchmarks/engine_trace.py`` asserts both construction paths replay
+    bit-identically.
+
+    The engine shares one :class:`~repro.core.events.EventBus` with its
+    cache, fence engine, memory manager and governor (:attr:`bus`), and one
+    :class:`~repro.core.metrics.MetricsRegistry` (:attr:`metrics`) whose
+    flat snapshot is the canonical counter schema; :meth:`stats` is the
+    legacy nested view of that snapshot.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *,
+                 config: EngineConfig | None = None, **legacy_kwargs):
+        if legacy_kwargs:
+            warnings.warn(
+                "Engine(**kwargs) is deprecated; pass "
+                "config=EngineConfig(...) instead", DeprecationWarning,
+                stacklevel=2)
+            config = EngineConfig.from_legacy_kwargs(legacy_kwargs,
+                                                     base=config)
+        config = config or EngineConfig()
+        self.config = config
         self.cfg = cfg
         self.params = params
-        self.page_impl = page_impl
-        self.eos = eos_token
-        self.greedy = greedy
-        self.cache = PagedKVCache(cfg, num_blocks, max_batch, max_seq_len,
-                                  fpr_enabled=fpr_enabled, scope=scope,
-                                  dtype=dtype, num_workers=num_workers,
-                                  scoped_fences=scoped_fences,
-                                  cost_model=cost_model)
-        if worker_routing not in ("slot", "stream"):
-            raise ValueError(f"unknown worker_routing {worker_routing!r}")
-        self.worker_routing = worker_routing
-        self.sched = Scheduler(max_batch)
-        if admission is None:
+        self.page_impl = config.page_impl
+        self.eos = config.eos_token
+        self.greedy = config.greedy
+        self.cache = PagedKVCache(
+            cfg, config.num_blocks, config.max_batch, config.max_seq_len,
+            fpr_enabled=config.fpr_enabled, scope=config.scope,
+            dtype=config.dtype, num_workers=config.num_workers,
+            scoped_fences=config.scoped_fences,
+            cost_model=config.cost_model)
+        self.bus = self.cache.bus
+        self.metrics = self.cache.metrics
+        self.worker_routing = config.worker_routing
+        self.sched = Scheduler(config.max_batch)
+        gcfg = config.governor_config()
+        if gcfg is None:
             self.governor = None
         else:
-            gcfg = (admission if isinstance(admission, GovernorConfig)
-                    else GovernorConfig(policy=admission))
             self.governor = MemoryGovernor(
-                num_blocks, self.cache.block_size,
-                num_workers=num_workers, config=gcfg)
+                config.num_blocks, self.cache.block_size,
+                num_workers=config.num_workers, config=gcfg, bus=self.bus)
+        self.metrics.register("admission", self._admission_metrics)
+        self.metrics.register("engine", self._engine_metrics)
         self._slot_state_keys = [k for k in self.cache.state
                                  if k in _SLOT_STATE_KEYS]
         self.evictor = WatermarkEvictor(self.cache.mgr, self._lru_victims,
-                                        watermarks=watermarks)
+                                        watermarks=config.watermarks)
         self.steps = 0
         self.tokens_generated = 0
         self.wall_s = 0.0
@@ -96,13 +116,14 @@ class Engine:
 
         self._decode = jax.jit(
             lambda p, st, t: tfm.decode_step(p, cfg, st, t,
-                                             page_impl=page_impl))
+                                             page_impl=config.page_impl))
         self._prefill = jax.jit(
             lambda p, t, st: tfm.prefill(p, cfg, t, st))
 
     # ------------------------------------------------------------ lifecycle
     def submit(self, prompt, max_new_tokens: int, stream: str = "default",
-               group_id: int = 1, priority: int = 0) -> int:
+               group_id: int = 1, priority: int = 0,
+               sla: float | None = None) -> int:
         if self.governor is not None:
             need = len(prompt) + max_new_tokens
             window = max(1, -(-need // self.cache.block_size))
@@ -111,7 +132,7 @@ class Engine:
                     f"request window of {window} blocks can never fit the "
                     f"admission limit of {self.governor.ledger.limit}")
         return self.sched.submit(prompt, max_new_tokens, stream, group_id,
-                                 priority)
+                                 priority, sla=sla)
 
     def _lru_victims(self):
         """LRU over running sequences' oldest blocks (outside any window)."""
@@ -232,7 +253,9 @@ class Engine:
         strategy actually applied.
         """
         gov = self.governor
-        strategy = strategy or gov.config.preempt
+        requested = strategy or gov.config.preempt
+        self.bus.publish(PreemptionStarted(rid=r.rid, strategy=requested))
+        strategy = requested
         if strategy == "swap" and (self._slot_state_keys
                                    or r.mapping is None):
             # per-slot recurrent state cannot survive a slot change, and a
@@ -253,7 +276,8 @@ class Engine:
         else:
             self.sched.preempt(
                 r, free=lambda m: self.cache.free_sequence(m, worker=worker))
-        gov.count_preempt(strategy)
+        # the governor's preemption counters subscribe to this event
+        self.bus.publish(PreemptionResolved(rid=r.rid, strategy=strategy))
         return strategy
 
     def _prefill_request(self, r: Request) -> None:
@@ -421,13 +445,14 @@ class Engine:
             self.step()
         return self.stats()
 
-    def stats(self) -> dict:
-        c = self.cache.counters()
-        c.update({
+    def _admission_metrics(self) -> dict:
+        if self.governor is None:
+            return {"enabled": False}
+        return {"enabled": True, **self.governor.counters()}
+
+    def _engine_metrics(self) -> dict:
+        return {
             "steps": self.steps,
-            "admission": (self.governor.counters()
-                          if self.governor is not None
-                          else {"enabled": False}),
             "demand_pager_gave_up": self.demand_pager_gave_up,
             "tokens": self.tokens_generated,
             "wall_s": round(self.wall_s, 4),
@@ -435,5 +460,10 @@ class Engine:
                 self.tokens_generated / self.wall_s, 2)
             if self.wall_s else None,
             "completed": len(self.sched.done),
-        })
-        return c
+        }
+
+    def stats(self) -> dict:
+        """Legacy nested counter view, derived from :attr:`metrics` — the
+        pre-registry ``Engine.stats()`` shape, kept for one release.  New
+        code reads ``self.metrics.snapshot()`` (flat namespaced schema)."""
+        return legacy_view(self.metrics.snapshot())

@@ -7,8 +7,11 @@ The split of responsibilities mirrors the paper exactly:
   * ``PagedKVCache`` is the *device side*: the pools live as JAX arrays, and
     the per-step (tables, lengths) tensors are assembled from the manager's
     mappings.  A coherence fence invalidates device table copies (epoch
-    bump); the measured fence callback drains in-flight computation and
-    re-uploads the tables — the TLB-flush analogue whose cost FPR avoids.
+    bump); the cache subscribes to :class:`~repro.core.events.FenceIssued`
+    on the stack's event bus and its handler drains in-flight computation
+    and re-uploads the tables — the TLB-flush analogue whose cost FPR
+    avoids (each refresh is published back as
+    :class:`~repro.core.events.ShardRefreshed`).
 
 **Sharded device tables.**  The device block-table is split into one shard
 per worker: shard ``w`` holds the batch slots with ``slot % num_workers ==
@@ -33,7 +36,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.block_table import Mapping
+from repro.core.config import FprConfig
 from repro.core.contexts import ContextRegistry, ContextScope
+from repro.core.events import (EventBus, FenceIssued, ShardRefreshed,
+                               SwapDropped)
 from repro.core.fpr import FprMemoryManager
 from repro.core.shootdown import FenceCostModel, FenceEngine
 from repro.models import transformer as tfm
@@ -51,15 +57,21 @@ class PagedKVCache:
         self.block_size = tfm.BLOCK_SIZE
         self.max_batch = max_batch
         self.max_blocks_per_seq = -(-max_seq_len // self.block_size)
+        self.bus = EventBus()
         self.fences = FenceEngine(cost_model=cost_model,
-                                  on_fence=self._device_fence,
                                   num_workers=num_workers,
-                                  scoped=scoped_fences)
+                                  scoped=scoped_fences, bus=self.bus)
+        # The manager subscribes its table-epoch bump first (coherence
+        # order: host epochs move before the device shards refresh).
         self.mgr = FprMemoryManager(
-            num_blocks, num_workers=num_workers, max_seqs=max_batch * 4,
-            max_blocks_per_seq=self.max_blocks_per_seq,
-            fence_engine=self.fences, fpr_enabled=fpr_enabled,
-            scoped_fences=scoped_fences)
+            config=FprConfig(num_blocks=num_blocks, num_workers=num_workers,
+                             max_seqs=max_batch * 4,
+                             max_blocks_per_seq=self.max_blocks_per_seq,
+                             fpr_enabled=fpr_enabled,
+                             scoped_fences=scoped_fences),
+            fence_engine=self.fences)
+        self.metrics = self.mgr.metrics
+        self.metrics.register("device", self._device_metrics)
         self.num_workers = num_workers
         self.contexts = ContextRegistry(default_scope=scope)
         self.fpr_enabled = fpr_enabled
@@ -107,7 +119,18 @@ class PagedKVCache:
                            if k in ("k", "v", "mla_c", "mla_rope")]
         self.mgr.on_swap_out = self._swap_out
         self.mgr.on_swap_in = self._swap_in
-        self.mgr.on_swap_drop = self._swap_drop
+        # event-bus subscriptions: the measured device-shard refresh runs on
+        # every fence (after the manager's epoch bump, which subscribed
+        # first), and dying mappings' swap-store copies are dropped
+        self.bus.subscribe(FenceIssued, self._on_fence_issued)
+        self.bus.subscribe(SwapDropped, self._handle_swap_dropped)
+
+    def _on_fence_issued(self, evt: FenceIssued) -> None:
+        self._device_fence(evt.reason, evt.n_blocks, evt.workers)
+
+    def _handle_swap_dropped(self, evt: SwapDropped) -> None:
+        """Mapping destroyed with this block swapped out — free the copy."""
+        self._swap_store.pop((evt.mapping_id, evt.logical_idx), None)
 
     def _swap_out(self, mid: int, idx: int, phys: int) -> None:
         self._swap_store[(mid, idx)] = {
@@ -121,10 +144,6 @@ class PagedKVCache:
         for key, rows in data.items():
             self.state[key] = self.state[key].at[:, phys].set(
                 jnp.asarray(rows))
-
-    def _swap_drop(self, mid: int, idx: int) -> None:
-        """Mapping destroyed with this block swapped out — free the copy."""
-        self._swap_store.pop((mid, idx), None)
 
     # -------------------------------------------------- measured fence cost
     def bind_slot_worker(self, slot: int, worker: int) -> None:
@@ -176,6 +195,7 @@ class PagedKVCache:
         # slots are rebuilt: host-side fence work scales with the mask
         # popcount, like the upload it feeds.
         alive = self.mgr.tables.mappings
+        entries = nbytes = 0
         for w in shards:
             slots = self._shard_slots[w]
             rows = np.full((len(slots), self.max_blocks_per_seq), -1,
@@ -187,14 +207,20 @@ class PagedKVCache:
             self._host_tables[slots] = rows              # device now has them
             self._shard_tables[w] = jax.device_put(
                 jnp.asarray(rows, jnp.int32))
-            self._refreshed_entries += rows.size
-            self._refreshed_bytes += rows.nbytes
+            entries += rows.size
+            nbytes += rows.nbytes
+        self._refreshed_entries += entries
+        self._refreshed_bytes += nbytes
         self.state["tables"] = self._assemble_tables()
         self._fence_drains += 1
         if workers is None:
             self._full_refreshes += 1
         else:
             self._shard_refreshes += 1
+        if self.bus.wants(ShardRefreshed):
+            self.bus.publish(ShardRefreshed(
+                reason=reason, shards=tuple(int(s) for s in shards),
+                entries=entries, nbytes=nbytes, full=workers is None))
 
     # ---------------------------------------------------------- allocation
     def alloc_sequence(self, n_tokens: int, *, stream: str = "default",
@@ -248,13 +274,17 @@ class PagedKVCache:
         self.state["tables"] = self._assemble_tables()
         self.state["lengths"] = jnp.asarray(lengths, jnp.int32)
 
+    def _device_metrics(self) -> dict:
+        return {"fence_drains": self._fence_drains,
+                "table_shards": self.num_shards,
+                "full_refreshes": self._full_refreshes,
+                "shard_refreshes": self._shard_refreshes,
+                "refreshed_entries": self._refreshed_entries,
+                "refreshed_bytes": self._refreshed_bytes,
+                "step_upload_entries": self._step_upload_entries}
+
     def counters(self) -> dict:
-        d = self.mgr.counters()
-        d["device_fence_drains"] = self._fence_drains
-        d["device_table_shards"] = self.num_shards
-        d["device_full_refreshes"] = self._full_refreshes
-        d["device_shard_refreshes"] = self._shard_refreshes
-        d["device_refreshed_entries"] = self._refreshed_entries
-        d["device_refreshed_bytes"] = self._refreshed_bytes
-        d["device_step_upload_entries"] = self._step_upload_entries
-        return d
+        """Legacy nested counter view (see :meth:`FprMemoryManager.counters`);
+        new code reads ``self.metrics.snapshot()``."""
+        from repro.core.metrics import legacy_view
+        return legacy_view(self.metrics.snapshot())

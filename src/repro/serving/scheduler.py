@@ -46,6 +46,10 @@ class Request:
     stream: str = "default"
     group_id: int = 1
     priority: int = 0                  # admission class (higher = sooner)
+    arrival: int = 0                   # submission ordinal (deterministic
+                                       # virtual arrival time)
+    sla: Optional[float] = None        # deadline budget for SLA-aware
+                                       # admission (deadline = arrival+sla)
     # runtime
     slot: Optional[int] = None
     mapping: Optional[Mapping] = None
@@ -69,13 +73,15 @@ class Scheduler:
         self._rid = itertools.count(1)
 
     def submit(self, prompt, max_new_tokens: int, stream: str = "default",
-               group_id: int = 1, priority: int = 0) -> int:
+               group_id: int = 1, priority: int = 0,
+               sla: Optional[float] = None) -> int:
         rid = next(self._rid)
         self.queue.append(Request(rid=rid,
                                   prompt=np.asarray(prompt, np.int32),
                                   max_new_tokens=max_new_tokens,
                                   stream=stream, group_id=group_id,
-                                  priority=priority))
+                                  priority=priority, arrival=rid,
+                                  sla=sla))
         return rid
 
     def admissible(self) -> list[int]:

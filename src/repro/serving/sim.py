@@ -22,6 +22,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.config import FprConfig
 from repro.core.contexts import ContextScope, derive_context
 from repro.core.eviction import WatermarkEvictor, Watermarks
 from repro.core.fpr import FprMemoryManager
@@ -98,10 +99,11 @@ class FenceImpactSim:
         self.fences = FenceEngine(cost_model=cost_model, measure=False,
                                   scoped=cfg.scoped)
         self.mgr = FprMemoryManager(
-            cfg.num_blocks,
-            num_workers=max(1, cfg.io_workers + cfg.mixed_workers),
-            fence_engine=self.fences, fpr_enabled=cfg.fpr,
-            scoped_fences=cfg.scoped)
+            config=FprConfig(
+                num_blocks=cfg.num_blocks,
+                num_workers=max(1, cfg.io_workers + cfg.mixed_workers),
+                fpr_enabled=cfg.fpr, scoped_fences=cfg.scoped),
+            fence_engine=self.fences)
         # compute workers hold table replicas too (they are what a global
         # fence needlessly stalls); give them epoch slots after io+mixed
         self.fences.ensure_workers(max(1, cfg.io_workers + cfg.mixed_workers
@@ -188,10 +190,12 @@ def eviction_sim(cfg: SimConfig, *, working_set_factor: float = 10.0,
     """
     rng = np.random.default_rng(cfg.seed)
     fences = FenceEngine(measure=False)
-    mgr = FprMemoryManager(cfg.num_blocks, num_workers=1,
-                           fence_engine=fences, fpr_enabled=cfg.fpr,
-                           max_blocks_per_seq=int(
-                               cfg.num_blocks * working_set_factor) + 1)
+    mgr = FprMemoryManager(
+        config=FprConfig(num_blocks=cfg.num_blocks, num_workers=1,
+                         fpr_enabled=cfg.fpr,
+                         max_blocks_per_seq=int(
+                             cfg.num_blocks * working_set_factor) + 1),
+        fence_engine=fences)
     res = SimResult()
     n_threads = max(1, cfg.mixed_workers)
     total_blocks = int(cfg.num_blocks * working_set_factor)
@@ -247,15 +251,21 @@ def eviction_sim(cfg: SimConfig, *, working_set_factor: float = 10.0,
 class AdmissionSimConfig:
     """Virtual-time model of the admission/preemption subsystem.
 
-    Closed-loop: ``n_requests`` jobs are queued at t=0 and drain through
-    ``max_batch`` decode slots over a ``pool_blocks`` ledger (block_size 1:
-    a job's window *is* its block count).  Each virtual step every running
-    job decodes once; admission-queue latency is the steps a job spends
-    queued.  With ``overcommit_ratio > 1`` the ledger admits optimistically
-    and demand-pager pressure (committed > pool) preempts victims —
-    ``recompute`` forfeits the victim's decoded progress plus a re-prefill,
-    ``swap`` pays per-block transfer both ways but keeps progress — the
-    same cost split the real engine's two victim strategies have.
+    ``n_requests`` jobs drain through ``max_batch`` decode slots over a
+    ``pool_blocks`` ledger (block_size 1: a job's window *is* its block
+    count).  ``arrival_every = 0`` queues everything at t=0 (closed loop);
+    ``> 0`` staggers arrivals by that many virtual steps — the open-loop
+    shape where FCFS first-fit *starves* large windows (freshly freed
+    capacity is re-nibbled by small late arrivals before a large window
+    can accumulate) and the SLA/deadline policy's capacity holds bound the
+    tail.  Each virtual step every running job decodes once;
+    admission-queue latency is the steps a job spends queued after
+    arriving.  With ``overcommit_ratio > 1`` the ledger admits
+    optimistically and demand-pager pressure (committed > pool) preempts
+    victims — ``recompute`` forfeits the victim's decoded progress plus a
+    re-prefill, ``swap`` pays per-block transfer both ways but keeps
+    progress — the same cost split the real engine's two victim strategies
+    have.
     """
 
     pool_blocks: int = 64
@@ -263,15 +273,23 @@ class AdmissionSimConfig:
     n_requests: int = 64
     n_streams: int = 4
     priority_classes: int = 1          # >1 ⇒ jobs get seeded priorities
-    policy: str = "fcfs"               # fcfs | recycle | priority
+    policy: str = "fcfs"               # fcfs | recycle | priority | deadline
     preempt: str = "recompute"         # recompute | swap
     overcommit_ratio: float = 1.0
     window_lo: int = 2                 # job window, blocks (seeded uniform)
     window_hi: int = 8
+    large_frac: float = 0.0            # >0 ⇒ bimodal mice-and-elephants mix:
+                                       # window_hi with this probability,
+                                       # else window_lo (the classic
+                                       # first-fit starvation workload)
     steps_per_block: int = 4           # decode steps per window block
     step_time: float = 1.0             # virtual µs per engine step
     prefill_cost: float = 4.0          # virtual µs per (re-)prefill
     swap_cost_per_block: float = 0.5   # virtual µs per block swapped out+in
+    sla_steps: float = 64.0            # deadline budget (virtual steps) for
+                                       # the SLA-aware deadline policy
+    arrival_every: float = 0.0         # virtual steps between arrivals
+                                       # (0 ⇒ closed loop, all at t=0)
     seed: int = 0
 
 
@@ -282,6 +300,8 @@ class _SimJob:
     priority: int
     window: int
     service_steps: int
+    arrival: int = 0                   # virtual arrival ordinal (EDF key)
+    sla: "float | None" = None         # deadline budget (deadline policy)
     prompt: range = range(0)           # governor reads len(prompt)+max_new
     max_new_tokens: int = 0
     done_steps: int = 0
@@ -301,12 +321,23 @@ def admission_sim(cfg: AdmissionSimConfig) -> dict:
                               overcommit_ratio=cfg.overcommit_ratio))
     jobs = []
     for i in range(cfg.n_requests):
-        w = int(rng.integers(cfg.window_lo, cfg.window_hi + 1))
+        if cfg.large_frac > 0:
+            w = (cfg.window_hi if rng.random() < cfg.large_frac
+                 else cfg.window_lo)
+        else:
+            w = int(rng.integers(cfg.window_lo, cfg.window_hi + 1))
         jobs.append(_SimJob(
             rid=i + 1, stream=f"s{i % cfg.n_streams}",
             priority=int(rng.integers(0, max(1, cfg.priority_classes))),
-            window=w, service_steps=w * cfg.steps_per_block))
-    queue = list(jobs)
+            window=w, service_steps=w * cfg.steps_per_block,
+            arrival=int(i * cfg.arrival_every) + 1 if cfg.arrival_every
+            else i + 1, sla=cfg.sla_steps))
+    if cfg.arrival_every:
+        pending = list(jobs)            # arrive over virtual time
+        queue: list[_SimJob] = []
+    else:
+        pending = []
+        queue = list(jobs)              # closed loop: all queued at t=0
     running: dict[int, _SimJob] = {}
     done: list[_SimJob] = []
     overhead = 0.0                      # prefill + swap virtual time
@@ -327,11 +358,13 @@ def admission_sim(cfg: AdmissionSimConfig) -> dict:
         gov.count_preempt(cfg.preempt)
         queue.insert(0, victim)
 
-    while queue or running:
+    while pending or queue or running:
         steps += 1
         if steps > 1_000_000:
             raise RuntimeError("admission_sim failed to drain — "
                                "a job can never be admitted")
+        while pending and pending[0].arrival <= steps:
+            queue.append(pending.pop(0))
         # --- priority pressure: evict lower classes for a blocked one ----
         while True:
             bi = gov.wants_priority_preempt(queue)
@@ -379,10 +412,12 @@ def admission_sim(cfg: AdmissionSimConfig) -> dict:
         "completed": len(done),
         "makespan": steps * cfg.step_time,
         "queue_wait_mean": round(float(np.mean(waits)), 3),
+        "queue_wait_p99": round(float(np.percentile(waits, 99)), 3),
         "queue_wait_max": round(float(np.max(waits)), 3),
         "preemptions_recompute": g.preemptions_recompute,
         "preemptions_swap": g.preemptions_swap,
         "rejected_overcommit": g.rejected_overcommit,
+        "holds": g.holds,
         "affinity_hit_rate": g.affinity_hit_rate,
         "wasted_decode_steps": wasted_steps,
         "preempt_overhead": round(overhead, 3),

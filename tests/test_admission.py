@@ -226,6 +226,7 @@ import jax.numpy as jnp  # noqa: E402
 from repro.core.eviction import Watermarks  # noqa: E402
 from repro.models import transformer as tfm  # noqa: E402
 from repro.models.config import ModelConfig  # noqa: E402
+from repro.serving.config import EngineConfig  # noqa: E402
 from repro.serving.engine import Engine  # noqa: E402
 
 TINY = ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
@@ -235,9 +236,10 @@ PARAMS = tfm.init_params(jax.random.PRNGKey(0), TINY, jnp.float32)
 
 def make_engine(admission, *, num_blocks=8, max_batch=2, watermarks=None,
                 num_workers=4):
-    return Engine(TINY, PARAMS, num_blocks=num_blocks, max_batch=max_batch,
-                  max_seq_len=512, fpr_enabled=True, num_workers=num_workers,
-                  admission=admission, watermarks=watermarks)
+    return Engine(TINY, PARAMS, config=EngineConfig(
+        num_blocks=num_blocks, max_batch=max_batch, max_seq_len=512,
+        fpr_enabled=True, num_workers=num_workers, admission=admission,
+        watermarks=watermarks))
 
 
 def run_to_tokens(eng, reqs):
@@ -468,3 +470,163 @@ class TestPolicyEquivalence:
                 > stats["fcfs"]["fpr"]["recycled_hits"])
         assert (stats["recycle"]["admission"]["affinity_hit_rate"]
                 > stats["fcfs"]["admission"]["affinity_hit_rate"])
+
+
+# ============================================================ ledger growth
+class TestLedgerGrowth:
+    """extend()-driven reservation growth (chunked-prefill direction)."""
+
+    def test_grow_extends_reservation(self):
+        led = CapacityLedger(10, num_workers=2)
+        led.reserve(1, 4, worker=1)
+        led.grow(1, 3)
+        assert led.committed == 7
+        assert led.per_worker == [0, 7]
+        led.check()
+        assert led.release(1) == 7              # release returns the grown size
+
+    def test_grow_refused_on_overcommit(self):
+        led = CapacityLedger(8)
+        led.reserve(1, 6)
+        with pytest.raises(CapacityError):
+            led.grow(1, 3)
+        led.check()
+        assert led.committed == 6               # refused growth left no trace
+
+    def test_grow_unknown_rid_and_bad_size(self):
+        led = CapacityLedger(8)
+        led.reserve(1, 2)
+        with pytest.raises(KeyError):
+            led.grow(99, 1)
+        with pytest.raises(ValueError):
+            led.grow(1, 0)
+
+    def test_governor_on_extend_tracks_mapping_growth(self):
+        """The governor's ledger follows FprMemoryManager.extend():
+        growth is committed, and refused growth raises before the pool
+        can over-commit."""
+        from repro.core.config import FprConfig
+        from repro.core.fpr import FprMemoryManager
+
+        gov = make_gov(8)
+        mgr = FprMemoryManager(config=FprConfig(num_blocks=8, max_order=5))
+        r = FakeReq(1, 2)
+        gov.on_admit(r)
+        m = mgr.mmap(2, None)
+        phys = mgr.extend(m.mapping_id, 4)
+        gov.on_extend(r, len(phys))
+        assert gov.ledger.committed == 6 == m.num_blocks
+        r2 = FakeReq(2, 2)
+        gov.on_admit(r2)
+        with pytest.raises(CapacityError):      # 6+2+1 > 8
+            gov.on_extend(r2, 1)
+        gov.ledger.check()
+
+
+# ========================================================== deadline policy
+class TestDeadlinePolicy:
+    def _q(self, *specs):
+        """specs: (rid, window, arrival, sla)"""
+        reqs = []
+        for rid, window, arrival, sla in specs:
+            r = FakeReq(rid, window)
+            r.arrival, r.sla = arrival, sla
+            reqs.append(r)
+        return reqs
+
+    def test_edf_pop_order(self):
+        from repro.serving.admission import DeadlinePolicy
+        p = DeadlinePolicy()
+        q = self._q((1, 1, 5, 100.0), (2, 1, 1, 10.0), (3, 1, 2, 4.0))
+        # deadlines: 105, 11, 6 → rid 3 first
+        assert p.select(q, fits_upto(9), ()) == 2
+        q.pop(2)
+        assert p.select(q, fits_upto(9), ()) == 1      # rid 2 next
+
+    def test_default_sla_falls_back_to_arrival_order(self):
+        from repro.serving.admission import DeadlinePolicy
+        p = DeadlinePolicy()
+        q = self._q((1, 1, 3, None), (2, 1, 1, None))
+        assert p.select(q, fits_upto(9), ()) == 1      # earlier arrival
+
+    def test_urgent_fitting_request_always_wins(self):
+        from repro.serving.admission import DeadlinePolicy
+        p = DeadlinePolicy(hold_after=1)
+        q = self._q((1, 2, 1, 5.0), (2, 1, 2, 5.0))
+        assert p.select(q, fits_upto(2), ()) == 0
+
+    def test_hold_after_leapfrogs_consumes_admission_events(self):
+        """The event-driven hold: AdmissionDecision events whose
+        blocked_rid names the urgent request age it toward a hold; once
+        held, smaller requests stop being admitted until it fits."""
+        from repro.core.events import AdmissionDecision, EventBus
+        from repro.serving.admission import DeadlinePolicy
+        p = DeadlinePolicy(hold_after=2)
+        bus = EventBus()
+        p.attach(bus)
+        big, small = (1, 5, 1, 5.0), (2, 1, 2, 5.0)
+        q = self._q(big, small)
+        fits = fits_upto(2)                      # big (5) never fits yet
+        assert p.select(q, fits, ()) == 1        # leapfrog #1 allowed
+        bus.publish(AdmissionDecision(decision="admit", rid=2, policy="deadline",
+                                      queue_depth=2, window_blocks=1,
+                                      blocked_rid=1))
+        assert p.select(q, fits, ()) == 1        # leapfrog #2 allowed
+        bus.publish(AdmissionDecision(decision="admit", rid=2, policy="deadline",
+                                      queue_depth=2, window_blocks=1,
+                                      blocked_rid=1))
+        assert p.select(q, fits, ()) is None     # held for rid 1
+        assert p.select(q, fits_upto(5), ()) == 0  # fits now → admitted
+        bus.publish(AdmissionDecision(decision="admit", rid=1, policy="deadline",
+                                      queue_depth=2, window_blocks=5,
+                                      blocked_rid=None))
+        assert p._deferrals.get(1) is None       # admission clears the age
+
+    def test_governor_publishes_and_policy_holds(self):
+        """End to end through MemoryGovernor.select: the governor's own
+        AdmissionDecision stream feeds the policy's hold, and held rounds
+        are counted in admission.holds."""
+        from repro.serving.admission import DeadlinePolicy
+        gov = make_gov(8, policy=DeadlinePolicy(hold_after=2))
+        big = FakeReq(1, 4)
+        big.arrival, big.sla = 1, 8.0
+        gov.on_admit(FakeReq(99, 5))             # occupant: big can't fit
+        q = [big]
+        for i in range(10):                      # small late arrivals
+            small = FakeReq(10 + i, 1)
+            small.arrival, small.sla = 2 + i, 8.0
+            q.append(small)
+        leapfrogs = 0
+        while True:
+            idx = gov.select(q)
+            if idx is None:
+                break
+            r = q.pop(idx)
+            assert r.rid != 1                    # big never fits here
+            gov.on_admit(r)
+            leapfrogs += 1
+        # two smalls leapfrog (7/8 committed), then the hold engages even
+        # though another small would still fit
+        assert leapfrogs == 2
+        assert gov.ledger.fits(1)                # capacity was NOT the stop
+        assert gov.stats.holds >= 1
+        assert gov.counters()["holds"] == gov.stats.holds
+
+    def test_deadline_beats_fcfs_p99_on_starvation_trace(self):
+        """The bench-trace regression: open-loop mice-and-elephants
+        workload (benchmarks/admission_bench.SLA_SIM_KW) — FCFS first-fit
+        starves the whole-pool windows, the deadline policy's holds bound
+        the p99 queue-wait below FCFS's."""
+        from benchmarks.admission_bench import SLA_SIM_KW
+        from repro.serving.sim import AdmissionSimConfig, admission_sim
+
+        waits = {}
+        for policy in ("fcfs", "deadline"):
+            waits[policy] = admission_sim(AdmissionSimConfig(
+                policy=policy, n_requests=96, **SLA_SIM_KW))
+        assert (waits["deadline"]["queue_wait_p99"]
+                < waits["fcfs"]["queue_wait_p99"])
+        assert (waits["deadline"]["queue_wait_max"]
+                < waits["fcfs"]["queue_wait_max"])
+        assert waits["deadline"]["holds"] > 0
+        assert waits["deadline"]["completed"] == 96

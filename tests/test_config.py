@@ -1,0 +1,106 @@
+"""FprConfig / EngineConfig: validation, legacy-kwargs shims, warnings.
+
+The legacy construction paths (loose kwargs on FprMemoryManager/Engine)
+must keep working for one release — warning DeprecationWarning and
+producing a stack bit-identical to config construction (the engine-level
+bit-identity is asserted by benchmarks/engine_trace.py)."""
+
+import pytest
+
+from repro.core.config import FprConfig
+from repro.core.fpr import FprMemoryManager
+from repro.serving.admission import GovernorConfig
+from repro.serving.config import EngineConfig
+
+
+class TestFprConfig:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="num_blocks"):
+            FprConfig(num_blocks=0)
+        with pytest.raises(ValueError, match="num_workers"):
+            FprConfig(num_workers=0)
+        with pytest.raises(ValueError, match="pcp_batch"):
+            FprConfig(pcp_batch=64, pcp_high=32)
+        with pytest.raises(ValueError, match="max_order"):
+            FprConfig(max_order=-1)
+
+    def test_from_legacy_kwargs(self):
+        cfg = FprConfig.from_legacy_kwargs(
+            {"num_workers": 4, "fpr_enabled": False, "max_order": 5})
+        assert cfg.num_workers == 4 and not cfg.fpr_enabled
+        assert cfg.max_order == 5
+        assert cfg.max_seqs == FprConfig().max_seqs      # defaults kept
+
+    def test_from_legacy_kwargs_rejects_unknown(self):
+        with pytest.raises(TypeError, match="unknown FprMemoryManager"):
+            FprConfig.from_legacy_kwargs({"num_wrokers": 4})
+
+    def test_manager_legacy_kwargs_warn_and_match_config(self):
+        with pytest.warns(DeprecationWarning, match="FprMemoryManager"):
+            legacy = FprMemoryManager(32, num_workers=2, max_order=5)
+        modern = FprMemoryManager(
+            config=FprConfig(num_blocks=32, num_workers=2, max_order=5))
+        assert legacy.config == modern.config
+
+    def test_manager_config_path_does_not_warn(self):
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            FprMemoryManager(config=FprConfig(num_blocks=16))
+
+    def test_positional_num_blocks_is_legacy_and_warns(self):
+        with pytest.warns(DeprecationWarning, match="FprMemoryManager"):
+            m = FprMemoryManager(64)
+        assert m.config.num_blocks == 64
+        assert m.num_blocks == 64
+
+    def test_zero_arg_construction_raises(self):
+        # formerly TypeError (missing num_blocks) — must stay loud, not
+        # silently build a default-sized pool
+        with pytest.raises(TypeError, match="config=FprConfig"):
+            FprMemoryManager()
+
+    def test_legacy_on_fence_respects_measure_gate(self):
+        """Pre-bus contract: FenceEngine(measure=False, on_fence=cb)
+        never invoked cb — the shim preserves that."""
+        from repro.core.shootdown import FenceEngine
+        calls = []
+        with pytest.warns(DeprecationWarning):
+            eng = FenceEngine(measure=False,
+                              on_fence=lambda r, n, w: calls.append(r))
+        eng.fence("x", 1)
+        assert calls == []
+        eng.measure = True
+        eng.fence("y", 1)
+        assert calls == ["y"]
+
+
+class TestEngineConfig:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="worker_routing"):
+            EngineConfig(worker_routing="shard")
+        with pytest.raises(ValueError, match="num_blocks"):
+            EngineConfig(num_blocks=0)
+        with pytest.raises(ValueError, match="admission"):
+            EngineConfig(admission=42)
+
+    def test_governor_config_resolution(self):
+        assert EngineConfig().governor_config() is None
+        assert EngineConfig(admission="recycle").governor_config().policy \
+            == "recycle"
+        g = GovernorConfig(policy="priority", overcommit_ratio=1.5)
+        assert EngineConfig(admission=g).governor_config() is g
+
+    def test_from_legacy_kwargs_keeps_base(self):
+        base = EngineConfig(num_blocks=64, num_workers=4)
+        cfg = EngineConfig.from_legacy_kwargs({"max_batch": 2}, base=base)
+        assert cfg.num_blocks == 64 and cfg.num_workers == 4
+        assert cfg.max_batch == 2
+
+    def test_from_legacy_kwargs_rejects_unknown(self):
+        with pytest.raises(TypeError, match="unknown Engine"):
+            EngineConfig.from_legacy_kwargs({"nblocks": 4})
+
+    def test_replace(self):
+        cfg = EngineConfig(num_blocks=64)
+        assert cfg.replace(max_batch=2).num_blocks == 64

@@ -6,6 +6,7 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core import (ContextScope, FprMemoryManager, StaleMappingError,
                         WatermarkEvictor, Watermarks, derive_context)
+from repro.core.config import FprConfig
 
 
 def ctx(gid=1, scope=ContextScope.PER_GROUP, **kw):
@@ -13,7 +14,8 @@ def ctx(gid=1, scope=ContextScope.PER_GROUP, **kw):
 
 
 def make_mgr(n=512, fpr=True, **kw):
-    return FprMemoryManager(n, fpr_enabled=fpr, max_order=7, **kw)
+    return FprMemoryManager(
+        config=FprConfig(num_blocks=n, fpr_enabled=fpr, max_order=7, **kw))
 
 
 class TestRecyclingSkipsFences:
@@ -255,3 +257,56 @@ class TestContexts:
         assert reg.resolve(group_id=1, stream_name="web/a") is None
         assert reg.resolve(group_id=1, stream_name="web/a",
                            use_fpr=True) is not None
+
+
+class TestExtend:
+    """Decode-path growth: extend() must stamp tracking + presence exactly
+    like mmap's allocation-phase checks do."""
+
+    def test_extend_appends_fresh_logical_ids_and_rows(self):
+        m = make_mgr(n=64)
+        c = ctx(1)
+        mp = m.mmap(2, c)
+        high = m.tables.ids.high_water
+        got = m.extend(mp.mapping_id, 3)
+        assert len(got) == 3 and mp.num_blocks == 5
+        assert m.tables.ids.high_water == high + 3     # fresh logical ids
+        row = m.tables.table[m.tables.slot_of[mp.mapping_id]]
+        assert list(row[:5]) == mp.physical
+
+    def test_extend_stamps_owner_context(self):
+        m = make_mgr(n=64)
+        c = ctx(3)
+        mp = m.mmap(1, c)
+        got = np.asarray(m.extend(mp.mapping_id, 4), dtype=np.int64)
+        assert (m.tracker.ctx_ids(got) == c.ctx_id).all()
+
+    def test_extend_stamps_worker_presence_mask(self):
+        from repro.core.tracking import worker_bit
+        m = make_mgr(n=64, num_workers=4)
+        mp = m.mmap(1, ctx(1), worker=0)
+        got = np.asarray(m.extend(mp.mapping_id, 3, worker=2),
+                         dtype=np.int64)
+        masks = m.tracker.worker_masks(got)
+        assert (masks == worker_bit(2)).all()   # the extending worker only
+
+    def test_extend_applies_allocation_phase_fence(self):
+        """Blocks recycled into an extend() cross-context must fence at
+        allocation, exactly like mmap (§IV-A applies to growth too)."""
+        m = make_mgr(n=8, num_workers=1)
+        a = m.mmap(8, ctx(1))
+        m.munmap(a.mapping_id)                  # skip-fence free
+        assert m.fences.stats.fences == 0
+        b = m.mmap(1, ctx(2))                   # 1 recycled block, fence #1
+        fences_before = m.fences.stats.fences
+        m.extend(b.mapping_id, 4)               # more of ctx-1's blocks
+        assert m.fences.stats.fences == fences_before  # covered already
+        assert m.stats.allocs == 8 + 1 + 4
+
+    def test_extend_beyond_max_blocks_raises(self):
+        m = FprMemoryManager(
+            config=FprConfig(num_blocks=64, max_blocks_per_seq=4,
+                             max_order=7))
+        mp = m.mmap(3, ctx(1))
+        with pytest.raises(RuntimeError, match="max_blocks_per_seq"):
+            m.extend(mp.mapping_id, 2)

@@ -1,0 +1,185 @@
+"""Typed coherence-event bus: dispatch semantics + stack integration.
+
+The control plane's contract: every cross-layer observation (fences,
+recycling, context exits, swap drops, admission decisions, preemptions)
+is a frozen dataclass published on the stack's shared EventBus, replacing
+the signature-sniffed ``on_fence`` wrapper chain and the bare
+``on_swap_drop`` attribute hook."""
+
+import dataclasses
+
+import pytest
+
+from repro.core import ContextScope, FprMemoryManager, derive_context
+from repro.core.config import FprConfig
+from repro.core.events import (EVENT_TYPES, AdmissionDecision,
+                               BlocksRecycled, ContextExit, Event, EventBus,
+                               FenceIssued, PreemptionResolved, SwapDropped)
+from repro.core.shootdown import FenceEngine
+from repro.serving.admission import GovernorConfig, MemoryGovernor
+
+
+def ctx(gid):
+    return derive_context(ContextScope.PER_GROUP, group_id=gid)
+
+
+def make_mgr(n=64, workers=2):
+    return FprMemoryManager(
+        config=FprConfig(num_blocks=n, num_workers=workers, max_order=5),
+        fence_engine=FenceEngine(measure=False))
+
+
+# ==================================================================== EventBus
+class TestEventBus:
+    def test_exact_type_dispatch(self):
+        bus = EventBus()
+        got = []
+        bus.subscribe(FenceIssued, got.append)
+        evt = FenceIssued(reason="x", n_blocks=1, workers=None, seq=2,
+                          epoch=2, scoped=False)
+        assert bus.publish(evt) == 1
+        assert got == [evt]
+        # other types don't reach the handler
+        bus.publish(SwapDropped(mapping_id=1, logical_idx=0))
+        assert len(got) == 1
+
+    def test_wildcard_subscription_sees_everything(self):
+        bus = EventBus()
+        got = []
+        bus.subscribe(Event, got.append)
+        bus.publish(SwapDropped(mapping_id=1, logical_idx=0))
+        bus.publish(BlocksRecycled(ctx_id=1, n_blocks=2, worker=0))
+        assert [type(e) for e in got] == [SwapDropped, BlocksRecycled]
+
+    def test_subscription_order_is_dispatch_order(self):
+        bus = EventBus()
+        order = []
+        bus.subscribe(SwapDropped, lambda e: order.append("first"))
+        bus.subscribe(SwapDropped, lambda e: order.append("second"))
+        bus.subscribe(Event, lambda e: order.append("wildcard"))
+        bus.publish(SwapDropped(mapping_id=1, logical_idx=0))
+        assert order == ["first", "second", "wildcard"]
+
+    def test_unsubscribe(self):
+        bus = EventBus()
+        got = []
+        unsub = bus.subscribe(SwapDropped, got.append)
+        assert bus.wants(SwapDropped)
+        unsub()
+        assert not bus.wants(SwapDropped)
+        bus.publish(SwapDropped(mapping_id=1, logical_idx=0))
+        assert got == []
+
+    def test_subscribe_rejects_non_event_types(self):
+        with pytest.raises(TypeError):
+            EventBus().subscribe(int, lambda e: None)
+
+    def test_events_are_frozen(self):
+        evt = SwapDropped(mapping_id=1, logical_idx=0)
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            evt.mapping_id = 2
+        for et in EVENT_TYPES:
+            assert issubclass(et, Event)
+
+
+# ============================================================ stack integration
+class TestManagerEvents:
+    def test_fence_issued_published_with_scope(self):
+        m = make_mgr()
+        fences = []
+        m.bus.subscribe(FenceIssued, fences.append)
+        m.fences.fence("global_reason", 3)
+        m.fences.fence_scoped("scoped_reason", 1, worker_mask=0b01)
+        assert fences[0].workers is None and not fences[0].scoped
+        assert fences[0].reason == "global_reason"
+        assert fences[0].n_blocks == 3
+        assert fences[1].workers == (0,) and fences[1].scoped
+
+    def test_fence_event_bumps_table_epoch_first(self):
+        """The manager's epoch bump is subscribed before any later
+        subscriber — coherence order is subscription order."""
+        m = make_mgr()
+        seen = []
+        m.bus.subscribe(FenceIssued,
+                        lambda e: seen.append(m.tables.epoch))
+        before = m.tables.epoch
+        m.fences.fence("x", 1)
+        assert seen == [before + 1]     # bump already applied
+
+    def test_blocks_recycled_and_context_exit_events(self):
+        m = make_mgr(n=8, workers=1)
+        recycled, exits = [], []
+        m.bus.subscribe(BlocksRecycled, recycled.append)
+        m.bus.subscribe(ContextExit, exits.append)
+        mp = m.mmap(8, ctx(1), worker=0)        # whole pool
+        m.munmap(mp.mapping_id, worker=0)
+        m.mmap(8, ctx(1), worker=0)             # same ctx → recycled
+        assert recycled and recycled[-1].n_blocks == 8
+        assert recycled[-1].ctx_id == ctx(1).ctx_id
+        assert not exits
+
+        m2 = make_mgr(n=8, workers=1)
+        m2.bus.subscribe(ContextExit, exits.append)
+        mp = m2.mmap(8, ctx(1), worker=0)
+        m2.munmap(mp.mapping_id, worker=0)
+        m2.mmap(8, ctx(2), worker=0)            # foreign ctx → exit
+        assert exits and exits[-1].n_blocks == 8
+        assert exits[-1].fenced
+
+    def test_swap_dropped_event_replaces_attribute_hook(self):
+        from repro.core.fpr import SWAPPED
+        m = make_mgr(n=8, workers=1)
+        dropped = []
+        m.bus.subscribe(SwapDropped, dropped.append)
+        mp = m.mmap(2, ctx(1), worker=0)
+        m.evict([(mp.mapping_id, 0)], fpr_batch=True, worker=0)
+        assert mp.physical[0] == SWAPPED
+        m.munmap(mp.mapping_id, worker=0)
+        assert dropped == [SwapDropped(mapping_id=mp.mapping_id,
+                                       logical_idx=0)]
+
+    def test_on_swap_drop_shim_warns_and_works(self):
+        m = make_mgr(n=8, workers=1)
+        calls = []
+        with pytest.warns(DeprecationWarning,
+                          match="on_swap_drop is deprecated"):
+            m.on_swap_drop = lambda mid, idx: calls.append((mid, idx))
+        mp = m.mmap(2, ctx(1), worker=0)
+        m.evict([(mp.mapping_id, 1)], fpr_batch=True, worker=0)
+        m.munmap(mp.mapping_id, worker=0)
+        assert calls == [(mp.mapping_id, 1)]
+
+
+class TestGovernorEvents:
+    def _req(self, rid, window, stream="s0"):
+        class R:
+            pass
+        r = R()
+        r.rid, r.stream, r.priority = rid, stream, 0
+        r.prompt, r.max_new_tokens = range(window), 0
+        r.arrival, r.sla = rid, None
+        return r
+
+    def test_admission_decisions_published(self):
+        gov = MemoryGovernor(4, block_size=1,
+                             config=GovernorConfig(policy="fcfs"))
+        decisions = []
+        gov.bus.subscribe(AdmissionDecision, decisions.append)
+        q = [self._req(1, 3), self._req(2, 2)]
+        idx = gov.select(q)
+        assert idx == 0
+        assert decisions[-1].decision == "admit"
+        assert decisions[-1].rid == 1
+        assert decisions[-1].policy == "fcfs"
+        gov.on_admit(q.pop(0))
+        assert gov.select(q) is None            # 2 > 4-3 refused
+        assert decisions[-1].decision == "reject"
+        assert decisions[-1].blocked_rid == 2
+
+    def test_preemption_resolved_drives_counters(self):
+        gov = MemoryGovernor(8, block_size=1,
+                             config=GovernorConfig(policy="fcfs"))
+        gov.bus.publish(PreemptionResolved(rid=1, strategy="swap"))
+        gov.bus.publish(PreemptionResolved(rid=2, strategy="recompute"))
+        assert gov.stats.preemptions_swap == 1
+        assert gov.stats.preemptions_recompute == 1

@@ -18,7 +18,9 @@ pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
+from repro.core.config import FprConfig
 from repro.core.contexts import ContextScope, derive_context
+from repro.core.events import FenceIssued
 from repro.core.fpr import FprMemoryManager
 from repro.core.shootdown import FenceEngine
 from repro.core.tracking import BlockTracker
@@ -54,10 +56,11 @@ class StaleModel:
        st.booleans())
 def test_security_invariant(trace, fpr_enabled):
     fences = FenceEngine(measure=False)
-    mgr = FprMemoryManager(64, fence_engine=fences,
-                           fpr_enabled=fpr_enabled)
+    mgr = FprMemoryManager(config=FprConfig(num_blocks=64,
+                                            fpr_enabled=fpr_enabled),
+                           fence_engine=fences)
     model = StaleModel(64)
-    fences.on_fence = lambda *a: model.on_fence()
+    fences.bus.subscribe(FenceIssued, lambda evt: model.on_fence())
     live: list = []
     logical_seen: set = set()
 
@@ -94,7 +97,8 @@ def test_version_elision_only_after_global_fence(streams):
     """A context-exit allocation may skip its fence only if the global
     epoch moved past the block's free-time stamp (§IV-C5)."""
     fences = FenceEngine(measure=False)
-    mgr = FprMemoryManager(32, fence_engine=fences, fpr_enabled=True)
+    mgr = FprMemoryManager(config=FprConfig(num_blocks=32),
+                           fence_engine=fences)
     for i, s in enumerate(streams):
         ctx = derive_context(ContextScope.PER_GROUP, group_id=s + 1)
         m = mgr.mmap(2, ctx)
@@ -130,7 +134,8 @@ def test_fence_on_context_exit_exact():
     """Deterministic scenario: block freed by A, allocated by B → exactly
     one fence, then B→B reuse → zero additional fences."""
     fences = FenceEngine(measure=False)
-    mgr = FprMemoryManager(16, fence_engine=fences, fpr_enabled=True)
+    mgr = FprMemoryManager(config=FprConfig(num_blocks=16),
+                           fence_engine=fences)
     ca = derive_context(ContextScope.PER_GROUP, group_id=1)
     cb = derive_context(ContextScope.PER_GROUP, group_id=2)
     m = mgr.mmap(4, ca)

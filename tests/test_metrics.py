@@ -1,0 +1,135 @@
+"""MetricsRegistry: flatten semantics, the golden flat-snapshot schema,
+and the legacy nested-view shim.
+
+The golden-schema tests are the drift gate: any counter rename/removal in
+``FprStats`` / ``FenceStats`` / the device or admission sources changes the
+flat key set and must consciously update ``repro.core.metrics`` — the same
+schema the CI push lane validates the benchmark artifacts against."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FprMemoryManager
+from repro.core.config import FprConfig
+from repro.core.metrics import (ADMISSION_SCHEMA, STABLE_SCHEMA,
+                                WILDCARD_PREFIXES, MetricsRegistry, flatten,
+                                legacy_view, schema_violations)
+from repro.core.shootdown import FenceEngine
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.serving.config import EngineConfig
+from repro.serving.engine import Engine
+
+TINY = ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
+                   n_kv_heads=1, d_ff=64, vocab=64, head_dim=16)
+PARAMS = tfm.init_params(jax.random.PRNGKey(0), TINY, jnp.float32)
+
+
+def make_engine(admission="fcfs"):
+    return Engine(TINY, PARAMS, config=EngineConfig(
+        num_blocks=8, max_batch=2, max_seq_len=256, num_workers=2,
+        admission=admission))
+
+
+def drive(eng, n=4):
+    rng = np.random.RandomState(0)
+    for i in range(n):
+        eng.submit(rng.randint(1, TINY.vocab, size=12), max_new_tokens=4,
+                   stream=f"s{i % 2}", group_id=(i % 2) + 1)
+    eng.run()
+    return eng
+
+
+# ===================================================================== registry
+class TestRegistry:
+    def test_flatten_nested_and_leaves(self):
+        flat = flatten({"a": {"b": 1, "c": {"d": 2.5}},
+                        "e": [1, 2], "f": "x", "g": None})
+        assert flat == {"a.b": 1, "a.c.d": 2.5, "e": [1, 2],
+                        "f": "x", "g": None}
+
+    def test_register_snapshot_roundtrip(self):
+        reg = MetricsRegistry()
+        reg.register("fence", lambda: {"fences": 3, "by_reason": {"x": 3}})
+        reg.register("fpr", lambda: {"allocs": 1})
+        snap = reg.snapshot()
+        # canonical namespace order: fpr before fence
+        assert list(snap) == ["fpr.allocs", "fence.by_reason.x",
+                              "fence.fences"]
+
+    def test_register_rejects_bad_namespace(self):
+        with pytest.raises(ValueError):
+            MetricsRegistry().register("not a namespace", dict)
+
+    def test_schema_violations(self):
+        keys = ["fence.fences", "fence.by_reason.munmap", "seed",
+                "tokens_identical", "fence.nope", "device.bogus"]
+        assert schema_violations(keys) == ["device.bogus", "fence.nope"]
+
+    def test_wildcards_cover_dynamic_groups(self):
+        assert any("by_reason" in w for w in WILDCARD_PREFIXES)
+        assert not schema_violations(["fence.worker_epochs.w7"])
+
+
+# ================================================================ golden schema
+class TestGoldenSchema:
+    """Pin the unified flat-snapshot key set (the metrics contract)."""
+
+    def test_manager_snapshot_matches_schema(self):
+        m = FprMemoryManager(config=FprConfig(num_blocks=32, num_workers=2),
+                             fence_engine=FenceEngine(measure=False))
+        keys = set(m.metrics.snapshot())
+        assert schema_violations(keys) == []
+        expect = {k for k in STABLE_SCHEMA
+                  if k.split(".")[0] in ("fpr", "fence", "table")}
+        stable = {k for k in keys
+                  if not any(k.startswith(w) for w in WILDCARD_PREFIXES)}
+        assert stable == expect
+
+    def test_engine_snapshot_is_exactly_the_schema(self):
+        eng = drive(make_engine("fcfs"))
+        keys = set(eng.metrics.snapshot())
+        assert schema_violations(keys) == []
+        stable = {k for k in keys
+                  if not any(k.startswith(w) for w in WILDCARD_PREFIXES)}
+        assert stable == set(STABLE_SCHEMA) | set(ADMISSION_SCHEMA)
+
+    def test_engine_snapshot_without_governor(self):
+        eng = drive(make_engine(None))
+        keys = set(eng.metrics.snapshot())
+        stable = {k for k in keys
+                  if not any(k.startswith(w) for w in WILDCARD_PREFIXES)}
+        assert stable == set(STABLE_SCHEMA)      # admission.* collapses
+        assert eng.metrics.snapshot()["admission.enabled"] is False
+
+    def test_snapshot_values_are_json_scalars_or_lists(self):
+        snap = drive(make_engine("recycle")).metrics.snapshot()
+        for key, value in snap.items():
+            assert isinstance(value, (int, float, str, bool, list,
+                                      type(None))), (key, type(value))
+
+
+# ================================================================== legacy view
+class TestLegacyView:
+    def test_stats_equals_legacy_view_of_snapshot(self):
+        eng = drive(make_engine("fcfs"))
+        assert eng.stats() == legacy_view(eng.metrics.snapshot())
+
+    def test_legacy_shape_preserved(self):
+        eng = drive(make_engine("fcfs"))
+        s = eng.stats()
+        # the pre-registry nested shape, bit for bit
+        assert s["fence"]["fences"] == eng.cache.fences.stats.fences
+        assert s["fpr"]["allocs"] == eng.cache.mgr.stats.allocs
+        assert s["table_epoch"] == eng.cache.mgr.tables.epoch
+        assert s["device_table_shards"] == 2
+        assert s["admission"]["policy"] == "fcfs"
+        assert s["admission"]["ledger"]["capacity"] == 8
+        assert s["steps"] == eng.steps
+        assert isinstance(s["worker_epochs"], dict)
+
+    def test_disabled_admission_legacy_shape(self):
+        eng = make_engine(None)
+        assert eng.stats()["admission"] == {"enabled": False}

@@ -11,6 +11,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import ContextScope, FprMemoryManager, derive_context
+from repro.core.config import FprConfig
 from repro.core.allocator import BlockAllocator, OutOfBlocksError
 from repro.core.shootdown import FenceEngine
 from repro.core.tracking import BlockTracker, worker_bit
@@ -22,9 +23,11 @@ def ctx(gid):
 
 def make_mgr(n=512, workers=4, scoped=True, **kw):
     eng = FenceEngine(measure=False)
-    return FprMemoryManager(n, num_workers=workers, fence_engine=eng,
-                            fpr_enabled=True, scoped_fences=scoped,
-                            max_order=7, **kw)
+    return FprMemoryManager(
+        config=FprConfig(num_blocks=n, num_workers=workers,
+                         fpr_enabled=True, scoped_fences=scoped,
+                         max_order=7, **kw),
+        fence_engine=eng)
 
 
 class TestScopedFenceEngine:
@@ -305,9 +308,11 @@ _TRACE_OPS = st.lists(
 
 def _drive_trace(trace, workers, *, scoped, check_soundness):
     eng = FenceEngine(measure=False, num_workers=workers)
-    mgr = FprMemoryManager(48, num_workers=workers, fence_engine=eng,
-                           fpr_enabled=True, scoped_fences=scoped,
-                           max_order=5)
+    mgr = FprMemoryManager(
+        config=FprConfig(num_blocks=48, num_workers=workers,
+                         fpr_enabled=True, scoped_fences=scoped,
+                         max_order=5),
+        fence_engine=eng)
     live: list = []
     holders: dict[int, set] = {}    # block → workers holding a translation
     freed: dict[int, tuple] = {}    # block → (ctx, version, holders@free)

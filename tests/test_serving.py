@@ -10,6 +10,7 @@ import pytest
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
 from repro.models.layers import rms_norm, unembed
+from repro.serving.config import EngineConfig
 from repro.serving.engine import Engine
 
 # Heavy tests are @pytest.mark.slow individually (nightly lane); the
@@ -25,8 +26,8 @@ TINY = ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
 
 
 def _run_engine(fpr, prompts, **kw):
-    eng = Engine(CFG, PARAMS, num_blocks=64, max_batch=4,
-                 max_seq_len=256, fpr_enabled=fpr, **kw)
+    eng = Engine(CFG, PARAMS, config=EngineConfig(
+        num_blocks=64, max_batch=4, max_seq_len=256, fpr_enabled=fpr, **kw))
     for p in prompts:
         eng.submit(p, max_new_tokens=10)
     eng.run()
@@ -94,8 +95,8 @@ def test_eviction_swap_preserves_tokens():
     prompts = [rng.randint(1, CFG.vocab, size=140) for _ in range(2)]
 
     def run(evict_midway):
-        eng = Engine(CFG, PARAMS, num_blocks=64, max_batch=2,
-                     max_seq_len=384, fpr_enabled=True)
+        eng = Engine(CFG, PARAMS, config=EngineConfig(
+            num_blocks=64, max_batch=2, max_seq_len=384, fpr_enabled=True))
         for p in prompts:
             eng.submit(p, max_new_tokens=6)
         eng.step()
@@ -132,10 +133,10 @@ def test_sharded_multiworker_regression():
              f"s{i % 3}", (i % 3) + 1, 4 + (i % 3)) for i in range(8)]
 
     def drive(workers, scoped, routing="slot"):
-        eng = Engine(TINY, params, num_blocks=6, max_batch=4,
-                     max_seq_len=256, fpr_enabled=True,
-                     num_workers=workers, scoped_fences=scoped,
-                     worker_routing=routing)
+        eng = Engine(TINY, params, config=EngineConfig(
+            num_blocks=6, max_batch=4, max_seq_len=256, fpr_enabled=True,
+            num_workers=workers, scoped_fences=scoped,
+            worker_routing=routing))
         for prompt, stream, gid, mnt in reqs:
             eng.submit(prompt, max_new_tokens=mnt, stream=stream,
                        group_id=gid)
@@ -170,10 +171,10 @@ def test_eviction_churn_multiworker_identical_tokens():
     prompts = [rng.randint(1, TINY.vocab, size=128) for _ in range(8)]
 
     def drive(workers):
-        eng = Engine(TINY, params, num_blocks=10, max_batch=4,
-                     max_seq_len=256, fpr_enabled=True,
-                     num_workers=workers,
-                     watermarks=Watermarks(0.25, 0.4, 0.6))
+        eng = Engine(TINY, params, config=EngineConfig(
+            num_blocks=10, max_batch=4, max_seq_len=256, fpr_enabled=True,
+            num_workers=workers,
+            watermarks=Watermarks(0.25, 0.4, 0.6)))
         for i, p in enumerate(prompts):
             eng.submit(p, max_new_tokens=32, stream=f"s{i % 3}",
                        group_id=1 + i % 2)

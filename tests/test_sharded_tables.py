@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro.core import ContextScope, FprMemoryManager, derive_context
+from repro.core.config import FprConfig
 from repro.core.block_table import BlockTableStore, StaleMappingError
 from repro.core.shootdown import FenceEngine
 from repro.core.tracking import worker_bit
@@ -22,9 +23,11 @@ def ctx(gid):
 
 def make_mgr(n=256, workers=4, scoped=True, **kw):
     eng = FenceEngine(measure=False)
-    return FprMemoryManager(n, num_workers=workers, fence_engine=eng,
-                            fpr_enabled=True, scoped_fences=scoped,
-                            max_order=7, **kw)
+    return FprMemoryManager(
+        config=FprConfig(num_blocks=n, num_workers=workers,
+                         fpr_enabled=True, scoped_fences=scoped,
+                         max_order=7, **kw),
+        fence_engine=eng)
 
 
 class TestShardedBlockTableStore:
@@ -277,16 +280,33 @@ class TestShardedDeviceFence:
         assert cache._step_upload_entries == before + per_shard
 
 
-class TestLegacyFenceCallback:
+class TestLegacyFenceCallbackShim:
+    """The ONE documented ``on_fence`` deprecation shim: attaching a
+    pre-event-bus callback warns, subscribes it alongside the bus
+    subscribers (it no longer replaces the manager's epoch bump), and
+    honours all three historical signatures."""
+
+    def _mgr(self, eng):
+        return FprMemoryManager(
+            config=FprConfig(num_blocks=16, num_workers=2, max_order=4),
+            fence_engine=eng)
+
+    def test_attaching_on_fence_warns_deprecation(self):
+        eng = FenceEngine(measure=True)
+        with pytest.warns(DeprecationWarning, match="on_fence is deprecated"):
+            eng.on_fence = lambda reason, n, workers: None
+        with pytest.warns(DeprecationWarning):
+            FenceEngine(measure=True, on_fence=lambda r, n, w: None)
+
     def test_two_arg_on_fence_callback_still_works(self):
         """An externally supplied FenceEngine with a pre-sharding
         ``on_fence(reason, n)`` callback must not break on fences."""
         calls = []
-        eng = FenceEngine(measure=True,
-                          on_fence=lambda reason, n: calls.append(
-                              (reason, n)))
-        m = FprMemoryManager(16, num_workers=2, fence_engine=eng,
-                             fpr_enabled=True, max_order=4)
+        with pytest.warns(DeprecationWarning):
+            eng = FenceEngine(measure=True,
+                              on_fence=lambda reason, n: calls.append(
+                                  (reason, n)))
+        m = self._mgr(eng)
         m.fences.fence("external", 3)
         assert calls == [("external", 3)]
         m.fences.fence_scoped("scoped", 1, worker_mask=int(worker_bit(0)))
@@ -298,23 +318,50 @@ class TestLegacyFenceCallback:
         def cb(reason, n, *, workers=None):
             calls.append((reason, n, workers))
 
-        eng = FenceEngine(measure=True, on_fence=cb)
-        m = FprMemoryManager(16, num_workers=2, fence_engine=eng,
-                             fpr_enabled=True, max_order=4)
+        with pytest.warns(DeprecationWarning):
+            eng = FenceEngine(measure=True, on_fence=cb)
+        m = self._mgr(eng)
         m.fences.fence_scoped("scoped", 1, worker_mask=int(worker_bit(0)))
         assert calls[-1][:2] == ("scoped", 1)
         assert list(calls[-1][2]) == [0]
 
     def test_three_arg_on_fence_callback_receives_workers(self):
         calls = []
-        eng = FenceEngine(measure=True,
-                          on_fence=lambda reason, n, workers: calls.append(
-                              (reason, n, workers)))
-        m = FprMemoryManager(16, num_workers=2, fence_engine=eng,
-                             fpr_enabled=True, max_order=4)
+        with pytest.warns(DeprecationWarning):
+            eng = FenceEngine(measure=True,
+                              on_fence=lambda reason, n, workers:
+                              calls.append((reason, n, workers)))
+        m = self._mgr(eng)
         m.fences.fence_scoped("scoped", 1, worker_mask=int(worker_bit(1)))
         assert calls[-1][:2] == ("scoped", 1)
         assert list(calls[-1][2]) == [1]
+
+    def test_ctor_supplied_callback_sees_post_bump_epoch(self):
+        """A legacy callback attached at FenceEngine *construction* —
+        before the manager exists — must still observe post-fence table
+        epochs: the manager's epoch bump prepends itself on the bus, the
+        pre-PR wrapper-chain coherence order."""
+        seen = []
+        with pytest.warns(DeprecationWarning):
+            eng = FenceEngine(
+                measure=True,
+                on_fence=lambda r, n, w: seen.append(m.tables.epoch))
+        m = self._mgr(eng)
+        before = m.tables.epoch
+        eng.fence("external", 1)
+        assert seen == [before + 1]      # bump happened before the callback
+
+    def test_shim_does_not_replace_epoch_bump(self):
+        """Pre-bus code that assigned ``on_fence`` after manager creation
+        used to clobber the table-epoch coupling; with the bus the legacy
+        callback rides alongside and epochs still move."""
+        eng = FenceEngine(measure=True)
+        m = self._mgr(eng)
+        before = m.tables.epoch
+        with pytest.warns(DeprecationWarning):
+            eng.on_fence = lambda reason, n, workers: None
+        eng.fence("external", 1)
+        assert m.tables.epoch == before + 1
 
 
 class TestAbaRecycleRegression:

@@ -48,22 +48,22 @@ def throughput(stats: dict) -> float:
     """tokens / (virtual step time + modeled fence drains) — wall time on
     one CPU core is dominated by the model math, which on the real target
     overlaps; the fence drain does not (it is the shootdown wait)."""
-    return stats["tokens"] / (stats["steps"] * STEP_S
-                              + stats["fence"]["modeled_s"])
+    return stats["engine.tokens"] / (stats["engine.steps"] * STEP_S
+                                     + stats["fence.modeled_s"])
 
 
 def run() -> dict:
     base = _run(False)
     fpr = _run(True)
-    sb, sf = base.stats(), fpr.stats()
+    sb, sf = base.metrics.snapshot(), fpr.metrics.snapshot()
     tb, tf = throughput(sb), throughput(sf)
     out = {
         "requests": len(base.sched.done),
-        "fences_base": sb["fence"]["fences"],
-        "fences_fpr": sf["fence"]["fences"],
-        "skipped_at_free_fpr": sf["fence"]["skipped_at_free"],
-        "recycled_hits_fpr": sf["fpr"]["recycled_hits"],
-        "tokens": sf["tokens"],
+        "fences_base": sb["fence.fences"],
+        "fences_fpr": sf["fence.fences"],
+        "skipped_at_free_fpr": sf["fence.skipped_at_free"],
+        "recycled_hits_fpr": sf["fpr.recycled_hits"],
+        "tokens": sf["engine.tokens"],
         "thr_base": tb, "thr_fpr": tf,
         "improvement_pct": improvement(tf, tb),
         "identical_tokens": [r.generated for r in sorted(

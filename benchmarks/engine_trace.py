@@ -2,7 +2,7 @@
 
 A seeded request trace — several streams with distinct recycling contexts
 over a deliberately tight block pool, so completions recycle blocks across
-contexts and context-exit fences actually fire — is replayed twice through
+contexts and context-exit fences actually fire — is replayed through
 ``repro.serving.Engine`` with ``num_workers`` workers:
 
   * ``global``  — ``scoped_fences=False``: every fence re-uploads the whole
@@ -16,20 +16,20 @@ the decoded tokens, which must be **bit-identical** — scoping only moves
 counters are read from the unified ``MetricsRegistry`` flat snapshot, so
 the artifact keys are exactly the schema CI validates.
 
-**Construction equivalence.**  The sharded trace is additionally replayed
-through an engine built the *legacy* way — loose kwargs plus a deprecated
-``on_fence`` callback attached through the one-release shim — and must
-match the ``EngineConfig``/event-bus build bit-for-bit (tokens and every
-deterministic counter).  That is the control-plane redesign's acceptance
-criterion: the new API moved the wiring, not the behaviour.
+**Elastic replay.**  The same trace runs once more through an engine whose
+worker topology changes *mid-trace* — grow 1→4 after two steps, shrink
+4→2 a few steps later (``Engine.resize_workers``, drain-free, governed by
+the admission ledger).  Acceptance: tokens stay bit-identical to the
+fixed-topology run, and the reshard's device refresh traffic
+(``device.reshard_refreshed_bytes`` — only the rows whose shard owner
+moved) is strictly below ONE full-table re-upload, i.e. a topology change
+costs the moved fraction, never a cold start.
 
 The whole trace is deterministic (seeded prompts, greedy decode), so the
 JSON artifact is diffable run-to-run.
 """
 
 from __future__ import annotations
-
-import warnings
 
 import numpy as np
 
@@ -39,6 +39,9 @@ SEED = 20240814
 
 _CFG_KW = dict(name="trace", n_layers=1, d_model=32, n_heads=2,
                n_kv_heads=1, d_ff=64, vocab=64, head_dim=16)
+
+#: the elastic schedule: after step k, resize to v workers (grow → shrink)
+ELASTIC_SCHEDULE = {2: 4, 6: 2}
 
 #: flat MetricsRegistry keys reported per trace mode
 _REPORT_KEYS = (
@@ -56,9 +59,14 @@ _REPORT_KEYS = (
     "admission.affinity_hit_rate",
 )
 
-#: wall-time keys excluded from the bit-identity comparison (everything
-#: else in the snapshot must match across construction paths)
-_TIME_KEYS = ("engine.wall_s", "engine.tokens_per_s", "fence.measured_s")
+_ELASTIC_KEYS = _REPORT_KEYS + (
+    "device.reshards",
+    "device.reshard_moved_entries",
+    "device.reshard_refreshed_bytes",
+    "table.reshards",
+    "table.num_shards",
+    "engine.num_workers",
+)
 
 
 def _trace(n_requests: int, n_streams: int, seed: int = SEED):
@@ -72,56 +80,48 @@ def _trace(n_requests: int, n_streams: int, seed: int = SEED):
     return reqs
 
 
-def _replay(eng, reqs):
-    for prompt, stream, gid, mnt in reqs:
-        eng.submit(prompt, max_new_tokens=mnt, stream=stream, group_id=gid)
-    eng.run()
-    toks = [list(map(int, r.generated))
-            for r in sorted(eng.sched.done, key=lambda r: r.rid)]
-    return eng.metrics.snapshot(), toks
-
-
-def _drive(params, reqs, *, num_workers: int, scoped: bool,
-           num_blocks: int, max_batch: int):
+def _make_engine(params, *, num_workers: int, scoped: bool,
+                 num_blocks: int, max_batch: int):
     from repro.models.config import ModelConfig
     from repro.serving.config import EngineConfig
     from repro.serving.engine import Engine
 
     # fcfs governor ≡ the legacy fill-every-slot order on this trace (all
     # windows fit), but the replay output gains the admission counters
-    eng = Engine(ModelConfig(**_CFG_KW), params,
-                 config=EngineConfig(num_blocks=num_blocks,
-                                     max_batch=max_batch, max_seq_len=256,
-                                     fpr_enabled=True,
-                                     num_workers=num_workers,
-                                     scoped_fences=scoped,
-                                     admission="fcfs"))
-    return _replay(eng, reqs)
+    return Engine(ModelConfig(**_CFG_KW), params,
+                  config=EngineConfig(num_blocks=num_blocks,
+                                      max_batch=max_batch, max_seq_len=256,
+                                      fpr_enabled=True,
+                                      num_workers=num_workers,
+                                      scoped_fences=scoped,
+                                      admission="fcfs"))
 
 
-def _drive_legacy(params, reqs, *, num_workers: int, scoped: bool,
-                  num_blocks: int, max_batch: int):
-    """The deprecated construction path: loose kwargs + on_fence shim."""
-    from repro.models.config import ModelConfig
-    from repro.serving.engine import Engine
+def _replay(eng, reqs, resize_schedule: dict | None = None):
+    """Drive the trace; optionally resize the worker topology mid-trace."""
+    for prompt, stream, gid, mnt in reqs:
+        eng.submit(prompt, max_new_tokens=mnt, stream=stream, group_id=gid)
+    steps = 0
+    while not eng.sched.idle and eng.steps < 10_000:
+        eng.step()
+        steps += 1
+        if resize_schedule and steps in resize_schedule:
+            eng.resize_workers(resize_schedule[steps])
+    toks = [list(map(int, r.generated))
+            for r in sorted(eng.sched.done, key=lambda r: r.rid)]
+    return eng.metrics.snapshot(), toks
 
-    legacy_fences = []
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        eng = Engine(ModelConfig(**_CFG_KW), params, num_blocks=num_blocks,
-                     max_batch=max_batch, max_seq_len=256, fpr_enabled=True,
-                     num_workers=num_workers, scoped_fences=scoped,
-                     admission="fcfs")
-        # a legacy observer riding the deprecation shim must not perturb
-        # the replay (it subscribes alongside, it no longer replaces)
-        eng.cache.fences.on_fence = (
-            lambda reason, n, workers: legacy_fences.append(reason))
-    snap, toks = _replay(eng, reqs)
-    return snap, toks, len(legacy_fences)
+
+def _drive(params, reqs, *, num_workers: int, scoped: bool,
+           num_blocks: int, max_batch: int,
+           resize_schedule: dict | None = None):
+    eng = _make_engine(params, num_workers=num_workers, scoped=scoped,
+                       num_blocks=num_blocks, max_batch=max_batch)
+    return _replay(eng, reqs, resize_schedule)
 
 
 def case(smoke: bool = False, num_workers: int = 4) -> dict:
-    """Global vs sharded device-table refresh on one identical trace."""
+    """Global vs sharded refresh + elastic resharding, one identical trace."""
     import jax
     import jax.numpy as jnp
     from repro.models import transformer as tfm
@@ -146,26 +146,25 @@ def case(smoke: bool = False, num_workers: int = 4) -> dict:
     out["refreshed_bytes_saving_pct"] = (round((1 - s / g) * 100.0, 2)
                                          if g else 0.0)
 
-    # construction equivalence: EngineConfig/event-bus vs legacy kwargs +
-    # deprecated-callback shim, on the sharded trace
-    legacy_snap, legacy_toks, legacy_cb_fences = _drive_legacy(
-        params, reqs, num_workers=num_workers, scoped=True, **kw)
-    det_new = {k: v for k, v in snaps["sharded"].items()
-               if k not in _TIME_KEYS}
-    det_old = {k: v for k, v in legacy_snap.items() if k not in _TIME_KEYS}
-    out["construction_equivalence"] = {
-        "tokens_identical": legacy_toks == toks["sharded"],
-        "counters_identical": det_new == det_old,
-        "counter_mismatches": sorted(
-            k for k in set(det_new) | set(det_old)
-            if det_new.get(k) != det_old.get(k)),
-        "legacy_callback_fences_seen": legacy_cb_fences,
+    # elastic replay: start on 1 worker, grow 1→4 mid-trace, shrink 4→2 —
+    # tokens must match the fixed-topology runs bit for bit, and the
+    # reshard refresh must stay below one full-table re-upload
+    el_eng = _make_engine(params, num_workers=1, scoped=True, **kw)
+    el_snap, el_toks = _replay(el_eng, reqs,
+                               resize_schedule=dict(ELASTIC_SCHEDULE))
+    full_table_bytes = (el_eng.cache.max_batch
+                        * el_eng.cache.max_blocks_per_seq * 4)
+    out["elastic"] = {
+        "schedule": {str(k): v for k, v in ELASTIC_SCHEDULE.items()},
+        "tokens_identical": el_toks == toks["sharded"],
+        "full_table_bytes": full_table_bytes,
+        **{k: el_snap.get(k) for k in _ELASTIC_KEYS},
     }
     return out
 
 
 def report(out: dict) -> None:
-    """Print the global-vs-sharded summary; fail loud on any drift."""
+    """Print the global-vs-sharded + elastic summary; fail loud on drift."""
     g, s = out["global"], out["sharded"]
     print(f"  engine trace:    refreshed bytes {g['device.refreshed_bytes']}"
           f" → {s['device.refreshed_bytes']} "
@@ -173,20 +172,22 @@ def report(out: dict) -> None:
           f"fences {g['fence.fences']} → {s['fence.fences']} "
           f"({s['fence.fences_scoped']} scoped), "
           f"tokens identical: {out['tokens_identical']}")
-    ce = out["construction_equivalence"]
-    print(f"  construction:    EngineConfig vs legacy kwargs — tokens "
-          f"identical: {ce['tokens_identical']}, counters identical: "
-          f"{ce['counters_identical']} (legacy on_fence shim observed "
-          f"{ce['legacy_callback_fences_seen']} fences)")
+    el = out["elastic"]
+    print(f"  elastic 1→4→2:   reshards {el['device.reshards']}, moved "
+          f"rows refreshed {el['device.reshard_refreshed_bytes']}B vs "
+          f"full-table {el['full_table_bytes']}B, tokens identical: "
+          f"{el['tokens_identical']}")
     if not out["tokens_identical"]:
         raise AssertionError("sharded path changed decoded tokens")
-    if not ce["tokens_identical"]:
-        raise AssertionError("legacy-construction replay changed tokens")
-    if not ce["counters_identical"]:
-        raise AssertionError("legacy-construction replay drifted on "
-                             f"counters: {ce['counter_mismatches']}")
-    if not ce["legacy_callback_fences_seen"]:
-        raise AssertionError("the deprecated on_fence shim never fired")
+    if not el["tokens_identical"]:
+        raise AssertionError("elastic resharding changed decoded tokens")
+    if el["device.reshards"] < 2:
+        raise AssertionError("elastic replay applied fewer than 2 reshards")
+    if not el["device.reshard_refreshed_bytes"] < el["full_table_bytes"]:
+        raise AssertionError(
+            "reshard refreshed "
+            f"{el['device.reshard_refreshed_bytes']}B — not below one "
+            f"full-table re-upload ({el['full_table_bytes']}B)")
 
 
 def run(smoke: bool = False) -> dict:

@@ -10,6 +10,14 @@ STABLE_SCHEMA` / :data:`~repro.core.metrics.ADMISSION_SCHEMA` key or a
 declared wildcard group.  Artifact-local fields (``seed``,
 ``tokens_identical``, sim rows, …) are ignored.
 
+Beyond schema membership, required *sections* are enforced per artifact:
+``microbench_scoped.json`` must carry the engine-trace **elastic** replay
+(reshards applied, tokens bit-identical, reshard refresh below one
+full-table re-upload) — losing the section would silently retire the
+elastic acceptance criterion.  The schema itself must know the
+``fpr.eviction.`` and topology (``table.reshards`` / ``device.reshard_*``)
+counter groups, so retiring them fails here too.
+
 This runs in the CI push lane right after ``benchmarks.run --smoke``:
 counter drift (a renamed, retired or misspelled key) fails the push
 instead of surfacing as a silent nightly artifact diff.
@@ -25,6 +33,21 @@ from repro.core.metrics import schema_violations
 
 #: the deterministic smoke artifacts the push lane publishes
 DEFAULT_ARTIFACTS = ("microbench_scoped.json", "admission_smoke.json")
+
+#: counter groups that must stay in the flat schema (satellite coverage:
+#: eviction-pass counters + elastic-topology counters)
+REQUIRED_SCHEMA_KEYS = (
+    "fpr.eviction.wakeups",
+    "fpr.eviction.pages_scanned",
+    "fpr.eviction.pages_dropped",
+    "fpr.eviction.swap_outs",
+    "table.num_shards",
+    "table.reshards",
+    "device.reshards",
+    "device.reshard_moved_entries",
+    "device.reshard_refreshed_bytes",
+    "engine.num_workers",
+)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
@@ -50,24 +73,59 @@ def validate_file(path: str) -> list[str]:
     return schema_violations(keys)
 
 
+def elastic_violations(path: str) -> list[str]:
+    """Required-section check: the engine-trace elastic replay.
+
+    Applies to ``microbench_scoped.json`` (which embeds the engine trace);
+    returns human-readable problems, empty when the section is sound.
+    """
+    with open(path) as f:
+        payload = json.load(f)
+    trace = payload.get("engine_trace", payload)
+    elastic = trace.get("elastic")
+    if elastic is None:
+        return ["missing engine_trace elastic section"]
+    bad = []
+    if not elastic.get("tokens_identical"):
+        bad.append("elastic replay tokens diverged from fixed topology")
+    if not elastic.get("device.reshards"):
+        bad.append("elastic replay applied no reshards")
+    refreshed = elastic.get("device.reshard_refreshed_bytes")
+    full = elastic.get("full_table_bytes")
+    if refreshed is None or full is None or not refreshed < full:
+        bad.append(f"reshard refresh {refreshed}B not below one "
+                   f"full-table re-upload ({full}B)")
+    return bad
+
+
 def main(argv: list[str]) -> int:
     paths = argv or [os.path.join(RESULTS, name)
                      for name in DEFAULT_ARTIFACTS]
     failed = False
+    missing = schema_violations(REQUIRED_SCHEMA_KEYS)
+    if missing:
+        failed = True
+        print("SCHEMA REGRESSION — required counter groups left the "
+              "MetricsRegistry schema:")
+        for key in missing:
+            print(f"  {key}")
     for path in paths:
         if not os.path.exists(path):
             print(f"MISSING artifact: {path}")
             failed = True
             continue
         bad = validate_file(path)
+        name = os.path.basename(path)
+        if name == "microbench_scoped.json":
+            bad = bad + [f"elastic: {b}" for b in elastic_violations(path)]
         if bad:
             failed = True
-            print(f"SCHEMA DRIFT in {os.path.basename(path)} — keys not in "
-                  f"the MetricsRegistry schema:")
+            print(f"SCHEMA DRIFT in {name} — keys not in "
+                  f"the MetricsRegistry schema / required sections:")
             for key in bad:
                 print(f"  {key}")
         else:
-            print(f"ok: {os.path.basename(path)}")
+            print(f"ok: {name}")
     return 1 if failed else 0
 
 

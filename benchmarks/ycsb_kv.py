@@ -48,17 +48,17 @@ def run() -> dict:
     for name, frac in (("ycsb_a", 0.5), ("ycsb_b", 0.95), ("ycsb_c", 1.0)):
         base = _run(False, frac)
         fpr = _run(True, frac)
-        sb, sf = base.stats(), fpr.stats()
+        sb, sf = base.metrics.snapshot(), fpr.metrics.snapshot()
         tb, tf = throughput(sb), throughput(sf)
         out[name] = {
-            "fences_base": sb["fence"]["fences"],
-            "fences_fpr": sf["fence"]["fences"],
+            "fences_base": sb["fence.fences"],
+            "fences_fpr": sf["fence.fences"],
             "improvement_pct": improvement(tf, tb),
-            "fences_remaining_frac": (sf["fence"]["fences"]
-                                      / max(1, sb["fence"]["fences"])),
+            "fences_remaining_frac": (sf["fence.fences"]
+                                      / max(1, sb["fence.fences"])),
         }
         print(f"  {name}: +{out[name]['improvement_pct']:.1f}%  fences "
-              f"{sb['fence']['fences']}→{sf['fence']['fences']} "
+              f"{sb['fence.fences']}→{sf['fence.fences']} "
               f"({out[name]['fences_remaining_frac']*100:.0f}% remain; "
               f"paper: 2–15%)")
     save("ycsb_kv", out)

@@ -41,12 +41,15 @@ def main():
             eng.cache.mgr.evict([(r.mapping.mapping_id, 0)],
                                 fpr_batch=fpr)
         eng.run()
-        s = eng.stats()
+        s = eng.metrics.snapshot()
+        reasons = {k.rsplit(".", 1)[1]: v for k, v in s.items()
+                   if k.startswith("fence.by_reason.")}
         mode = "FPR     " if fpr else "baseline"
-        print(f"{mode}: tokens={s['tokens']} fences={s['fence']['fences']}"
-              f" swap_out={s['fpr']['swap_outs']}"
-              f" swap_in={s['fpr']['swap_ins']}"
-              f" evict_reasons={s['fence']['by_reason']}")
+        print(f"{mode}: tokens={s['engine.tokens']} "
+              f"fences={s['fence.fences']}"
+              f" swap_out={s['fpr.swap_outs']}"
+              f" swap_in={s['fpr.swap_ins']}"
+              f" evict_reasons={reasons}")
 
 
 if __name__ == "__main__":

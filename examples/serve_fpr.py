@@ -47,14 +47,15 @@ def main():
     results = {}
     for fpr in (False, True):
         eng = run(args.arch, args.requests, fpr)
-        s = eng.stats()
+        s = eng.metrics.snapshot()
         results[fpr] = (eng, s)
         mode = "FPR     " if fpr else "baseline"
-        print(f"  {mode}: {s['tokens']} tokens in {s['steps']} steps; "
-              f"fences={s['fence']['fences']} "
-              f"skipped={s['fence']['skipped_at_free']} "
-              f"recycled={s['fpr']['recycled_hits']} "
-              f"fence_cost={s['fence']['modeled_s']*1e3:.1f}ms")
+        print(f"  {mode}: {s['engine.tokens']} tokens in "
+              f"{s['engine.steps']} steps; "
+              f"fences={s['fence.fences']} "
+              f"skipped={s['fence.skipped_at_free']} "
+              f"recycled={s['fpr.recycled_hits']} "
+              f"fence_cost={s['fence.modeled_s']*1e3:.1f}ms")
     tok = lambda e: [r.generated for r in
                      sorted(e.sched.done, key=lambda r: r.rid)]
     same = tok(results[True][0]) == tok(results[False][0])

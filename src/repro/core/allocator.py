@@ -162,6 +162,26 @@ class BlockAllocator:
     def num_workers(self) -> int:
         return len(self.workers)
 
+    def reshard(self, new_num_workers: int, translation) -> None:
+        """Elastic topology change: repartition the per-worker free lists.
+
+        Old worker ``w``'s cached blocks drain into ``translation[w]``'s
+        list (preserving FIFO order within each source, sources in worker
+        order — deterministic), so recycling locality survives a shrink;
+        brand-new workers start with empty lists and refill from the
+        buddy on first allocation.
+        """
+        if new_num_workers < 1:
+            raise ValueError(f"need >= 1 worker, got {new_num_workers}")
+        batch = self.workers[0].batch if self.workers else 32
+        high = self.workers[0].high if self.workers else 96
+        new = [WorkerFreeList(w, batch=batch, high=high)
+               for w in range(new_num_workers)]
+        for wl in self.workers:
+            new[int(translation[wl.worker_id]) % new_num_workers].blocks \
+                .extend(wl.blocks)
+        self.workers = new
+
     # -- order-0 fast path ----------------------------------------------------
     def alloc_block(self, worker_id: int = 0) -> int:
         return self.alloc_blocks(1, worker_id)[0]

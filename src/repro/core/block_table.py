@@ -257,6 +257,86 @@ class BlockTableStore:
             self.shard_epochs[idx] = self.epoch
         return self.epoch
 
+    # ---------------------------------------------------------------- reshard
+    def reshard(self, new_num_shards: int, translation) -> dict:
+        """Remap the interleaved shard layout onto a new worker count.
+
+        No mapping is dropped and no slot changes its row — only the
+        *shard* identity of each slot moves (slot ``s`` belongs to shard
+        ``s % num_shards``, and ``num_shards`` just changed).  Carried
+        state, each in its sound direction (see ``shootdown.py``):
+
+          * ``shard_epochs[s']`` = **max** over the old shards whose slots
+            land in ``s'`` (epochs invalidate copies: max keeps every
+            stale copy stale; a spuriously invalidated valid copy costs a
+            refresh, never a wrong read);
+          * free-slot lists are repartitioned by the new modulo (LIFO
+            order rebuilt descending, matching construction);
+          * ``worker_of_mapping`` is rewritten through ``translation`` and
+            the overflow-record bookkeeping is recomputed from the live
+            mappings; dead residue ``(w, sh)`` spreads to every new shard
+            that inherited a slot of old shard ``sh`` (the dead row's slot
+            is unknown — conservative, one covering fence retires it).
+
+        Returns ``{"moved_slots": [...], "fence_workers": [...]}`` —
+        the slots whose (translated) shard owner changed, and the
+        pre-existing new-topology workers that must be covered by the
+        caller's scoped ``reason="reshard"`` fence because they held live
+        rows that moved away from them.
+        """
+        old_num = self.num_shards
+        new_num = max(1, int(new_num_shards))
+        trans = [int(translation[w]) for w in range(old_num)]
+        # --- moved rows: the slot's (translated) owner changed ------------
+        slots = np.arange(self.max_seqs)
+        old_owner = np.asarray([trans[s % old_num] for s in slots])
+        new_owner = slots % new_num
+        moved = slots[old_owner != new_owner]
+        live_slots = set(self.slot_of.values())
+        moved_live = [int(s) for s in moved if int(s) in live_slots]
+        # the scoped fence covers the (translated) old owners that LOST a
+        # live row; brand-new workers gaining rows need data, not
+        # invalidation, and can never appear here — old_owner values are
+        # translation outputs, i.e. always surviving workers
+        fence_workers = sorted({int(old_owner[s]) for s in moved_live})
+        # old shard sh's slots {sh, sh+old, …} land in these new shards —
+        # used both for the epoch max-merge and the residue translation
+        spread = {sh: {int(s) % new_num
+                       for s in range(sh, self.max_seqs, old_num)}
+                  for sh in range(old_num)}
+        # --- shard epochs: max over contributing old shards ---------------
+        new_epochs = np.full(new_num, 1, dtype=np.int64)
+        for sh in range(old_num):
+            for t in spread[sh]:
+                new_epochs[t] = max(int(new_epochs[t]),
+                                    int(self.shard_epochs[sh]))
+        # --- free lists: repartition by the new modulo ---------------------
+        free = sorted(s for s in range(self.max_seqs)
+                      if s not in live_slots)
+        new_free = [[s for s in reversed(free) if s % new_num == sh]
+                    for sh in range(new_num)]
+        # --- overflow records (recorded worker ids are always < old_num,
+        # they were stored modulo the shard count) -------------------------
+        new_dead = {(trans[w], t) for (w, sh) in self._overflow_dead
+                    for t in spread[sh]}
+        self.num_shards = new_num
+        self.shard_epochs = new_epochs
+        self._free_slots = new_free
+        self._overflow_dead = new_dead
+        new_worker_of = {}
+        new_live: dict[tuple[int, int], int] = {}
+        for mid, w in self.worker_of_mapping.items():
+            nw = trans[w]
+            new_worker_of[mid] = nw
+            sh = self.slot_of[mid] % new_num
+            if sh != nw:
+                new_live[(nw, sh)] = new_live.get((nw, sh), 0) + 1
+        self.worker_of_mapping = new_worker_of
+        self._overflow_live = new_live
+        return {"moved_slots": [int(s) for s in moved],
+                "moved_live_slots": moved_live,
+                "fence_workers": fence_workers}
+
     def packed(self, shard: int | None = None) -> tuple[np.ndarray, int]:
         """The device-shippable table + its epoch.
 

@@ -3,63 +3,36 @@
 ``FprMemoryManager`` had grown ~8 loose keyword arguments; every new knob
 (worker scoping, pcp batching, buddy order) widened the sprawl and every
 caller re-spelled the defaults.  :class:`FprConfig` is the single validated
-carrier; the old kwargs keep working for one release through
-:meth:`FprConfig.from_legacy_kwargs` (the manager warns ``DeprecationWarning``
-when they are used).
+carrier.  The one-release loose-kwargs compatibility window
+(``from_legacy_kwargs``) has closed: constructors accept ``config=`` only
+and raise ``TypeError`` on anything else.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import operator
 from dataclasses import dataclass
 
 
-class LegacyKwargsConfig:
-    """Shared shim machinery for the frozen config dataclasses.
-
-    Subclasses set ``LEGACY_KWARGS`` (the accepted pre-PR loose keyword
-    names) and ``LEGACY_TARGET`` (the constructor name used in error
-    messages).  Holds the single copy of the unknown-key check and
-    base-merge logic both :class:`FprConfig` and
-    :class:`~repro.serving.config.EngineConfig` deprecate through.
-    """
-
-    LEGACY_KWARGS: tuple = ()
-    LEGACY_TARGET = "config"
+class ConfigBase:
+    """Shared helpers for the frozen config dataclasses."""
 
     def replace(self, **changes):
         return dataclasses.replace(self, **changes)
 
-    @classmethod
-    def _accepted_legacy(cls) -> set:
-        return set(cls.LEGACY_KWARGS)
-
-    @classmethod
-    def from_legacy_kwargs(cls, kwargs: dict, base=None):
-        """DEPRECATION SHIM: build a config from the pre-PR loose kwargs.
-
-        Unknown keys raise ``TypeError`` with the accepted set, so typos
-        fail as loudly as they did on the old ``__init__`` signature.
-        """
-        known = cls._accepted_legacy()
-        unknown = set(kwargs) - known
-        if unknown:
-            raise TypeError(
-                f"unknown {cls.LEGACY_TARGET} argument(s) "
-                f"{sorted(unknown)}; accepted: {sorted(known)}")
-        fields = ({f.name: getattr(base, f.name)
-                   for f in dataclasses.fields(cls)} if base is not None
-                  else {})
-        fields.update(kwargs)
-        return cls(**fields)
-
 
 @dataclass(frozen=True)
-class FprConfig(LegacyKwargsConfig):
+class FprConfig(ConfigBase):
     """Validated configuration of an :class:`~repro.core.fpr.FprMemoryManager`.
 
     ``scoped_fences=None`` means "respect the fence engine's own flag" —
     the manager only overrides the engine when the caller decides.
+
+    ``num_workers`` is the *initial* worker topology; it may be changed at
+    runtime through :meth:`~repro.core.fpr.FprMemoryManager.reshard`
+    (elastic scale up/down), which revalidates the new count through the
+    same :func:`validate_worker_count` as construction.
     """
 
     num_blocks: int = 4096
@@ -72,23 +45,15 @@ class FprConfig(LegacyKwargsConfig):
     pcp_high: int = 96
     max_order: int = 10
 
-    #: exactly the legacy FprMemoryManager keyword arguments
-    LEGACY_KWARGS = ("num_workers", "max_seqs", "max_blocks_per_seq",
-                     "fpr_enabled", "scoped_fences", "pcp_batch",
-                     "pcp_high", "max_order")
-    LEGACY_TARGET = "FprMemoryManager"
-
     def __post_init__(self) -> None:
         if self.num_blocks <= 0:
             raise ValueError(f"num_blocks must be positive, "
                              f"got {self.num_blocks}")
-        if self.num_workers < 1:
-            raise ValueError(f"num_workers must be >= 1, "
-                             f"got {self.num_workers}")
         if self.max_seqs <= 0 or self.max_blocks_per_seq <= 0:
             raise ValueError("max_seqs and max_blocks_per_seq must be "
                              f"positive, got {self.max_seqs} / "
                              f"{self.max_blocks_per_seq}")
+        validate_worker_count(self.num_workers)
         if self.pcp_batch <= 0 or self.pcp_high < self.pcp_batch:
             raise ValueError(f"need 0 < pcp_batch <= pcp_high, got "
                              f"pcp_batch={self.pcp_batch} "
@@ -96,11 +61,41 @@ class FprConfig(LegacyKwargsConfig):
         if self.max_order < 0:
             raise ValueError(f"max_order must be >= 0, got {self.max_order}")
 
-    @classmethod
-    def _accepted_legacy(cls) -> set:
-        # num_blocks was positional on the old signature but is accepted
-        # by keyword through the shim too
-        return set(cls.LEGACY_KWARGS) | {"num_blocks"}
+
+def validate_worker_count(num_workers: int) -> int:
+    """The one worker-topology validation, shared by construction and
+    elastic resharding (``reshard``/``resize_workers`` funnel the new
+    count through here before touching any per-worker structure).  Worker
+    counts above the slot count are legal — the surplus shards are simply
+    empty and allocations overflow into sibling shards under the ledgered
+    overflow rules."""
+    try:
+        num_workers = operator.index(num_workers)   # accepts numpy ints
+    except TypeError:
+        raise ValueError(f"num_workers must be an integer, got "
+                         f"{type(num_workers).__name__}") from None
+    if num_workers < 1:
+        raise ValueError(f"num_workers must be >= 1, got {num_workers}")
+    return num_workers
 
 
-__all__ = ["FprConfig", "LegacyKwargsConfig"]
+def validate_translation(translation, old_num_workers: int,
+                         new_num_workers: int) -> None:
+    """Reject a malformed old→new worker translation table *before* any
+    per-worker structure is mutated — a reshard must either apply fully
+    or leave the stack untouched."""
+    for w in range(old_num_workers):
+        try:
+            t = int(translation[w])
+        except (IndexError, KeyError, TypeError, ValueError):
+            raise ValueError(
+                f"translation has no entry for old worker {w} "
+                f"(need {old_num_workers} entries)") from None
+        if not (0 <= t < new_num_workers):
+            raise ValueError(
+                f"translation maps worker {w} to {t}, outside the new "
+                f"topology of {new_num_workers} workers")
+
+
+__all__ = ["ConfigBase", "FprConfig", "validate_translation",
+           "validate_worker_count"]

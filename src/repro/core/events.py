@@ -116,6 +116,45 @@ class ShardRefreshed(Event):
     full: bool
 
 
+@dataclass(frozen=True)
+class TopologyChanged(Event):
+    """The worker topology was resharded (elastic scale up/down).
+
+    ``translation`` maps every old worker id to the new id that inherits
+    its presence-mask bits and fence epoch.  ``moved_slots`` are the batch
+    slots whose device-shard owner changed — the only rows a reshard has
+    to re-broadcast (everything else keeps its device copy).
+    ``fence_workers`` names the pre-existing workers whose epoch the
+    accompanying scoped ``reason="reshard"`` fence bumps (empty tuple ⇒
+    no live row moved and the reshard was fence-free).
+    """
+
+    old_num_workers: int
+    new_num_workers: int
+    translation: "tuple[int, ...]"       # old worker id → new worker id
+    moved_slots: "tuple[int, ...]"
+    fence_workers: "tuple[int, ...]"
+
+
+@dataclass(frozen=True)
+class EvictionPass(Event):
+    """One watermark-daemon pass completed (the kswapd wakeup analogue).
+
+    ``kind`` is ``"normal"`` (low..min band, stock batches of 32, FPR
+    pages exempt) or ``"huge"`` (at/below min: one batch, one merged
+    fence).  ``scanned`` counts victim candidates walked, ``dropped`` the
+    blocks actually evicted (every drop is a swap-out through the swap
+    path), ``deferred`` the FPR-exempt pages skipped this pass.
+    """
+
+    kind: str
+    scanned: int
+    dropped: int
+    deferred: int
+    free_before: int
+    free_after: int
+
+
 # ------------------------------------------------------------------ admission
 @dataclass(frozen=True)
 class AdmissionDecision(Event):
@@ -134,6 +173,7 @@ class AdmissionDecision(Event):
     queue_depth: int
     window_blocks: "int | None"
     blocked_rid: "int | None"
+    tenant: "str | None" = None        # admitted request's tenant (quota key)
 
 
 @dataclass(frozen=True)
@@ -156,8 +196,8 @@ class PreemptionResolved(Event):
 
 #: every event type this module defines, for docs/tests
 EVENT_TYPES = (FenceIssued, BlocksRecycled, ContextExit, SwapDropped,
-               ShardRefreshed, AdmissionDecision, PreemptionStarted,
-               PreemptionResolved)
+               ShardRefreshed, TopologyChanged, EvictionPass,
+               AdmissionDecision, PreemptionStarted, PreemptionResolved)
 
 
 Handler = Callable[[Event], None]
@@ -228,4 +268,5 @@ class EventBus:
 
 __all__ = ["Event", "EventBus", "EVENT_TYPES", "FenceIssued",
            "BlocksRecycled", "ContextExit", "SwapDropped", "ShardRefreshed",
-           "AdmissionDecision", "PreemptionStarted", "PreemptionResolved"]
+           "TopologyChanged", "EvictionPass", "AdmissionDecision",
+           "PreemptionStarted", "PreemptionResolved"]

@@ -9,6 +9,12 @@ between *min* and *low*.  Only when free memory hits *min* does the daemon
 build one **huge batch** — enough to climb back to *high* — and send a
 **single merged fence** for all of it.  Version stamping before that fence
 makes every evicted block's later context-exit allocation fence-free (§IV-C5).
+
+Every completed pass is published as a
+:class:`~repro.core.events.EvictionPass` event on the manager's bus
+(pages scanned / dropped / deferred, free-block levels), and the pass
+counters are exposed for the ``fpr.eviction.`` metrics namespace via
+:meth:`WatermarkEvictor.counters`.
 """
 
 from __future__ import annotations
@@ -16,6 +22,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Iterable
 
+from repro.core.events import EvictionPass
 from repro.core.fpr import FprMemoryManager
 
 #: Linux kswapd LRU batch size (§II-A).
@@ -44,16 +51,25 @@ class EvictionStats:
     wakeups: int = 0
     normal_batches: int = 0
     huge_batches: int = 0
+    passes_normal: int = 0
+    passes_huge: int = 0
     blocks_evicted: int = 0
+    pages_scanned: int = 0         # victim candidates walked over all passes
     fpr_blocks_deferred: int = 0   # FPR blocks skipped in the low..min band
 
 
 class WatermarkEvictor:
-    """kswapd analogue driving :meth:`FprMemoryManager.evict`."""
+    """kswapd analogue driving :meth:`FprMemoryManager.evict`.
+
+    Publishes one :class:`~repro.core.events.EvictionPass` per completed
+    pass on the manager's event bus and exposes :meth:`counters` for the
+    ``fpr.eviction.`` metrics namespace.
+    """
 
     def __init__(self, mgr: FprMemoryManager, victims: VictimIter,
                  watermarks: Watermarks | None = None):
         self.mgr = mgr
+        self.bus = mgr.bus
         self.victims = victims
         wm = watermarks or Watermarks()
         self.wm_min, self.wm_low, self.wm_high = wm.resolve(mgr.num_blocks)
@@ -74,19 +90,29 @@ class WatermarkEvictor:
         m = self.mgr.tables.mappings.get(mid)
         return m is not None and m.physical[idx] >= 0
 
+    def _publish_pass(self, kind: str, scanned: int, dropped: int,
+                      deferred: int, free_before: int) -> None:
+        if self.bus.wants(EvictionPass):
+            self.bus.publish(EvictionPass(
+                kind=kind, scanned=scanned, dropped=dropped,
+                deferred=deferred, free_before=free_before,
+                free_after=self.mgr.free_blocks))
+
     # -- low..min band: stock batches of 32, FPR pages exempt -----------------
     def _normal_pass(self, worker: int) -> int:
-        target = self.wm_high - self.mgr.free_blocks
-        evicted = 0
+        free_before = self.mgr.free_blocks
+        target = self.wm_high - free_before
+        evicted = scanned = deferred = 0
         batch: list[tuple[int, int]] = []
         fpr_aware = self.mgr.fpr_enabled
         for mid, idx, is_fpr in self.victims():
             if evicted >= target:
                 break
+            scanned += 1
             if not self._resident(mid, idx):
                 continue
             if fpr_aware and is_fpr:
-                self.stats.fpr_blocks_deferred += 1
+                deferred += 1
                 continue                      # §IV-B exemption
             batch.append((mid, idx))
             if len(batch) == KSWAPD_BATCH:
@@ -96,22 +122,50 @@ class WatermarkEvictor:
         if batch:
             evicted += self.mgr.evict(batch, fpr_batch=False, worker=worker)
             self.stats.normal_batches += 1
+        self.stats.passes_normal += 1
+        self.stats.pages_scanned += scanned
+        self.stats.fpr_blocks_deferred += deferred
         self.stats.blocks_evicted += evicted
+        self._publish_pass("normal", scanned, evicted, deferred, free_before)
         return evicted
 
     # -- at/below min: one huge batch, one merged fence ------------------------
     def _huge_pass(self, worker: int) -> int:
-        target = self.wm_high - self.mgr.free_blocks
+        free_before = self.mgr.free_blocks
+        target = self.wm_high - free_before
+        scanned = 0
         batch: list[tuple[int, int]] = []
         for mid, idx, _is_fpr in self.victims():
             if len(batch) >= target:
                 break
+            scanned += 1
             if not self._resident(mid, idx):
                 continue
             batch.append((mid, idx))
-        if not batch:
-            return 0
-        evicted = self.mgr.evict(batch, fpr_batch=True, worker=worker)
-        self.stats.huge_batches += 1
+        # an empty batch (every candidate non-resident) is still a pass:
+        # account the scan and publish, or a starved daemon reads as
+        # "never ran" (wakeups > passes) in the fpr.eviction.* counters
+        evicted = (self.mgr.evict(batch, fpr_batch=True, worker=worker)
+                   if batch else 0)
+        self.stats.passes_huge += 1
+        self.stats.pages_scanned += scanned
+        if batch:
+            self.stats.huge_batches += 1
         self.stats.blocks_evicted += evicted
+        self._publish_pass("huge", scanned, evicted, 0, free_before)
         return evicted
+
+    # ------------------------------------------------------------- counters
+    def counters(self) -> dict:
+        """The ``fpr.eviction.`` namespace source (every drop is a
+        swap-out through the manager's swap path, so ``swap_outs`` ==
+        ``pages_dropped`` by construction — both are reported so artifact
+        consumers need no cross-namespace join)."""
+        s = self.stats
+        return {"wakeups": s.wakeups,
+                "passes_normal": s.passes_normal,
+                "passes_huge": s.passes_huge,
+                "pages_scanned": s.pages_scanned,
+                "pages_dropped": s.blocks_evicted,
+                "swap_outs": s.blocks_evicted,
+                "deferred": s.fpr_blocks_deferred}

@@ -24,21 +24,21 @@ microbenchmarks both drive it through the same mmap/munmap/touch/evict API.
 
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
-from typing import Callable
 
 import numpy as np
 
 from repro.core.allocator import BlockAllocator
 from repro.core.block_table import BlockTableStore, Mapping
-from repro.core.config import FprConfig
+from repro.core.config import (FprConfig, validate_translation,
+                               validate_worker_count)
 from repro.core.contexts import RecyclingContext
 from repro.core.events import (BlocksRecycled, ContextExit, FenceIssued,
-                               SwapDropped)
-from repro.core.metrics import MetricsRegistry, legacy_view
+                               SwapDropped, TopologyChanged)
+from repro.core.metrics import MetricsRegistry
 from repro.core.shootdown import FenceEngine
-from repro.core.tracking import FLAG_ALWAYS_FLUSH, BlockTracker, worker_bit
+from repro.core.tracking import (FLAG_ALWAYS_FLUSH, BlockTracker,
+                                 worker_bit)
 
 SWAPPED = -2          # block-table marker: resident → swapped out
 NOT_RESIDENT = -1     # never faulted in
@@ -63,37 +63,20 @@ class FprMemoryManager:
     """Paged-memory manager with fast page recycling.
 
     Construction: ``FprMemoryManager(config=FprConfig(...))`` (optionally
-    with a shared ``fence_engine``).  The pre-PR loose keyword arguments
-    (``num_workers=``, ``fpr_enabled=``, …) keep working for one release
-    through :meth:`FprConfig.from_legacy_kwargs` and warn
-    ``DeprecationWarning``.
+    with a shared ``fence_engine``).
 
     Cross-layer observations are published on :attr:`bus` (the fence
     engine's :class:`~repro.core.events.EventBus`): ``FenceIssued``,
-    ``BlocksRecycled``, ``ContextExit``, ``SwapDropped``.  Counters are
-    registered on :attr:`metrics` under the ``fpr``/``fence``/``table``
-    namespaces.
+    ``BlocksRecycled``, ``ContextExit``, ``SwapDropped``,
+    ``TopologyChanged``.  Counters are registered on :attr:`metrics` under
+    the ``fpr``/``fence``/``table`` namespaces.
     """
 
-    def __init__(self, num_blocks: int | None = None, *,
-                 config: FprConfig | None = None,
-                 fence_engine: FenceEngine | None = None,
-                 **legacy_kwargs):
-        if legacy_kwargs or num_blocks is not None:
-            # positional num_blocks IS the legacy signature — it must warn
-            # too, or silent callers break unwarned when the shim is
-            # deleted next release
-            warnings.warn(
-                "FprMemoryManager(num_blocks, **kwargs) is deprecated; "
-                "pass config=FprConfig(...) instead", DeprecationWarning,
-                stacklevel=2)
-            config = FprConfig.from_legacy_kwargs(legacy_kwargs, base=config)
-            if num_blocks is not None:
-                config = config.replace(num_blocks=num_blocks)
+    def __init__(self, *, config: FprConfig | None = None,
+                 fence_engine: FenceEngine | None = None):
         if config is None:
             raise TypeError(
-                "FprMemoryManager requires config=FprConfig(...) "
-                "(or the deprecated num_blocks/keyword arguments)")
+                "FprMemoryManager requires config=FprConfig(...)")
         self.config = config
         num_workers = config.num_workers
         self.tracker = BlockTracker(config.num_blocks)
@@ -114,14 +97,14 @@ class FprMemoryManager:
         # scoped fence names its covered workers → only those table shards
         # are invalidated/refreshed; a global fence (workers=None) hits all.
         # Prepended so the host-side epoch bump precedes every other
-        # subscriber — including a legacy on_fence callback attached at
-        # fence-engine construction, before this manager existed (the old
-        # wrapper chain bumped first too; ``first=True`` keeps that
-        # coherence order explicit).
+        # subscriber, even one attached at fence-engine construction
+        # before this manager existed — ``first=True`` keeps the
+        # coherence order explicit.
         self.bus.subscribe(FenceIssued, self._on_fence_issued, first=True)
         self.fences.measure = True
         self.fpr_enabled = config.fpr_enabled
         self.stats = FprStats()
+        self.reshards = 0
         self.metrics = MetricsRegistry()
         self.metrics.register("fpr", lambda: self.stats.snapshot())
         self.metrics.register("fence", self._fence_metrics)
@@ -139,30 +122,21 @@ class FprMemoryManager:
     def _on_fence_issued(self, evt: FenceIssued) -> None:
         self.tables.bump_epoch(shards=evt.workers)
 
-    # ---------------------------------------------------------- legacy shim
+    # The one-release ``on_swap_drop`` deprecation window has closed.
+    # A raising tombstone (instead of plain attribute absence) keeps the
+    # failure loud: silently setting an attribute the manager never reads
+    # would orphan swap-store copies forever.
     @property
-    def on_swap_drop(self) -> Callable | None:
-        """DEPRECATED: subscribe to :class:`SwapDropped` on :attr:`bus`."""
-        return getattr(self, "_legacy_on_swap_drop", None)
+    def on_swap_drop(self):
+        raise TypeError("FprMemoryManager.on_swap_drop was removed; "
+                        "subscribe to SwapDropped on "
+                        "FprMemoryManager.bus instead")
 
     @on_swap_drop.setter
-    def on_swap_drop(self, fn: Callable | None) -> None:
-        """The documented ``on_swap_drop`` deprecation shim: wraps the old
-        ``(mapping_id, logical_idx)`` attribute hook as a
-        :class:`SwapDropped` subscriber for one release."""
-        warnings.warn(
-            "FprMemoryManager.on_swap_drop is deprecated; subscribe to "
-            "SwapDropped on FprMemoryManager.bus instead",
-            DeprecationWarning, stacklevel=2)
-        prev = getattr(self, "_legacy_swap_drop_unsub", None)
-        if prev is not None:
-            prev()
-        self._legacy_on_swap_drop = fn
-        self._legacy_swap_drop_unsub = None
-        if fn is not None:
-            self._legacy_swap_drop_unsub = self.bus.subscribe(
-                SwapDropped,
-                lambda evt: fn(evt.mapping_id, evt.logical_idx))
+    def on_swap_drop(self, fn) -> None:
+        raise TypeError("FprMemoryManager.on_swap_drop was removed; "
+                        "subscribe to SwapDropped on "
+                        "FprMemoryManager.bus instead")
 
     # ================================================================== metrics
     def _fence_metrics(self) -> dict:
@@ -172,9 +146,83 @@ class FprMemoryManager:
 
     def _table_metrics(self) -> dict:
         return {"epoch": self.tables.epoch,
+                "num_shards": self.tables.num_shards,
+                "reshards": self.reshards,
                 "shard_epochs": [int(e) for e in self.tables.shard_epochs],
                 "shard_overflows": self.tables.shard_overflows,
                 "stale_lookups_detected": self.tables.stale_lookups_detected}
+
+    # ================================================================== reshard
+    @property
+    def num_workers(self) -> int:
+        return self.config.num_workers
+
+    def default_translation(self, new_num_workers: int) -> tuple:
+        """The canonical old→new worker map: identity on growth (old
+        workers keep their ids), modulo folding on shrink (worker ``w``
+        merges into ``w % new``)."""
+        return tuple(w if w < new_num_workers else w % new_num_workers
+                     for w in range(self.config.num_workers))
+
+    def reshard(self, new_num_workers: int, translation=None,
+                extra_fence_workers=()) -> dict:
+        """Elastic topology change: remap every per-worker structure onto
+        ``new_num_workers`` without invalidating live mappings.
+
+        Order matters and mirrors the soundness argument in
+        ``shootdown.py``:
+
+          1. presence masks and per-worker fence epochs are carried
+             through ``translation`` (min-merge for epochs, bit-OR for
+             masks) and the fence engine's worker table is resized;
+          2. the block-table store repartitions slots/epochs/free-lists/
+             overflow records (max-merge for shard epochs) and reports
+             the *moved* rows — slots whose translated shard owner
+             changed;
+          3. a :class:`TopologyChanged` event is published (subscribers —
+             the device cache — repartition their shard arrays from it);
+          4. iff any *live* row moved, one scoped ``reason="reshard"``
+             fence covers exactly the surviving workers that lost live
+             rows, draining their in-flight dispatches and bumping their
+             epochs.  No move ⇒ no fence: a modulo shrink is free.
+
+        ``extra_fence_workers`` lets a caller with its own slot space (the
+        device cache's batch slots) merge the old owners of *its* moved
+        live rows into the same single fence.
+
+        Returns the block-table's reshard plan (moved/fenced sets).
+        """
+        old_num = self.config.num_workers
+        validate_worker_count(new_num_workers)
+        if translation is None:
+            translation = self.default_translation(new_num_workers)
+        validate_translation(translation, old_num, new_num_workers)
+        self.tracker.remap_workers(translation, old_num, new_num_workers)
+        self.fences.reshard_workers(new_num_workers, translation)
+        self.alloc.reshard(new_num_workers, translation)
+        plan = self.tables.reshard(new_num_workers, translation)
+        plan["fence_workers"] = sorted(
+            set(plan["fence_workers"])
+            | {int(w) for w in extra_fence_workers
+               if 0 <= int(w) < new_num_workers})
+        self.config = self.config.replace(num_workers=new_num_workers)
+        self.reshards += 1
+        if self.bus.wants(TopologyChanged):
+            self.bus.publish(TopologyChanged(
+                old_num_workers=old_num,
+                new_num_workers=new_num_workers,
+                translation=tuple(int(translation[w])
+                                  for w in range(old_num)),
+                moved_slots=tuple(plan["moved_slots"]),
+                fence_workers=tuple(plan["fence_workers"])))
+        if plan["fence_workers"]:
+            mask = 0
+            for w in plan["fence_workers"]:
+                mask |= int(worker_bit(w))
+            self.fences.fence_scoped("reshard",
+                                     max(1, len(plan["moved_live_slots"])),
+                                     worker_mask=mask)
+        return plan
 
     # ===================================================================== alloc
     def _acquire(self, n: int, ctx_id: int, worker: int) -> list[int]:
@@ -405,11 +453,3 @@ class FprMemoryManager:
     def num_blocks(self) -> int:
         return self.alloc.num_blocks
 
-    def counters(self) -> dict:
-        """Legacy nested counter view, derived from :attr:`metrics`.
-
-        New code should read ``self.metrics.snapshot()`` (the flat
-        namespaced schema) directly; this adapter keeps the pre-registry
-        shape for one release.
-        """
-        return legacy_view(self.metrics.snapshot())

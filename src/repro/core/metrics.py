@@ -20,9 +20,14 @@ The :class:`MetricsRegistry` replaces that with one contract:
     :data:`WILDCARD_PREFIXES` so schema validation can tell drift from
     legitimate per-config variation.
 
-``legacy_view`` rebuilds the pre-registry nested ``Engine.stats()`` shape
-from a flat snapshot — the deprecation shim that keeps old consumers
-working for one release while everything emits through the registry.
+Namespaces may be dotted (``fpr.eviction``) to nest a subsystem's
+counters under an existing family without routing them through its
+source callable — the watermark daemon registers itself that way.
+
+The pre-registry nested views (``Engine.stats()`` /
+``FprMemoryManager.counters()`` and the ``legacy_view`` adapter behind
+them) completed their one-release deprecation window and are gone; the
+flat snapshot is the only counter surface.
 """
 
 from __future__ import annotations
@@ -32,8 +37,10 @@ from typing import Callable, Iterable
 
 Source = Callable[[], dict]
 
-#: canonical namespaces, in emission order
-NAMESPACES = ("fpr", "fence", "table", "device", "admission", "engine")
+#: canonical namespaces, in emission order (dotted entries are nested
+#: subsystem registrations — their keys live under the parent family)
+NAMESPACES = ("fpr", "fpr.eviction", "fence", "table", "device",
+              "admission", "engine")
 
 #: flat-key groups whose *members* are config-dependent (fence reasons seen,
 #: one epoch per worker, one ledger share per worker) — validated by prefix
@@ -55,6 +62,15 @@ STABLE_SCHEMA = (
     "fpr.recycled_hits",
     "fpr.swap_ins",
     "fpr.swap_outs",
+    # fpr.eviction.* — watermark-daemon pass counters (engine stacks; a
+    # bare FprMemoryManager has no daemon and omits the group)
+    "fpr.eviction.deferred",
+    "fpr.eviction.pages_dropped",
+    "fpr.eviction.pages_scanned",
+    "fpr.eviction.passes_huge",
+    "fpr.eviction.passes_normal",
+    "fpr.eviction.swap_outs",
+    "fpr.eviction.wakeups",
     # fence.* — FenceStats via FenceEngine.totals()
     "fence.elided_by_scope",
     "fence.elided_by_version",
@@ -68,20 +84,26 @@ STABLE_SCHEMA = (
     "fence.workers_covered",
     # table.* — host-side BlockTableStore epochs/diagnostics
     "table.epoch",
+    "table.num_shards",
+    "table.reshards",
     "table.shard_epochs",
     "table.shard_overflows",
     "table.stale_lookups_detected",
-    # device.* — PagedKVCache fence-refresh counters
+    # device.* — PagedKVCache fence-refresh + topology counters
     "device.fence_drains",
     "device.full_refreshes",
     "device.refreshed_bytes",
     "device.refreshed_entries",
+    "device.reshard_moved_entries",
+    "device.reshard_refreshed_bytes",
+    "device.reshards",
     "device.shard_refreshes",
     "device.step_upload_entries",
     "device.table_shards",
     # engine.* — serving-loop counters
     "engine.completed",
     "engine.demand_pager_gave_up",
+    "engine.num_workers",
     "engine.steps",
     "engine.tokens",
     "engine.tokens_per_s",
@@ -106,6 +128,9 @@ ADMISSION_SCHEMA = (
     "admission.preempt_strategy",
     "admission.preemptions_recompute",
     "admission.preemptions_swap",
+    "admission.quota.enabled",
+    "admission.quota.rejections",
+    "admission.quota.tenants",
     "admission.rejected_overcommit",
 )
 
@@ -135,9 +160,11 @@ class MetricsRegistry:
     def register(self, namespace: str, source: Source) -> None:
         """Attach ``source`` (a zero-arg callable returning a dict) under
         ``namespace``.  Re-registering a namespace replaces its source —
-        the stack rebuilds registries on reconfiguration."""
-        if not namespace.isidentifier():
-            raise ValueError(f"namespace must be an identifier, "
+        the stack rebuilds registries on reconfiguration.  Dotted
+        namespaces (``fpr.eviction``) nest a subsystem under an existing
+        family."""
+        if not all(seg.isidentifier() for seg in namespace.split(".")):
+            raise ValueError(f"namespace segments must be identifiers, "
                              f"got {namespace!r}")
         self._sources[namespace] = source
 
@@ -188,46 +215,6 @@ def schema_violations(keys: Iterable[str], *,
     return sorted(bad)
 
 
-# ---------------------------------------------------------------- legacy view
-def _collect(flat: dict, prefix: str) -> dict:
-    return {k[len(prefix):]: v for k, v in flat.items()
-            if k.startswith(prefix)}
-
-
-def legacy_view(flat: dict) -> dict:
-    """DEPRECATED nested ``Engine.stats()`` shape, rebuilt from the flat
-    snapshot.  This is the documented one-release compatibility shim for
-    pre-registry consumers; new code reads the flat snapshot directly."""
-    out: dict = {}
-    fpr = _collect(flat, "fpr.")
-    if fpr:
-        out["fpr"] = fpr
-    fence = {k: v for k, v in _collect(flat, "fence.").items()
-             if "." not in k and not k.startswith("worker_epochs")}
-    if fence or "fence.fences" in flat:
-        fence["by_reason"] = _collect(flat, "fence.by_reason.")
-        out["fence"] = fence
-        out["worker_epochs"] = _collect(flat, "fence.worker_epochs.")
-    if "table.epoch" in flat:
-        out["table_epoch"] = flat["table.epoch"]
-        out["table_shard_epochs"] = flat["table.shard_epochs"]
-        out["table_shard_overflows"] = flat["table.shard_overflows"]
-        out["stale_detected"] = flat["table.stale_lookups_detected"]
-    for key, value in _collect(flat, "device.").items():
-        out[f"device_{key}"] = value
-    if "admission.enabled" in flat:
-        if not flat["admission.enabled"]:
-            out["admission"] = {"enabled": False}
-        else:
-            adm = {k: v for k, v in _collect(flat, "admission.").items()
-                   if "." not in k and k != "enabled"}
-            adm["ledger"] = _collect(flat, "admission.ledger.")
-            out["admission"] = adm
-    for key, value in _collect(flat, "engine.").items():
-        out[key] = value
-    return out
-
-
 __all__ = ["ADMISSION_SCHEMA", "MetricsRegistry", "NAMESPACES",
-           "STABLE_SCHEMA", "WILDCARD_PREFIXES", "flatten", "legacy_view",
+           "STABLE_SCHEMA", "WILDCARD_PREFIXES", "flatten",
            "schema_violations"]

@@ -79,6 +79,45 @@ tracking is unavailable or vacuous.  Soundness therefore never depends on
 a shard refresh being "enough": whenever coverage is uncertain, the path
 degenerates to the paper's full-broadcast fence.
 
+**Elastic resharding.**  The worker topology may change at runtime
+(``FprMemoryManager.reshard`` / ``Engine.resize_workers``) without
+dropping a single live mapping.  The soundness invariant — *no worker
+reads a block version newer than its last covering fence* — survives the
+reshard because every piece of per-worker bookkeeping is carried across
+through one old→new **worker translation table** ``t`` (growth: the
+identity; shrink to ``W'``: ``t(w) = w mod W'``), each in the direction
+that can only *add* fences, never lose one:
+
+  * ``worker_epochs[w']`` becomes the **min** over the old workers
+    translating to ``w'`` (:meth:`FenceEngine.reshard_workers`).  The
+    epoch means "``w'`` was covered by the fence at this ``seq``"; a
+    merged worker is only as clean as its *stalest* constituent, so min
+    is the sound merge — claiming the max would elide a context-exit
+    fence for a constituent that was never covered.  Brand-new workers
+    (ids outside ``t``'s image) start at the current ``seq``: they cannot
+    hold translations to anything freed before they existed.
+  * Presence masks are rewritten bit-by-bit through ``t``
+    (:meth:`~repro.core.tracking.BlockTracker.remap_workers`): a block
+    freed under the old topology keeps naming, in new-topology ids, every
+    worker that could still cache its translation.  The aliased top bit
+    (workers ≥ 63) expands conservatively to all new workers.
+  * ``BlockTableStore.shard_epochs[s']`` becomes the **max** over the old
+    shards whose slots land in ``s'`` — the opposite direction of the
+    worker epochs, because a shard epoch *invalidates* copies
+    (``copy_epoch < shard_epochs[s]`` ⇒ stale): max keeps every
+    previously-stale copy stale (possibly spuriously invalidating a valid
+    one — a wasted refresh, never a wrong read).
+
+  On top of the carried state, the slots whose device-shard *owner*
+  changes (``t(slot mod W) != slot mod W'``) are the **moved rows**: their
+  data must reach a worker that never held it, and their old holders'
+  in-flight dispatches are drained and their epochs bumped by one scoped
+  ``reason="reshard"`` fence over exactly the pre-existing workers that
+  lost live rows.  Rows that stay put keep their device copies — a
+  topology change costs the moved fraction of the table, not a cold
+  start, which is the paper's argument applied to the topology event
+  itself: invalidate what moved, not the whole machine.
+
 **Averted fences and the admission phase.**  The paper's §IV-A check runs
 at allocation: a freed block's deferred invalidation is resolved when the
 block is next handed out — recycled in-context (no fence, ever), elided
@@ -102,13 +141,10 @@ victim's eviction batch takes the §IV-B merged fence.
 
 from __future__ import annotations
 
-import inspect
 import math
 import time
-import warnings
 from collections import Counter
 from dataclasses import dataclass, field
-from typing import Callable
 
 import numpy as np
 
@@ -171,56 +207,6 @@ class FenceStats:
         return d
 
 
-def _legacy_on_fence_shim(fn: Callable, engine: "FenceEngine") -> Callable:
-    """THE legacy ``on_fence`` deprecation shim (the only one in the repo).
-
-    Pre-event-bus engines attached a measured drain+rebroadcast callback as
-    ``FenceEngine.on_fence``; the modern interface is
-    ``bus.subscribe(FenceIssued, handler)``.  This adapter wraps one legacy
-    callback as a :class:`~repro.core.events.FenceIssued` subscriber,
-    honouring the three historical signatures — ``(reason, n, workers)``
-    positional, keyword-only ``workers`` (or ``**kwargs``), and the
-    pre-sharding two-argument ``(reason, n)`` form — AND the historical
-    ``measure`` gate: the old ``_measured`` path only invoked the callback
-    while ``engine.measure`` was on, so the shim skips it too (bus
-    subscribers are unaffected — events are semantics, the legacy callback
-    was measurement).  The signature is classified **once**, here, at
-    subscribe time; the per-fence hot path does no introspection.  Removed
-    with the legacy surface next release.
-    """
-    style = "pos"
-    try:
-        params = list(inspect.signature(fn).parameters.values())
-    except (TypeError, ValueError):
-        params = None                     # unintrospectable: assume current
-    if params is not None and not any(p.kind == p.VAR_POSITIONAL
-                                      for p in params):
-        positional = [p for p in params
-                      if p.kind in (p.POSITIONAL_ONLY,
-                                    p.POSITIONAL_OR_KEYWORD)]
-        if len(positional) >= 3:
-            style = "pos"
-        elif any((p.kind == p.KEYWORD_ONLY and p.name == "workers")
-                 or p.kind == p.VAR_KEYWORD for p in params):
-            style = "kw"
-        else:
-            style = "legacy"
-
-    def _handler(evt: FenceIssued) -> None:
-        if not engine.measure:            # pre-bus contract (see docstring)
-            return
-        workers = (None if evt.workers is None
-                   else np.asarray(evt.workers, dtype=np.int64))
-        if style == "pos":
-            fn(evt.reason, evt.n_blocks, workers)
-        elif style == "kw":
-            fn(evt.reason, evt.n_blocks, workers=workers)
-        else:                             # pre-sharding (reason, n) callback
-            fn(evt.reason, evt.n_blocks)
-
-    return _handler
-
-
 class FenceEngine:
     """Owns the fence epochs and performs/records coherence fences.
 
@@ -231,49 +217,33 @@ class FenceEngine:
     paper's shootdown pays) whenever ``measure`` is on.
     """
 
-    def __init__(self, cost_model: FenceCostModel | None = None,
-                 on_fence: Callable | None = None,
+    def __init__(self, cost_model: FenceCostModel | None = None, *,
                  measure: bool = True, num_workers: int = 1,
                  scoped: bool = True, bus: EventBus | None = None):
         self.seq = 1                      # total fence ordinal (all fences)
         self.epoch = 1                    # global shootdown counter (§IV-C5)
         self.cost_model = cost_model or FenceCostModel()
         self.bus = bus if bus is not None else EventBus()
-        self._legacy_on_fence: Callable | None = None
-        self._legacy_unsubscribe: Callable | None = None
         self.measure = measure
         self.scoped = scoped              # False ⇒ every fence is global
         self.worker_epochs = np.full(max(1, num_workers), 1, dtype=np.int64)
         self.stats = FenceStats()
-        if on_fence is not None:          # the deprecated ctor path
-            self._set_on_fence(on_fence, stacklevel=3)
 
-    # ------------------------------------------------- legacy callback shim
+    # The one-release ``on_fence`` deprecation window has closed.  A
+    # raising tombstone (instead of plain attribute absence) keeps the
+    # failure loud: silently setting an attribute nothing reads would
+    # drop the caller's measured-refresh hook without a trace.
     @property
-    def on_fence(self) -> Callable | None:
-        """DEPRECATED: the last legacy callback attached (None otherwise).
-        Subscribe to :class:`~repro.core.events.FenceIssued` instead."""
-        return self._legacy_on_fence
+    def on_fence(self):
+        raise TypeError("FenceEngine.on_fence was removed; subscribe to "
+                        "FenceIssued on FenceEngine.bus instead "
+                        "(bus.subscribe(FenceIssued, handler))")
 
     @on_fence.setter
-    def on_fence(self, fn: Callable | None) -> None:
-        self._set_on_fence(fn, stacklevel=3)
-
-    def _set_on_fence(self, fn: Callable | None, *, stacklevel: int) -> None:
-        # stacklevel reaches the USER'S line (assignment or ctor call), so
-        # the one-release migration warning points at the code to change
-        warnings.warn(
-            "FenceEngine.on_fence is deprecated; subscribe to FenceIssued "
-            "on FenceEngine.bus instead "
-            "(bus.subscribe(FenceIssued, handler))",
-            DeprecationWarning, stacklevel=stacklevel)
-        if self._legacy_unsubscribe is not None:
-            self._legacy_unsubscribe()
-            self._legacy_unsubscribe = None
-        self._legacy_on_fence = fn
-        if fn is not None:
-            self._legacy_unsubscribe = self.bus.subscribe(
-                FenceIssued, _legacy_on_fence_shim(fn, self))
+    def on_fence(self, fn) -> None:
+        raise TypeError("FenceEngine.on_fence was removed; subscribe to "
+                        "FenceIssued on FenceEngine.bus instead "
+                        "(bus.subscribe(FenceIssued, handler))")
 
     # ------------------------------------------------------------- workers
     @property
@@ -290,6 +260,46 @@ class FenceEngine:
             extra = np.full(n - len(self.worker_epochs), self.seq,
                             dtype=np.int64)
             self.worker_epochs = np.concatenate([self.worker_epochs, extra])
+
+    def reshard_workers(self, new_num_workers: int, translation) -> None:
+        """Carry per-worker fence epochs across an elastic reshard.
+
+        ``translation[w]`` is the new id inheriting old worker ``w``'s
+        bookkeeping.  A merged new worker takes the **min** of its
+        constituents' epochs — it is only as clean as its stalest source
+        (see the module docstring's reshard soundness argument).  New
+        workers outside the translation's image start at the current
+        ``seq``: nothing freed before they existed can be stale for them.
+
+        ``worker_epochs`` may be longer than the translation table —
+        :meth:`ensure_workers` grows it for observers (e.g. the sim's
+        compute workers) beyond the manager's topology.  Those extra
+        workers fold through the default rule (identity, else modulo),
+        so a shared fence engine never indexes the table out of range.
+        The new epoch array is built in full before assignment: a
+        malformed entry raises with the engine untouched.
+        """
+        if new_num_workers < 1:
+            raise ValueError(f"need >= 1 worker, got {new_num_workers}")
+        old = self.worker_epochs
+        try:
+            n_trans = len(translation)
+        except TypeError:
+            n_trans = len(old)
+        # fresh workers (no old constituent) start at the current seq; a
+        # constituent's epoch can only lower that (epochs never exceed seq)
+        new = np.full(new_num_workers, self.seq, dtype=np.int64)
+        for w in range(len(old)):
+            if w < n_trans:
+                t = int(translation[w])
+            else:                         # beyond the topology: default rule
+                t = w if w < new_num_workers else w % new_num_workers
+            if not (0 <= t < new_num_workers):
+                raise ValueError(
+                    f"translation maps worker {w} to {t}, outside the new "
+                    f"topology of {new_num_workers} workers")
+            new[t] = min(int(new[t]), int(old[w]))
+        self.worker_epochs = new
 
     def _workers_in(self, mask: int) -> np.ndarray:
         """Worker ids selected by a presence mask (bit 63 ⇒ all high ids)."""

@@ -128,6 +128,34 @@ class BlockTracker:
         """Set presence masks (scalar broadcast or per-block array)."""
         self._worker_mask[blocks] = np.asarray(mask, dtype=np.uint64)
 
+    def remap_workers(self, translation, old_num_workers: int,
+                      new_num_workers: int) -> None:
+        """Elastic reshard: rewrite every presence mask through the
+        old→new worker translation table.
+
+        A block whose mask named old worker ``w`` must afterwards name
+        ``translation[w]`` — the new worker that inherited ``w``'s fence
+        epoch — so later scoped fences still cover every possible stale
+        holder.  The top (overflow) bit aliases all workers ≥ 63: if the
+        old topology had such workers, their translations are unknowable
+        per-block, so the bit conservatively expands to *every* new worker
+        (the fence degenerates to global — sound, never silent).
+        """
+        if new_num_workers > WORKER_OVERFLOW_BIT:
+            all_new = np.uint64((1 << (WORKER_OVERFLOW_BIT + 1)) - 1)
+        else:
+            all_new = np.uint64((1 << new_num_workers) - 1)
+        old = self._worker_mask
+        new = np.zeros_like(old)
+        for w in range(min(old_num_workers, WORKER_OVERFLOW_BIT)):
+            bit = worker_bit(translation[w])
+            new |= np.where((old >> np.uint64(w)) & np.uint64(1) != 0,
+                            bit, np.uint64(0))
+        if old_num_workers > WORKER_OVERFLOW_BIT:
+            top = worker_bit(WORKER_OVERFLOW_BIT)
+            new |= np.where(old & top != 0, all_new, np.uint64(0))
+        self._worker_mask = new
+
     # -- vectorised views (hot path) -----------------------------------------
     def ctx_ids(self, blocks: np.ndarray) -> np.ndarray:
         return ((self._packed[blocks] >> _ID_SHIFT) & ID_MASK).astype(np.uint32)

@@ -1,4 +1,17 @@
-"""Public paged-attention op (decode over the FPR block tables)."""
+"""Public paged-attention op (decode over the FPR block tables).
+
+Two table layouts, one kernel:
+
+  * ``tables.ndim == 2`` — the classic monolithic ``(B, M)`` table.  It is
+    reshaped to a single-shard ``(1, B, M)`` stack; the kernel's index
+    arithmetic degenerates to ``b * M + m``, reproducing the pre-sharding
+    behaviour bit for bit.
+  * ``tables.ndim == 3`` — the device-native ``(W, Bs, M)`` per-worker
+    shard stack (slot ``b`` at shard ``b % W``, row ``b // W``).  This is
+    what :class:`~repro.serving.kv_cache.PagedKVCache` maintains; the
+    kernel walks it directly, so no caller ever assembles a monolithic
+    tensor on the host.
+"""
 
 from __future__ import annotations
 
@@ -15,14 +28,17 @@ def paged_attention(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                     tables: jax.Array, lengths: jax.Array, *,
                     window: int | None = None,
                     interpret: bool = False) -> jax.Array:
-    """q: (B, H, hd); pools: (N, bs, KV, hd); tables: (B, M); lengths: (B,)
-    → (B, H, hd).  Matches attention.paged_decode_attention_ref."""
+    """q: (B, H, hd); pools: (N, bs, KV, hd); tables: (B, M) or (W, Bs, M);
+    lengths: (B,) → (B, H, hd).  Matches attention.paged_decode_attention_ref
+    (sharded layout: paged_decode_attention_sharded_ref)."""
     B, H, hd = q.shape
     KV = k_pool.shape[2]
     G = H // KV
     qg = q.reshape(B, KV, G, hd)
+    shard_tables = (tables if tables.ndim == 3
+                    else tables.reshape(1, *tables.shape))
     o = paged_attention_fwd(qg, k_pool, v_pool,
-                            tables.astype(jnp.int32),
+                            shard_tables.astype(jnp.int32),
                             lengths.astype(jnp.int32),
                             window=window, interpret=interpret)
     return o.reshape(B, H, hd)

@@ -10,6 +10,18 @@ one physical block (bs, KV, hd) it needs from HBM into VMEM.  Holes
 (non-resident / swapped blocks, table entry < 0) are clamped in the index
 map and masked in the kernel, never touched.
 
+**Shard-native tables.**  The kernel consumes the block table in the
+device's *sharded* layout: a ``(W, Bs, M)`` int32 stack of per-worker
+shards, where batch slot ``b`` lives at shard ``b % W``, local row
+``b // W`` (the interleaved slot layout of
+``repro.core.block_table.BlockTableStore``).  The page walk indexes the
+flattened stack directly — ``(b % W) * Bs * M + (b // W) * M + m`` — so
+the serving cache hands its shard arrays straight to the kernel and a
+scoped fence or an elastic reshard never pays an O(full-table) host-side
+assemble.  The pre-sharding monolithic ``(B, M)`` layout is exactly the
+``W = 1`` case (the index arithmetic degenerates to ``b * M + m``), which
+is how the classic entry point in ``ops.py`` still works, bit for bit.
+
 Grid: (B, M) with the block walk innermost and sequential; online-softmax
 state (m, l, acc) lives in VMEM scratch across the walk.  Fully-invalid
 blocks (beyond ``lengths`` or outside the sliding window) are skipped with
@@ -31,8 +43,17 @@ from repro.kernels._compat import tpu_compiler_params
 NEG_INF = -1e30
 
 
+def _table_index(b, m, *, W: int, Bs: int, M: int):
+    """Flattened index of (slot b, logical block m) in the (W, Bs, M)
+    shard stack: shard b % W, local row b // W.  W == 1 ⇒ b * M + m."""
+    if W == 1:
+        return b * M + m
+    return (b % W) * (Bs * M) + (b // W) * M + m
+
+
 def _pa_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
-               m_sc, l_sc, acc_sc, *, bs: int, window: int | None):
+               m_sc, l_sc, acc_sc, *, bs: int, window: int | None,
+               W: int, Bs: int, M: int):
     b = pl.program_id(0)
     mi = pl.program_id(1)
     nm = pl.num_programs(1)
@@ -45,7 +66,7 @@ def _pa_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
         acc_sc[...] = jnp.zeros_like(acc_sc)
 
     blk_start = mi * bs
-    resident = tables_ref[b * nm + mi] >= 0
+    resident = tables_ref[_table_index(b, mi, W=W, Bs=Bs, M=M)] >= 0
     visible = blk_start < length
     if window is not None:
         visible = jnp.logical_and(visible, blk_start + bs > length - window)
@@ -81,21 +102,26 @@ def _pa_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_attention_fwd(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
-                        tables: jax.Array, lengths: jax.Array, *,
+                        shard_tables: jax.Array, lengths: jax.Array, *,
                         window: int | None = None,
                         interpret: bool = False) -> jax.Array:
-    """q: (B, KV, G, hd); pools: (N, bs, KV, hd); tables: (B, M) int32;
+    """q: (B, KV, G, hd); pools: (N, bs, KV, hd);
+    shard_tables: (W, Bs, M) int32 interleaved shard stack (W*Bs >= B);
     lengths: (B,) int32 → (B, KV, G, hd)."""
     B, KV, G, hd = q.shape
     N, bs, _, _ = k_pool.shape
-    M = tables.shape[1]
+    W, Bs, M = shard_tables.shape
+    if W * Bs < B:
+        raise ValueError(f"shard stack covers {W * Bs} slots < batch {B}")
 
     def q_map(b, m, tables_ref, lengths_ref):
         return (b, 0, 0, 0)
 
     def kv_map(b, m, tables_ref, lengths_ref):
-        # the page walk: physical block for logical block m of sequence b
-        return (jnp.maximum(tables_ref[b * M + m], 0), 0, 0, 0)
+        # the page walk: physical block for logical block m of slot b,
+        # read straight out of the interleaved shard stack
+        idx = _table_index(b, m, W=W, Bs=Bs, M=M)
+        return (jnp.maximum(tables_ref[idx], 0), 0, 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -112,7 +138,8 @@ def paged_attention_fwd(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
             pltpu.VMEM((KV, G, hd), jnp.float32),
         ],
     )
-    kern = functools.partial(_pa_kernel, bs=bs, window=window)
+    kern = functools.partial(_pa_kernel, bs=bs, window=window,
+                             W=W, Bs=Bs, M=M)
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
@@ -120,4 +147,4 @@ def paged_attention_fwd(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         compiler_params=tpu_compiler_params(
             ("parallel", "arbitrary")),
         interpret=interpret,
-    )(tables.reshape(-1), lengths, q, k_pool, v_pool)
+    )(shard_tables.reshape(-1), lengths, q, k_pool, v_pool)

@@ -1,5 +1,32 @@
-"""Pure-jnp oracle for paged decode attention (re-exported from models)."""
+"""Pure-jnp oracles for paged decode attention.
 
-from repro.models.attention import paged_decode_attention_ref
+``paged_decode_attention_ref`` (re-exported from models) is the
+monolithic-table oracle; ``paged_decode_attention_sharded_ref`` consumes
+the device-native ``(W, Bs, M)`` interleaved shard stack by assembling
+the monolithic view *inside the traced graph* (a transpose+reshape — the
+sharded layout is a permutation of the rows, slot ``b`` lives at
+``[b % W, b // W]``) and deferring to the monolithic oracle.  The Pallas
+kernel must match both bit-for-bit on the same inputs.
+"""
 
-__all__ = ["paged_decode_attention_ref"]
+from __future__ import annotations
+
+import jax
+
+from repro.models.attention import (assemble_shard_tables,
+                                    paged_decode_attention_ref)
+
+
+def paged_decode_attention_sharded_ref(
+        q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+        shard_tables: jax.Array, lengths: jax.Array,
+        window: int | None = None) -> jax.Array:
+    """Oracle for the shard-native kernel path (see module docstring)."""
+    B = q.shape[0]
+    tables = assemble_shard_tables(shard_tables)[:B]
+    return paged_decode_attention_ref(q, k_pool, v_pool, tables, lengths,
+                                      window=window)
+
+
+__all__ = ["paged_decode_attention_ref", "paged_decode_attention_sharded_ref",
+           "assemble_shard_tables"]

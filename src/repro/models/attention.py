@@ -278,6 +278,33 @@ def _chunked_fwd_body(q: jax.Array, k: jax.Array, v: jax.Array, causal,
 
 
 # --------------------------------------------------------- paged decode ref ----
+def assemble_shard_tables(tables: jax.Array) -> jax.Array:
+    """Monolithic view of a ``(W, Bs, M)`` interleaved shard stack.
+
+    Slot ``b`` lives at shard ``b % W``, local row ``b // W``, so the
+    monolithic ``(W*Bs, M)`` table is a pure transpose+reshape — cheap
+    inside a traced graph, and the identity for a 2-D table.  Only
+    non-shard-native consumers (the jnp reference, sequence-parallel
+    collectives, MLA decode) call this; the Pallas kernel indexes the
+    stack directly.
+    """
+    if tables.ndim == 2:
+        return tables
+    W, Bs, M = tables.shape
+    return tables.transpose(1, 0, 2).reshape(W * Bs, M)
+
+
+def lookup_slot_blocks(tables: jax.Array, slots: jax.Array,
+                       blk_idx: jax.Array) -> jax.Array:
+    """Physical block of logical block ``blk_idx[i]`` for slot
+    ``slots[i]``, for either table layout (monolithic ``(B, M)`` or the
+    ``(W, Bs, M)`` shard stack)."""
+    if tables.ndim == 2:
+        return tables[slots, blk_idx]
+    W = tables.shape[0]
+    return tables[slots % W, slots // W, blk_idx]
+
+
 def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
                                v_pool: jax.Array, block_tables: jax.Array,
                                lengths: jax.Array,

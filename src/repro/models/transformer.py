@@ -425,10 +425,20 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
 # ================================================================ decode step
 def _paged_attn(q, k_pool, v_pool, tables, lengths, *, page_impl, window,
                 mesh=None, batch_axes=(), seq_axes=()):
+    """Dispatch one decode-attention step over either table layout.
+
+    ``tables`` is the monolithic ``(B, M)`` table or the device-native
+    ``(W, Bs, M)`` shard stack.  The Pallas kernel consumes the stack
+    directly (shard-native page walk — no assembly anywhere); the jnp
+    reference and the sequence-parallel collectives view it monolithically
+    through a traced transpose (never a host-side rebuild).
+    """
+    B = q.shape[0]
     if page_impl in ("sp", "sp_opt"):
         from repro.distributed.collectives import paged_decode_attention_sp
         return paged_decode_attention_sp(
-            q, k_pool, v_pool, tables, lengths, mesh=mesh,
+            q, k_pool, v_pool,
+            attn_mod.assemble_shard_tables(tables)[:B], lengths, mesh=mesh,
             batch_axes=batch_axes, seq_axes=seq_axes, window=window,
             table_cols_sharded=(page_impl == "sp_opt"))
     if page_impl in ("pallas", "pallas_interpret"):
@@ -436,8 +446,9 @@ def _paged_attn(q, k_pool, v_pool, tables, lengths, *, page_impl, window,
         return pa_ops.paged_attention(
             q, k_pool, v_pool, tables, lengths, window=window,
             interpret=(page_impl == "pallas_interpret"))
-    return attn_mod.paged_decode_attention_ref(q, k_pool, v_pool, tables,
-                                               lengths, window=window)
+    return attn_mod.paged_decode_attention_ref(
+        q, k_pool, v_pool, attn_mod.assemble_shard_tables(tables)[:B],
+        lengths, window=window)
 
 
 def _write_token_kv(pool, tables, lengths, new, bs):
@@ -450,7 +461,8 @@ def _write_token_kv(pool, tables, lengths, new, bs):
     B = new.shape[0]
     blk_idx = lengths // bs                          # (B,)
     off = lengths % bs
-    phys = tables[jnp.arange(B), jnp.minimum(blk_idx, tables.shape[1] - 1)]
+    phys = attn_mod.lookup_slot_blocks(
+        tables, jnp.arange(B), jnp.minimum(blk_idx, tables.shape[-1] - 1))
     phys = jnp.where(phys >= 0, phys, pool.shape[0])
     return pool.at[phys, off].set(new.astype(pool.dtype), mode="drop")
 
@@ -572,10 +584,13 @@ def decode_step(params, cfg: ModelConfig, state: dict, tokens: jax.Array, *,
 
 def _mla_paged_decode(lp, x, positions, st, layer, cfg, *, page_impl, mesh,
                       batch_axes, seq_axes):
+    # the MLA kernels are not shard-native (yet): view the shard stack
+    # monolithically through a traced transpose
+    tables = attn_mod.assemble_shard_tables(st["tables"])[:x.shape[0]]
     if page_impl in ("sp", "sp_opt"):
         from repro.distributed.collectives import mla_decode_sp
         return mla_decode_sp(lp, x, positions, st["mla_c"][layer],
-                             st["mla_rope"][layer], st["tables"],
+                             st["mla_rope"][layer], tables,
                              st["lengths"] + 1, cfg, mesh=mesh,
                              batch_axes=batch_axes, seq_axes=seq_axes,
                              table_cols_sharded=(page_impl == "sp_opt"))
@@ -583,10 +598,10 @@ def _mla_paged_decode(lp, x, positions, st, layer, cfg, *, page_impl, mesh,
         from repro.kernels.mla_attention import ops as mla_ops
         return mla_ops.mla_paged_decode(
             lp, x, positions, st["mla_c"][layer], st["mla_rope"][layer],
-            st["tables"], st["lengths"] + 1, cfg,
+            tables, st["lengths"] + 1, cfg,
             interpret=(page_impl == "pallas_interpret"))
     return mla_mod.mla_decode_ref(lp, x, positions, st["mla_c"][layer],
-                                  st["mla_rope"][layer], st["tables"],
+                                  st["mla_rope"][layer], tables,
                                   st["lengths"] + 1, cfg)
 
 
@@ -663,7 +678,7 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, state: dict, *,
     # scattering afterwards would materialise the entire KV cache a second
     # time (tens of GB/chip for prefill_32k); instead each layer scatters
     # its rows into the pools as it runs, and the pools ride the scan carry.
-    tables_const = st["tables"]
+    tables_const = attn_mod.assemble_shard_tables(st["tables"])[:B]
 
     def scatter_seq(pool, seq):
         """seq: (B, S_tot, ...) → paged pool (N, bs, ...); <0 entries drop."""

@@ -18,6 +18,7 @@ from repro.serving.admission.policies import (AdmissionPolicy,
                                               PriorityPolicy,
                                               RecycleAffinityPolicy,
                                               make_policy)
+from repro.serving.admission.quota import TenantQuota
 
 __all__ = [
     "AdmissionPolicy",
@@ -31,5 +32,6 @@ __all__ = [
     "PREEMPT_STRATEGIES",
     "PriorityPolicy",
     "RecycleAffinityPolicy",
+    "TenantQuota",
     "make_policy",
 ]

@@ -47,18 +47,29 @@ from repro.core.events import (AdmissionDecision, EventBus,
 from repro.serving.admission.ledger import CapacityError, CapacityLedger
 from repro.serving.admission.policies import (AdmissionPolicy, PriorityPolicy,
                                               make_policy)
+from repro.serving.admission.quota import TenantQuota
 
 PREEMPT_STRATEGIES = ("recompute", "swap")
 
 
 @dataclass
 class GovernorConfig:
-    """Knobs for the admission/preemption subsystem."""
+    """Knobs for the admission/preemption subsystem.
+
+    ``tenant_caps`` enables per-tenant quota enforcement (tenant = request
+    ``stream``): a dict of tenant → max committed window blocks, with
+    ``tenant_default_cap`` applying to unlisted tenants (``None`` =
+    unlimited).  A tenant at its cap is skipped by admission until a
+    release credits it back — see
+    :class:`~repro.serving.admission.quota.TenantQuota`.
+    """
 
     policy: "str | AdmissionPolicy" = "fcfs"
     preempt: str = "recompute"          # recompute | swap
     overcommit_ratio: float = 1.0       # 1.0 = hard capacity invariant
     affinity_window: int = 8            # freed streams remembered (newest first)
+    tenant_caps: "dict | None" = None   # tenant → committed-block cap
+    tenant_default_cap: "int | None" = None
 
     def __post_init__(self) -> None:
         if self.preempt not in PREEMPT_STRATEGIES:
@@ -102,10 +113,24 @@ class MemoryGovernor:
             capacity_blocks, num_workers=num_workers,
             overcommit_ratio=self.config.overcommit_ratio)
         self.policy = make_policy(self.config.policy)
+        # per-tenant quota rides the AdmissionDecision stream for charging
+        # and the capacity predicate for refusal (see quota.py); a bare
+        # tenant_default_cap (uniform cap, no per-tenant overrides) is a
+        # valid configuration and must enable enforcement too
+        self.quota = (TenantQuota(self.config.tenant_caps or {},
+                                  default_cap=self.config.tenant_default_cap,
+                                  bus=self.bus)
+                      if (self.config.tenant_caps is not None
+                          or self.config.tenant_default_cap is not None)
+                      else None)
         self.stats = GovernorStats()
         # SLA-aware policies consume the governor's own decision stream
         if hasattr(self.policy, "attach"):
             self.policy.attach(self.bus)
+        # hold-capable policies need the starvation predicate so a
+        # quota-blocked request never engages (or sustains) a hold
+        if getattr(self.policy, "can_hold", False):
+            self.policy.starvation_fits = self._starvable_fits
         # preemption bookkeeping is event-driven: the engine publishes
         # PreemptionResolved; virtual-time sims may call count_preempt
         # directly instead (they have no engine loop)
@@ -126,6 +151,31 @@ class MemoryGovernor:
         """Can this request's window ever fit (even on an empty pool)?"""
         return self.window_blocks(r) <= self.ledger.limit
 
+    def fits(self, r) -> bool:
+        """The admission capacity predicate: the ledger can commit the
+        window AND the tenant (when quotas are on) is under its cap."""
+        blocks = self.window_blocks(r)
+        if not self.ledger.fits(blocks):
+            return False
+        return self.quota is None or self.quota.allows(r.stream, blocks)
+
+    def _starvable_fits(self, r) -> bool:
+        """``fits`` for starvation accounting (preemption beneficiaries,
+        ``blocked_rid`` aging): a *quota*-blocked request reads as
+        fitting, because freeing capacity — by preempting other tenants
+        or holding admissions — can never credit its tenant's cap.  Only
+        capacity-blocked requests may drive preemption or deadline
+        holds."""
+        if (self.quota is not None
+                and not self.quota.allows(r.stream, self.window_blocks(r))):
+            return True
+        return self.fits(r)
+
+    def reshard(self, new_num_workers: int, translation) -> None:
+        """Elastic topology change: remap the ledger's per-worker shares
+        (quota caps are per-tenant, not per-worker — untouched)."""
+        self.ledger.reshard(new_num_workers, translation)
+
     # ----------------------------------------------------------- admission
     def select(self, queue: list) -> Optional[int]:
         """Index of the next queue entry to admit, or None.
@@ -142,16 +192,24 @@ class MemoryGovernor:
         """
         if not queue:
             return None
-        fits = lambda r: self.ledger.fits(self.window_blocks(r))  # noqa: E731
+        fits = self.fits
         idx = self.policy.select(queue, fits, tuple(self._freed_streams))
         if idx is None:
             # a hold (hold-capable policy refusing while something still
             # fits — capacity deliberately drained for a starved window)
-            # is NOT a capacity refusal; keep the two counters disjoint so
-            # rejected_overcommit retains its documented meaning
+            # is NOT a capacity refusal; keep the counters disjoint so
+            # rejected_overcommit retains its documented meaning.  A round
+            # where the only refusals are tenant caps (the window fits the
+            # ledger) is a quota rejection, not an over-commit.
             if (getattr(self.policy, "can_hold", False)
                     and any(fits(r) for r in queue)):
                 self.stats.holds += 1
+            elif self.quota is not None and any(
+                    self.ledger.fits(self.window_blocks(r))
+                    and not self.quota.allows(r.stream,
+                                              self.window_blocks(r))
+                    for r in queue):
+                self.quota.note_rejection()
             else:
                 self.stats.rejected_overcommit += 1
             self._publish_decision("reject", None, queue, fits)
@@ -184,7 +242,9 @@ class MemoryGovernor:
             queue_depth=len(queue),
             window_blocks=(None if request is None
                            else self.window_blocks(request)),
-            blocked_rid=self.policy.most_urgent_blocked(queue, fits)))
+            blocked_rid=self.policy.most_urgent_blocked(
+                queue, self._starvable_fits),
+            tenant=None if request is None else request.stream))
 
     def on_admit(self, r, worker: int = 0) -> None:
         """Commit the admitted request's window (raises on over-commit)."""
@@ -201,6 +261,8 @@ class MemoryGovernor:
         """Completion or preemption: return the window, remember the stream."""
         if self.ledger.holds(r.rid):
             self.ledger.release(r.rid)
+        if self.quota is not None:
+            self.quota.release(r.rid)
         self._admit_order.pop(r.rid, None)
         self.note_freed_stream(r.stream)
 
@@ -243,8 +305,7 @@ class MemoryGovernor:
         a lower-class running sequence (priority policy only)."""
         if not isinstance(self.policy, PriorityPolicy) or not queue:
             return None
-        return self.policy.best_blocked(
-            queue, lambda r: self.ledger.fits(self.window_blocks(r)))
+        return self.policy.best_blocked(queue, self._starvable_fits)
 
     # ------------------------------------------------------------ counters
     def counters(self) -> dict:
@@ -252,6 +313,8 @@ class MemoryGovernor:
         d["policy"] = self.policy.name
         d["preempt_strategy"] = self.config.preempt
         d["ledger"] = self.ledger.counters()
+        d["quota"] = (self.quota.counters() if self.quota is not None
+                      else {"enabled": False, "tenants": 0, "rejections": 0})
         return d
 
 

@@ -116,6 +116,26 @@ class CapacityLedger:
     def holds(self, rid: int) -> bool:
         return rid in self.entries
 
+    def reshard(self, new_num_workers: int, translation) -> None:
+        """Elastic topology change: remap per-worker commitments.
+
+        Every live reservation's worker shard is rewritten through the
+        old→new ``translation`` and the per-worker totals are rebuilt —
+        total ``committed`` is untouched (capacity is a pool property, not
+        a topology one), so the admission invariant survives the reshard
+        unchanged.
+        """
+        if new_num_workers < 1:
+            raise ValueError(f"need >= 1 worker, got {new_num_workers}")
+        old_n = len(self.per_worker)
+        per_worker = [0] * new_num_workers
+        for e in self.entries.values():
+            e.worker = (int(translation[e.worker]) % new_num_workers
+                        if e.worker < old_n else e.worker % new_num_workers)
+            per_worker[e.worker] += e.blocks
+        self.per_worker = per_worker
+        self.num_workers = new_num_workers
+
     def check(self) -> None:
         """Soundness invariant: the ledger never over-commits nor drifts."""
         total = sum(e.blocks for e in self.entries.values())

@@ -155,6 +155,10 @@ class DeadlinePolicy(AdmissionPolicy):
         self._last_deadlines: dict[int, tuple] = {}  # rid → deadline @select
         #: (queue rid tuple, EDF index order, rid → deadline) memo
         self._order_cache: "tuple[tuple, list, dict] | None" = None
+        #: set by the governor: "would freeing capacity help this
+        #: request?" — True for a request blocked only by a tenant quota,
+        #: which a hold can never seat (see MemoryGovernor._starvable_fits)
+        self.starvation_fits: "FitsFn | None" = None
 
     def deadline(self, r) -> tuple:
         arrival = getattr(r, "arrival", None)
@@ -190,7 +194,13 @@ class DeadlinePolicy(AdmissionPolicy):
         if fits(urgent):
             return order[0]
         if self._deferrals.get(urgent.rid, 0) >= self.hold_after:
-            return None                 # hold: drain capacity to the starver
+            # hold — drain capacity to the starver — but only while the
+            # starver is CAPACITY-blocked: a quota-blocked urgent request
+            # cannot be seated by freed capacity, so holding for it would
+            # waste the pool on a request the hold can never help
+            sf = self.starvation_fits
+            if sf is None or not sf(urgent):
+                return None
         for i in order[1:]:
             if fits(queue[i]):
                 return i

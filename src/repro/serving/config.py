@@ -2,14 +2,16 @@
 
 ``Engine.__init__`` had grown ~14 loose keyword arguments spanning four
 layers (model paging, fence scoping, worker routing, admission control).
-:class:`EngineConfig` is the single validated carrier; the old kwargs keep
-working for one release through :meth:`EngineConfig.from_legacy_kwargs`
-(the engine warns ``DeprecationWarning`` when they are used).
+:class:`EngineConfig` is the single validated carrier; the one-release
+loose-kwargs compatibility window has closed — ``Engine(cfg, params,
+config=EngineConfig(...))`` is the only construction path and stray
+keyword arguments raise ``TypeError``.
 
 The config object is deliberately *data only*: the engine still builds the
 cache, governor and evictor itself — configuration and wiring stay
-separate, which is what lets ``benchmarks/engine_trace.py`` assert that a
-config-built engine replays bit-identically to a legacy-kwargs one.
+separate.  ``num_workers`` is the *initial* topology;
+:meth:`~repro.serving.engine.Engine.resize_workers` reshards a live
+engine and swaps in ``config.replace(num_workers=n)``.
 """
 
 from __future__ import annotations
@@ -19,7 +21,7 @@ from typing import Any, Optional
 
 import jax.numpy as jnp
 
-from repro.core.config import LegacyKwargsConfig
+from repro.core.config import ConfigBase, validate_worker_count
 from repro.core.contexts import ContextScope
 from repro.core.eviction import Watermarks
 from repro.serving.admission import GovernorConfig
@@ -28,7 +30,7 @@ WORKER_ROUTINGS = ("slot", "stream")
 
 
 @dataclass(frozen=True)
-class EngineConfig(LegacyKwargsConfig):
+class EngineConfig(ConfigBase):
     """Validated configuration of a :class:`~repro.serving.engine.Engine`.
 
     ``admission`` accepts ``None`` (legacy fill-every-slot scheduling), a
@@ -52,13 +54,6 @@ class EngineConfig(LegacyKwargsConfig):
     cost_model: Any = None
     admission: "GovernorConfig | str | None" = field(default=None)
 
-    #: exactly the legacy Engine keyword arguments
-    LEGACY_KWARGS = ("num_blocks", "max_batch", "max_seq_len", "fpr_enabled",
-                     "scope", "page_impl", "dtype", "watermarks",
-                     "eos_token", "greedy", "num_workers", "scoped_fences",
-                     "worker_routing", "cost_model", "admission")
-    LEGACY_TARGET = "Engine"
-
     def __post_init__(self) -> None:
         if self.num_blocks <= 0 or self.max_batch <= 0:
             raise ValueError(f"num_blocks and max_batch must be positive, "
@@ -66,9 +61,8 @@ class EngineConfig(LegacyKwargsConfig):
         if self.max_seq_len <= 0:
             raise ValueError(f"max_seq_len must be positive, "
                              f"got {self.max_seq_len}")
-        if self.num_workers < 1:
-            raise ValueError(f"num_workers must be >= 1, "
-                             f"got {self.num_workers}")
+        # resize_workers revalidates new counts through the same check
+        validate_worker_count(self.num_workers)
         if self.worker_routing not in WORKER_ROUTINGS:
             raise ValueError(f"unknown worker_routing "
                              f"{self.worker_routing!r}; "

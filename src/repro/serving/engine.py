@@ -28,16 +28,15 @@ keeps the ``demand_pager_gave_up`` counter behaviour.
 from __future__ import annotations
 
 import time
-import warnings
 import zlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.config import validate_translation, validate_worker_count
 from repro.core.eviction import WatermarkEvictor
 from repro.core.events import PreemptionResolved, PreemptionStarted
-from repro.core.metrics import legacy_view
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
 from repro.serving.admission import CapacityError, MemoryGovernor
@@ -54,28 +53,27 @@ _SLOT_STATE_KEYS = ("conv", "ssm", "rwkv_x", "rwkv_s", "cross_k", "cross_v")
 class Engine:
     """Continuous-batching engine over the FPR paged cache.
 
-    Construction: ``Engine(cfg, params, config=EngineConfig(...))``.  The
-    pre-PR loose keyword arguments keep working for one release through
-    :meth:`EngineConfig.from_legacy_kwargs` and warn ``DeprecationWarning``
-    — ``benchmarks/engine_trace.py`` asserts both construction paths replay
-    bit-identically.
+    Construction: ``Engine(cfg, params, config=EngineConfig(...))`` — the
+    only construction path (the one-release loose-kwargs window closed;
+    stray keyword arguments raise ``TypeError``).
 
     The engine shares one :class:`~repro.core.events.EventBus` with its
     cache, fence engine, memory manager and governor (:attr:`bus`), and one
     :class:`~repro.core.metrics.MetricsRegistry` (:attr:`metrics`) whose
-    flat snapshot is the canonical counter schema; :meth:`stats` is the
-    legacy nested view of that snapshot.
+    flat snapshot (``engine.metrics.snapshot()``) is the canonical — and
+    only — counter surface.
+
+    **Elastic topology.**  :meth:`resize_workers` reshards a *live* engine
+    to a new worker count without draining the request queue or dropping a
+    mapping: the cache/manager carry every per-worker structure across
+    (see ``core/shootdown.py`` for the soundness argument), the admission
+    ledger's per-worker commitments are remapped, and running slots are
+    re-bound to their new serving workers.  Tokens are bit-identical to a
+    fixed-topology run (``benchmarks/engine_trace.py`` elastic replay).
     """
 
     def __init__(self, cfg: ModelConfig, params, *,
-                 config: EngineConfig | None = None, **legacy_kwargs):
-        if legacy_kwargs:
-            warnings.warn(
-                "Engine(**kwargs) is deprecated; pass "
-                "config=EngineConfig(...) instead", DeprecationWarning,
-                stacklevel=2)
-            config = EngineConfig.from_legacy_kwargs(legacy_kwargs,
-                                                     base=config)
+                 config: EngineConfig | None = None):
         config = config or EngineConfig()
         self.config = config
         self.cfg = cfg
@@ -106,6 +104,7 @@ class Engine:
                                  if k in _SLOT_STATE_KEYS]
         self.evictor = WatermarkEvictor(self.cache.mgr, self._lru_victims,
                                         watermarks=config.watermarks)
+        self.metrics.register("fpr.eviction", self.evictor.counters)
         self.steps = 0
         self.tokens_generated = 0
         self.wall_s = 0.0
@@ -162,6 +161,39 @@ class Engine:
         if self.worker_routing == "stream":
             return zlib.crc32(r.stream.encode()) % self.cache.num_workers
         return r.slot % self.cache.num_workers
+
+    # ------------------------------------------------------ elastic topology
+    def resize_workers(self, new_num_workers: int,
+                       translation=None) -> dict:
+        """Reshard the live engine to ``new_num_workers`` (drain-free).
+
+        Order: the admission ledger's per-worker commitments remap first
+        (capacity is governed through the topology change — total
+        ``committed`` never moves, so the admission invariant holds
+        throughout), then the cache/manager reshard carries masks, epochs,
+        table shards and free lists across (issuing the scoped
+        ``reason="reshard"`` fence iff live rows moved shards), and
+        finally every running slot is re-bound to its serving worker under
+        the *new* topology so future scoped refreshes stay covering.
+        Queued requests are untouched — no drain, no cold start.
+
+        Returns the reshard plan (moved slots / fenced workers).
+        """
+        validate_worker_count(new_num_workers)
+        if translation is None:
+            translation = self.cache.mgr.default_translation(new_num_workers)
+        # reject malformed translations BEFORE the ledger (or any other
+        # per-worker structure) is remapped — resize applies fully or not
+        # at all
+        validate_translation(translation, self.cache.num_workers,
+                             new_num_workers)
+        if self.governor is not None:
+            self.governor.reshard(new_num_workers, translation)
+        plan = self.cache.reshard(new_num_workers, translation)
+        self.config = self.config.replace(num_workers=new_num_workers)
+        for slot, r in self.sched.running.items():
+            self.cache.bind_slot_worker(slot, self._worker_of(r))
+        return plan
 
     def _admit(self) -> None:
         admitted = (self.sched.admit() if self.governor is None
@@ -443,7 +475,7 @@ class Engine:
     def run(self, max_steps: int = 10_000) -> dict:
         while not self.sched.idle and self.steps < max_steps:
             self.step()
-        return self.stats()
+        return self.metrics.snapshot()
 
     def _admission_metrics(self) -> dict:
         if self.governor is None:
@@ -454,6 +486,7 @@ class Engine:
         return {
             "steps": self.steps,
             "demand_pager_gave_up": self.demand_pager_gave_up,
+            "num_workers": self.cache.num_workers,
             "tokens": self.tokens_generated,
             "wall_s": round(self.wall_s, 4),
             "tokens_per_s": round(
@@ -461,9 +494,3 @@ class Engine:
             if self.wall_s else None,
             "completed": len(self.sched.done),
         }
-
-    def stats(self) -> dict:
-        """Legacy nested counter view, derived from :attr:`metrics` — the
-        pre-registry ``Engine.stats()`` shape, kept for one release.  New
-        code reads ``self.metrics.snapshot()`` (flat namespaced schema)."""
-        return legacy_view(self.metrics.snapshot())

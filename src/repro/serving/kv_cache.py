@@ -13,20 +13,33 @@ The split of responsibilities mirrors the paper exactly:
     avoids (each refresh is published back as
     :class:`~repro.core.events.ShardRefreshed`).
 
-**Sharded device tables.**  The device block-table is split into one shard
-per worker: shard ``w`` holds the batch slots with ``slot % num_workers ==
-w``, each shard is its own device array, and the kernel-facing
-``state["tables"]`` tensor is assembled from the shard arrays.  The engine
-binds each slot to its serving worker at admission
-(:meth:`bind_slot_worker`); a *scoped* fence re-uploads the covered
-workers' own shards plus the shards of every slot bound to them, so
-non-slot routings (stream affinity) stay covered — refreshed bytes scale
-with the mask popcount — while
-a *global* fence (or ``workers=None``) falls back to re-uploading every
-shard, reproducing the broadcast pessimism the paper eliminates.  The
-per-shard refresh counters (``device_refreshed_entries/bytes``,
-``device_shard_refreshes``, ``device_full_refreshes``) are what the
-benchmarks diff between the global and sharded paths.
+**Shard-native device tables.**  The device block-table lives as ONE
+stacked ``(num_workers, Bs, M)`` int32 array (``state["tables"]``): shard
+``w`` is slice ``[w]`` and holds the batch slots with ``slot % W == w`` at
+local row ``slot // W`` (``Bs = ceil(max_batch / W)``; slots past
+``max_batch`` pad with ``-1`` and are never read).  The decode kernels
+walk this stack *directly* (see ``kernels/paged_attention``) — there is no
+monolithic kernel tensor and therefore no O(full-table) assemble anywhere:
+a per-step update or a scoped fence refresh is one ``at[w].set`` slice
+update per touched shard, and the engine binds each slot to its serving
+worker at admission (:meth:`bind_slot_worker`) so a *scoped* fence
+re-uploads the covered workers' own shards plus the shards of every slot
+bound to them.  A *global* fence (``workers=None``) falls back to
+re-uploading every shard, reproducing the broadcast pessimism the paper
+eliminates.  The per-shard refresh counters (``device_refreshed_entries/
+bytes``, ``device_shard_refreshes``, ``device_full_refreshes``) are what
+the benchmarks diff between the global and sharded paths.
+
+**Elastic resharding.**  :meth:`reshard` changes the worker topology of a
+*live* cache: the manager carries masks/epochs/slots across (see
+``core/fpr.py``), the cache repartitions the stacked array — re-deriving
+authoritative rows only for the slots whose shard owner *moved* — and the
+manager's scoped ``reason="reshard"`` fence (fired only when live rows
+moved) bumps the old owners' epochs.  The cache skips its own device
+refresh for that one fence (``_in_reshard``): the repartition that just
+ran *is* the refresh, already counted under the ``device.reshard_*``
+counters, so refreshed bytes scale with the moved fraction instead of a
+full-table cold start.
 """
 
 from __future__ import annotations
@@ -39,7 +52,7 @@ from repro.core.block_table import Mapping
 from repro.core.config import FprConfig
 from repro.core.contexts import ContextRegistry, ContextScope
 from repro.core.events import (EventBus, FenceIssued, ShardRefreshed,
-                               SwapDropped)
+                               SwapDropped, TopologyChanged)
 from repro.core.fpr import FprMemoryManager
 from repro.core.shootdown import FenceCostModel, FenceEngine
 from repro.models import transformer as tfm
@@ -79,13 +92,6 @@ class PagedKVCache:
         spec = tfm.cache_spec(cfg, max_batch, max_seq_len,
                               num_blocks=num_blocks, dtype=dtype)
         self.state = {k: jnp.zeros(sh, dt) for k, (sh, dt) in spec.items()}
-        # Sharded device block-table: worker w owns slots w, w+W, w+2W, …
-        # (one shard array per worker; the monolithic tensor the kernel
-        # consumes is assembled from the shards, never rebuilt from host).
-        self.num_shards = max(1, num_workers)
-        self._shard_slots = [
-            np.arange(w, max_batch, self.num_shards, dtype=np.int64)
-            for w in range(self.num_shards)]
         # mirror of the last-uploaded device table (scheduler-slot space) —
         # what the device currently holds, used to diff per-step uploads
         self._host_tables = np.full(
@@ -95,16 +101,8 @@ class PagedKVCache:
         # mapping state, so a mid-step fence uploads post-fence tables
         # rather than re-broadcasting the previous step's rows
         self._slot_mappings: dict[int, Mapping] = {}
-        # which worker currently serves each batch slot (the engine rebinds
-        # this at admission; defaults to the slot-modulo shard layout) —
-        # scoped refreshes cover the shards of every slot a covered worker
-        # serves, so non-slot routings (e.g. stream affinity) stay sound
-        self._slot_worker = np.arange(max_batch,
-                                      dtype=np.int64) % self.num_shards
-        self._shard_tables = [
-            jnp.full((len(s), self.max_blocks_per_seq), -1, jnp.int32)
-            for s in self._shard_slots]
-        self.state["tables"] = self._assemble_tables()
+        self._init_shard_layout(num_workers)
+        self.state["tables"] = self._stack_from_host()
         self.state["lengths"] = jnp.zeros((max_batch,), jnp.int32)
         self._fence_drains = 0
         self._full_refreshes = 0        # global fences: every shard re-upload
@@ -112,6 +110,10 @@ class PagedKVCache:
         self._refreshed_entries = 0     # table entries re-uploaded by fences
         self._refreshed_bytes = 0
         self._step_upload_entries = 0   # normal-path (non-fence) shard uploads
+        self._reshards = 0              # elastic topology changes applied
+        self._reshard_moved_entries = 0
+        self._reshard_refreshed_bytes = 0
+        self._in_reshard = False
         # swap "device": evicted block contents round-trip through host
         # memory (the storage behind the page cache; latency is real)
         self._swap_store: dict = {}
@@ -121,11 +123,58 @@ class PagedKVCache:
         self.mgr.on_swap_in = self._swap_in
         # event-bus subscriptions: the measured device-shard refresh runs on
         # every fence (after the manager's epoch bump, which subscribed
-        # first), and dying mappings' swap-store copies are dropped
+        # first), topology changes repartition the shard stack, and dying
+        # mappings' swap-store copies are dropped
         self.bus.subscribe(FenceIssued, self._on_fence_issued)
+        self.bus.subscribe(TopologyChanged, self._on_topology_changed)
         self.bus.subscribe(SwapDropped, self._handle_swap_dropped)
 
+    # --------------------------------------------------------- shard layout
+    def _init_shard_layout(self, num_workers: int) -> None:
+        """(Re)build the interleaved slot→shard partition for ``W`` workers.
+
+        Shard ``w`` owns slots ``w, w+W, w+2W, …``; the stacked device
+        array is ``(W, Bs, M)`` with ``Bs = ceil(max_batch / W)`` (tail
+        rows of ragged shards stay ``-1`` and are never addressed — the
+        kernels index slots ``< max_batch`` only).
+        """
+        self.num_shards = max(1, num_workers)
+        self.shard_rows = -(-self.max_batch // self.num_shards)   # Bs
+        self._shard_slots = [
+            np.arange(w, self.max_batch, self.num_shards, dtype=np.int64)
+            for w in range(self.num_shards)]
+        # which worker currently serves each batch slot (the engine rebinds
+        # this at admission; defaults to the slot-modulo shard layout) —
+        # scoped refreshes cover the shards of every slot a covered worker
+        # serves, so non-slot routings (stream affinity) stay sound
+        self._slot_worker = np.arange(self.max_batch,
+                                      dtype=np.int64) % self.num_shards
+
+    def _pad_shard_rows(self, rows: np.ndarray) -> np.ndarray:
+        """Pad a shard's real rows to the uniform (Bs, M) slice shape
+        (ragged tail rows stay -1 and are never addressed)."""
+        if len(rows) == self.shard_rows:
+            return rows
+        padded = np.full((self.shard_rows, self.max_blocks_per_seq), -1,
+                         np.int32)
+        padded[:len(rows)] = rows
+        return padded
+
+    def _stack_from_host(self) -> jax.Array:
+        """Fresh (W, Bs, M) device stack from the host mirror (construction
+        and reshard only — steady-state updates are per-shard slices)."""
+        stack = np.stack([
+            self._pad_shard_rows(self._host_tables[self._shard_slots[w]])
+            for w in range(self.num_shards)])
+        return jnp.asarray(stack, jnp.int32)
+
     def _on_fence_issued(self, evt: FenceIssued) -> None:
+        if self._in_reshard and evt.reason == "reshard":
+            # the repartition that triggered this fence already uploaded
+            # authoritative tables for every moved row (counted under the
+            # device.reshard_* counters) — re-uploading here would bill
+            # the topology change twice
+            return
         self._device_fence(evt.reason, evt.n_blocks, evt.workers)
 
     def _handle_swap_dropped(self, evt: SwapDropped) -> None:
@@ -165,15 +214,13 @@ class PagedKVCache:
         shards.update(int(s) % self.num_shards for s in bound)
         return sorted(shards)
 
-    def _assemble_tables(self) -> jax.Array:
-        """The kernel-facing (max_batch, M) tensor, built from shard arrays."""
-        if self.num_shards == 1:
-            return self._shard_tables[0]
-        tab = jnp.full((self.max_batch, self.max_blocks_per_seq), -1,
-                       jnp.int32)
-        for slots, shard in zip(self._shard_slots, self._shard_tables):
-            tab = tab.at[slots].set(shard)
-        return tab
+    def _live_row(self, slot: int) -> np.ndarray:
+        """Authoritative table row for ``slot`` from live mapping state."""
+        row = np.full(self.max_blocks_per_seq, -1, np.int32)
+        m = self._slot_mappings.get(int(slot))
+        if m is not None and m.mapping_id in self.mgr.tables.mappings:
+            self._fill_row(row, m)
+        return row
 
     def _device_fence(self, reason: str, n_blocks: int,
                       workers=None) -> None:
@@ -194,24 +241,21 @@ class PagedKVCache:
         # last-uploaded mirror lags reality).  Only the covered shards'
         # slots are rebuilt: host-side fence work scales with the mask
         # popcount, like the upload it feeds.
-        alive = self.mgr.tables.mappings
         entries = nbytes = 0
+        tables = self.state["tables"]
         for w in shards:
             slots = self._shard_slots[w]
-            rows = np.full((len(slots), self.max_blocks_per_seq), -1,
-                           np.int32)
-            for i, s in enumerate(slots):
-                m = self._slot_mappings.get(int(s))
-                if m is not None and m.mapping_id in alive:
-                    self._fill_row(rows[i], m)
+            rows = np.stack([self._live_row(s) for s in slots]) \
+                if len(slots) else np.zeros((0, self.max_blocks_per_seq),
+                                            np.int32)
             self._host_tables[slots] = rows              # device now has them
-            self._shard_tables[w] = jax.device_put(
-                jnp.asarray(rows, jnp.int32))
+            tables = tables.at[w].set(
+                jnp.asarray(self._pad_shard_rows(rows), jnp.int32))
             entries += rows.size
             nbytes += rows.nbytes
+        self.state["tables"] = tables
         self._refreshed_entries += entries
         self._refreshed_bytes += nbytes
-        self.state["tables"] = self._assemble_tables()
         self._fence_drains += 1
         if workers is None:
             self._full_refreshes += 1
@@ -221,6 +265,78 @@ class PagedKVCache:
             self.bus.publish(ShardRefreshed(
                 reason=reason, shards=tuple(int(s) for s in shards),
                 entries=entries, nbytes=nbytes, full=workers is None))
+
+    # ------------------------------------------------------------- reshard
+    def reshard(self, new_num_workers: int, translation=None) -> dict:
+        """Elastic topology change on a *live* cache (drain-free for every
+        row that does not move shards).
+
+        Delegates the host-side remap (masks, epochs, slots, free lists,
+        ledgered overflow records) to :meth:`FprMemoryManager.reshard`;
+        the cache's own work happens in the :class:`TopologyChanged`
+        subscriber, which runs *before* the manager's scoped reshard fence
+        so the fence's epoch bump lands on the new layout.  Returns the
+        manager's reshard plan.
+        """
+        if translation is None:
+            translation = self.mgr.default_translation(new_num_workers)
+        jax.block_until_ready(self.state["tables"])      # topology sync point
+        # the cache's slot space is the decode batch, distinct from the
+        # store's table-slot space: the (translated) old owners losing
+        # *live batch rows* join the manager's single reshard fence
+        alive = self.mgr.tables.mappings
+        extra = {int(translation[s % self.num_shards])
+                 for s in self._moved_batch_slots(new_num_workers,
+                                                  translation)
+                 if (m := self._slot_mappings.get(int(s))) is not None
+                 and m.mapping_id in alive}
+        self._in_reshard = True
+        try:
+            plan = self.mgr.reshard(new_num_workers, translation,
+                                    extra_fence_workers=sorted(extra))
+        finally:
+            self._in_reshard = False
+        return plan
+
+    def _moved_batch_slots(self, new_num_workers: int,
+                           translation) -> list[int]:
+        """Batch slots whose device-shard owner changes under the reshard
+        (``translation[s % W_old] != s % W_new``)."""
+        old_w = self.num_shards
+        return [s for s in range(self.max_batch)
+                if int(translation[s % old_w]) != s % new_num_workers]
+
+    def _on_topology_changed(self, evt: TopologyChanged) -> None:
+        """Repartition the device shard stack onto the new worker set.
+
+        Only the *moved* slots' rows are re-derived from live mapping
+        state and counted as reshard refresh traffic — every other row's
+        device copy is carried over byte-for-byte (in a real deployment
+        the unmoved shards are simply not re-broadcast; here the stack is
+        rebuilt from the mirror, which holds exactly what the device
+        holds).  Refreshed bytes therefore scale with the moved fraction,
+        strictly below one full-table re-upload whenever any row stays.
+        """
+        W = evt.new_num_workers
+        trans = evt.translation
+        # moved rows in the cache's own slot space (the decode batch) —
+        # the event's moved_slots are store-table slots, a different space
+        moved = self._moved_batch_slots(W, trans)
+        old_slot_worker = self._slot_worker
+        self._init_shard_layout(W)
+        # carry engine routing through the translation (the engine rebinds
+        # per its own policy right after resize_workers)
+        self._slot_worker = np.asarray(
+            [trans[int(w)] if int(w) < len(trans) else int(w) % W
+             for w in old_slot_worker], dtype=np.int64) % W
+        self.num_workers = W
+        for s in moved:                      # authoritative data for movers
+            self._host_tables[s] = self._live_row(s)
+        self.state["tables"] = self._stack_from_host()
+        row_bytes = self._host_tables[0].nbytes
+        self._reshards += 1
+        self._reshard_moved_entries += len(moved) * self.max_blocks_per_seq
+        self._reshard_refreshed_bytes += len(moved) * row_bytes
 
     # ---------------------------------------------------------- allocation
     def alloc_sequence(self, n_tokens: int, *, stream: str = "default",
@@ -261,17 +377,20 @@ class PagedKVCache:
 
     def update_tables(self, mappings: dict[int, Mapping],
                       lengths: np.ndarray) -> None:
-        """Per-step table update: upload only the shards whose rows changed,
-        then assemble the kernel tensor from the shard arrays."""
+        """Per-step table update: upload only the shards whose rows changed
+        — each one a single slice update of the stacked device array; the
+        kernels consume the stack directly, so nothing is assembled."""
         self._slot_mappings = dict(mappings)
         host = self._host_rows(mappings)
+        tables = self.state["tables"]
         for w, slots in enumerate(self._shard_slots):
             rows = host[slots]
             if not np.array_equal(rows, self._host_tables[slots]):
-                self._shard_tables[w] = jnp.asarray(rows)
+                tables = tables.at[w].set(
+                    jnp.asarray(self._pad_shard_rows(rows), jnp.int32))
                 self._step_upload_entries += rows.size
         self._host_tables = host
-        self.state["tables"] = self._assemble_tables()
+        self.state["tables"] = tables
         self.state["lengths"] = jnp.asarray(lengths, jnp.int32)
 
     def _device_metrics(self) -> dict:
@@ -281,10 +400,7 @@ class PagedKVCache:
                 "shard_refreshes": self._shard_refreshes,
                 "refreshed_entries": self._refreshed_entries,
                 "refreshed_bytes": self._refreshed_bytes,
+                "reshards": self._reshards,
+                "reshard_moved_entries": self._reshard_moved_entries,
+                "reshard_refreshed_bytes": self._reshard_refreshed_bytes,
                 "step_upload_entries": self._step_upload_entries}
-
-    def counters(self) -> dict:
-        """Legacy nested counter view (see :meth:`FprMemoryManager.counters`);
-        new code reads ``self.metrics.snapshot()``."""
-        from repro.core.metrics import legacy_view
-        return legacy_view(self.metrics.snapshot())

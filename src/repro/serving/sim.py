@@ -58,6 +58,12 @@ class SimConfig:
     refresh_bw: float = 40e3          # shard re-upload bandwidth, bytes per
                                       # virtual µs (PCIe/ICI-ish ratio vs
                                       # the 25 µs fence base cost)
+    reshard_iters: tuple = ()         # ((iteration, new_num_workers), …):
+                                      # elastic topology changes applied
+                                      # mid-run; each costs the *moved*
+                                      # row fraction of the full table
+                                      # (see device_refreshed_bytes),
+                                      # never a cold re-upload
     seed: int = 0
 
 
@@ -74,6 +80,8 @@ class SimResult:
     evictions: int = 0
     device_refreshed_bytes: int = 0   # Σ shard bytes re-uploaded by fences
     refresh_time: float = 0.0         # virtual µs spent re-uploading shards
+    reshards: int = 0                 # elastic topology changes applied
+    reshard_moved_rows: int = 0       # table rows whose shard owner moved
 
     def throughput(self) -> float:
         t = max(self.io_time, 1e-9)
@@ -143,6 +151,7 @@ class FenceImpactSim:
         fences_before = self.fences.stats.fences
 
         def io_op(wid, ctx_gid):
+            wid %= self.mgr.num_workers       # topology may have shrunk
             ctx = (derive_context(c.scope, group_id=ctx_gid)
                    if c.fpr else None)
             st = self.fences.stats
@@ -155,7 +164,27 @@ class FenceImpactSim:
                 cost += fence_stall(st.workers_covered - w0)
             res.io_time += cost
 
+        def reshard(new_workers):
+            # per-shard refresh cost model, applied to the topology event
+            # itself: only the moved row fraction of the full device table
+            # is re-broadcast (a cold start would pay the whole table)
+            old_workers = self.mgr.num_workers
+            plan = self.mgr.reshard(new_workers)
+            moved = len(plan["moved_slots"])
+            frac = moved / max(1, self.mgr.tables.max_seqs)
+            refreshed = int(frac * old_workers * c.shard_table_bytes)
+            res.reshards += 1
+            res.reshard_moved_rows += moved
+            res.device_refreshed_bytes += refreshed
+            refresh = refreshed / c.refresh_bw
+            res.refresh_time += refresh
+            res.io_time += refresh            # the initiator waits
+
+        reshard_at = dict(c.reshard_iters)
+
         for it in range(c.iters):
+            if it in reshard_at:
+                reshard(reshard_at[it])
             # --- I/O workers: mmap → access → munmap ----------------------
             for w in range(n_io):
                 io_op(w, 1 if c.shared_context else (w + 1))

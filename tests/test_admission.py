@@ -289,7 +289,8 @@ class TestEngineGoverned:
                                             key=lambda r: r.rid)]
         assert toks == t_plain
         assert eng.cache.mgr.free_blocks == eng.cache.mgr.num_blocks
-        assert eng.stats()["admission"]["preemptions_recompute"] == 1
+        assert eng.metrics.snapshot()[
+            "admission.preemptions_recompute"] == 1
 
     def test_preempt_swap_keeps_progress_and_tokens(self):
         """Swap preemption round-trips block contents; re-admission
@@ -313,9 +314,9 @@ class TestEngineGoverned:
         toks = [r.generated for r in sorted(eng.sched.done,
                                             key=lambda r: r.rid)]
         assert toks == t_plain
-        s = eng.stats()
-        assert s["admission"]["preemptions_swap"] == 1
-        assert s["fpr"]["swap_ins"] > 0
+        s = eng.metrics.snapshot()
+        assert s["admission.preemptions_swap"] == 1
+        assert s["fpr.swap_ins"] > 0
         assert eng.cache.mgr.free_blocks == eng.cache.mgr.num_blocks
 
     def test_submit_refuses_impossible_window(self):
@@ -336,17 +337,17 @@ class TestEngineGoverned:
     def test_stats_expose_admission_counters(self):
         eng = make_engine("recycle")
         run_to_tokens(eng, multi_stream_reqs(4))
-        adm = eng.stats()["admission"]
+        snap = eng.metrics.snapshot()
         for key in ("admitted", "rejected_overcommit",
                     "preemptions_recompute", "preemptions_swap",
                     "affinity_hit_rate", "policy", "preempt_strategy",
-                    "ledger"):
-            assert key in adm
-        assert adm["admitted"] == 4
-        assert adm["policy"] == "recycle"
-        assert eng.stats()["fence"]["fences_averted"] >= 0
-        legacy = make_engine(None)
-        assert legacy.stats()["admission"] == {"enabled": False}
+                    "ledger.capacity"):
+            assert f"admission.{key}" in snap
+        assert snap["admission.admitted"] == 4
+        assert snap["admission.policy"] == "recycle"
+        assert snap["fence.fences_averted"] >= 0
+        disabled = make_engine(None)
+        assert disabled.metrics.snapshot()["admission.enabled"] is False
 
 
 OVERCOMMIT_WM = Watermarks(0.25, 0.4, 0.6)
@@ -370,17 +371,18 @@ class TestOvercommitSoundness:
         legacy = make_engine(None, num_blocks=8, max_batch=4,
                              watermarks=OVERCOMMIT_WM)
         t_legacy = run_to_tokens(legacy, reqs)
-        assert legacy.stats()["demand_pager_gave_up"] > 0    # the old hole
+        assert legacy.metrics.snapshot()[
+            "engine.demand_pager_gave_up"] > 0               # the old hole
         assert t_legacy != t_ref                             # wrong tokens
 
         gov = make_engine("fcfs", num_blocks=8, max_batch=4,
                           watermarks=OVERCOMMIT_WM)
         t_gov = run_to_tokens(gov, reqs)
-        s = gov.stats()
-        assert s["demand_pager_gave_up"] == 0
+        s = gov.metrics.snapshot()
+        assert s["engine.demand_pager_gave_up"] == 0
         assert t_gov == t_ref                                # bit-identical
-        assert s["admission"]["rejected_overcommit"] > 0
-        assert s["admission"]["ledger"]["peak_committed"] <= 8
+        assert s["admission.rejected_overcommit"] > 0
+        assert s["admission.ledger.peak_committed"] <= 8
 
     def test_admission_alloc_pressure_preempts_not_allocator_error(self):
         """Single-block windows are never evictable (_lru_victims spares
@@ -397,7 +399,8 @@ class TestOvercommitSoundness:
             num_blocks=4, max_batch=8)
         toks = run_to_tokens(eng, reqs)        # must not raise
         assert toks == t_ref
-        assert eng.stats()["admission"]["preemptions_recompute"] > 0
+        assert eng.metrics.snapshot()[
+            "admission.preemptions_recompute"] > 0
 
     def test_swap_preempt_of_unallocated_victim_falls_back(self):
         """_make_room can pick a same-batch admission that has no mapping
@@ -445,12 +448,12 @@ class TestOvercommitSoundness:
                            overcommit_ratio=1.6),
             num_blocks=8, max_batch=4, watermarks=OVERCOMMIT_WM)
         toks = run_to_tokens(eng, reqs)
-        s = eng.stats()
-        assert s["demand_pager_gave_up"] == 0
+        s = eng.metrics.snapshot()
+        assert s["engine.demand_pager_gave_up"] == 0
         assert toks == t_ref
         key = ("preemptions_swap" if preempt == "swap"
                else "preemptions_recompute")
-        assert s["admission"][key] > 0
+        assert s[f"admission.{key}"] > 0
 
 
 class TestPolicyEquivalence:
@@ -462,14 +465,14 @@ class TestPolicyEquivalence:
         for policy in ("fcfs", "recycle"):
             eng = make_engine(policy)
             toks[policy] = run_to_tokens(eng, reqs)
-            stats[policy] = eng.stats()
+            stats[policy] = eng.metrics.snapshot()
         assert toks["fcfs"] == toks["recycle"]
-        f, r = stats["fcfs"]["fence"], stats["recycle"]["fence"]
-        assert r["replicas_spared"] > f["replicas_spared"]
-        assert (stats["recycle"]["fpr"]["recycled_hits"]
-                > stats["fcfs"]["fpr"]["recycled_hits"])
-        assert (stats["recycle"]["admission"]["affinity_hit_rate"]
-                > stats["fcfs"]["admission"]["affinity_hit_rate"])
+        f, r = stats["fcfs"], stats["recycle"]
+        assert (r["fence.replicas_spared"] > f["fence.replicas_spared"])
+        assert (stats["recycle"]["fpr.recycled_hits"]
+                > stats["fcfs"]["fpr.recycled_hits"])
+        assert (stats["recycle"]["admission.affinity_hit_rate"]
+                > stats["fcfs"]["admission.affinity_hit_rate"])
 
 
 # ============================================================ ledger growth
@@ -630,3 +633,156 @@ class TestDeadlinePolicy:
                 < waits["fcfs"]["queue_wait_max"])
         assert waits["deadline"]["holds"] > 0
         assert waits["deadline"]["completed"] == 96
+
+
+# ============================================================= tenant quotas
+class TestTenantQuota:
+    """Per-tenant committed-block caps, charged from the governor's
+    AdmissionDecision stream (tenant = request stream)."""
+
+    def _gov(self, caps, capacity=16, default_cap=None, policy="fcfs"):
+        return MemoryGovernor(
+            capacity, block_size=1,
+            config=GovernorConfig(policy=policy, tenant_caps=caps,
+                                  tenant_default_cap=default_cap))
+
+    def test_quota_blocks_tenant_at_cap_but_not_others(self):
+        gov = self._gov({"sA": 4})
+        qa = [FakeReq(1, 3, stream="sA"), FakeReq(2, 3, stream="sA"),
+              FakeReq(3, 3, stream="sB")]
+        idx = gov.select(qa)
+        assert qa[idx].rid == 1
+        gov.on_admit(qa.pop(idx))
+        # sA is at 3/4 committed: its next 3-block window exceeds the cap,
+        # so the other tenant's request is seated instead
+        idx = gov.select(qa)
+        assert qa[idx].rid == 3
+        gov.on_admit(qa.pop(idx))
+        assert gov.quota.committed == {"sA": 3, "sB": 3}
+
+    def test_release_credits_quota_back(self):
+        gov = self._gov({"sA": 4})
+        r1, r2 = FakeReq(1, 4, stream="sA"), FakeReq(2, 4, stream="sA")
+        q = [r1, r2]
+        gov.on_admit(q.pop(gov.select(q)))
+        assert gov.select(q) is None            # cap reached
+        assert gov.quota.rejections == 1
+        gov.on_release(r1)
+        assert gov.quota.committed == {}
+        assert gov.select(q) == 0               # credit restored
+
+    def test_quota_rejection_disjoint_from_overcommit(self):
+        gov = self._gov({"sA": 2}, capacity=16)
+        q = [FakeReq(1, 3, stream="sA")]        # fits the ledger, not the cap
+        assert gov.select(q) is None
+        assert gov.quota.rejections == 1
+        assert gov.stats.rejected_overcommit == 0
+
+    def test_default_cap_applies_to_unlisted_tenants(self):
+        gov = self._gov({}, default_cap=2)
+        q = [FakeReq(1, 3, stream="anything")]
+        assert gov.select(q) is None
+        assert gov.quota.rejections == 1
+
+    def test_no_double_charge_and_counters(self):
+        gov = self._gov({"sA": 8})
+        r = FakeReq(1, 3, stream="sA")
+        q = [r]
+        gov.on_admit(q.pop(gov.select(q)))
+        # replayed decision events must not double-charge the tenant
+        from repro.core.events import AdmissionDecision
+        gov.bus.publish(AdmissionDecision(
+            decision="admit", rid=1, policy="fcfs", queue_depth=0,
+            window_blocks=3, blocked_rid=None, tenant="sA"))
+        assert gov.quota.committed == {"sA": 3}
+        c = gov.counters()["quota"]
+        assert c["enabled"] and c["tenants"] == 1
+
+    def test_invalid_caps_rejected(self):
+        from repro.serving.admission import TenantQuota
+        with pytest.raises(ValueError):
+            TenantQuota({"sA": 0})
+        with pytest.raises(ValueError):
+            TenantQuota({}, default_cap=-1)
+
+    def test_engine_trace_respects_tenant_cap(self):
+        """End-to-end: a capped tenant never commits past its cap while
+        the other tenant drains freely; tokens match the un-capped run."""
+        caps = GovernorConfig(policy="fcfs", tenant_caps={"s0": 2})
+        reqs = multi_stream_reqs(6)             # streams s0/s1, 2 blocks ea.
+        t_ref = run_to_tokens(make_engine("fcfs"), reqs)
+        eng = make_engine(caps)
+        max_committed = 0
+
+        def probe(evt):
+            nonlocal max_committed
+            max_committed = max(max_committed,
+                                eng.governor.quota.committed.get("s0", 0))
+
+        from repro.core.events import AdmissionDecision
+        eng.bus.subscribe(AdmissionDecision, probe)
+        toks = run_to_tokens(eng, reqs)
+        assert toks == t_ref
+        assert max_committed <= 2                # the cap held throughout
+        snap = eng.metrics.snapshot()
+        assert snap["admission.quota.enabled"] is True
+        assert not eng.governor.quota.committed  # all credited back
+
+    def test_quota_blocked_request_never_drives_priority_preemption(self):
+        """Preempting other tenants can never credit a quota-blocked
+        tenant's cap — a high-priority request at its tenant cap must not
+        trigger priority-pressure preemption of running work (review
+        regression: the thrash loop discarded other tenants' progress
+        while the beneficiary stayed quota-blocked forever)."""
+        gov = self._gov({"sA": 2}, capacity=16, policy="priority")
+        running_req = FakeReq(1, 2, stream="sA", priority=0)
+        gov.on_admit(running_req)
+        blocked = FakeReq(2, 2, stream="sA", priority=9)   # at tenant cap
+        assert gov.wants_priority_preempt([blocked]) is None
+        # a capacity-blocked request of another tenant still qualifies
+        cap_blocked = FakeReq(3, 99, stream="sB", priority=9)
+        assert gov.wants_priority_preempt([cap_blocked]) == 0
+
+    def test_quota_blocked_request_does_not_age_deadline_holds(self):
+        """blocked_rid feeds the deadline policy's starvation holds;
+        a quota-blocked request must not be reported (holding capacity
+        can never seat it)."""
+        from repro.core.events import AdmissionDecision
+        gov = self._gov({"sA": 2}, capacity=16)
+        decisions = []
+        gov.bus.subscribe(AdmissionDecision, decisions.append)
+        q = [FakeReq(1, 3, stream="sA"),      # quota-blocked (3 > cap 2)
+             FakeReq(2, 3, stream="sB")]      # fits: admitted
+        idx = gov.select(q)
+        assert q[idx].rid == 2
+        assert decisions[-1].blocked_rid is None
+
+    def test_deadline_hold_disengages_when_starver_becomes_quota_blocked(self):
+        """Review regression: a hold accumulated while capacity-blocked
+        must not persist once the urgent request is blocked by its tenant
+        cap — freed capacity can never seat it, so other tenants keep
+        admitting."""
+        gov = MemoryGovernor(8, block_size=1, config=GovernorConfig(
+            policy="deadline", tenant_caps={"sA": 4}))
+        policy = gov.policy
+        big = FakeReq(1, 6, stream="sA")        # capacity-blocked at first
+        small = FakeReq(2, 2, stream="sB")
+        running = FakeReq(3, 4, stream="sA")
+        gov.on_admit(running)                   # sA now at its 4-block cap,
+                                                # pool at 4/8
+        policy._deferrals[big.rid] = 99         # hold fully aged
+        # big's window of 6 no longer fits capacity either, but even if
+        # capacity freed up it would stay quota-blocked — the hold must
+        # not starve sB
+        idx = gov.select([big, small])
+        assert idx is not None and [big, small][idx].rid == 2
+
+    def test_bare_default_cap_enables_quota(self):
+        """Review regression: tenant_default_cap WITHOUT tenant_caps is a
+        uniform per-tenant cap and must enforce, not silently disable."""
+        gov = MemoryGovernor(16, block_size=1, config=GovernorConfig(
+            policy="fcfs", tenant_default_cap=2))
+        assert gov.quota is not None
+        q = [FakeReq(1, 3, stream="anyone")]
+        assert gov.select(q) is None             # 3 > uniform cap of 2
+        assert gov.quota.rejections == 1

@@ -1,9 +1,9 @@
-"""FprConfig / EngineConfig: validation, legacy-kwargs shims, warnings.
+"""FprConfig / EngineConfig: validation + the closed legacy surface.
 
-The legacy construction paths (loose kwargs on FprMemoryManager/Engine)
-must keep working for one release — warning DeprecationWarning and
-producing a stack bit-identical to config construction (the engine-level
-bit-identity is asserted by benchmarks/engine_trace.py)."""
+The PR-4 one-release deprecation window is over: loose-kwargs
+construction, positional ``num_blocks``, the ``on_fence``/``on_swap_drop``
+attribute hooks and ``from_legacy_kwargs`` are gone.  Every former
+``pytest.warns(DeprecationWarning)`` path now raises ``TypeError``."""
 
 import pytest
 
@@ -24,23 +24,14 @@ class TestFprConfig:
         with pytest.raises(ValueError, match="max_order"):
             FprConfig(max_order=-1)
 
-    def test_from_legacy_kwargs(self):
-        cfg = FprConfig.from_legacy_kwargs(
-            {"num_workers": 4, "fpr_enabled": False, "max_order": 5})
-        assert cfg.num_workers == 4 and not cfg.fpr_enabled
-        assert cfg.max_order == 5
-        assert cfg.max_seqs == FprConfig().max_seqs      # defaults kept
-
-    def test_from_legacy_kwargs_rejects_unknown(self):
-        with pytest.raises(TypeError, match="unknown FprMemoryManager"):
-            FprConfig.from_legacy_kwargs({"num_wrokers": 4})
-
-    def test_manager_legacy_kwargs_warn_and_match_config(self):
-        with pytest.warns(DeprecationWarning, match="FprMemoryManager"):
-            legacy = FprMemoryManager(32, num_workers=2, max_order=5)
-        modern = FprMemoryManager(
-            config=FprConfig(num_blocks=32, num_workers=2, max_order=5))
-        assert legacy.config == modern.config
+    def test_resize_revalidates_worker_count(self):
+        # elastic reshard funnels the new topology through the same
+        # validation as construction
+        m = FprMemoryManager(config=FprConfig(num_blocks=16))
+        with pytest.raises(ValueError, match="num_workers"):
+            m.reshard(0)
+        with pytest.raises(ValueError, match="num_workers"):
+            m.reshard(-2)
 
     def test_manager_config_path_does_not_warn(self):
         import warnings
@@ -48,31 +39,39 @@ class TestFprConfig:
             warnings.simplefilter("error", DeprecationWarning)
             FprMemoryManager(config=FprConfig(num_blocks=16))
 
-    def test_positional_num_blocks_is_legacy_and_warns(self):
-        with pytest.warns(DeprecationWarning, match="FprMemoryManager"):
-            m = FprMemoryManager(64)
-        assert m.config.num_blocks == 64
-        assert m.num_blocks == 64
+    # ---- the deleted legacy construction surface raises TypeError -------
+    def test_positional_num_blocks_raises(self):
+        with pytest.raises(TypeError):
+            FprMemoryManager(64)
+
+    def test_loose_kwargs_raise(self):
+        with pytest.raises(TypeError):
+            FprMemoryManager(num_blocks=32, num_workers=2)
 
     def test_zero_arg_construction_raises(self):
-        # formerly TypeError (missing num_blocks) — must stay loud, not
-        # silently build a default-sized pool
         with pytest.raises(TypeError, match="config=FprConfig"):
             FprMemoryManager()
 
-    def test_legacy_on_fence_respects_measure_gate(self):
-        """Pre-bus contract: FenceEngine(measure=False, on_fence=cb)
-        never invoked cb — the shim preserves that."""
+    def test_from_legacy_kwargs_is_gone(self):
+        assert not hasattr(FprConfig, "from_legacy_kwargs")
+        assert not hasattr(EngineConfig, "from_legacy_kwargs")
+
+    def test_on_fence_tombstone_raises(self):
         from repro.core.shootdown import FenceEngine
-        calls = []
-        with pytest.warns(DeprecationWarning):
-            eng = FenceEngine(measure=False,
-                              on_fence=lambda r, n, w: calls.append(r))
-        eng.fence("x", 1)
-        assert calls == []
-        eng.measure = True
-        eng.fence("y", 1)
-        assert calls == ["y"]
+        eng = FenceEngine(measure=False)
+        with pytest.raises(TypeError, match="on_fence was removed"):
+            eng.on_fence = lambda r, n, w: None
+        with pytest.raises(TypeError, match="on_fence was removed"):
+            _ = eng.on_fence
+        with pytest.raises(TypeError):
+            FenceEngine(measure=False, on_fence=lambda r, n, w: None)
+
+    def test_on_swap_drop_tombstone_raises(self):
+        m = FprMemoryManager(config=FprConfig(num_blocks=16))
+        with pytest.raises(TypeError, match="on_swap_drop was removed"):
+            m.on_swap_drop = lambda mid, idx: None
+        with pytest.raises(TypeError, match="on_swap_drop was removed"):
+            _ = m.on_swap_drop
 
 
 class TestEngineConfig:
@@ -83,6 +82,8 @@ class TestEngineConfig:
             EngineConfig(num_blocks=0)
         with pytest.raises(ValueError, match="admission"):
             EngineConfig(admission=42)
+        with pytest.raises(ValueError, match="num_workers"):
+            EngineConfig(num_workers=0)
 
     def test_governor_config_resolution(self):
         assert EngineConfig().governor_config() is None
@@ -91,15 +92,17 @@ class TestEngineConfig:
         g = GovernorConfig(policy="priority", overcommit_ratio=1.5)
         assert EngineConfig(admission=g).governor_config() is g
 
-    def test_from_legacy_kwargs_keeps_base(self):
-        base = EngineConfig(num_blocks=64, num_workers=4)
-        cfg = EngineConfig.from_legacy_kwargs({"max_batch": 2}, base=base)
-        assert cfg.num_blocks == 64 and cfg.num_workers == 4
-        assert cfg.max_batch == 2
-
-    def test_from_legacy_kwargs_rejects_unknown(self):
-        with pytest.raises(TypeError, match="unknown Engine"):
-            EngineConfig.from_legacy_kwargs({"nblocks": 4})
+    def test_engine_loose_kwargs_raise(self):
+        import jax
+        import jax.numpy as jnp
+        from repro.models import transformer as tfm
+        from repro.models.config import ModelConfig
+        from repro.serving.engine import Engine
+        tiny = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=2,
+                           n_kv_heads=1, d_ff=64, vocab=64, head_dim=16)
+        params = tfm.init_params(jax.random.PRNGKey(0), tiny, jnp.float32)
+        with pytest.raises(TypeError):
+            Engine(tiny, params, num_blocks=8, max_batch=2)
 
     def test_replace(self):
         cfg = EngineConfig(num_blocks=64)

@@ -2,9 +2,9 @@
 
 The control plane's contract: every cross-layer observation (fences,
 recycling, context exits, swap drops, admission decisions, preemptions)
-is a frozen dataclass published on the stack's shared EventBus, replacing
-the signature-sniffed ``on_fence`` wrapper chain and the bare
-``on_swap_drop`` attribute hook."""
+is a frozen dataclass published on the stack's shared EventBus — including
+the elastic-topology (``TopologyChanged``) and watermark-daemon
+(``EvictionPass``) events."""
 
 import dataclasses
 
@@ -14,7 +14,9 @@ from repro.core import ContextScope, FprMemoryManager, derive_context
 from repro.core.config import FprConfig
 from repro.core.events import (EVENT_TYPES, AdmissionDecision,
                                BlocksRecycled, ContextExit, Event, EventBus,
-                               FenceIssued, PreemptionResolved, SwapDropped)
+                               EvictionPass, FenceIssued,
+                               PreemptionResolved, SwapDropped,
+                               TopologyChanged)
 from repro.core.shootdown import FenceEngine
 from repro.serving.admission import GovernorConfig, MemoryGovernor
 
@@ -138,16 +140,40 @@ class TestManagerEvents:
         assert dropped == [SwapDropped(mapping_id=mp.mapping_id,
                                        logical_idx=0)]
 
-    def test_on_swap_drop_shim_warns_and_works(self):
+    def test_on_swap_drop_tombstone_raises_type_error(self):
         m = make_mgr(n=8, workers=1)
-        calls = []
-        with pytest.warns(DeprecationWarning,
-                          match="on_swap_drop is deprecated"):
-            m.on_swap_drop = lambda mid, idx: calls.append((mid, idx))
-        mp = m.mmap(2, ctx(1), worker=0)
-        m.evict([(mp.mapping_id, 1)], fpr_batch=True, worker=0)
+        with pytest.raises(TypeError, match="on_swap_drop was removed"):
+            m.on_swap_drop = lambda mid, idx: None
+
+    def test_topology_changed_published_on_reshard(self):
+        m = make_mgr(n=64, workers=2)
+        events = []
+        m.bus.subscribe(TopologyChanged, events.append)
+        mp = m.mmap(4, ctx(1), worker=0)
+        m.reshard(4)
+        assert len(events) == 1
+        evt = events[0]
+        assert (evt.old_num_workers, evt.new_num_workers) == (2, 4)
+        assert evt.translation == (0, 1)       # growth: identity
+        assert evt.moved_slots                 # interleaving changed
         m.munmap(mp.mapping_id, worker=0)
-        assert calls == [(mp.mapping_id, 1)]
+
+    def test_eviction_pass_published_per_daemon_pass(self):
+        from repro.core.eviction import WatermarkEvictor, Watermarks
+        m = make_mgr(n=16, workers=1)
+        big = m.mmap_sparse(32, ctx(1))
+        for i in range(14):
+            m.touch(big.mapping_id, i, worker=0)
+        passes = []
+        m.bus.subscribe(EvictionPass, passes.append)
+        ev = WatermarkEvictor(m, lambda: ((big.mapping_id, i, True)
+                                          for i in range(32)),
+                              watermarks=Watermarks(0.3, 0.5, 0.7))
+        ev.maybe_evict()
+        assert passes and passes[-1].kind == "huge"
+        assert passes[-1].dropped > 0
+        assert passes[-1].free_after > passes[-1].free_before
+        assert ev.counters()["pages_dropped"] == passes[-1].dropped
 
 
 class TestGovernorEvents:

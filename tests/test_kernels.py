@@ -91,6 +91,42 @@ def test_paged_attention(B, H, KV, hd, bs, M, N, win):
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("B,H,KV,hd,bs,M,N,win,W", [
+    (2, 4, 2, 32, 16, 4, 16, None, 2),
+    (3, 8, 8, 64, 32, 3, 12, None, 2),     # ragged: Bs = ceil(3/2)
+    (2, 4, 1, 16, 8, 6, 32, 20, 2),
+    (4, 4, 2, 32, 16, 4, 24, None, 4),
+])
+def test_paged_attention_sharded_layout(B, H, KV, hd, bs, M, N, win, W):
+    """The shard-native page walk: the kernel consumes the (W, Bs, M)
+    interleaved shard stack directly and must match both the sharded
+    oracle and the monolithic run on the equivalent 2-D table."""
+    from repro.kernels.paged_attention.ref import (
+        paged_decode_attention_sharded_ref)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (N, bs, KV, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (N, bs, KV, hd), jnp.float32)
+    perm = np.random.RandomState(0).permutation(N)[:B * M]
+    mono = perm.reshape(B, M).astype(np.int32)
+    mono[0, M - 1] = -1                             # hole
+    lengths = jnp.asarray(
+        np.random.RandomState(1).randint(1, M * bs + 1, (B,)), jnp.int32)
+    Bs = -(-B // W)
+    stack = np.full((W, Bs, M), -1, np.int32)
+    for b in range(B):
+        stack[b % W, b // W] = mono[b]              # interleaved slot layout
+    stack = jnp.asarray(stack)
+    got = paged_attention(q, kp, vp, stack, lengths, window=win,
+                          interpret=True)
+    want = paged_decode_attention_sharded_ref(q, kp, vp, stack, lengths,
+                                              window=win)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    mono_run = paged_attention(q, kp, vp, jnp.asarray(mono), lengths,
+                               window=win, interpret=True)
+    np.testing.assert_allclose(got, mono_run, rtol=1e-6, atol=1e-6)
+
+
 # -------------------------------------------------------------- MLA decode
 def test_mla_paged_decode():
     from repro.kernels.mla_attention.ops import mla_paged_decode

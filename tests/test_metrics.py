@@ -15,7 +15,7 @@ from repro.core import FprMemoryManager
 from repro.core.config import FprConfig
 from repro.core.metrics import (ADMISSION_SCHEMA, STABLE_SCHEMA,
                                 WILDCARD_PREFIXES, MetricsRegistry, flatten,
-                                legacy_view, schema_violations)
+                                schema_violations)
 from repro.core.shootdown import FenceEngine
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
@@ -82,8 +82,11 @@ class TestGoldenSchema:
                              fence_engine=FenceEngine(measure=False))
         keys = set(m.metrics.snapshot())
         assert schema_violations(keys) == []
+        # a bare manager has no watermark daemon: the fpr.eviction. group
+        # (registered by the Engine) is absent from its snapshot
         expect = {k for k in STABLE_SCHEMA
-                  if k.split(".")[0] in ("fpr", "fence", "table")}
+                  if k.split(".")[0] in ("fpr", "fence", "table")
+                  and not k.startswith("fpr.eviction.")}
         stable = {k for k in keys
                   if not any(k.startswith(w) for w in WILDCARD_PREFIXES)}
         assert stable == expect
@@ -111,25 +114,24 @@ class TestGoldenSchema:
                                       type(None))), (key, type(value))
 
 
-# ================================================================== legacy view
-class TestLegacyView:
-    def test_stats_equals_legacy_view_of_snapshot(self):
-        eng = drive(make_engine("fcfs"))
-        assert eng.stats() == legacy_view(eng.metrics.snapshot())
+# ============================================================ retired surface
+class TestLegacySurfaceGone:
+    """The one-release nested-view shims (``Engine.stats()`` /
+    ``legacy_view``) completed their deprecation window and are gone —
+    the flat snapshot is the only counter surface."""
 
-    def test_legacy_shape_preserved(self):
-        eng = drive(make_engine("fcfs"))
-        s = eng.stats()
-        # the pre-registry nested shape, bit for bit
-        assert s["fence"]["fences"] == eng.cache.fences.stats.fences
-        assert s["fpr"]["allocs"] == eng.cache.mgr.stats.allocs
-        assert s["table_epoch"] == eng.cache.mgr.tables.epoch
-        assert s["device_table_shards"] == 2
-        assert s["admission"]["policy"] == "fcfs"
-        assert s["admission"]["ledger"]["capacity"] == 8
-        assert s["steps"] == eng.steps
-        assert isinstance(s["worker_epochs"], dict)
-
-    def test_disabled_admission_legacy_shape(self):
+    def test_engine_stats_removed(self):
         eng = make_engine(None)
-        assert eng.stats()["admission"] == {"enabled": False}
+        assert not hasattr(eng, "stats")
+        assert not hasattr(eng.cache, "counters")
+        assert not hasattr(eng.cache.mgr, "counters")
+
+    def test_legacy_view_removed(self):
+        import repro.core.metrics as metrics
+        assert not hasattr(metrics, "legacy_view")
+
+    def test_run_returns_flat_snapshot(self):
+        eng = drive(make_engine("fcfs"))
+        snap = eng.run(max_steps=0)
+        assert snap == eng.metrics.snapshot()
+        assert "fence.fences" in snap

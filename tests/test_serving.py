@@ -44,11 +44,11 @@ def test_fpr_identical_tokens_and_zero_fences():
     e1, t1 = _run_engine(True, prompts)
     e0, t0 = _run_engine(False, prompts)
     assert t1 == t0
-    s1, s0 = e1.stats(), e0.stats()
-    assert s0["fence"]["fences"] >= len(prompts)      # one per munmap
-    assert s1["fence"]["fences"] == 0                 # all recycled
-    assert s1["fence"]["skipped_at_free"] >= len(prompts)
-    assert s1["fpr"]["recycled_hits"] > 0
+    s1, s0 = e1.metrics.snapshot(), e0.metrics.snapshot()
+    assert s0["fence.fences"] >= len(prompts)         # one per munmap
+    assert s1["fence.fences"] == 0                    # all recycled
+    assert s1["fence.skipped_at_free"] >= len(prompts)
+    assert s1["fpr.recycled_hits"] > 0
 
 
 @pytest.mark.slow
@@ -61,9 +61,9 @@ def test_scoped_multiworker_identical_tokens():
     e_multi, t_multi = _run_engine(True, prompts, num_workers=4)
     _, t_single = _run_engine(True, prompts)
     assert t_multi == t_single
-    s = e_multi.stats()
-    assert s["fence"]["fences"] == 0          # one stream → pure recycling
-    assert len(s["worker_epochs"]) == 4
+    s = e_multi.metrics.snapshot()
+    assert s["fence.fences"] == 0             # one stream → pure recycling
+    assert len([k for k in s if k.startswith("fence.worker_epochs.")]) == 4
 
 
 @pytest.mark.slow
@@ -113,9 +113,9 @@ def test_eviction_swap_preserves_tokens():
     e_plain, t_plain = run(False)
     e_evict, t_evict = run(True)
     assert t_plain == t_evict
-    c = e_evict.stats()
-    assert c["fpr"]["swap_outs"] >= 2
-    assert c["fpr"]["swap_ins"] >= 2
+    c = e_evict.metrics.snapshot()
+    assert c["fpr.swap_outs"] >= 2
+    assert c["fpr.swap_ins"] >= 2
 
 
 def test_sharded_multiworker_regression():
@@ -141,7 +141,7 @@ def test_sharded_multiworker_regression():
             eng.submit(prompt, max_new_tokens=mnt, stream=stream,
                        group_id=gid)
         eng.run()
-        return eng.stats(), [r.generated for r in sorted(
+        return eng.metrics.snapshot(), [r.generated for r in sorted(
             eng.sched.done, key=lambda r: r.rid)]
 
     s_sharded, t_sharded = drive(4, True)
@@ -149,14 +149,14 @@ def test_sharded_multiworker_regression():
     _, t_single = drive(1, True)
     s_stream, t_stream = drive(4, True, routing="stream")
     assert t_sharded == t_single == t_global == t_stream   # bit-identical
-    assert s_stream["device_shard_refreshes"] > 0          # still scoped
-    assert s_global["fence"]["fences"] > 0        # the trace does fence
-    assert s_sharded["fence"]["replicas_spared"] > 0
-    assert s_sharded["device_shard_refreshes"] > 0
-    assert s_global["device_shard_refreshes"] == 0
-    assert (s_sharded["device_refreshed_entries"]
-            < s_global["device_refreshed_entries"])
-    assert len(s_sharded["table_shard_epochs"]) == 4
+    assert s_stream["device.shard_refreshes"] > 0          # still scoped
+    assert s_global["fence.fences"] > 0           # the trace does fence
+    assert s_sharded["fence.replicas_spared"] > 0
+    assert s_sharded["device.shard_refreshes"] > 0
+    assert s_global["device.shard_refreshes"] == 0
+    assert (s_sharded["device.refreshed_entries"]
+            < s_global["device.refreshed_entries"])
+    assert len(s_sharded["table.shard_epochs"]) == 4
 
 
 @pytest.mark.slow
@@ -179,16 +179,16 @@ def test_eviction_churn_multiworker_identical_tokens():
             eng.submit(p, max_new_tokens=32, stream=f"s{i % 3}",
                        group_id=1 + i % 2)
         eng.run()
-        return eng.stats(), [r.generated for r in sorted(
+        return eng.metrics.snapshot(), [r.generated for r in sorted(
             eng.sched.done, key=lambda r: r.rid)]
 
     s4, t4 = drive(4)
     _, t1 = drive(1)
     assert t4 == t1
-    assert s4["fpr"]["swap_outs"] > 0            # churn really happened
-    assert s4["fpr"]["swap_ins"] == s4["fpr"]["swap_outs"]
-    assert s4["stale_detected"] == 0
-    assert s4["demand_pager_gave_up"] == 0       # pool fits: always converged
+    assert s4["fpr.swap_outs"] > 0               # churn really happened
+    assert s4["fpr.swap_ins"] == s4["fpr.swap_outs"]
+    assert s4["table.stale_lookups_detected"] == 0
+    assert s4["engine.demand_pager_gave_up"] == 0  # pool fits: converged
 
 
 @pytest.mark.slow

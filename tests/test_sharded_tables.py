@@ -194,21 +194,21 @@ class TestShardedDeviceFence:
         cache.free_sequence(m, worker=0)          # FPR skip: no fence
         assert cache._fence_drains == 0
         cache.alloc_sequence(128, group_id=2, worker=0)   # context exit
-        c = cache.counters()
-        assert c["fence"]["fences_scoped"] == 1
-        assert c["device_shard_refreshes"] == 1
-        assert c["device_full_refreshes"] == 0
+        c = cache.metrics.snapshot()
+        assert c["fence.fences_scoped"] == 1
+        assert c["device.shard_refreshes"] == 1
+        assert c["device.full_refreshes"] == 0
         # exactly one worker's shard: 1 of 4 batch rows × M entries
         shard_entries = len(cache._shard_slots[0]) * cache.max_blocks_per_seq
-        assert c["device_refreshed_entries"] == shard_entries
-        assert c["device_refreshed_bytes"] == shard_entries * 4
+        assert c["device.refreshed_entries"] == shard_entries
+        assert c["device.refreshed_bytes"] == shard_entries * 4
 
     def test_global_fence_refreshes_every_shard(self, tiny_cache):
         cache = tiny_cache()
         cache.fences.fence("external")
-        c = cache.counters()
-        assert c["device_full_refreshes"] == 1
-        assert (c["device_refreshed_entries"]
+        c = cache.metrics.snapshot()
+        assert c["device.full_refreshes"] == 1
+        assert (c["device.refreshed_entries"]
                 == cache.max_batch * cache.max_blocks_per_seq)
 
     def test_unscoped_cache_always_full_refresh(self, tiny_cache):
@@ -216,9 +216,9 @@ class TestShardedDeviceFence:
         m = cache.alloc_sequence(128, group_id=1, worker=0)
         cache.free_sequence(m, worker=0)
         cache.alloc_sequence(128, group_id=2, worker=0)
-        c = cache.counters()
-        assert c["device_shard_refreshes"] == 0
-        assert c["device_full_refreshes"] == 1
+        c = cache.metrics.snapshot()
+        assert c["device.shard_refreshes"] == 0
+        assert c["device.full_refreshes"] == 1
 
     def test_bound_slot_refresh_covers_foreign_shard(self, tiny_cache):
         """Stream routing: a slot served by a worker outside its modulo
@@ -227,23 +227,29 @@ class TestShardedDeviceFence:
         cache.bind_slot_worker(1, 3)      # slot 1 (shard 1) ← worker 3
         assert cache._shards_of([3]) == [1, 3]
         cache.fences.fence_scoped("x", worker_mask=int(worker_bit(3)))
-        c = cache.counters()
+        c = cache.metrics.snapshot()
         shard_entries = (len(cache._shard_slots[1])
                          + len(cache._shard_slots[3])
                          ) * cache.max_blocks_per_seq
-        assert c["device_refreshed_entries"] == shard_entries
+        assert c["device.refreshed_entries"] == shard_entries
 
-    def test_assembled_tensor_matches_monolithic_reference(self, tiny_cache):
+    def test_shard_stack_matches_monolithic_reference(self, tiny_cache):
+        """state['tables'] is the (W, Bs, M) shard stack; its monolithic
+        view (transpose+reshape) must equal the slot-indexed table."""
+        from repro.models.attention import assemble_shard_tables
         cache = tiny_cache()
         maps = {s: cache.alloc_sequence(128, group_id=1, worker=s % 4)
                 for s in range(4)}
         lengths = np.asarray([10, 20, 30, 40], np.int32)
         cache.update_tables(maps, lengths)
+        assert cache.state["tables"].shape[0] == 4     # one shard per worker
+        mono = np.asarray(assemble_shard_tables(
+            cache.state["tables"]))[:cache.max_batch]
         ref = np.full((cache.max_batch, cache.max_blocks_per_seq), -1,
                       np.int32)
         for s, m in maps.items():
             ref[s, :len(m.physical)] = m.physical
-        np.testing.assert_array_equal(np.asarray(cache.state["tables"]), ref)
+        np.testing.assert_array_equal(mono, ref)
         np.testing.assert_array_equal(np.asarray(cache.state["lengths"]),
                                       lengths)
 
@@ -251,6 +257,7 @@ class TestShardedDeviceFence:
         """Regression: a mid-step fence must re-derive the refreshed rows
         from live mapping state, not re-broadcast the previous
         update_tables snapshot."""
+        from repro.models.attention import assemble_shard_tables
         cache = tiny_cache()
         maps = {s: cache.alloc_sequence(128, group_id=1, worker=s % 4)
                 for s in range(4)}
@@ -258,7 +265,8 @@ class TestShardedDeviceFence:
         freed = maps.pop(0)
         cache.free_sequence(freed, worker=0)      # FPR skip: no fence yet
         cache.fences.fence("external")            # fence before next step
-        tab = np.asarray(cache.state["tables"])
+        tab = np.asarray(assemble_shard_tables(
+            cache.state["tables"]))[:cache.max_batch]
         assert (tab[0] == -1).all()               # freed row resynced
         for s, m in maps.items():                 # live rows stay intact
             np.testing.assert_array_equal(tab[s, :len(m.physical)],
@@ -280,88 +288,42 @@ class TestShardedDeviceFence:
         assert cache._step_upload_entries == before + per_shard
 
 
-class TestLegacyFenceCallbackShim:
-    """The ONE documented ``on_fence`` deprecation shim: attaching a
-    pre-event-bus callback warns, subscribes it alongside the bus
-    subscribers (it no longer replaces the manager's epoch bump), and
-    honours all three historical signatures."""
+class TestFenceObserverOrdering:
+    """External fence observers ride the event bus (the legacy
+    ``on_fence`` surface is gone — see test_config for the tombstones);
+    the manager's table-epoch bump stays first in coherence order even
+    for subscribers attached at fence-engine construction, before the
+    manager existed."""
 
     def _mgr(self, eng):
         return FprMemoryManager(
             config=FprConfig(num_blocks=16, num_workers=2, max_order=4),
             fence_engine=eng)
 
-    def test_attaching_on_fence_warns_deprecation(self):
-        eng = FenceEngine(measure=True)
-        with pytest.warns(DeprecationWarning, match="on_fence is deprecated"):
-            eng.on_fence = lambda reason, n, workers: None
-        with pytest.warns(DeprecationWarning):
+    def test_on_fence_ctor_kwarg_is_rejected(self):
+        with pytest.raises(TypeError):
             FenceEngine(measure=True, on_fence=lambda r, n, w: None)
 
-    def test_two_arg_on_fence_callback_still_works(self):
-        """An externally supplied FenceEngine with a pre-sharding
-        ``on_fence(reason, n)`` callback must not break on fences."""
-        calls = []
-        with pytest.warns(DeprecationWarning):
-            eng = FenceEngine(measure=True,
-                              on_fence=lambda reason, n: calls.append(
-                                  (reason, n)))
-        m = self._mgr(eng)
-        m.fences.fence("external", 3)
-        assert calls == [("external", 3)]
-        m.fences.fence_scoped("scoped", 1, worker_mask=int(worker_bit(0)))
-        assert calls[-1] == ("scoped", 1)
+    def test_pre_manager_subscriber_sees_post_bump_epoch(self):
+        from repro.core.events import FenceIssued
+        eng = FenceEngine(measure=True)
+        seen = []
+        eng.bus.subscribe(FenceIssued,
+                          lambda evt: seen.append(m.tables.epoch))
+        m = self._mgr(eng)                # subscribes AFTER the observer
+        before = m.tables.epoch
+        eng.fence("external", 1)
+        assert seen == [before + 1]       # bump ran first (first=True)
 
-    def test_keyword_only_workers_callback_receives_workers(self):
-        calls = []
-
-        def cb(reason, n, *, workers=None):
-            calls.append((reason, n, workers))
-
-        with pytest.warns(DeprecationWarning):
-            eng = FenceEngine(measure=True, on_fence=cb)
-        m = self._mgr(eng)
-        m.fences.fence_scoped("scoped", 1, worker_mask=int(worker_bit(0)))
-        assert calls[-1][:2] == ("scoped", 1)
-        assert list(calls[-1][2]) == [0]
-
-    def test_three_arg_on_fence_callback_receives_workers(self):
-        calls = []
-        with pytest.warns(DeprecationWarning):
-            eng = FenceEngine(measure=True,
-                              on_fence=lambda reason, n, workers:
-                              calls.append((reason, n, workers)))
+    def test_scoped_fence_event_carries_covered_workers(self):
+        from repro.core.events import FenceIssued
+        eng = FenceEngine(measure=True)
+        events = []
+        eng.bus.subscribe(FenceIssued, events.append)
         m = self._mgr(eng)
         m.fences.fence_scoped("scoped", 1, worker_mask=int(worker_bit(1)))
-        assert calls[-1][:2] == ("scoped", 1)
-        assert list(calls[-1][2]) == [1]
-
-    def test_ctor_supplied_callback_sees_post_bump_epoch(self):
-        """A legacy callback attached at FenceEngine *construction* —
-        before the manager exists — must still observe post-fence table
-        epochs: the manager's epoch bump prepends itself on the bus, the
-        pre-PR wrapper-chain coherence order."""
-        seen = []
-        with pytest.warns(DeprecationWarning):
-            eng = FenceEngine(
-                measure=True,
-                on_fence=lambda r, n, w: seen.append(m.tables.epoch))
-        m = self._mgr(eng)
-        before = m.tables.epoch
-        eng.fence("external", 1)
-        assert seen == [before + 1]      # bump happened before the callback
-
-    def test_shim_does_not_replace_epoch_bump(self):
-        """Pre-bus code that assigned ``on_fence`` after manager creation
-        used to clobber the table-epoch coupling; with the bus the legacy
-        callback rides alongside and epochs still move."""
-        eng = FenceEngine(measure=True)
-        m = self._mgr(eng)
-        before = m.tables.epoch
-        with pytest.warns(DeprecationWarning):
-            eng.on_fence = lambda reason, n, workers: None
-        eng.fence("external", 1)
-        assert m.tables.epoch == before + 1
+        assert events[-1].reason == "scoped"
+        assert events[-1].workers == (1,)
 
 
 class TestAbaRecycleRegression:

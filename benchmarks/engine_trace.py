@@ -25,6 +25,17 @@ fixed-topology run, and the reshard's device refresh traffic
 moved) is strictly below ONE full-table re-upload, i.e. a topology change
 costs the moved fraction, never a cold start.
 
+**Shared-prefix replay** (``run_prefix`` → ``BENCH_prefix.json``, the
+first perf-trajectory artifact).  The same engine replays a trace whose
+requests all carry one full-block system prompt, with prefix sharing on
+vs off.  Acceptance, enforced by :func:`prefix_report` and re-checked by
+``benchmarks/validate.py`` in the push lane: tokens bit-identical, ≥40%
+fewer unique blocks allocated, zero fences while blocks remain inside a
+sharing set (``fpr.prefix.in_set_violations == 0`` — and on this
+single-tenant trace, zero fences at all), and the admission ledger —
+committing *unique* blocks — running strictly more requests concurrently
+at the same pool size.
+
 The whole trace is deterministic (seeded prompts, greedy decode), so the
 JSON artifact is diffable run-to-run.
 """
@@ -190,6 +201,96 @@ def report(out: dict) -> None:
             f"full-table re-upload ({el['full_table_bytes']}B)")
 
 
+#: flat MetricsRegistry keys reported per shared-prefix mode
+_PREFIX_KEYS = (
+    "fpr.allocs",
+    "fpr.prefix.lookups",
+    "fpr.prefix.hit_blocks",
+    "fpr.prefix.miss_blocks",
+    "fpr.prefix.hit_rate",
+    "fpr.prefix.cow_copies",
+    "fpr.prefix.sharing_exits",
+    "fpr.prefix.in_set_violations",
+    "fence.fences",
+    "admission.admitted",
+    "admission.ledger.peak_committed",
+)
+
+
+def prefix_case(smoke: bool = False) -> dict:
+    """Shared-system-prompt trace, prefix sharing on vs off."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import transformer as tfm
+    from repro.models.config import ModelConfig
+    from repro.serving.config import EngineConfig
+    from repro.serving.engine import Engine
+
+    cfg = ModelConfig(**_CFG_KW)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.RandomState(SEED + 1)
+    system = rng.randint(1, _CFG_KW["vocab"], size=tfm.BLOCK_SIZE)
+    n_requests = 6 if smoke else 12
+    reqs = [(np.concatenate([system,
+                             rng.randint(1, _CFG_KW["vocab"],
+                                         size=rng.randint(4, 20))]),
+             f"user{i}", 1, 4 + (i % 3))
+            for i in range(n_requests)]
+    # a deliberately tight pool: every window is 2 blocks, so unshared
+    # admission caps out at 2 concurrent requests — sharing must beat it
+    kw = dict(num_blocks=5, max_batch=4)
+    out: dict = {"seed": SEED + 1, "requests": n_requests,
+                 "system_prompt_blocks": 1, "window_blocks": 2, **kw}
+    toks = {}
+    for mode, sharing in (("shared", True), ("unshared", False)):
+        eng = Engine(cfg, params, config=EngineConfig(
+            max_seq_len=256, fpr_enabled=True, admission="fcfs",
+            prefix_sharing=sharing, **kw))
+        for prompt, stream, gid, mnt in reqs:
+            eng.submit(prompt, max_new_tokens=mnt, stream=stream,
+                       group_id=gid)
+        peak = 0
+        while not eng.sched.idle and eng.steps < 10_000:
+            eng.step()
+            peak = max(peak, len(eng.sched.running))
+        toks[mode] = [list(map(int, r.generated))
+                      for r in sorted(eng.sched.done, key=lambda r: r.rid)]
+        snap = eng.metrics.snapshot()
+        out[mode] = {"peak_running": peak,
+                     **{k: snap.get(k) for k in _PREFIX_KEYS}}
+    out["tokens_identical"] = toks["shared"] == toks["unshared"]
+    u, s = out["unshared"]["fpr.allocs"], out["shared"]["fpr.allocs"]
+    out["unique_blocks_saving_pct"] = (round((1 - s / u) * 100.0, 2)
+                                       if u else 0.0)
+    return out
+
+
+def prefix_report(out: dict) -> None:
+    """Print the sharing summary; fail loud on any acceptance regression."""
+    s, u = out["shared"], out["unshared"]
+    print(f"  shared prefix:   unique blocks {u['fpr.allocs']} → "
+          f"{s['fpr.allocs']} (-{out['unique_blocks_saving_pct']:.0f}%), "
+          f"hit rate {s['fpr.prefix.hit_rate']}, "
+          f"cow {s['fpr.prefix.cow_copies']}, concurrency "
+          f"{u['peak_running']} → {s['peak_running']}, "
+          f"tokens identical: {out['tokens_identical']}")
+    if not out["tokens_identical"]:
+        raise AssertionError("prefix sharing changed decoded tokens")
+    if out["unique_blocks_saving_pct"] < 40.0:
+        raise AssertionError(
+            f"shared-prefix trace saved only "
+            f"{out['unique_blocks_saving_pct']}% unique blocks (< 40%)")
+    if s["fpr.prefix.in_set_violations"]:
+        raise AssertionError("a refcounted block reached the allocator "
+                             "(fence inside a sharing set)")
+    if s["fence.fences"]:
+        raise AssertionError("single-tenant shared trace issued fences")
+    if not s["peak_running"] > u["peak_running"]:
+        raise AssertionError(
+            f"unique-block admission ran {s['peak_running']} concurrent "
+            f"requests — not above the unshared {u['peak_running']}")
+
+
 def run(smoke: bool = False) -> dict:
     out = case(smoke=smoke)
     save("engine_trace", out)
@@ -197,8 +298,17 @@ def run(smoke: bool = False) -> dict:
     return out
 
 
+def run_prefix(smoke: bool = False) -> dict:
+    out = prefix_case(smoke=smoke)
+    save("BENCH_prefix", out)
+    prefix_report(out)
+    return out
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
-    run(smoke=ap.parse_args().smoke)
+    args = ap.parse_args()
+    run(smoke=args.smoke)
+    run_prefix(smoke=args.smoke)

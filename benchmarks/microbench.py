@@ -17,7 +17,7 @@ Extensions (``--mode scoped`` runs only these):
                  with sharded device block-tables — refreshed bytes and
                  fence counts, decoded tokens bit-identical
   alloc_batch    looped per-block allocation vs the batched
-                 ``alloc_blocks``/``free_many`` hot path — wall time
+                 ``acquire``/``release`` lease hot path — wall time
                  (kept out of ``microbench_scoped.json``, which contains
                  only deterministic, seeded, diffable sections)
 """
@@ -112,11 +112,11 @@ def alloc_batch_case(n: int = 64, iters: int = 300,
         t0 = time.perf_counter()
         for _ in range(iters):
             if batched:
-                alloc.free_many(alloc.alloc_blocks(n, 0), 0)
+                alloc.release(alloc.acquire(n, worker_id=0))
             else:
-                got = [alloc.alloc_block(0) for _ in range(n)]
-                for b in got:
-                    alloc.free_block(b, 0)
+                got = [alloc.acquire(1, worker_id=0) for _ in range(n)]
+                for lease in got:
+                    alloc.release(lease)
         return time.perf_counter() - t0
 
     looped_s = drive(batched=False)

@@ -3,12 +3,14 @@
     PYTHONPATH=src python -m benchmarks.run [--skip-model] [--only NAME]
                                             [--smoke]
 
-``--smoke`` is the CI lane: the (reduced-grid) microbenchmarks plus two
+``--smoke`` is the CI lane: the (reduced-grid) microbenchmarks plus three
 deterministic artifacts (seeded and diffable run-to-run) —
 ``microbench_scoped.json`` (worker-scoped fences incl. the
-sharded-device-table engine trace) and ``admission_smoke.json`` (admission
+sharded-device-table engine trace), ``admission_smoke.json`` (admission
 governor: tokens bit-identical across policies, recycle-affinity sparing
-vs FCFS, over-commit give-up elimination, preemption counts) — fast
+vs FCFS, over-commit give-up elimination, preemption counts) and
+``BENCH_prefix.json`` (shared-prefix perf trajectory: unique-block
+saving, prefix hit rate, unique-block admission concurrency) — fast
 enough for every push.
 """
 
@@ -29,8 +31,9 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import (admission_bench, apache_like, baseline_sweep,
-                            contexts_bench, device_latency, eviction,
-                            microbench, overhead, roofline, ycsb_kv)
+                            contexts_bench, device_latency, engine_trace,
+                            eviction, microbench, overhead, roofline,
+                            ycsb_kv)
     if args.smoke:
         suites = [
             ("microbench smoke (Fig. 6-11 + scoped)",
@@ -39,6 +42,8 @@ def main() -> int:
              lambda: microbench.run_scoped(smoke=True)),
             ("admission smoke (deterministic admission_smoke.json)",
              lambda: admission_bench.run(smoke=True)),
+            ("prefix smoke (deterministic BENCH_prefix.json)",
+             lambda: engine_trace.run_prefix(smoke=True)),
         ]
     else:
         suites = [
@@ -48,6 +53,8 @@ def main() -> int:
             ("scoped (microbench_scoped.json)", microbench.run_scoped),
             ("admission (governor: policies × over-commit)",
              admission_bench.run),
+            ("prefix sharing (BENCH_prefix.json perf trajectory)",
+             engine_trace.run_prefix),
             ("device_latency (Fig. 12)", device_latency.run),
             ("eviction (Fig. 14-17)", eviction.run),
             ("contexts (§IV-C2)", contexts_bench.run),

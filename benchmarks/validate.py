@@ -14,8 +14,11 @@ Beyond schema membership, required *sections* are enforced per artifact:
 ``microbench_scoped.json`` must carry the engine-trace **elastic** replay
 (reshards applied, tokens bit-identical, reshard refresh below one
 full-table re-upload) — losing the section would silently retire the
-elastic acceptance criterion.  The schema itself must know the
-``fpr.eviction.`` and topology (``table.reshards`` / ``device.reshard_*``)
+elastic acceptance criterion — and ``BENCH_prefix.json`` (the
+shared-prefix perf trajectory) must keep tokens identical, the ≥40%
+unique-block saving, zero in-set fence violations and the concurrency
+win.  The schema itself must know the ``fpr.eviction.``,
+``fpr.prefix.`` and topology (``table.reshards`` / ``device.reshard_*``)
 counter groups, so retiring them fails here too.
 
 This runs in the CI push lane right after ``benchmarks.run --smoke``:
@@ -32,15 +35,23 @@ import sys
 from repro.core.metrics import schema_violations
 
 #: the deterministic smoke artifacts the push lane publishes
-DEFAULT_ARTIFACTS = ("microbench_scoped.json", "admission_smoke.json")
+DEFAULT_ARTIFACTS = ("microbench_scoped.json", "admission_smoke.json",
+                     "BENCH_prefix.json")
 
 #: counter groups that must stay in the flat schema (satellite coverage:
-#: eviction-pass counters + elastic-topology counters)
+#: eviction-pass counters + elastic-topology counters + prefix sharing)
 REQUIRED_SCHEMA_KEYS = (
     "fpr.eviction.wakeups",
     "fpr.eviction.pages_scanned",
     "fpr.eviction.pages_dropped",
     "fpr.eviction.swap_outs",
+    "fpr.prefix.hit_rate",
+    "fpr.prefix.hit_blocks",
+    "fpr.prefix.cow_copies",
+    "fpr.prefix.sharing_exits",
+    "fpr.prefix.exit_fenced",
+    "fpr.prefix.exit_elided",
+    "fpr.prefix.in_set_violations",
     "table.num_shards",
     "table.reshards",
     "device.reshards",
@@ -98,6 +109,34 @@ def elastic_violations(path: str) -> list[str]:
     return bad
 
 
+def prefix_violations(path: str) -> list[str]:
+    """Required-section check: the shared-prefix perf trajectory.
+
+    Applies to ``BENCH_prefix.json``; a regression in any acceptance
+    number (token divergence, unique-block saving below 40%, a fence
+    inside a sharing set, no concurrency win) fails the push lane.
+    """
+    with open(path) as f:
+        payload = json.load(f)
+    shared = payload.get("shared")
+    unshared = payload.get("unshared")
+    if shared is None or unshared is None:
+        return ["missing shared/unshared prefix sections"]
+    bad = []
+    if not payload.get("tokens_identical"):
+        bad.append("shared-prefix tokens diverged from the unshared run")
+    saving = payload.get("unique_blocks_saving_pct")
+    if saving is None or saving < 40.0:
+        bad.append(f"unique-block saving {saving}% below the 40% floor")
+    if shared.get("fpr.prefix.in_set_violations"):
+        bad.append("fpr.prefix.in_set_violations != 0 "
+                   "(fence inside a sharing set)")
+    if not (shared.get("peak_running") or 0) > (unshared.get("peak_running")
+                                                or 0):
+        bad.append("unique-block admission shows no concurrency win")
+    return bad
+
+
 def main(argv: list[str]) -> int:
     paths = argv or [os.path.join(RESULTS, name)
                      for name in DEFAULT_ARTIFACTS]
@@ -118,6 +157,8 @@ def main(argv: list[str]) -> int:
         name = os.path.basename(path)
         if name == "microbench_scoped.json":
             bad = bad + [f"elastic: {b}" for b in elastic_violations(path)]
+        if name == "BENCH_prefix.json":
+            bad = bad + [f"prefix: {b}" for b in prefix_violations(path)]
         if bad:
             failed = True
             print(f"SCHEMA DRIFT in {name} — keys not in "

@@ -6,6 +6,12 @@ Long prompts + a small pool force the watermark daemon to swap blocks to
 host and demand-fault them back — the paper's §V-B scenario.  With FPR,
 recycling-context blocks are exempt between the low and min watermarks
 and evicted in one huge batch (single fence) at min.
+
+All prompts open with the same full-block **system prompt**, so under FPR
+the head block sits in a sharing set: the eviction pass must skip it
+(``fpr.prefix.evict_pinned``) — a shared block never reaches the
+allocator, which is exactly why it needs no fence — while the private
+second block still swaps out and demand-faults back.
 """
 
 import numpy as np
@@ -26,7 +32,11 @@ CFG = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
 def main():
     params = tfm.init_params(jax.random.PRNGKey(0), CFG, jnp.float32)
     rng = np.random.RandomState(5)
-    prompts = [rng.randint(1, CFG.vocab, size=140) for _ in range(6)]
+    # shared full-block system prompt + private second block per request
+    system = rng.randint(1, CFG.vocab, size=tfm.BLOCK_SIZE)
+    prompts = [np.concatenate([system,
+                               rng.randint(1, CFG.vocab, size=140)])
+               for _ in range(6)]
 
     for fpr in (False, True):
         eng = Engine(CFG, params, config=EngineConfig(
@@ -35,10 +45,13 @@ def main():
                                   high_frac=0.25)))
         for p in prompts:
             eng.submit(p, max_new_tokens=8)
-        # inject pressure: evict the oldest block of each running request
+        # inject pressure: evict the two oldest blocks of each running
+        # request — under FPR the shared head (index 0) is pinned by its
+        # sharing set, only the private block (index 1) actually swaps
         eng.step()
         for r in list(eng.sched.running.values()):
-            eng.cache.mgr.evict([(r.mapping.mapping_id, 0)],
+            eng.cache.mgr.evict([(r.mapping.mapping_id, 0),
+                                 (r.mapping.mapping_id, 1)],
                                 fpr_batch=fpr)
         eng.run()
         s = eng.metrics.snapshot()
@@ -50,6 +63,12 @@ def main():
               f" swap_out={s['fpr.swap_outs']}"
               f" swap_in={s['fpr.swap_ins']}"
               f" evict_reasons={reasons}")
+        if fpr:
+            print(f"          prefix sharing: "
+                  f"hit_rate={s['fpr.prefix.hit_rate']} "
+                  f"hits={s['fpr.prefix.hit_blocks']} "
+                  f"evict_pinned={s['fpr.prefix.evict_pinned']} "
+                  f"in_set_violations={s['fpr.prefix.in_set_violations']}")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,16 @@
 """End-to-end serving driver: batched requests over the FPR paged cache.
 
     PYTHONPATH=src python examples/serve_fpr.py [--arch granite-3-8b]
-                                                [--requests 16] [--baseline]
+                                                [--requests 16]
 
 Runs a REAL reduced-config model (prefill + continuous-batching decode)
 twice — FPR on and off — and reports throughput, fence counts and that
 the generated tokens are identical.
+
+Every request carries the same full-block **system prompt**, so the FPR
+run also exercises prefix sharing: followers attach to the first
+request's prompt blocks instead of allocating (``fpr.prefix.*`` hit-rate
+counters below), and the blocks stay fence-free inside their sharing set.
 """
 
 import argparse
@@ -30,9 +35,11 @@ def run(arch: str, n_requests: int, fpr: bool, seed: int = 0):
         cost_model=FenceCostModel(n_replicas=16, dispatch_depth=2,
                                   step_time_s=10e-3)))
     rng = np.random.RandomState(42)
+    # one shared system prompt (exactly one full KV block) + per-user tails
+    system = rng.randint(1, cfg.vocab, size=eng.cache.block_size)
     for _ in range(n_requests):
-        eng.submit(rng.randint(1, cfg.vocab, size=rng.randint(8, 48)),
-                   max_new_tokens=12)
+        tail = rng.randint(1, cfg.vocab, size=rng.randint(8, 48))
+        eng.submit(np.concatenate([system, tail]), max_new_tokens=12)
     eng.run()
     return eng
 
@@ -43,7 +50,8 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     args = ap.parse_args()
 
-    print(f"serving {args.requests} requests on {args.arch} (reduced)")
+    print(f"serving {args.requests} requests on {args.arch} (reduced), "
+          f"shared system prompt")
     results = {}
     for fpr in (False, True):
         eng = run(args.arch, args.requests, fpr)
@@ -56,11 +64,20 @@ def main():
               f"skipped={s['fence.skipped_at_free']} "
               f"recycled={s['fpr.recycled_hits']} "
               f"fence_cost={s['fence.modeled_s']*1e3:.1f}ms")
+        if fpr:
+            print(f"            prefix sharing: "
+                  f"hit_rate={s['fpr.prefix.hit_rate']} "
+                  f"hits={s['fpr.prefix.hit_blocks']} "
+                  f"misses={s['fpr.prefix.miss_blocks']} "
+                  f"cow={s['fpr.prefix.cow_copies']} "
+                  f"exits={s['fpr.prefix.sharing_exits']} "
+                  f"in_set_violations={s['fpr.prefix.in_set_violations']}")
     tok = lambda e: [r.generated for r in
                      sorted(e.sched.done, key=lambda r: r.rid)]
     same = tok(results[True][0]) == tok(results[False][0])
     print(f"  identical tokens: {same}")
     assert same
+    assert results[True][1]["fpr.prefix.in_set_violations"] == 0
 
 
 if __name__ == "__main__":

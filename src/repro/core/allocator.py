@@ -7,6 +7,13 @@ This reproduces the Linux allocation substrate the paper builds on (§II-C):
 * **per-worker free lists** serve order-0 (single-block) requests in a lock-free
   fast path; a worker refills/spills in batches from/to the buddy allocator.
 
+The public surface is a single verb pair — ``acquire(n) -> BlockLease`` /
+``release(lease_or_blocks)`` — on :class:`BlockAllocator`; the lease carries
+blocks, worker, contiguous-run order, and (for prefix-shared blocks)
+refcount ownership, so a shared block can only be released through the
+memory manager.  :class:`BuddyAllocator` keeps its raw ``alloc(order)`` /
+``free(head, order)`` as internal primitives.
+
 The per-worker lists are *the reason recycling works*: back-to-back
 alloc→free→alloc cycles on one worker hand back exactly the same physical
 blocks, so an FPR context sees its own blocks again and no fence is needed.
@@ -139,15 +146,42 @@ class WorkerFreeList:
     blocks: deque = field(default_factory=deque)
 
 
+@dataclass
+class BlockLease:
+    """The single allocation handle handed out by :meth:`BlockAllocator.acquire`.
+
+    A lease carries everything :meth:`BlockAllocator.release` needs to put
+    the blocks back correctly: the block indices, the worker whose list they
+    came from, and — for contiguous acquisitions — the buddy order of the
+    run.  ``manager`` records refcount ownership: once a memory manager has
+    entered any of the lease's blocks into a sharing set (prefix index), the
+    lease can no longer be released directly — shared blocks must exit
+    through the manager (``munmap``/``evict``), which is what keeps the
+    "refcount > 0 ⇒ never reaches the allocator" invariant airtight.
+    """
+
+    blocks: tuple
+    worker_id: int = 0
+    order: int | None = None           # set only for contiguous runs
+    manager: object | None = None      # refcount owner; blocks release()
+
+    def __len__(self) -> int:
+        return len(self.blocks)
+
+    def __iter__(self):
+        return iter(self.blocks)
+
+
 class BlockAllocator:
     """Facade: per-worker fast path over the global buddy slow path.
 
-    The hot path is **batched**: :meth:`alloc_blocks` serves a whole
-    allocation (a sequence's worth of order-0 blocks) with one refill
+    The entire public surface is one verb pair: :meth:`acquire` returns a
+    :class:`BlockLease`, :meth:`release` takes a lease (or a raw block
+    iterable) back.  The hot path is **batched**: one ``acquire`` serves a
+    whole allocation (a sequence's worth of order-0 blocks) with one refill
     decision, refilling the worker list from the buddy in the largest
-    power-of-two runs available instead of block-by-block; likewise
-    :meth:`free_many` makes one spill decision per batch.  The scalar
-    :meth:`alloc_block`/:meth:`free_block` remain as thin wrappers.
+    power-of-two runs available instead of block-by-block; likewise one
+    ``release`` makes one spill decision per batch.
     """
 
     def __init__(self, num_blocks: int, tracker: BlockTracker,
@@ -157,6 +191,10 @@ class BlockAllocator:
         self.tracker = tracker
         self.workers = [WorkerFreeList(w, batch=pcp_batch, high=pcp_high)
                         for w in range(num_workers)]
+        # Optional guard installed by the memory manager: maps a block
+        # array to its sharing refcounts.  release() refuses any block
+        # that is still inside a sharing set.
+        self.refcount_of = None
 
     @property
     def num_workers(self) -> int:
@@ -182,31 +220,75 @@ class BlockAllocator:
                 .extend(wl.blocks)
         self.workers = new
 
-    # -- order-0 fast path ----------------------------------------------------
-    def alloc_block(self, worker_id: int = 0) -> int:
-        return self.alloc_blocks(1, worker_id)[0]
+    # -- the unified surface ---------------------------------------------------
+    def acquire(self, n: int, *, worker_id: int = 0,
+                contiguous: bool = False) -> BlockLease:
+        """Allocate ``n`` blocks; returns a :class:`BlockLease`.
 
-    def alloc_blocks(self, n: int, worker_id: int = 0) -> list[int]:
-        """Allocate ``n`` order-0 blocks with at most one refill decision.
+        Default path: ``n`` order-0 blocks off the worker's list — the ``n``
+        most recently freed ones (LIFO, maximal recycling locality) — with
+        at most one bulk refill from the buddy.  Raises
+        :class:`OutOfBlocksError` without handing out anything if the pool
+        cannot cover ``n``.
 
-        Returns the ``n`` most recently freed blocks of the worker's list
-        (LIFO — maximal recycling locality), refilling in bulk from the
-        buddy when the list runs short.  Raises :class:`OutOfBlocksError`
-        without handing out anything if the pool cannot cover ``n``.
+        ``contiguous=True`` allocates one aligned buddy run instead,
+        rounding ``n`` up to the next power of two; the lease then carries
+        the whole run (``len(lease) == 2**order >= n``) and its order, so
+        release returns it to the buddy in one piece.
         """
         if n <= 0:
-            return []
+            return BlockLease(blocks=(), worker_id=worker_id)
+        if contiguous:
+            order = max(0, (n - 1).bit_length())
+            head = self.buddy.alloc(order)
+            if order > 0:
+                self.tracker.fan_out(head, 1 << order)
+            self.buddy.stats.fast_allocs += 1 << order
+            return BlockLease(blocks=tuple(range(head, head + (1 << order))),
+                              worker_id=worker_id, order=order)
         wl = self.workers[worker_id]
         if len(wl.blocks) < n:
             self._refill_bulk(wl, n - len(wl.blocks))
         self.buddy.stats.fast_allocs += n
-        return [wl.blocks.pop() for _ in range(n)]
+        return BlockLease(blocks=tuple(wl.blocks.pop() for _ in range(n)),
+                          worker_id=worker_id)
 
-    def free_block(self, block: int, worker_id: int = 0) -> None:
-        self.free_many((block,), worker_id)
+    def release(self, lease_or_blocks, *, worker_id: int | None = None) -> None:
+        """Return blocks to the allocator; one spill decision per batch.
 
-    def free_many(self, blocks, worker_id: int = 0) -> None:
-        """Return a batch to the worker list; one spill decision per batch."""
+        Accepts the :class:`BlockLease` from :meth:`acquire` (preferred —
+        it remembers its worker and, for contiguous runs, its order) or any
+        iterable of block indices.  A lease whose ``manager`` is set is
+        refused: its blocks are inside a sharing set and only the manager
+        may exit them.  When a refcount guard is installed, any block with
+        a live sharer refcount is refused for the same reason.
+        """
+        if isinstance(lease_or_blocks, BlockLease):
+            lease = lease_or_blocks
+            if lease.manager is not None:
+                raise ValueError(
+                    "lease is owned by a memory manager (shared blocks); "
+                    "release it via the manager's munmap/evict path")
+            blocks = lease.blocks
+            if worker_id is None:
+                worker_id = lease.worker_id
+            order = lease.order
+        else:
+            blocks = tuple(int(b) for b in lease_or_blocks)
+            if worker_id is None:
+                worker_id = 0
+            order = None
+        if not blocks:
+            return
+        if self.refcount_of is not None:
+            rc = self.refcount_of(np.asarray(blocks, dtype=np.int64))
+            if (rc > 0).any():
+                raise ValueError(
+                    "refusing to release blocks still inside a sharing set "
+                    f"(refcounts {rc.tolist()}); exit them via the manager")
+        if order is not None:
+            self.buddy.free(blocks[0], order)
+            return
         wl = self.workers[worker_id]
         wl.blocks.extend(int(b) for b in blocks)
         if len(wl.blocks) > wl.high:
@@ -256,13 +338,6 @@ class BlockAllocator:
         self.buddy.stats.spills += 1
         for _ in range(min(wl.batch, len(wl.blocks))):
             self.buddy.free(wl.blocks.popleft(), 0)   # oldest blocks spill
-
-    # -- contiguous runs (prefill chunk allocations) ---------------------------
-    def alloc_run(self, order: int) -> int:
-        return self.buddy.alloc(order)
-
-    def free_run(self, head: int, order: int) -> None:
-        self.buddy.free(head, order)
 
     # -- pool pressure ----------------------------------------------------------
     @property

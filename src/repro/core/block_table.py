@@ -47,6 +47,14 @@ class Mapping:
     physical: list[int] = field(default_factory=list)   # logical idx → phys block
     ctx_id: int = 0                    # recycling context (0 = non-FPR)
     fixed_address: bool = False        # MAP_FIXED analogue (forced logical ids)
+    # prefix sharing: logical indices whose physical block is registered in
+    # the prefix index (attached hits *and* own freshly-indexed blocks);
+    # munmap detaches these instead of freeing, COW removes an index on
+    # divergence.  ``prefix_hits`` is how many were attached (not
+    # allocated) — the admission ledger reconciles reservations with it.
+    shared_idx: set = field(default_factory=set)
+    prefix_hits: int = 0
+    lease: object = None               # BlockLease this mapping was built from
 
     @property
     def num_blocks(self) -> int:

@@ -44,6 +44,11 @@ class FprConfig(ConfigBase):
     pcp_batch: int = 32
     pcp_high: int = 96
     max_order: int = 10
+    # Prefix sharing: enter full-prompt-block hashes into a sharing index
+    # and attach common-prefix mappings to the same physical blocks
+    # (copy-on-write on divergence).  Only active under ``fpr_enabled`` —
+    # a sharing exit re-enters the FPR recycling machinery.
+    prefix_sharing: bool = True
 
     def __post_init__(self) -> None:
         if self.num_blocks <= 0:

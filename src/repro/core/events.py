@@ -14,8 +14,9 @@ Publishers (mechanism layer):
     :class:`FenceIssued` for every coherence fence (global or scoped).
   * :class:`~repro.core.fpr.FprMemoryManager` publishes
     :class:`BlocksRecycled` / :class:`ContextExit` from the §IV-A
-    allocation-phase checks and :class:`SwapDropped` when a dying mapping
-    still holds swapped-out blocks.
+    allocation-phase checks, :class:`BlocksShared` / :class:`SharingExit`
+    from the prefix-sharing attach/detach paths, and :class:`SwapDropped`
+    when a dying mapping still holds swapped-out blocks.
   * :class:`~repro.serving.kv_cache.PagedKVCache` publishes
     :class:`ShardRefreshed` after a fence re-uploads device table shards.
   * :class:`~repro.serving.admission.MemoryGovernor` publishes
@@ -91,6 +92,41 @@ class ContextExit(Event):
     fenced: bool
     elided_by_version: int
     elided_by_scope: int
+
+
+@dataclass(frozen=True)
+class BlocksShared(Event):
+    """A new mapping attached to indexed prefix blocks (a prefix-cache hit).
+
+    ``n_blocks`` is the number of shared blocks attached — blocks the
+    allocation did **not** have to acquire (and will never fence for while
+    they stay inside their sharing set)."""
+
+    ctx_id: int
+    n_blocks: int
+    worker: int
+    mapping_id: int
+
+
+@dataclass(frozen=True)
+class SharingExit(Event):
+    """Blocks changed sharing-set membership at a detach point.
+
+    ``n_blocks`` counts blocks whose *last* sharer detached — they left
+    their set, were version-stamped, and rejoined the ordinary recycling
+    machinery (the "page leaves its recycling cycle" moment; the next
+    foreign allocation decides fence vs. elision).  ``orphaned`` is the
+    subset of those whose owner had already died.  ``newly_orphaned``
+    counts blocks that did *not* exit but whose owner detached just now —
+    they stay live, held by the remaining sharers, and are what the
+    admission ledger must keep covering as shared residual.  ``reason`` is
+    ``"munmap"``, ``"cow"`` or ``"evict"``.
+    """
+
+    n_blocks: int
+    orphaned: int
+    newly_orphaned: int
+    reason: str
 
 
 @dataclass(frozen=True)
@@ -195,9 +231,10 @@ class PreemptionResolved(Event):
 
 
 #: every event type this module defines, for docs/tests
-EVENT_TYPES = (FenceIssued, BlocksRecycled, ContextExit, SwapDropped,
-               ShardRefreshed, TopologyChanged, EvictionPass,
-               AdmissionDecision, PreemptionStarted, PreemptionResolved)
+EVENT_TYPES = (FenceIssued, BlocksRecycled, ContextExit, BlocksShared,
+               SharingExit, SwapDropped, ShardRefreshed, TopologyChanged,
+               EvictionPass, AdmissionDecision, PreemptionStarted,
+               PreemptionResolved)
 
 
 Handler = Callable[[Event], None]
@@ -267,6 +304,7 @@ class EventBus:
 
 
 __all__ = ["Event", "EventBus", "EVENT_TYPES", "FenceIssued",
-           "BlocksRecycled", "ContextExit", "SwapDropped", "ShardRefreshed",
-           "TopologyChanged", "EvictionPass", "AdmissionDecision",
-           "PreemptionStarted", "PreemptionResolved"]
+           "BlocksRecycled", "ContextExit", "BlocksShared", "SharingExit",
+           "SwapDropped", "ShardRefreshed", "TopologyChanged",
+           "EvictionPass", "AdmissionDecision", "PreemptionStarted",
+           "PreemptionResolved"]

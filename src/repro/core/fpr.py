@@ -15,8 +15,16 @@ mask, so when a fence *is* required (context exit, baseline munmap,
 eviction) it covers only the workers that could hold a stale translation —
 see :mod:`repro.core.shootdown` for the epoch bookkeeping and
 :mod:`repro.core.tracking` for the mask.  The allocation hot path is
-batched: one :meth:`BlockAllocator.alloc_blocks` call and one vectorised
+batched: one :meth:`BlockAllocator.acquire` call and one vectorised
 tracking check per request instead of a per-block Python loop.
+
+**Prefix sharing** (``config.prefix_sharing``, FPR only): mappings created
+with ``prefix_hashes`` attach to already-indexed common-prefix blocks
+instead of allocating them.  While a block stays inside its *sharing set*
+(refcount > 0) it is pinned — never freed, never fenced; when the last
+sharer detaches the block exits the set and rejoins the recycling
+machinery, where the existing allocation-phase checks fence (or elide)
+its first foreign reuse.  See :mod:`repro.core.prefix`.
 
 The manager is engine-agnostic: the serving engine (repro/serving) and the
 microbenchmarks both drive it through the same mmap/munmap/touch/evict API.
@@ -28,17 +36,19 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.allocator import BlockAllocator
+from repro.core.allocator import BlockAllocator, BlockLease
 from repro.core.block_table import BlockTableStore, Mapping
 from repro.core.config import (FprConfig, validate_translation,
                                validate_worker_count)
 from repro.core.contexts import RecyclingContext
-from repro.core.events import (BlocksRecycled, ContextExit, FenceIssued,
-                               SwapDropped, TopologyChanged)
+from repro.core.events import (BlocksRecycled, BlocksShared, ContextExit,
+                               FenceIssued, SharingExit, SwapDropped,
+                               TopologyChanged)
 from repro.core.metrics import MetricsRegistry
+from repro.core.prefix import PrefixIndex, PrefixStats
 from repro.core.shootdown import FenceEngine
-from repro.core.tracking import (FLAG_ALWAYS_FLUSH, BlockTracker,
-                                 worker_bit)
+from repro.core.tracking import (FLAG_ALWAYS_FLUSH, FLAG_WAS_SHARED,
+                                 BlockTracker, worker_bit)
 
 SWAPPED = -2          # block-table marker: resident → swapped out
 NOT_RESIDENT = -1     # never faulted in
@@ -67,9 +77,10 @@ class FprMemoryManager:
 
     Cross-layer observations are published on :attr:`bus` (the fence
     engine's :class:`~repro.core.events.EventBus`): ``FenceIssued``,
-    ``BlocksRecycled``, ``ContextExit``, ``SwapDropped``,
-    ``TopologyChanged``.  Counters are registered on :attr:`metrics` under
-    the ``fpr``/``fence``/``table`` namespaces.
+    ``BlocksRecycled``, ``ContextExit``, ``BlocksShared``, ``SharingExit``,
+    ``SwapDropped``, ``TopologyChanged``.  Counters are registered on
+    :attr:`metrics` under the ``fpr``/``fpr.prefix``/``fence``/``table``
+    namespaces.
     """
 
     def __init__(self, *, config: FprConfig | None = None,
@@ -105,10 +116,22 @@ class FprMemoryManager:
         self.fpr_enabled = config.fpr_enabled
         self.stats = FprStats()
         self.reshards = 0
+        # Prefix sharing: sharing sets over token-block hashes.  Only
+        # meaningful under FPR (a sharing exit re-enters the recycling
+        # machinery); gated independently so the differential benchmarks
+        # can isolate its effect.
+        self.prefix = PrefixIndex()
+        self.prefix_stats = PrefixStats()
+        self.prefix_sharing = config.fpr_enabled and config.prefix_sharing
+        # Airtight exit discipline: the allocator refuses any block whose
+        # sharing refcount is still live (see BlockLease.manager).
+        self.alloc.refcount_of = self.tracker.refcounts
         self.metrics = MetricsRegistry()
         self.metrics.register("fpr", lambda: self.stats.snapshot())
         self.metrics.register("fence", self._fence_metrics)
         self.metrics.register("table", self._table_metrics)
+        self.metrics.register(
+            "fpr.prefix", lambda: self.prefix_stats.counters(self.prefix))
         #: optional swap hooks (serving attaches pool copy-out/copy-in —
         #: the "storage device" behind eviction).  Signatures:
         #:   on_swap_out(mapping_id, logical_idx, phys_block)
@@ -225,16 +248,17 @@ class FprMemoryManager:
         return plan
 
     # ===================================================================== alloc
-    def _acquire(self, n: int, ctx_id: int, worker: int) -> list[int]:
+    def _acquire(self, n: int, ctx_id: int, worker: int) -> BlockLease:
         """Allocate n order-0 blocks, applying FPR allocation-phase checks.
 
         One batched allocator call + one vectorised tracking pass — the
         engine hot path never loops over blocks in Python.
         """
-        blocks = self.alloc.alloc_blocks(n, worker)
-        self._allocation_checks(np.asarray(blocks, dtype=np.int64), ctx_id,
-                                worker)
-        return blocks
+        lease = self.alloc.acquire(n, worker_id=worker)
+        if lease.blocks:
+            self._allocation_checks(
+                np.asarray(lease.blocks, dtype=np.int64), ctx_id, worker)
+        return lease
 
     def _allocation_checks(self, arr: np.ndarray, ctx_id: int,
                            worker: int = 0) -> None:
@@ -255,6 +279,7 @@ class FprMemoryManager:
         cur_epoch = np.uint64(eng.epoch)
 
         always = (flags & FLAG_ALWAYS_FLUSH) != 0
+        was_shared = (flags & FLAG_WAS_SHARED) != 0
         foreign = (ids != 0) & (ids != ctx_id)
         global_ok = vers < cur_epoch            # global fence since free
         stale = eng.stale_masks(tr.worker_masks(arr), vers)
@@ -289,6 +314,21 @@ class FprMemoryManager:
                 mask = int(np.bitwise_or.reduce(stale[must_fence]))
                 eng.fence_scoped("context_exit", int(must_fence.sum()),
                                  worker_mask=mask)
+        if was_shared.any():
+            # First reuse after a sharing exit: account how the exit was
+            # covered (the "page left its recycling cycle" fence vs. a
+            # legitimate §IV-C5 / scoped elision).
+            ps = self.prefix_stats
+            ps.exit_fenced += int((was_shared & must_fence).sum())
+            ps.exit_elided += int(
+                (was_shared & (elide_global | elide_scope)).sum())
+        # Defensive invariant: a block inside a sharing set (refcount > 0)
+        # must never reach the allocator — the release guard raises first,
+        # so this counter staying 0 is the asserted "zero fences while a
+        # block stays inside one sharing set" witness.
+        live_rc = tr.refcounts(arr)
+        if (live_rc > 0).any():
+            self.prefix_stats.in_set_violations += int((live_rc > 0).sum())
         if recycled.any() and self.bus.wants(BlocksRecycled):
             self.bus.publish(BlocksRecycled(ctx_id=ctx_id,
                                             n_blocks=int(recycled.sum()),
@@ -314,13 +354,69 @@ class FprMemoryManager:
 
     # ===================================================================== mmap
     def mmap(self, n_blocks: int, ctx: RecyclingContext | None = None, *,
-             worker: int = 0, fixed_logical: int | None = None) -> Mapping:
-        """Create a mapping of ``n_blocks`` logical blocks, all resident."""
+             worker: int = 0, fixed_logical: int | None = None,
+             prefix_hashes=None) -> Mapping:
+        """Create a mapping of ``n_blocks`` logical blocks, all resident.
+
+        ``prefix_hashes`` (chain hashes of the request's *full* prompt
+        blocks, see :func:`repro.core.prefix.block_hashes`) turns on prefix
+        sharing for this mapping: the leading run of already-indexed hashes
+        attaches to the existing shared blocks (refcount bump, **no
+        allocation, no fence** — the blocks never left their sharing set),
+        only the remainder is acquired fresh, and the fresh hashed blocks
+        are entered into the index for future sharers.  Requires FPR with
+        a real recycling context; a ``fixed_logical`` mapping never shares
+        (its forced-fence semantics are per-mapping).
+        """
         ctx_id = ctx.ctx_id if (ctx is not None and self.fpr_enabled) else 0
-        phys = self._acquire(n_blocks, ctx_id, worker)
+        hashes = tuple(prefix_hashes) if prefix_hashes else ()
+        sharing = (self.prefix_sharing and ctx_id != 0
+                   and fixed_logical is None and bool(hashes))
+        shared: list = []
+        if sharing:
+            self.prefix_stats.lookups += 1
+            shared = self.prefix.match(hashes)[:n_blocks]
+            if shared:
+                self.tracker.incref_many(
+                    np.asarray(shared, dtype=np.int64), worker)
+                self.prefix_stats.hit_blocks += len(shared)
+        lease = self._acquire(n_blocks - len(shared), ctx_id, worker)
+        phys = shared + list(lease.blocks)
         m = self.tables.create_mapping(phys, ctx_id=ctx_id,
                                        fixed_logical=fixed_logical,
                                        worker=worker)
+        m.lease = lease
+        if sharing:
+            for i, b in enumerate(shared):
+                self.prefix.attach(b, m.mapping_id)
+                m.shared_idx.add(i)
+            # Index the fresh blocks that complete the hashed prefix: the
+            # owner's prefill writes their content, and later requests with
+            # the same prefix attach to them.
+            fresh_hashed = []
+            for i in range(len(shared), min(len(hashes), n_blocks)):
+                if hashes[i] in self.prefix:
+                    # A mid-chain entry survived its predecessor's exit
+                    # (eviction de-indexes one block at a time), so this
+                    # hash is still owned by another sharing set the match
+                    # couldn't reach.  Keep the rest of the run private.
+                    break
+                self.prefix.insert(hashes[i], phys[i], m.mapping_id)
+                m.shared_idx.add(i)
+                fresh_hashed.append(phys[i])
+            if fresh_hashed:
+                self.tracker.incref_many(
+                    np.asarray(fresh_hashed, dtype=np.int64), worker)
+                self.prefix_stats.miss_blocks += len(fresh_hashed)
+                # the lease now contains refcounted blocks: only this
+                # manager's munmap/evict paths may release them
+                lease.manager = self
+            m.prefix_hits = len(shared)
+            if shared and self.bus.wants(BlocksShared):
+                self.bus.publish(BlocksShared(ctx_id=ctx_id,
+                                              n_blocks=len(shared),
+                                              worker=worker,
+                                              mapping_id=m.mapping_id))
         if fixed_logical is not None:
             # §IV-B: a user-forced address cannot rely on monotonic-VA ABA
             # protection — comply with the request but fence immediately.
@@ -346,9 +442,67 @@ class FprMemoryManager:
                ) -> list[int]:
         """Decode-path growth: append fresh blocks (fresh logical ids)."""
         m = self.tables.mappings[mapping_id]
-        phys = self._acquire(n_blocks, m.ctx_id, worker)
+        phys = list(self._acquire(n_blocks, m.ctx_id, worker).blocks)
         self.tables.extend_mapping(mapping_id, phys)
         return phys
+
+    # =========================================================== prefix sharing
+    def _detach_shared(self, block: int, mapping_id: int) -> tuple:
+        """Detach one sharer from an indexed block.
+
+        Returns ``(exited, was_orphan, newly_orphaned)``.  On exit (last
+        sharer left) the block is de-indexed, its refcount hits 0, and the
+        packed tracking word gets ``FLAG_WAS_SHARED`` so the allocation
+        checks can account the first reuse; the caller then sends it down
+        the ordinary free path.  A non-exit detach changes nothing about
+        the block's residency — in particular it fences nothing.
+        """
+        res = self.prefix.detach(block, mapping_id)
+        self.tracker.decref(block)
+        if res.exited:
+            self.tracker.set(
+                block, flags=self.tracker.flags(block) | FLAG_WAS_SHARED)
+            self.tracker.set_sharer_mask(block, 0)
+            self.prefix_stats.sharing_exits += 1
+        else:
+            self.prefix_stats.shared_detaches += 1
+        return res.exited, res.was_orphan, res.newly_orphaned
+
+    def cow(self, mapping_id: int, logical_idx: int, *, worker: int = 0
+            ) -> tuple | None:
+        """Copy-on-write divergence: give the mapping a private block.
+
+        Called by the serving layer before a divergent write into a block
+        the mapping only *shares*.  Allocates a fresh block through the
+        normal allocation-phase checks, repoints the mapping's table row,
+        and detaches from the old block — which **stays resident inside
+        its sharing set** for the remaining sharers, so no fence is needed
+        (readers through a not-yet-refreshed row see the old block, whose
+        content is the common prefix either way).  Returns ``(old, new)``
+        physical blocks, or ``None`` if the block needs no copy (private,
+        or this mapping is its only sharer — an in-place write diverges
+        nobody).  The caller copies the KV rows old → new.
+        """
+        m = self.tables.mappings[mapping_id]
+        if logical_idx not in m.shared_idx:
+            return None
+        old = m.physical[logical_idx]
+        if old < 0 or not self.prefix.is_indexed(old):
+            m.shared_idx.discard(logical_idx)    # stale after evict-exit
+            return None
+        if self.tracker.refcount(old) < 2:
+            return None
+        [new] = self._acquire(1, m.ctx_id, worker).blocks
+        exited, was_orphan, newly_orphaned = \
+            self._detach_shared(old, mapping_id)
+        m.physical[logical_idx] = new
+        m.shared_idx.discard(logical_idx)
+        self.tables.table[self.tables.slot_of[mapping_id], logical_idx] = new
+        self.prefix_stats.cow_copies += 1
+        if newly_orphaned and self.bus.wants(SharingExit):
+            self.bus.publish(SharingExit(n_blocks=0, orphaned=0,
+                                         newly_orphaned=1, reason="cow"))
+        return old, new
 
     # =================================================================== munmap
     def munmap(self, mapping_id: int, *, worker: int = 0) -> None:
@@ -359,7 +513,29 @@ class FprMemoryManager:
                 if b == SWAPPED:        # dying mapping's swapped contents
                     self.bus.publish(SwapDropped(mapping_id=mapping_id,
                                                  logical_idx=idx))
-        phys = [b for b in rows if b >= 0]
+        phys: list = []
+        exits = orphaned = newly_orphaned = 0
+        for idx, b in enumerate(rows):
+            if b < 0:
+                continue
+            if idx in m.shared_idx and self.prefix.is_indexed(b):
+                exited, was_orph, new_orph = self._detach_shared(b, mapping_id)
+                if exited:
+                    # last sharer: the block leaves its sharing set and
+                    # rejoins the ordinary recycling machinery below
+                    phys.append(b)
+                    exits += 1
+                    orphaned += int(was_orph)
+                else:
+                    # still shared: stays resident, fence-free — the
+                    # remaining sharers' mappings keep it live
+                    newly_orphaned += int(new_orph)
+            else:
+                phys.append(b)
+        if (exits or newly_orphaned) and self.bus.wants(SharingExit):
+            self.bus.publish(SharingExit(n_blocks=exits, orphaned=orphaned,
+                                         newly_orphaned=newly_orphaned,
+                                         reason="munmap"))
         self.stats.frees += len(phys)
         if phys:
             arr = np.asarray(phys, dtype=np.int64)
@@ -367,7 +543,8 @@ class FprMemoryManager:
                 # FPR: skip the fence, stamp the fence counter (§IV-A,
                 # §IV-C5; == the global epoch when scoping is off).  The
                 # worker-presence mask is *kept* — it is the record of who
-                # may still hold a stale translation.
+                # may still hold a stale translation (for an ex-shared
+                # block that is the union of every former sharer's bit).
                 self.fences.note_skipped_free(len(phys))
                 self.tracker.set_versions(arr, self.fences.seq)
             else:
@@ -378,7 +555,7 @@ class FprMemoryManager:
                 self.fences.fence_scoped("munmap", len(phys),
                                          worker_mask=mask)
                 self.tracker.set_worker_masks(arr, 0)   # flushed
-            self.alloc.free_many(phys, worker)
+            self.alloc.release(phys, worker_id=worker)
 
     # ============================================================== fault / touch
     def touch(self, mapping_id: int, logical_idx: int, *, worker: int = 0
@@ -398,7 +575,7 @@ class FprMemoryManager:
         was_swapped = b == SWAPPED
         if was_swapped:
             self.stats.swap_ins += 1
-        [nb] = self._acquire(1, m.ctx_id, worker)
+        [nb] = self._acquire(1, m.ctx_id, worker).blocks
         m.physical[logical_idx] = nb
         self.tables.table[self.tables.slot_of[mapping_id], logical_idx] = nb
         if was_swapped and self.on_swap_in is not None:
@@ -414,8 +591,16 @@ class FprMemoryManager:
         ``fpr_batch=True``  — §IV-B huge-batch path: one merged fence for the
         whole batch, versions stamped *before* the fence so that later
         context-exit allocations of these blocks elide their fence.
+
+        Shared blocks are **pinned**: a victim block with other live
+        sharers (refcount ≥ 2) is skipped — evicting it would tear pages
+        out from under running sharers (and a preempted sharer must never
+        free shared blocks).  A block whose *only* sharer is the victim
+        mapping first exits its sharing set (de-indexed, ``reason="evict"``)
+        and is then evicted normally.
         """
         freed: list[int] = []
+        exits = orphaned = 0
         for mid, idx in victims:
             m = self.tables.mappings.get(mid)
             if m is None:
@@ -423,12 +608,24 @@ class FprMemoryManager:
             b = m.physical[idx]
             if b < 0:
                 continue
+            rc = self.tracker.refcount(b)
+            if rc >= 2:
+                self.prefix_stats.evict_pinned += 1
+                continue
+            if rc == 1 and self.prefix.is_indexed(b):
+                _, was_orph, _ = self._detach_shared(b, mid)
+                m.shared_idx.discard(idx)
+                exits += 1
+                orphaned += int(was_orph)
             if self.on_swap_out is not None:
                 self.on_swap_out(mid, idx, b)
             m.physical[idx] = SWAPPED
             self.tables.table[self.tables.slot_of[mid], idx] = SWAPPED
             freed.append(b)
             self.stats.swap_outs += 1
+        if exits and self.bus.wants(SharingExit):
+            self.bus.publish(SharingExit(n_blocks=exits, orphaned=orphaned,
+                                         newly_orphaned=0, reason="evict"))
         if not freed:
             return 0
         arr = np.asarray(freed, dtype=np.int64)
@@ -441,7 +638,7 @@ class FprMemoryManager:
         self.fences.fence_scoped("evict_batch" if fpr_batch else "evict",
                                  len(freed), worker_mask=mask)
         self.tracker.set_worker_masks(arr, 0)           # flushed by the fence
-        self.alloc.free_many(freed, worker)
+        self.alloc.release(freed, worker_id=worker)
         return len(freed)
 
     # =================================================================== helpers

@@ -39,8 +39,8 @@ Source = Callable[[], dict]
 
 #: canonical namespaces, in emission order (dotted entries are nested
 #: subsystem registrations — their keys live under the parent family)
-NAMESPACES = ("fpr", "fpr.eviction", "fence", "table", "device",
-              "admission", "engine")
+NAMESPACES = ("fpr", "fpr.prefix", "fpr.eviction", "fence", "table",
+              "device", "admission", "engine")
 
 #: flat-key groups whose *members* are config-dependent (fence reasons seen,
 #: one epoch per worker, one ledger share per worker) — validated by prefix
@@ -62,6 +62,23 @@ STABLE_SCHEMA = (
     "fpr.recycled_hits",
     "fpr.swap_ins",
     "fpr.swap_outs",
+    # fpr.prefix.* — prefix-sharing index counters (manager-owned; present
+    # on bare managers too).  in_set_violations is an invariant witness:
+    # it stays 0 for as long as no refcounted block ever reaches the
+    # allocator — the "zero fences inside a sharing set" guarantee.
+    "fpr.prefix.cow_copies",
+    "fpr.prefix.evict_pinned",
+    "fpr.prefix.exit_elided",
+    "fpr.prefix.exit_fenced",
+    "fpr.prefix.hit_blocks",
+    "fpr.prefix.hit_rate",
+    "fpr.prefix.in_set_violations",
+    "fpr.prefix.indexed_live",
+    "fpr.prefix.lookups",
+    "fpr.prefix.miss_blocks",
+    "fpr.prefix.orphaned_live",
+    "fpr.prefix.shared_detaches",
+    "fpr.prefix.sharing_exits",
     # fpr.eviction.* — watermark-daemon pass counters (engine stacks; a
     # bare FprMemoryManager has no daemon and omits the group)
     "fpr.eviction.deferred",

@@ -137,6 +137,28 @@ relative to the always-global baseline, across both mechanisms.
 Preemption (the kswapd analogue) reuses the same machinery: a recompute
 victim's blocks recycle through a skipped-at-free munmap, and a swap
 victim's eviction batch takes the §IV-B merged fence.
+
+**Sharing sets (prefix sharing / COW).**  The soundness argument extends
+unchanged to blocks with *several* simultaneous owners
+(:mod:`repro.core.prefix`).  A refcounted shared block is **pinned**: it
+never reaches the allocator while any sharer maps it, so no freed-stale
+translation of it can exist and attaching another sharer needs no fence —
+structurally, not by elision.  The paper's "page leaves its recycling
+cycle" moment is the **sharing exit**: the last sharer detaches, the
+block leaves its set and rejoins ordinary recycling carrying (a) its
+version stamped at that free and (b) a presence mask that is the *union*
+of every former sharer's worker bits (each attach ORed its worker in, and
+FPR frees keep the mask).  The next allocation therefore resolves the
+deferred invalidation exactly as above — recycled in-context, elided by
+epoch/worker-epoch, or fenced scoped to the union mask — and the
+first foreign reuse after a sharing exit is covered by the same
+context-exit check that covers any other free (``fpr.prefix.
+exit_fenced`` / ``exit_elided`` split the outcome).  COW divergence
+allocates a *fresh* block for the writer and detaches it from the set;
+the shared block's refcount drops but its history is untouched, so
+neither side needs a fence.  The invariant "a refcounted block is never
+seen by the allocator or the fence path" is asserted at alloc/free and
+counted in ``fpr.prefix.in_set_violations`` (must stay 0).
 """
 
 from __future__ import annotations

@@ -47,6 +47,15 @@ _FLAG_SHIFT = np.uint64(_VERSION_BITS + _ID_BITS)
 #: merged; a fence must always be sent when this block is next allocated.
 FLAG_ALWAYS_FLUSH = 0b01
 
+#: Prefix sharing — the formerly-reserved flag bit.  Set when a block exits
+#: its *sharing set* (last sharer detached, block de-indexed and freed); read
+#: and cleared by the allocation-phase checks so the manager can account how
+#: the first use after a sharing exit was covered (fenced vs. legitimately
+#: elided).  Lives in the paper's 8-byte word: a sharing exit is exactly
+#: "page leaves its recycling cycle", so the exit marker rides the same
+#: metadata that already carries the recycling state.
+FLAG_WAS_SHARED = 0b10
+
 MAX_CONTEXT_ID = (1 << _ID_BITS) - 1
 MAX_VERSION = (1 << _VERSION_BITS) - 1
 
@@ -66,7 +75,8 @@ class BlockTracker:
     allocation for a non-FPR use resets the id to zero.
     """
 
-    __slots__ = ("_packed", "_worker_mask", "num_blocks")
+    __slots__ = ("_packed", "_worker_mask", "_refcount", "_sharer_mask",
+                 "num_blocks")
 
     def __init__(self, num_blocks: int):
         if num_blocks <= 0:
@@ -76,6 +86,13 @@ class BlockTracker:
         # Worker-presence bitmask (scoped fences); kept out of the packed
         # word so the paper's 8-byte layout stays byte-identical.
         self._worker_mask = np.zeros(num_blocks, dtype=np.uint64)
+        # Prefix sharing: per-block sharer refcount (number of live mappings
+        # attached through the prefix index; 0 == private) and the union of
+        # the sharers' worker bits.  refcount > 0 pins the block: it never
+        # reaches the allocator, so no staleness can exist while a block
+        # stays inside its sharing set — that is the fence-free invariant.
+        self._refcount = np.zeros(num_blocks, dtype=np.int32)
+        self._sharer_mask = np.zeros(num_blocks, dtype=np.uint64)
 
     # -- scalar accessors ---------------------------------------------------
     def ctx_id(self, block: int) -> int:
@@ -128,6 +145,46 @@ class BlockTracker:
         """Set presence masks (scalar broadcast or per-block array)."""
         self._worker_mask[blocks] = np.asarray(mask, dtype=np.uint64)
 
+    # -- sharing refcounts (prefix index) -------------------------------------
+    def refcount(self, block: int) -> int:
+        return int(self._refcount[block])
+
+    def refcounts(self, blocks: np.ndarray) -> np.ndarray:
+        return self._refcount[blocks]
+
+    def sharer_mask(self, block: int) -> int:
+        return int(self._sharer_mask[block])
+
+    def incref_many(self, blocks: np.ndarray, worker: int) -> None:
+        """Attach one sharer to each block: bump the refcount and stamp the
+        sharer's worker bit on both the sharer mask and the presence mask
+        (the sharer may hold translations, so the eventual exit fence must
+        be able to scope to it)."""
+        self._refcount[blocks] += 1
+        bit = worker_bit(worker)
+        self._sharer_mask[blocks] |= bit
+        self._worker_mask[blocks] |= bit
+
+    def decref(self, block: int) -> int:
+        """Detach one sharer; returns the remaining count.
+
+        Raises on underflow — a negative refcount means a sharer was
+        released twice (or a private block decref'd), which would let a
+        still-shared block reach the allocator.
+        """
+        rc = int(self._refcount[block])
+        if rc <= 0:
+            raise ValueError(
+                f"refcount underflow on block {block} (count {rc})")
+        self._refcount[block] = rc - 1
+        return rc - 1
+
+    def set_sharer_mask(self, block: int, mask: int | np.uint64) -> None:
+        """Recompute a block's sharer mask after a detach (bits cannot be
+        subtracted: the manager recomputes the union over remaining
+        sharers' workers)."""
+        self._sharer_mask[block] = np.uint64(mask)
+
     def remap_workers(self, translation, old_num_workers: int,
                       new_num_workers: int) -> None:
         """Elastic reshard: rewrite every presence mask through the
@@ -145,16 +202,23 @@ class BlockTracker:
             all_new = np.uint64((1 << (WORKER_OVERFLOW_BIT + 1)) - 1)
         else:
             all_new = np.uint64((1 << new_num_workers) - 1)
-        old = self._worker_mask
-        new = np.zeros_like(old)
-        for w in range(min(old_num_workers, WORKER_OVERFLOW_BIT)):
-            bit = worker_bit(translation[w])
-            new |= np.where((old >> np.uint64(w)) & np.uint64(1) != 0,
-                            bit, np.uint64(0))
-        if old_num_workers > WORKER_OVERFLOW_BIT:
-            top = worker_bit(WORKER_OVERFLOW_BIT)
-            new |= np.where(old & top != 0, all_new, np.uint64(0))
-        self._worker_mask = new
+
+        def translate(old: np.ndarray) -> np.ndarray:
+            new = np.zeros_like(old)
+            for w in range(min(old_num_workers, WORKER_OVERFLOW_BIT)):
+                bit = worker_bit(translation[w])
+                new |= np.where((old >> np.uint64(w)) & np.uint64(1) != 0,
+                                bit, np.uint64(0))
+            if old_num_workers > WORKER_OVERFLOW_BIT:
+                top = worker_bit(WORKER_OVERFLOW_BIT)
+                new |= np.where(old & top != 0, all_new, np.uint64(0))
+            return new
+
+        self._worker_mask = translate(self._worker_mask)
+        # Sharer masks travel the same way: a sharing exit after a reshard
+        # must still scope its fence to the workers that inherited the old
+        # sharers' epochs.  Refcounts are per-block and do not move.
+        self._sharer_mask = translate(self._sharer_mask)
 
     # -- vectorised views (hot path) -----------------------------------------
     def ctx_ids(self, blocks: np.ndarray) -> np.ndarray:
@@ -232,6 +296,8 @@ class BlockTracker:
         """Clear all tracking (the paper clears tracking before experiments)."""
         self._packed[:] = 0
         self._worker_mask[:] = 0
+        self._refcount[:] = 0
+        self._sharer_mask[:] = 0
 
     def nbytes(self) -> int:
         return self._packed.nbytes

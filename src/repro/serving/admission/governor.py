@@ -140,12 +140,32 @@ class MemoryGovernor:
             maxlen=max(1, self.config.affinity_window))
         self._admit_seq = itertools.count(1)
         self._admit_order: dict[int, int] = {}      # rid → admission ordinal
+        # Prefix-sharing hooks (both engine-installed, both optional):
+        # ``probe_shared(r)`` returns how many leading window blocks the
+        # request would attach to the live sharing index instead of
+        # allocating, so admission reserves only the estimated *unique*
+        # remainder (quota charging follows the same estimate).
+        # ``shared_residual()`` returns the indexed live blocks covered by
+        # NO running reservation (orphaned prefixes whose owner completed
+        # or diverged); fits() charges them against capacity so every
+        # physical block is accounted either by a reservation or by the
+        # residual — the pager-fixpoint guarantee survives sharing.
+        self.probe_shared = None
+        self.shared_residual = None
 
     # ------------------------------------------------------------- windows
     def window_blocks(self, r) -> int:
-        """Full attention window of ``r`` in blocks (prompt + budget)."""
+        """Blocks to reserve for ``r``: the full attention window (prompt
+        + budget), minus — when the prefix-sharing probe is installed —
+        the leading blocks the request would *attach* rather than
+        allocate.  At least one block is always reserved (the active
+        decode tail is private even under a fully shared prompt)."""
         need = len(r.prompt) + r.max_new_tokens
-        return max(1, -(-need // self.block_size))
+        full = max(1, -(-need // self.block_size))
+        if self.probe_shared is not None:
+            shared = min(int(self.probe_shared(r)), full - 1)
+            return max(1, full - shared)
+        return full
 
     def admissible_ever(self, r) -> bool:
         """Can this request's window ever fit (even on an empty pool)?"""
@@ -153,9 +173,12 @@ class MemoryGovernor:
 
     def fits(self, r) -> bool:
         """The admission capacity predicate: the ledger can commit the
-        window AND the tenant (when quotas are on) is under its cap."""
+        window (plus any unreserved shared-prefix residual) AND the tenant
+        (when quotas are on) is under its cap."""
         blocks = self.window_blocks(r)
-        if not self.ledger.fits(blocks):
+        residual = (int(self.shared_residual())
+                    if self.shared_residual is not None else 0)
+        if not self.ledger.fits(blocks + residual):
             return False
         return self.quota is None or self.quota.allows(r.stream, blocks)
 
@@ -251,6 +274,22 @@ class MemoryGovernor:
         self.ledger.reserve(r.rid, self.window_blocks(r), worker)
         self._admit_order[r.rid] = next(self._admit_seq)
         self.stats.admitted += 1
+
+    def on_allocated(self, r, unique_blocks: int) -> None:
+        """Reconcile ``r``'s reservation with the allocation that actually
+        happened: admission reserved a probe-based *estimate* of the
+        unique footprint; the mapping now knows the truth
+        (``num_blocks - prefix_hits``).  Growth is refused loudly
+        (:class:`CapacityError`) like any reservation — the engine frees
+        the mapping and retries under pressure relief."""
+        if not self.ledger.holds(r.rid):
+            return
+        unique = max(1, int(unique_blocks))
+        held = self.ledger.entries[r.rid].blocks
+        if unique > held:
+            self.ledger.grow(r.rid, unique - held)
+        elif unique < held:
+            self.ledger.shrink(r.rid, held - unique)
 
     def on_extend(self, r, n_blocks: int) -> None:
         """A running sequence grew its mapping beyond the admitted window

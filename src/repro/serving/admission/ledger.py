@@ -106,6 +106,24 @@ class CapacityLedger:
         self.per_worker[e.worker] += extra_blocks
         self.peak_committed = max(self.peak_committed, self.committed)
 
+    def shrink(self, rid: int, blocks: int) -> None:
+        """Return part of a reservation without releasing it — the
+        prefix-sharing reconcile path: a sequence admitted on a
+        unique-block *estimate* turned out to attach more shared blocks
+        than probed, so its actual unique footprint is smaller.  The
+        reservation must stay positive (a running sequence always owns at
+        least one private block — its active tail)."""
+        if blocks <= 0:
+            raise ValueError(f"shrink must be positive, got {blocks}")
+        e = self.entries[rid]
+        if blocks >= e.blocks:
+            raise ValueError(
+                f"shrinking {rid} by {blocks} would empty its reservation "
+                f"of {e.blocks} blocks; release() it instead")
+        e.blocks -= blocks
+        self.committed -= blocks
+        self.per_worker[e.worker] -= blocks
+
     def release(self, rid: int) -> int:
         """Return ``rid``'s reservation to the pool (completion/preemption)."""
         e = self.entries.pop(rid)

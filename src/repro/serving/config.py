@@ -53,6 +53,10 @@ class EngineConfig(ConfigBase):
     worker_routing: str = "slot"
     cost_model: Any = None
     admission: "GovernorConfig | str | None" = field(default=None)
+    # Prefix sharing: admit common-prefix prompts onto the same physical
+    # blocks (copy-on-write on divergence).  Only active under
+    # ``fpr_enabled`` — see repro.core.prefix.
+    prefix_sharing: bool = True
 
     def __post_init__(self) -> None:
         if self.num_blocks <= 0 or self.max_batch <= 0:

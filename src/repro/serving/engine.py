@@ -86,7 +86,8 @@ class Engine:
             fpr_enabled=config.fpr_enabled, scope=config.scope,
             dtype=config.dtype, num_workers=config.num_workers,
             scoped_fences=config.scoped_fences,
-            cost_model=config.cost_model)
+            cost_model=config.cost_model,
+            prefix_sharing=config.prefix_sharing)
         self.bus = self.cache.bus
         self.metrics = self.cache.metrics
         self.worker_routing = config.worker_routing
@@ -98,6 +99,13 @@ class Engine:
             self.governor = MemoryGovernor(
                 config.num_blocks, self.cache.block_size,
                 num_workers=config.num_workers, config=gcfg, bus=self.bus)
+            # prefix-sharing hooks: admission reserves only the estimated
+            # unique remainder of a window, and charges capacity for
+            # indexed blocks no running reservation covers (see
+            # MemoryGovernor.window_blocks / fits)
+            self.governor.probe_shared = (
+                lambda r: self.cache.probe_prefix(r.prefix_hashes))
+            self.governor.shared_residual = self._shared_residual
         self.metrics.register("admission", self._admission_metrics)
         self.metrics.register("engine", self._engine_metrics)
         self._slot_state_keys = [k for k in self.cache.state
@@ -130,8 +138,12 @@ class Engine:
                 raise CapacityError(
                     f"request window of {window} blocks can never fit the "
                     f"admission limit of {self.governor.ledger.limit}")
+        # prompt-block chain hashes are computed exactly once, here — the
+        # governor's probe and the allocation both reuse them
         return self.sched.submit(prompt, max_new_tokens, stream, group_id,
-                                 priority, sla=sla)
+                                 priority, sla=sla,
+                                 prefix_hashes=self.cache.prefix_hashes(
+                                     prompt))
 
     def _lru_victims(self):
         """LRU over running sequences' oldest blocks (outside any window)."""
@@ -214,7 +226,8 @@ class Engine:
                 try:
                     r.mapping = self.cache.alloc_sequence(
                         need, stream=r.stream, group_id=r.group_id,
-                        worker=self._worker_of(r))
+                        worker=self._worker_of(r),
+                        prefix_hashes=r.prefix_hashes)
                     break
                 except Exception as e:
                     if self._make_room(r):
@@ -226,6 +239,14 @@ class Engine:
                             "no eviction or preemption victim remains"
                         ) from e
                     raise
+            # settle the probe-estimated reservation against the blocks
+            # the mapping actually allocated (shared prefixes attach, not
+            # allocate — only the unique remainder is committed)
+            if self.governor is not None:
+                m = r.mapping
+                self._reserve_settle(
+                    r, lambda: self.governor.on_allocated(
+                        r, m.num_blocks - m.prefix_hits))
             self._prefill_request(r)
 
     def _make_room(self, r: Request) -> bool:
@@ -241,6 +262,48 @@ class Engine:
                 self._preempt(victim)
                 return True
         return False
+
+    def _reserve_settle(self, r: Request, settle) -> None:
+        """Apply a reservation adjustment for ``r`` (post-alloc reconcile,
+        COW growth), preempting victims while the growth over-commits.
+        The blocks themselves are already allocated — only the ledger
+        needs room, and preemption is what frees committed windows."""
+        gov = self.governor
+        if gov is None or not gov.ledger.holds(r.rid):
+            return
+        while True:
+            try:
+                settle()
+                return
+            except CapacityError:
+                victim = (gov.choose_victim(self.sched.running,
+                                            exclude=(r.rid,))
+                          if len(self.sched.running) > 1 else None)
+                if victim is None:
+                    raise
+                self._preempt(victim)
+
+    def _shared_residual(self) -> int:
+        """Indexed live blocks covered by no running reservation.
+
+        Every physical block must be charged against capacity exactly
+        once: private blocks and owner-inserted prefix blocks by their
+        sequence's reservation, attachments by the *owner's* reservation —
+        and when the owner completed, was preempted, or diverged away
+        (``SharingExit``/COW orphaned the entry), by this residual.  The
+        governor folds it into :meth:`~repro.serving.admission.governor.
+        MemoryGovernor.fits`, so admission keeps the pager-fixpoint
+        guarantee with sharing on."""
+        prefix = self.cache.mgr.prefix
+        live = prefix.live_blocks
+        if not live:
+            return 0
+        ledger = self.governor.ledger
+        covered = sum(
+            prefix.owned_by(r.mapping.mapping_id)
+            for r in self.sched.running.values()
+            if r.mapping is not None and ledger.holds(r.rid))
+        return max(0, live - covered)
 
     def _governed_admit(self) -> list[Request]:
         """Admission through the governor: policy order, capacity-checked.
@@ -435,6 +498,25 @@ class Engine:
                 self._relieve_pressure()
         if not self.sched.running:
             return 0
+
+        # copy-on-write pass: the incoming token is (re)written at position
+        # r.length−1, so a sequence still pointing a *shared* block at that
+        # position must diverge onto a private copy first — before the
+        # tables upload below ever shows the decode kernel a shared row it
+        # would write.  At most one copy per request (only a fully-shared
+        # block-aligned prompt leaves the write position shared); the copy
+        # grows the reservation by one block, the detached original stays
+        # in its sharing set (no fence).
+        if self.cache.prefix_sharing:
+            for r in list(self.sched.running.values()):
+                if r.state != "running" or r.mapping is None:
+                    continue     # preempted by a mid-pass reservation grow
+                j = (r.length - 1) // self.cache.block_size
+                if (j < r.mapping.num_blocks
+                        and self.cache.ensure_private(
+                            r.mapping, j, worker=self._worker_of(r))):
+                    self._reserve_settle(
+                        r, lambda: self.governor.on_extend(r, 1))
 
         # the incoming token is the last *known* token; it is (re)written at
         # its own position r.length−1 (idempotent for the prompt tail) and

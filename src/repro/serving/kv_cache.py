@@ -54,6 +54,7 @@ from repro.core.contexts import ContextRegistry, ContextScope
 from repro.core.events import (EventBus, FenceIssued, ShardRefreshed,
                                SwapDropped, TopologyChanged)
 from repro.core.fpr import FprMemoryManager
+from repro.core.prefix import block_hashes
 from repro.core.shootdown import FenceCostModel, FenceEngine
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
@@ -65,6 +66,7 @@ class PagedKVCache:
                  scope: ContextScope = ContextScope.PER_GROUP,
                  dtype=jnp.float32, num_workers: int = 1,
                  scoped_fences: bool = True,
+                 prefix_sharing: bool = True,
                  cost_model: FenceCostModel | None = None):
         self.cfg = cfg
         self.block_size = tfm.BLOCK_SIZE
@@ -81,7 +83,8 @@ class PagedKVCache:
                              max_seqs=max_batch * 4,
                              max_blocks_per_seq=self.max_blocks_per_seq,
                              fpr_enabled=fpr_enabled,
-                             scoped_fences=scoped_fences),
+                             scoped_fences=scoped_fences,
+                             prefix_sharing=prefix_sharing),
             fence_engine=self.fences)
         self.metrics = self.mgr.metrics
         self.metrics.register("device", self._device_metrics)
@@ -338,17 +341,57 @@ class PagedKVCache:
         self._reshard_moved_entries += len(moved) * self.max_blocks_per_seq
         self._reshard_refreshed_bytes += len(moved) * row_bytes
 
+    # ------------------------------------------------------- prefix sharing
+    @property
+    def prefix_sharing(self) -> bool:
+        return self.mgr.prefix_sharing
+
+    def prefix_hashes(self, prompt_tokens) -> tuple:
+        """Chain hashes of the prompt's full token blocks (empty when
+        sharing is off — callers can pass the result straight through)."""
+        if not self.prefix_sharing:
+            return ()
+        return block_hashes(prompt_tokens, self.block_size)
+
+    def probe_prefix(self, hashes) -> int:
+        """How many leading blocks a request with these hashes would attach
+        to *right now* (the admission governor's unique-block estimate)."""
+        if not self.prefix_sharing or not hashes:
+            return 0
+        return len(self.mgr.prefix.match(hashes))
+
+    def ensure_private(self, m: Mapping, logical_idx: int, *,
+                       worker: int = 0) -> bool:
+        """Copy-on-write before a divergent write into a shared block.
+
+        If the mapping's block at ``logical_idx`` is shared with other
+        live sharers, allocate a private copy, duplicate the KV pool rows
+        (old block → new block, the actual copy of copy-on-write), and
+        repoint the mapping.  Returns True iff a copy was made.  The old
+        block stays inside its sharing set — no fence (see
+        :meth:`FprMemoryManager.cow`).
+        """
+        res = self.mgr.cow(m.mapping_id, logical_idx, worker=worker)
+        if res is None:
+            return False
+        old, new = res
+        for key in self._pool_keys:
+            self.state[key] = self.state[key].at[:, new].set(
+                self.state[key][:, old])
+        return True
+
     # ---------------------------------------------------------- allocation
     def alloc_sequence(self, n_tokens: int, *, stream: str = "default",
                        group_id: int | None = None,
                        use_fpr: bool | None = None,
-                       worker: int = 0) -> Mapping:
+                       worker: int = 0, prefix_hashes=()) -> Mapping:
         n_blocks = max(1, -(-n_tokens // self.block_size))
         gid = group_id if group_id is not None else 1
         ctx = self.contexts.resolve(
             group_id=gid, stream_name=stream,
             use_fpr=self.fpr_enabled if use_fpr is None else use_fpr)
-        return self.mgr.mmap(n_blocks, ctx, worker=worker)
+        return self.mgr.mmap(n_blocks, ctx, worker=worker,
+                             prefix_hashes=prefix_hashes)
 
     def extend_sequence(self, m: Mapping, n_blocks: int = 1, *,
                         worker: int = 0) -> None:

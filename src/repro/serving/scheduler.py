@@ -50,6 +50,9 @@ class Request:
                                        # virtual arrival time)
     sla: Optional[float] = None        # deadline budget for SLA-aware
                                        # admission (deadline = arrival+sla)
+    prefix_hashes: tuple = ()          # chain hashes of the prompt's full
+                                       # blocks (computed once at submit;
+                                       # admission probes + alloc reuse it)
     # runtime
     slot: Optional[int] = None
     mapping: Optional[Mapping] = None
@@ -74,14 +77,15 @@ class Scheduler:
 
     def submit(self, prompt, max_new_tokens: int, stream: str = "default",
                group_id: int = 1, priority: int = 0,
-               sla: Optional[float] = None) -> int:
+               sla: Optional[float] = None,
+               prefix_hashes: tuple = ()) -> int:
         rid = next(self._rid)
         self.queue.append(Request(rid=rid,
                                   prompt=np.asarray(prompt, np.int32),
                                   max_new_tokens=max_new_tokens,
                                   stream=stream, group_id=group_id,
                                   priority=priority, arrival=rid,
-                                  sla=sla))
+                                  sla=sla, prefix_hashes=prefix_hashes))
         return rid
 
     def admissible(self) -> list[int]:

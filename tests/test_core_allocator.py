@@ -113,34 +113,76 @@ class TestWorkerLists:
     def test_fast_path_recycles_lifo(self):
         tr = BlockTracker(256)
         a = BlockAllocator(256, tr, num_workers=2, pcp_batch=8, pcp_high=16)
-        x = a.alloc_block(0)
-        a.free_block(x, 0)
-        y = a.alloc_block(0)
-        assert x == y                       # same worker recycles same block
+        x = a.acquire(1, worker_id=0)
+        a.release(x)
+        y = a.acquire(1, worker_id=0)
+        assert x.blocks == y.blocks         # same worker recycles same block
 
     def test_spill_and_refill(self):
         tr = BlockTracker(256)
         a = BlockAllocator(256, tr, num_workers=1, pcp_batch=4, pcp_high=8)
-        blocks = [a.alloc_block(0) for _ in range(32)]
-        for blk in blocks:
-            a.free_block(blk, 0)
+        leases = [a.acquire(1, worker_id=0) for _ in range(32)]
+        for lease in leases:
+            a.release(lease)
         assert a.buddy.stats.spills > 0
         assert a.free_blocks == 256
 
     def test_worker_steal_when_buddy_empty(self):
         tr = BlockTracker(8)
         a = BlockAllocator(8, tr, num_workers=2, pcp_batch=8, pcp_high=64)
-        got = [a.alloc_block(0) for _ in range(8)]
-        for g in got:
-            a.free_block(g, 0)             # all 8 now on worker 0's list
+        got = [a.acquire(1, worker_id=0).blocks[0] for _ in range(8)]
+        a.release(got, worker_id=0)        # all 8 now on worker 0's list
         # worker 1 must steal from worker 0
-        blk = a.alloc_block(1)
+        blk = a.acquire(1, worker_id=1).blocks[0]
         assert blk in got
 
     def test_exhaustion_raises(self):
         tr = BlockTracker(8)
         a = BlockAllocator(8, tr, num_workers=1, pcp_batch=4, pcp_high=8)
         for _ in range(8):
-            a.alloc_block(0)
+            a.acquire(1, worker_id=0)
         with pytest.raises(OutOfBlocksError):
-            a.alloc_block(0)
+            a.acquire(1, worker_id=0)
+
+
+class TestBlockLease:
+    def test_lease_remembers_worker(self):
+        tr = BlockTracker(64)
+        a = BlockAllocator(64, tr, num_workers=2)
+        lease = a.acquire(3, worker_id=1)
+        assert lease.worker_id == 1
+        a.release(lease)                   # goes back to worker 1's list
+        assert a.acquire(1, worker_id=1).blocks[0] in lease.blocks
+
+    def test_contiguous_rounds_up_to_buddy_run(self):
+        tr = BlockTracker(64)
+        a = BlockAllocator(64, tr, num_workers=1)
+        lease = a.acquire(5, worker_id=0, contiguous=True)
+        assert lease.order == 3            # 5 → 8 blocks
+        assert len(lease) == 8
+        head = lease.blocks[0]
+        assert head % 8 == 0               # buddy alignment
+        assert lease.blocks == tuple(range(head, head + 8))
+        free_before = a.free_blocks
+        a.release(lease)                   # whole run returns to the buddy
+        assert a.free_blocks == free_before + 8
+
+    def test_manager_owned_lease_refuses_release(self):
+        tr = BlockTracker(64)
+        a = BlockAllocator(64, tr, num_workers=1)
+        lease = a.acquire(2, worker_id=0)
+        lease.manager = object()           # as the fpr manager does on share
+        with pytest.raises(ValueError):
+            a.release(lease)
+
+    def test_refcount_guard_refuses_shared_blocks(self):
+        tr = BlockTracker(64)
+        a = BlockAllocator(64, tr, num_workers=1)
+        a.refcount_of = tr.refcounts       # as the fpr manager installs
+        lease = a.acquire(2, worker_id=0)
+        tr.incref_many(np.asarray(lease.blocks, dtype=np.int64), 0)
+        with pytest.raises(ValueError):
+            a.release(list(lease.blocks), worker_id=0)
+        for b in lease.blocks:
+            tr.decref(b)
+        a.release(list(lease.blocks), worker_id=0)   # now fine

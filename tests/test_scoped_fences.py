@@ -12,7 +12,8 @@ from _hypothesis_compat import given, settings, st
 
 from repro.core import ContextScope, FprMemoryManager, derive_context
 from repro.core.config import FprConfig
-from repro.core.allocator import BlockAllocator, OutOfBlocksError
+from repro.core.allocator import (BlockAllocator, BlockLease,
+                                  OutOfBlocksError)
 from repro.core.shootdown import FenceEngine
 from repro.core.tracking import BlockTracker, worker_bit
 
@@ -183,51 +184,50 @@ class TestScopedFencePolicy:
 
 
 class TestBatchedAllocation:
-    def test_alloc_blocks_unique_and_conserved(self):
+    def test_acquire_unique_and_conserved(self):
         tr = BlockTracker(256)
         a = BlockAllocator(256, tr, num_workers=2)
-        blocks = a.alloc_blocks(100, 0)
-        assert len(blocks) == 100
-        assert len(set(blocks)) == 100
+        lease = a.acquire(100, worker_id=0)
+        assert len(lease) == 100
+        assert len(set(lease.blocks)) == 100
         assert a.free_blocks == 156
-        a.free_many(blocks, 0)
+        a.release(lease)
         assert a.free_blocks == 256
 
-    def test_alloc_blocks_zero_and_scalar_paths(self):
+    def test_acquire_zero_and_scalar_paths(self):
         tr = BlockTracker(16)
         a = BlockAllocator(16, tr, num_workers=1)
-        assert a.alloc_blocks(0, 0) == []
-        x = a.alloc_block(0)
-        a.free_block(x, 0)
-        assert a.alloc_block(0) == x          # LIFO recycling preserved
+        assert a.acquire(0, worker_id=0).blocks == ()
+        x = a.acquire(1, worker_id=0).blocks[0]
+        a.release([x], worker_id=0)
+        assert a.acquire(1, worker_id=0).blocks[0] == x   # LIFO preserved
 
     def test_exhaustion_raises_without_leak(self):
         tr = BlockTracker(16)
         a = BlockAllocator(16, tr, num_workers=1, pcp_batch=4, pcp_high=32)
-        a.alloc_blocks(10, 0)
+        a.acquire(10, worker_id=0)
         free_before = a.free_blocks
         with pytest.raises(OutOfBlocksError):
-            a.alloc_blocks(10, 0)
+            a.acquire(10, worker_id=0)
         assert a.free_blocks == free_before   # nothing leaked
-        assert len(a.alloc_blocks(6, 0)) == 6
+        assert len(a.acquire(6, worker_id=0)) == 6
 
     def test_bulk_refill_fans_out_tracking(self):
         tr = BlockTracker(16)
         a = BlockAllocator(16, tr, num_workers=1, max_order=4)
         tr.set(0, ctx_id=5, version=3)        # head of the order-4 free run
-        blocks = a.alloc_blocks(8, 0)
-        for b in blocks:
+        for b in a.acquire(8, worker_id=0):
             assert tr.ctx_id(b) == 5          # head tracking reached them
             assert tr.version(b) == 3
 
     def test_steal_across_workers_in_bulk(self):
         tr = BlockTracker(8)
         a = BlockAllocator(8, tr, num_workers=2, pcp_batch=8, pcp_high=64)
-        got = a.alloc_blocks(8, 0)
-        a.free_many(got, 0)                   # all on worker 0's list
-        stolen = a.alloc_blocks(5, 1)         # must steal from worker 0
+        got = a.acquire(8, worker_id=0)
+        a.release(got)                        # all on worker 0's list
+        stolen = a.acquire(5, worker_id=1)    # must steal from worker 0
         assert len(stolen) == 5
-        assert set(stolen) <= set(got)
+        assert set(stolen.blocks) <= set(got.blocks)
 
     def test_batched_acquire_same_fences_as_looped_trace(self):
         """The batched hot path must not change fence policy decisions:
@@ -236,9 +236,13 @@ class TestBatchedAllocation:
         fence/elision choices as the bulk path."""
         def trace(mgr, looped):
             if looped:
-                bulk = mgr.alloc.alloc_blocks
-                mgr.alloc.alloc_blocks = (
-                    lambda n, w=0: [bulk(1, w)[0] for _ in range(n)])
+                bulk = mgr.alloc.acquire
+                mgr.alloc.acquire = (
+                    lambda n, *, worker_id=0, contiguous=False: BlockLease(
+                        blocks=tuple(
+                            bulk(1, worker_id=worker_id).blocks[0]
+                            for _ in range(n)),
+                        worker_id=worker_id))
             for i in range(30):
                 mp = mgr.mmap(7, ctx((i % 3) + 1), worker=0)
                 mgr.munmap(mp.mapping_id, worker=0)

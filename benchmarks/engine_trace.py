@@ -36,6 +36,15 @@ single-tenant trace, zero fences at all), and the admission ledger —
 committing *unique* blocks — running strictly more requests concurrently
 at the same pool size.
 
+**Chunked-prefill replay** (``run_chunked`` → ``BENCH_chunked.json``).
+One trace of mixed non-block-aligned prompt lengths through the engine
+with ``chunked_prefill`` off vs on: tokens bit-identical, the chunk path
+traced exactly once across all lengths (the monolithic baseline retraces
+per padded prompt shape), plus the open-loop mice-and-elephants
+``admission_sim`` section where chunk-grown elephants must strictly
+improve the mice ``queue_wait_p99``.  Enforced by :func:`chunked_report`
+and re-checked by ``benchmarks/validate.py`` in the push lane.
+
 The whole trace is deterministic (seeded prompts, greedy decode), so the
 JSON artifact is diffable run-to-run.
 """
@@ -291,6 +300,122 @@ def prefix_report(out: dict) -> None:
             f"requests — not above the unshared {u['peak_running']}")
 
 
+#: flat MetricsRegistry keys reported per chunked-prefill mode
+_CHUNK_KEYS = (
+    "engine.prefill_traces",
+    "engine.prefill_chunk_traces",
+    "engine.prefill_chunks",
+    "engine.completed",
+    "admission.chunk_grows",
+    "admission.admitted",
+    "admission.holds",
+)
+
+#: the open-loop mice-and-elephants regime for the chunked sim section —
+#: admission_bench.SLA_SIM_KW's workload, deadline policy (FCFS first-fit
+#: simply starves the elephants monolithically, which zeroes the mice tail
+#: by never seating an elephant at all — not a comparison worth winning)
+_CHUNK_SIM_KW = dict(pool_blocks=8, max_batch=8, window_lo=1, window_hi=8,
+                     arrival_every=1.5, large_frac=0.12, steps_per_block=4,
+                     sla_steps=32, seed=23, policy="deadline")
+
+
+def chunked_case(smoke: bool = False) -> dict:
+    """Chunked vs monolithic prefill: bit-identical tokens, one trace.
+
+    Two sections:
+
+    * ``monolithic`` / ``chunked`` — the *real* Engine replays one trace of
+      deliberately mixed, non-block-aligned prompt lengths.  Decoded tokens
+      must be **bit-identical** (chunking only changes *when* prompt blocks
+      commit, never what attention computes — the chunk kernel's extra
+      causally-masked keys contribute exact zeros).  The fixed chunk shape
+      must also kill the per-prompt-length ``jax.jit`` retrace:
+      ``engine.prefill_chunk_traces == 1`` across all lengths, while the
+      monolithic run retraces ``engine.prefill_traces`` once per distinct
+      padded prompt shape.
+    * ``sim`` — the open-loop mice-and-elephants ``admission_sim`` regime:
+      with ``chunk_blocks`` set, an elephant is admitted on its first
+      chunk and grows per written block, releasing the pool to mice for
+      most of its service — ``queue_wait_p99_mice`` must be strictly
+      better chunked than monolithic.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.models import transformer as tfm
+    from repro.models.config import ModelConfig
+    from repro.serving.config import EngineConfig
+    from repro.serving.engine import Engine
+    from repro.serving.sim import AdmissionSimConfig, admission_sim
+
+    cfg = ModelConfig(**_CFG_KW)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.RandomState(SEED + 2)
+    lengths = ((40, 200, 170, 300) if smoke
+               else (40, 200, 170, 300, 90, 260, 410, 130))
+    reqs = [(rng.randint(1, _CFG_KW["vocab"], size=n), f"s{i % 2}",
+             (i % 2) + 1, 6 + (i % 3)) for i, n in enumerate(lengths)]
+    kw = dict(num_blocks=64, max_batch=4)
+    out: dict = {"seed": SEED + 2, "requests": len(reqs),
+                 "prompt_lengths": list(lengths), "prefill_chunk": 1, **kw}
+    toks = {}
+    for mode, chunked in (("monolithic", False), ("chunked", True)):
+        eng = Engine(cfg, params, config=EngineConfig(
+            max_seq_len=1024, fpr_enabled=True, admission="fcfs",
+            chunked_prefill=chunked, prefill_chunk=1, **kw))
+        for prompt, stream, gid, mnt in reqs:
+            eng.submit(prompt, max_new_tokens=mnt, stream=stream,
+                       group_id=gid)
+        while not eng.sched.idle and eng.steps < 10_000:
+            eng.step()
+        toks[mode] = [list(map(int, r.generated))
+                      for r in sorted(eng.sched.done, key=lambda r: r.rid)]
+        snap = eng.metrics.snapshot()
+        out[mode] = {k: snap.get(k) for k in _CHUNK_KEYS}
+    out["tokens_identical"] = toks["monolithic"] == toks["chunked"]
+
+    n = 48 if smoke else 96
+    sim: dict = {"config": {**_CHUNK_SIM_KW, "n_requests": n}}
+    for label, cb in (("monolithic", 0), ("chunked", 1)):
+        sim[label] = admission_sim(AdmissionSimConfig(
+            chunk_blocks=cb, n_requests=n, **_CHUNK_SIM_KW))
+    out["sim"] = sim
+    return out
+
+
+def chunked_report(out: dict) -> None:
+    """Print the chunked summary; fail loud on any acceptance regression."""
+    m, c = out["monolithic"], out["chunked"]
+    sm = out["sim"]["monolithic"]
+    sc = out["sim"]["chunked"]
+    print(f"  chunked prefill: traces monolithic "
+          f"{m['engine.prefill_traces']} → chunked "
+          f"{c['engine.prefill_chunk_traces']} "
+          f"({c['engine.prefill_chunks']} chunks, "
+          f"{c['admission.chunk_grows']} grows), tokens identical: "
+          f"{out['tokens_identical']}")
+    print(f"  mice & elephants: queue-wait p99 (mice) monolithic "
+          f"{sm['queue_wait_p99_mice']} → chunked "
+          f"{sc['queue_wait_p99_mice']} "
+          f"(makespan {sm['makespan']} → {sc['makespan']})")
+    if not out["tokens_identical"]:
+        raise AssertionError("chunked prefill changed decoded tokens")
+    if c["engine.prefill_chunk_traces"] != 1 or c["engine.prefill_traces"]:
+        raise AssertionError(
+            f"chunked prefill must trace exactly once (got "
+            f"{c['engine.prefill_chunk_traces']} chunk traces, "
+            f"{c['engine.prefill_traces']} monolithic traces)")
+    if m["engine.prefill_traces"] < 2:
+        raise AssertionError(
+            "monolithic baseline no longer retraces per prompt shape — "
+            "the trace lost its mixed lengths")
+    if not sc["queue_wait_p99_mice"] < sm["queue_wait_p99_mice"]:
+        raise AssertionError(
+            f"chunked admission must beat monolithic on mice p99 "
+            f"queue-wait (got {sc['queue_wait_p99_mice']} vs "
+            f"{sm['queue_wait_p99_mice']})")
+
+
 def run(smoke: bool = False) -> dict:
     out = case(smoke=smoke)
     save("engine_trace", out)
@@ -305,6 +430,13 @@ def run_prefix(smoke: bool = False) -> dict:
     return out
 
 
+def run_chunked(smoke: bool = False) -> dict:
+    out = chunked_case(smoke=smoke)
+    save("BENCH_chunked", out)
+    chunked_report(out)
+    return out
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
@@ -312,3 +444,4 @@ if __name__ == "__main__":
     args = ap.parse_args()
     run(smoke=args.smoke)
     run_prefix(smoke=args.smoke)
+    run_chunked(smoke=args.smoke)

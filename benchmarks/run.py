@@ -8,10 +8,12 @@ deterministic artifacts (seeded and diffable run-to-run) —
 ``microbench_scoped.json`` (worker-scoped fences incl. the
 sharded-device-table engine trace), ``admission_smoke.json`` (admission
 governor: tokens bit-identical across policies, recycle-affinity sparing
-vs FCFS, over-commit give-up elimination, preemption counts) and
+vs FCFS, over-commit give-up elimination, preemption counts),
 ``BENCH_prefix.json`` (shared-prefix perf trajectory: unique-block
-saving, prefix hit rate, unique-block admission concurrency) — fast
-enough for every push.
+saving, prefix hit rate, unique-block admission concurrency) and
+``BENCH_chunked.json`` (chunked prefill: tokens bit-identical vs
+monolithic, one compile across prompt lengths, mice-and-elephants p99
+win) — fast enough for every push.
 """
 
 from __future__ import annotations
@@ -44,6 +46,8 @@ def main() -> int:
              lambda: admission_bench.run(smoke=True)),
             ("prefix smoke (deterministic BENCH_prefix.json)",
              lambda: engine_trace.run_prefix(smoke=True)),
+            ("chunked smoke (deterministic BENCH_chunked.json)",
+             lambda: engine_trace.run_chunked(smoke=True)),
         ]
     else:
         suites = [
@@ -55,6 +59,8 @@ def main() -> int:
              admission_bench.run),
             ("prefix sharing (BENCH_prefix.json perf trajectory)",
              engine_trace.run_prefix),
+            ("chunked prefill (BENCH_chunked.json mice & elephants)",
+             engine_trace.run_chunked),
             ("device_latency (Fig. 12)", device_latency.run),
             ("eviction (Fig. 14-17)", eviction.run),
             ("contexts (§IV-C2)", contexts_bench.run),

@@ -14,10 +14,13 @@ Beyond schema membership, required *sections* are enforced per artifact:
 ``microbench_scoped.json`` must carry the engine-trace **elastic** replay
 (reshards applied, tokens bit-identical, reshard refresh below one
 full-table re-upload) — losing the section would silently retire the
-elastic acceptance criterion — and ``BENCH_prefix.json`` (the
+elastic acceptance criterion — ``BENCH_prefix.json`` (the
 shared-prefix perf trajectory) must keep tokens identical, the ≥40%
 unique-block saving, zero in-set fence violations and the concurrency
-win.  The schema itself must know the ``fpr.eviction.``,
+win — and ``BENCH_chunked.json`` (chunked prefill) must keep tokens
+bit-identical to monolithic, the chunk path compiled exactly once
+across prompt lengths, and the mice-and-elephants ``queue_wait_p99``
+strictly better chunked than monolithic.  The schema itself must know the ``fpr.eviction.``,
 ``fpr.prefix.`` and topology (``table.reshards`` / ``device.reshard_*``)
 counter groups, so retiring them fails here too.
 
@@ -36,7 +39,7 @@ from repro.core.metrics import schema_violations
 
 #: the deterministic smoke artifacts the push lane publishes
 DEFAULT_ARTIFACTS = ("microbench_scoped.json", "admission_smoke.json",
-                     "BENCH_prefix.json")
+                     "BENCH_prefix.json", "BENCH_chunked.json")
 
 #: counter groups that must stay in the flat schema (satellite coverage:
 #: eviction-pass counters + elastic-topology counters + prefix sharing)
@@ -58,6 +61,10 @@ REQUIRED_SCHEMA_KEYS = (
     "device.reshard_moved_entries",
     "device.reshard_refreshed_bytes",
     "engine.num_workers",
+    "engine.prefill_chunks",
+    "engine.prefill_chunk_traces",
+    "engine.prefill_traces",
+    "admission.chunk_grows",
 )
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
@@ -137,6 +144,40 @@ def prefix_violations(path: str) -> list[str]:
     return bad
 
 
+def chunked_violations(path: str) -> list[str]:
+    """Required-section check: the chunked-prefill trajectory.
+
+    Applies to ``BENCH_chunked.json``; fails the push lane when chunking
+    stops being bit-identical, the fixed-shape chunk path starts
+    retracing, or the mice-and-elephants sim loses the strict
+    ``queue_wait_p99`` (mice) win over monolithic admission.
+    """
+    with open(path) as f:
+        payload = json.load(f)
+    chunked = payload.get("chunked")
+    mono = payload.get("monolithic")
+    if chunked is None or mono is None:
+        return ["missing chunked/monolithic sections"]
+    bad = []
+    if not payload.get("tokens_identical"):
+        bad.append("chunked tokens diverged from the monolithic run")
+    if chunked.get("engine.prefill_chunk_traces") != 1:
+        bad.append(f"chunk path traced "
+                   f"{chunked.get('engine.prefill_chunk_traces')} times "
+                   f"(fixed chunk shape must compile exactly once)")
+    if chunked.get("engine.prefill_traces"):
+        bad.append("chunked run fell back to the monolithic prefill path")
+    sim = payload.get("sim") or {}
+    sc = sim.get("chunked") or {}
+    sm = sim.get("monolithic") or {}
+    p99c = sc.get("queue_wait_p99_mice")
+    p99m = sm.get("queue_wait_p99_mice")
+    if p99c is None or p99m is None or not p99c < p99m:
+        bad.append(f"mice queue-wait p99 chunked {p99c} not strictly "
+                   f"below monolithic {p99m}")
+    return bad
+
+
 def main(argv: list[str]) -> int:
     paths = argv or [os.path.join(RESULTS, name)
                      for name in DEFAULT_ARTIFACTS]
@@ -159,6 +200,8 @@ def main(argv: list[str]) -> int:
             bad = bad + [f"elastic: {b}" for b in elastic_violations(path)]
         if name == "BENCH_prefix.json":
             bad = bad + [f"prefix: {b}" for b in prefix_violations(path)]
+        if name == "BENCH_chunked.json":
+            bad = bad + [f"chunked: {b}" for b in chunked_violations(path)]
         if bad:
             failed = True
             print(f"SCHEMA DRIFT in {name} — keys not in "

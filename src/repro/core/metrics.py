@@ -121,6 +121,9 @@ STABLE_SCHEMA = (
     "engine.completed",
     "engine.demand_pager_gave_up",
     "engine.num_workers",
+    "engine.prefill_chunk_traces",
+    "engine.prefill_chunks",
+    "engine.prefill_traces",
     "engine.steps",
     "engine.tokens",
     "engine.tokens_per_s",
@@ -135,6 +138,7 @@ ADMISSION_SCHEMA = (
     "admission.affinity_hit_rate",
     "admission.affinity_hits",
     "admission.affinity_misses",
+    "admission.chunk_grows",
     "admission.holds",
     "admission.ledger.capacity",
     "admission.ledger.committed",

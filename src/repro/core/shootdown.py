@@ -159,6 +159,27 @@ the shared block's refcount drops but its history is untouched, so
 neither side needs a fence.  The invariant "a refcounted block is never
 seen by the allocator or the fence path" is asserted at alloc/free and
 counted in ``fpr.prefix.in_set_violations`` (must stay 0).
+
+**Chunked prefill.**  Admitting a request on its first prefill chunk and
+growing the reservation per chunk (``Engine._prefill_chunk_step`` /
+``_grow_for_decode``) adds **no new fence source**: every chunk's blocks
+are acquired through ``FprMemoryManager.extend`` — the same §IV-A
+allocation-phase check as any mmap, so each recycled block's deferred
+invalidation is resolved right there (recycled in-context, elided by
+epoch/worker-epoch, or fenced scoped to its presence mask) before the
+chunk ever writes into it.  Chunking therefore only changes *when*
+blocks commit to a mapping — one chunk at a time instead of the whole
+window up front — never the fence rules those commits go through; a
+mid-prefill sequence is just a mapping that happens to still be growing.
+The interleaved step (prefill chunks and decode steps sharing one engine
+iteration) preserves the invariant for the same reason: the chunk and
+the decode batch read only rows of *their own* slots' table shards, and
+any fence triggered by one's allocation refreshes the covered shards
+before the next dispatch captures them, exactly as with whole-window
+prefill.  Eviction interacts through ``Engine._lru_victims``, which
+never offers the block a sequence's next write lands in (and offers
+nothing at all from a still-growing prefill mapping, whose entire
+written history the next chunk reads).
 """
 
 from __future__ import annotations

@@ -96,6 +96,19 @@ def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return _chunked_attention_vjp(q, k, v, causal, window, q_offset, chunk)
 
 
+def chunked_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          causal: bool = True, window: int | None = None,
+                          q_offset=0, chunk: int = 256) -> jax.Array:
+    """Inference-only chunked attention: same online softmax as
+    :func:`chunked_attention`, but without the custom VJP wrapper — whose
+    ``nondiff_argnums`` pin ``q_offset`` as a static (trace-time) value.
+    Here ``q_offset`` may be a traced scalar, which is what lets a
+    fixed-shape prefill *chunk* compile once and slide along the sequence
+    (see ``transformer.prefill_chunk``)."""
+    out, _ = _chunked_fwd(q, k, v, causal, window, q_offset, chunk)
+    return out
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
 def _chunked_attention_vjp(q, k, v, causal, window, q_offset, chunk):
     out, _ = _chunked_fwd(q, k, v, causal, window, q_offset, chunk)

@@ -773,3 +773,114 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, state: dict, *,
     logits = unembed(h[:, None], table)[:, 0]
     st["lengths"] = jnp.full((B,), S_tot, jnp.int32)
     return logits, st
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens: jax.Array, state: dict,
+                  start, *, moe_groups: int = 1) -> dict:
+    """One fixed-shape prefill chunk: tokens (B, C) at positions
+    ``start .. start+C-1`` (C a BLOCK_SIZE multiple; ``start``
+    block-aligned and *traced*, so the whole function compiles once per
+    (B, C) shape — no per-prompt-length retrace).
+
+    Attention-only decoder models (the engine gates on that): each layer
+    scatters the chunk's K/V rows into the paged pools at the chunk's
+    table columns, then attends the *full* gathered window with
+    ``q_offset=start``.  Keys past the causal frontier are garbage pool
+    rows, but the online softmax masks them to ``NEG_INF`` and
+    ``exp(NEG_INF - m)`` underflows to exactly ``0.0`` — so for every real
+    query row the result matches monolithic :func:`prefill` bit-for-bit
+    whenever the pool dtype round-trips K/V exactly (float32 caches; the
+    engine's bit-identity tests pin it).  Chunk-pad rows past the prompt
+    write deterministic garbage that decode rewrites position-by-position
+    before ever attending it.  Returns the new state dict; logits are not
+    computed — the engine's first decode step rewrites position S−1 and
+    produces them, identically in both prefill paths.
+    """
+    if any(m != "attn" for m in cfg.mixers) or cfg.enc_dec:
+        raise NotImplementedError(
+            "prefill_chunk supports attention-only decoder models; "
+            f"got mixers={cfg.mixers} enc_dec={cfg.enc_dec}")
+    B, C = tokens.shape
+    bs = BLOCK_SIZE
+    if C % bs:
+        raise ValueError(f"chunk length {C} must be a multiple of "
+                         f"BLOCK_SIZE={bs}")
+    st = dict(state)
+    x = embed_inputs(params, cfg, tokens)
+    positions = jnp.broadcast_to(start + jnp.arange(C)[None], (B, C))
+    prefix, period = cfg.segmentation()
+    tables_const = attn_mod.assemble_shard_tables(st["tables"])[:B]
+    M = tables_const.shape[1]
+    Cb = C // bs
+    # the chunk's table columns: a traced window of Cb columns starting at
+    # start//bs; columns past the window width map to -1 (writes drop)
+    cols = start // bs + jnp.arange(Cb)                       # (Cb,)
+    chunk_tab = jnp.where(cols[None, :] < M,
+                          jnp.take(tables_const,
+                                   jnp.minimum(cols, M - 1), axis=1),
+                          -1)                                 # (B, Cb)
+
+    def scatter_chunk(pool, seq):
+        """seq (B, C, ...) → the chunk's pool rows; <0 entries drop."""
+        seq = seq.reshape((B * Cb, bs) + seq.shape[2:])
+        tab = chunk_tab.reshape(-1)
+        neg = jnp.where(tab >= 0, tab, pool.shape[0])
+        return pool.at[neg].set(seq.astype(pool.dtype), mode="drop")
+
+    def gather_window(pool):
+        """Full-window keys (B, M*bs, ...) — unallocated (-1) columns
+        gather arbitrary resident rows; they sit past the causal frontier
+        and the attention mask zeroes them exactly."""
+        rows = jnp.take(pool, jnp.maximum(tables_const, 0).reshape(-1),
+                        axis=0)
+        return rows.reshape((B, M * bs) + pool.shape[2:])
+
+    def run_layer(lp, x, pools, a_dyn, sig):
+        _, ffn = sig
+        h = rms_norm(x, lp["mix"]["norm"], cfg.norm_eps)
+        q, k, v = attn_mod.qkv_proj(lp["mix"], h, cfg, positions)
+        kp = jax.lax.dynamic_index_in_dim(pools["k"], a_dyn, 0,
+                                          keepdims=False)
+        vp = jax.lax.dynamic_index_in_dim(pools["v"], a_dyn, 0,
+                                          keepdims=False)
+        kp = scatter_chunk(kp, k)
+        vp = scatter_chunk(vp, v)
+        pools = dict(pools)
+        pools["k"] = jax.lax.dynamic_update_index_in_dim(pools["k"], kp,
+                                                         a_dyn, 0)
+        pools["v"] = jax.lax.dynamic_update_index_in_dim(pools["v"], vp,
+                                                         a_dyn, 0)
+        o = attn_mod.chunked_attention_fwd(
+            q, gather_window(kp), gather_window(vp), causal=True,
+            window=cfg.attn.window, q_offset=start)
+        B_, C_, H, hd = o.shape
+        x = x + o.reshape(B_, C_, H * hd) @ lp["mix"]["wo"]
+        if ffn == "dense":
+            from repro.models.layers import dense_ffn
+            x = dense_ffn(lp["ffn"], x, cfg.norm_eps)
+        else:
+            x, _ = moe_mod.moe_ffn(lp["ffn"], x, cfg,
+                                   num_groups=moe_groups)
+        return x, pools
+
+    pools = {k: st[k] for k in st if k not in ("tables", "lengths")}
+    for i in range(prefix):
+        x, pools = run_layer(params["prefix"][i], x, pools, i,
+                             cfg.layer_sig(i))
+    if period and params["body"]:
+        sigs = [cfg.layer_sig(prefix + j) for j in range(period)]
+        n_blocks = (cfg.n_layers - prefix) // period
+
+        def blk(carry, inp):
+            x, pl = carry
+            lps, b = inp
+            for j in range(period):
+                # all-attn model: attn pool index of layer i is i itself
+                x, pl = run_layer(lps[j], x, pl, prefix + b * period + j,
+                                  sigs[j])
+            return (x, pl), None
+
+        (x, pools), _ = jax.lax.scan(
+            blk, (x, pools), (params["body"], jnp.arange(n_blocks)))
+    st.update(pools)
+    return st

@@ -87,6 +87,8 @@ class GovernorStats:
     preemptions_swap: int = 0
     affinity_hits: int = 0              # admission matched a freed stream
     affinity_misses: int = 0            # a freed stream was known, no match
+    chunk_grows: int = 0                # reservation growths past admission
+                                        # (chunked prefill / COW divergence)
 
     @property
     def affinity_hit_rate(self) -> Optional[float]:
@@ -152,6 +154,12 @@ class MemoryGovernor:
         # residual — the pager-fixpoint guarantee survives sharing.
         self.probe_shared = None
         self.shared_residual = None
+        # Chunked-prefill admission (engine-installed): when set to the
+        # chunk size in blocks, a fresh request is admitted when its first
+        # chunk plus one active tail block fits — the reservation then
+        # grows chunk-by-chunk through on_extend.  ``None`` keeps the
+        # monolithic full-window reservation.
+        self.chunk_blocks: "int | None" = None
 
     # ------------------------------------------------------------- windows
     def window_blocks(self, r) -> int:
@@ -167,20 +175,47 @@ class MemoryGovernor:
             return max(1, full - shared)
         return full
 
+    def admit_blocks(self, r) -> int:
+        """Blocks the *admission* reserves for ``r``.
+
+        Monolithic (``chunk_blocks is None``): the full shared-adjusted
+        window.  Chunked: the first prefill chunk plus one active tail
+        block — the rest is grown per chunk through :meth:`on_extend`.  A
+        swap-preempted re-admission carries a surviving mapping; its
+        reservation must cover the blocks that mapping actually holds
+        (they fault back in full), never a fresh chunk estimate.
+        """
+        m = getattr(r, "mapping", None)
+        if m is not None:
+            return max(1, m.num_blocks - getattr(m, "prefix_hits", 0))
+        full = self.window_blocks(r)
+        if self.chunk_blocks is None:
+            return full
+        return min(full, self.chunk_blocks + 1)
+
     def admissible_ever(self, r) -> bool:
-        """Can this request's window ever fit (even on an empty pool)?"""
+        """Can this request's window ever fit (even on an empty pool)?
+
+        Deliberately the *full* shared-adjusted window even under chunked
+        admission: chunks are individually small, but the full window
+        still bounds the request's final residency — a window that can
+        never fit would only ever grow into a guaranteed CapacityError.
+        """
         return self.window_blocks(r) <= self.ledger.limit
 
     def fits(self, r) -> bool:
         """The admission capacity predicate: the ledger can commit the
-        window (plus any unreserved shared-prefix residual) AND the tenant
-        (when quotas are on) is under its cap."""
-        blocks = self.window_blocks(r)
+        admission reservation (plus any unreserved shared-prefix residual)
+        AND the tenant (when quotas are on) is under its cap.  Quota is
+        charged on the full window estimate even under chunked admission —
+        tenant caps bound final residency, not first-chunk footprints."""
+        blocks = self.admit_blocks(r)
         residual = (int(self.shared_residual())
                     if self.shared_residual is not None else 0)
         if not self.ledger.fits(blocks + residual):
             return False
-        return self.quota is None or self.quota.allows(r.stream, blocks)
+        return (self.quota is None
+                or self.quota.allows(r.stream, self.window_blocks(r)))
 
     def _starvable_fits(self, r) -> bool:
         """``fits`` for starvation accounting (preemption beneficiaries,
@@ -228,7 +263,7 @@ class MemoryGovernor:
                     and any(fits(r) for r in queue)):
                 self.stats.holds += 1
             elif self.quota is not None and any(
-                    self.ledger.fits(self.window_blocks(r))
+                    self.ledger.fits(self.admit_blocks(r))
                     and not self.quota.allows(r.stream,
                                               self.window_blocks(r))
                     for r in queue):
@@ -270,8 +305,10 @@ class MemoryGovernor:
             tenant=None if request is None else request.stream))
 
     def on_admit(self, r, worker: int = 0) -> None:
-        """Commit the admitted request's window (raises on over-commit)."""
-        self.ledger.reserve(r.rid, self.window_blocks(r), worker)
+        """Commit the admitted request's reservation (raises on
+        over-commit) — the full window monolithically, the first chunk
+        plus tail under chunked admission (see :meth:`admit_blocks`)."""
+        self.ledger.reserve(r.rid, self.admit_blocks(r), worker)
         self._admit_order[r.rid] = next(self._admit_seq)
         self.stats.admitted += 1
 
@@ -292,9 +329,32 @@ class MemoryGovernor:
             self.ledger.shrink(r.rid, held - unique)
 
     def on_extend(self, r, n_blocks: int) -> None:
-        """A running sequence grew its mapping beyond the admitted window
-        (chunked-prefill direction): grow the reservation or refuse loudly."""
+        """A running sequence grew its mapping beyond the admitted
+        reservation (a prefill chunk, a COW divergence, a decode crossing
+        a block boundary): grow the reservation or refuse loudly."""
         self.ledger.grow(r.rid, n_blocks)
+        self.stats.chunk_grows += 1
+
+    def defer_growth(self, r, n_blocks: int, queue: list) -> bool:
+        """Should ``r``'s next chunk growth yield this step?
+
+        Consults the policy's optional ``defer_growth(r, n, queue, fits)``
+        hook — how a policy ranks a partially-prefilled grower against
+        queued mice (or an imminent reshard; see
+        :meth:`note_reshard_distance`).  Policies without the hook never
+        defer.  Deferral is advisory and must be bounded by the policy —
+        a grower always eventually proceeds.
+        """
+        hook = getattr(self.policy, "defer_growth", None)
+        if hook is None:
+            return False
+        return bool(hook(r, n_blocks, queue, self.fits))
+
+    def note_reshard_distance(self, steps: "int | None") -> None:
+        """Expose the distance (engine/sim steps) to the next planned
+        topology change; reshard-aware policies read it in ``select`` and
+        ``defer_growth`` (``None`` = no reshard scheduled)."""
+        self.policy.reshard_distance = steps
 
     def on_release(self, r) -> None:
         """Completion or preemption: return the window, remember the stream."""

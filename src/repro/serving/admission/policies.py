@@ -46,6 +46,10 @@ class AdmissionPolicy:
     #: still fits (capacity holds) — the governor counts those rounds as
     #: ``admission.holds``.  Orthogonal to event consumption (attach()).
     can_hold = False
+    #: steps until the next planned topology change (None = none scheduled)
+    #: — set by the governor (``note_reshard_distance``); reshard-aware
+    #: policies read it to defer elephant chunk-growth across the boundary.
+    reshard_distance: "int | None" = None
 
     def select(self, queue: Sequence, fits: FitsFn,
                freed_streams: Sequence[str]) -> Optional[int]:
@@ -146,12 +150,18 @@ class DeadlinePolicy(AdmissionPolicy):
     name = "deadline"
     can_hold = True
 
-    def __init__(self, default_sla: float = 64.0, hold_after: int = 8):
+    def __init__(self, default_sla: float = 64.0, hold_after: int = 8,
+                 reshard_horizon: int = 1):
         if hold_after < 1:
             raise ValueError(f"hold_after must be >= 1, got {hold_after}")
+        if reshard_horizon < 0:
+            raise ValueError(f"reshard_horizon must be >= 0, "
+                             f"got {reshard_horizon}")
         self.default_sla = default_sla
         self.hold_after = hold_after
+        self.reshard_horizon = reshard_horizon
         self._deferrals: dict[int, int] = {}        # rid → true leapfrogs
+        self._grow_deferrals: dict[int, int] = {}   # rid → growth deferrals
         self._last_deadlines: dict[int, tuple] = {}  # rid → deadline @select
         #: (queue rid tuple, EDF index order, rid → deadline) memo
         self._order_cache: "tuple[tuple, list, dict] | None" = None
@@ -212,6 +222,33 @@ class DeadlinePolicy(AdmissionPolicy):
             if not fits(queue[i]):
                 return queue[i].rid
         return None
+
+    def defer_growth(self, r, n_blocks, queue, fits):
+        """Rank a partially-prefilled grower against queued mice and the
+        topology schedule: defer ``r``'s chunk growth this step when a
+        strictly more urgent queued request currently fits (the freed
+        headroom seats the mouse first), or when a reshard lands within
+        ``reshard_horizon`` steps (an elephant's growth is the largest
+        single per-worker commitment a reshard would have to remap —
+        landing it after the boundary keeps the move set minimal).
+        Deferral is bounded per request (``hold_after``) so a grower
+        always eventually proceeds — no livelock behind a persistent
+        mouse stream.
+        """
+        seen = self._grow_deferrals.get(r.rid, 0)
+        if seen >= self.hold_after:
+            self._grow_deferrals.pop(r.rid, None)
+            return False
+        mine = self.deadline(r)
+        urgent_fits = any(self.deadline(q) < mine and fits(q)
+                          for q in queue)
+        near_reshard = (self.reshard_distance is not None
+                        and self.reshard_distance <= self.reshard_horizon)
+        if urgent_fits or near_reshard:
+            self._grow_deferrals[r.rid] = seen + 1
+            return True
+        self._grow_deferrals.pop(r.rid, None)
+        return False
 
     # ------------------------------------------------------ event consumption
     def attach(self, bus) -> None:

@@ -57,6 +57,14 @@ class EngineConfig(ConfigBase):
     # blocks (copy-on-write on divergence).  Only active under
     # ``fpr_enabled`` — see repro.core.prefix.
     prefix_sharing: bool = True
+    # Chunked prefill: admit a request when its *first* prefill chunk
+    # (``prefill_chunk`` blocks, plus one active tail block) fits, run one
+    # fixed-shape chunk per engine step interleaved with decode, and grow
+    # the reservation chunk-by-chunk through the governor's
+    # ``on_extend``/§IV-A allocation path.  Attention-only decoder models
+    # (the engine falls back to monolithic prefill otherwise).
+    chunked_prefill: bool = False
+    prefill_chunk: int = 2             # blocks per prefill chunk
 
     def __post_init__(self) -> None:
         if self.num_blocks <= 0 or self.max_batch <= 0:
@@ -76,6 +84,9 @@ class EngineConfig(ConfigBase):
             raise ValueError(
                 "admission must be None, a policy name or a GovernorConfig, "
                 f"got {type(self.admission).__name__}")
+        if self.prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1 block, "
+                             f"got {self.prefill_chunk}")
 
     def governor_config(self) -> Optional[GovernorConfig]:
         """The resolved admission config (None ⇒ governor disabled)."""

@@ -121,43 +121,103 @@ class Engine:
         # with non-resident rows squashed to -1 — tokens are suspect.
         self.demand_pager_gave_up = 0
 
+        # Chunked prefill: the fixed-shape chunk path implements
+        # attention-only decoder models; anything else falls back to
+        # monolithic prefill (and the monolithic full-window admission
+        # that goes with it).  Setting the governor's ``chunk_blocks``
+        # switches admission to first-chunk-plus-tail reservations that
+        # grow per chunk through ``on_extend``.
+        self._chunked = (config.chunked_prefill
+                         and all(m == "attn" for m in cfg.mixers)
+                         and not cfg.enc_dec)
+        self.chunk_tokens = config.prefill_chunk * self.cache.block_size
+        self.prefill_chunks = 0
+        # jit retrace counters: the closures below increment at TRACE time
+        # only (the Python body runs when XLA compiles a new shape), so
+        # the fixed-shape chunk path holds _prefill_chunk_traces at 1
+        # across mixed prompt lengths — asserted in
+        # tests/test_chunked_prefill.py
+        self._prefill_traces = 0
+        self._prefill_chunk_traces = 0
+        if self._chunked and self.governor is not None:
+            self.governor.chunk_blocks = config.prefill_chunk
+
         self._decode = jax.jit(
             lambda p, st, t: tfm.decode_step(p, cfg, st, t,
                                              page_impl=config.page_impl))
-        self._prefill = jax.jit(
-            lambda p, t, st: tfm.prefill(p, cfg, t, st))
+
+        def _prefill_traced(p, t, st):
+            self._prefill_traces += 1
+            return tfm.prefill(p, cfg, t, st)
+
+        def _prefill_chunk_traced(p, t, st, start):
+            self._prefill_chunk_traces += 1
+            return tfm.prefill_chunk(p, cfg, t, st, start)
+
+        self._prefill = jax.jit(_prefill_traced)
+        self._prefill_chunk = jax.jit(_prefill_chunk_traced)
 
     # ------------------------------------------------------------ lifecycle
     def submit(self, prompt, max_new_tokens: int, stream: str = "default",
                group_id: int = 1, priority: int = 0,
                sla: float | None = None) -> int:
-        if self.governor is not None:
-            need = len(prompt) + max_new_tokens
-            window = max(1, -(-need // self.cache.block_size))
-            if window > self.governor.ledger.limit:
-                raise CapacityError(
-                    f"request window of {window} blocks can never fit the "
-                    f"admission limit of {self.governor.ledger.limit}")
         # prompt-block chain hashes are computed exactly once, here — the
         # governor's probe and the allocation both reuse them
-        return self.sched.submit(prompt, max_new_tokens, stream, group_id,
-                                 priority, sla=sla,
-                                 prefix_hashes=self.cache.prefix_hashes(
-                                     prompt))
+        rid = self.sched.submit(prompt, max_new_tokens, stream, group_id,
+                                priority, sla=sla,
+                                prefix_hashes=self.cache.prefix_hashes(
+                                    prompt))
+        if self.governor is not None:
+            # fast-reject on the governor's own admissibility estimate, not
+            # the raw prompt+budget window: a heavily shared long prompt
+            # attaches its prefix blocks instead of allocating them, so the
+            # shared-adjusted window is what bounds final residency — the
+            # raw check wrongly refused prompts admissible_ever accepts
+            # (and, under chunked admission, prompts the chunk machine can
+            # serve within the limit)
+            r = self.sched.queue[-1]
+            if not self.governor.admissible_ever(r):
+                self.sched.queue.pop()
+                raise CapacityError(
+                    f"request window of {self.governor.window_blocks(r)} "
+                    f"blocks can never fit the admission limit of "
+                    f"{self.governor.ledger.limit}")
+        return rid
 
     def _lru_victims(self):
-        """LRU over running sequences' oldest blocks (outside any window)."""
+        """Eviction candidates over running sequences, never the block the
+        next decode write lands in.
+
+        The old ``range(m.num_blocks - 1)`` bound protected only the
+        window's *last* block — but mid-decode the active block
+        ``_used_blocks(r) - 1`` sits far below that, so the evictor could
+        swap out the very block the next token writes into (the write
+        would land on a ``-1`` row and silently drop).  Victims are
+        yielded settled-history first (true LRU: coldest, already
+        written), then the never-written window tail (pure allocation
+        headroom — nothing to lose, which is what lets the legacy
+        over-commit mode squeeze new windows in).  A chunked-prefill
+        sequence yields nothing: every chunk's attention reads the whole
+        written history and scatters into the freshly grown tail, so its
+        entire mapping is active until promotion.
+        """
         for slot in sorted(self.sched.running):
             r = self.sched.running[slot]
             m = r.mapping
-            if m is None:
+            if m is None or r.state == "prefill":
                 continue
             is_fpr = m.ctx_id != 0
-            for idx in range(m.num_blocks - 1):      # never the active block
-                yield m.mapping_id, idx, is_fpr
+            active = self._used_blocks(r) - 1
+            for idx in range(m.num_blocks):
+                if idx != active:
+                    yield m.mapping_id, idx, is_fpr
 
     def _used_blocks(self, r: Request) -> int:
-        """Blocks of ``r``'s window the next decode step will read."""
+        """Blocks of ``r``'s window the next engine step will touch."""
+        if r.state == "prefill":
+            # every chunk attends the full written history and scatters
+            # into the tail — the whole mapping must be resident
+            return r.mapping.num_blocks
         return min(-(-r.length // self.cache.block_size),
                    r.mapping.num_blocks)
 
@@ -220,8 +280,23 @@ class Engine:
             if r.mapping is not None:
                 # swap-preempted re-admission: mapping and generated tokens
                 # survived; the demand pager faults the blocks back in
+                if self._chunked and r.prefill_pos < len(r.prompt):
+                    # preempted mid-prefill (swap strategy): resume the
+                    # chunk state machine where it left off
+                    r.state = "prefill"
                 continue
-            need = len(r.prompt) + r.max_new_tokens
+            if self._chunked:
+                # admit on the current length: allocate the first chunk
+                # plus one active tail block, never the whole window — the
+                # mapping grows chunk-by-chunk (and per decode block)
+                # through the governed extend path
+                bs = self.cache.block_size
+                full = max(1, -(-(len(r.prompt) + r.max_new_tokens) // bs))
+                need = min(full, self.config.prefill_chunk + 1) * bs
+                r.prefill_pos = 0
+                r.state = "prefill"
+            else:
+                need = len(r.prompt) + r.max_new_tokens
             while True:
                 try:
                     r.mapping = self.cache.alloc_sequence(
@@ -247,7 +322,10 @@ class Engine:
                 self._reserve_settle(
                     r, lambda: self.governor.on_allocated(
                         r, m.num_blocks - m.prefix_hits))
-            self._prefill_request(r)
+            if not self._chunked:
+                self._prefill_request(r)
+            # chunked requests stay in state "prefill": step() runs one
+            # fixed-shape chunk per step until the prompt is covered
 
     def _make_room(self, r: Request) -> bool:
         """Free blocks under allocation pressure: evict, else (governed)
@@ -410,6 +488,97 @@ class Engine:
         # benchmarks; otherwise we decode from the argmax here)
         del logits
 
+    def _prefill_chunk_step(self, r: Request) -> None:
+        """One fixed-shape prefill chunk for ``r`` — the chunked state
+        machine's single transition.
+
+        Grows the reservation ahead of the chunk through the governor
+        (``on_extend`` escalating evict → preempt → ``CapacityError``,
+        exactly the admission ladder) and the mapping through the
+        §IV-A-checked allocation path, runs the jitted chunk at a traced
+        ``start`` offset (one compilation for every prompt length), and
+        promotes the request to ``"running"`` once the prompt is covered.
+        The policy may defer the growth for a step (``defer_growth``) to
+        seat a more urgent queued request first — bounded, never a
+        livelock.
+        """
+        m = r.mapping
+        bs = self.cache.block_size
+        S = len(r.prompt)
+        start = r.prefill_pos
+        C = self.chunk_tokens
+        full = max(1, -(-(S + r.max_new_tokens) // bs))
+        # cover this chunk's tokens plus one active tail block, capped at
+        # the full window (which admission already proved can ever fit)
+        target = min(-(-(start + C) // bs) + 1, full)
+        grow = target - m.num_blocks
+        if grow > 0:
+            gov = self.governor
+            if gov is not None:
+                if gov.defer_growth(r, grow, self.sched.queue):
+                    return            # yield this step's headroom
+                self._reserve_settle(r, lambda: gov.on_extend(r, grow))
+            while True:
+                try:
+                    self.cache.extend_sequence(m, grow,
+                                               worker=self._worker_of(r))
+                    break
+                except Exception as e:
+                    if self._make_room(r):
+                        continue
+                    if gov is not None:
+                        raise CapacityError(
+                            f"chunked prefill cannot grow request {r.rid} "
+                            f"by {grow} blocks: pool exhausted and no "
+                            "eviction or preemption victim remains") from e
+                    raise
+        end = min(S, start + C)
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :end - start] = r.prompt[start:end]
+        view = {}
+        for k, v in self.cache.state.items():
+            if k == "tables":
+                view[k] = self.cache.slot_tables({0: m})[:1]
+            elif k == "lengths":
+                view[k] = jnp.zeros((1,), jnp.int32)
+            else:
+                view[k] = v
+        new = self._prefill_chunk(self.params, jnp.asarray(toks), view,
+                                  jnp.int32(start))
+        for k, v in new.items():
+            if k not in ("tables", "lengths"):
+                self.cache.state[k] = v
+        r.prefill_pos = end
+        self.prefill_chunks += 1
+        if r.prefill_pos >= S:
+            r.state = "running"    # decodes this very step (interleaved)
+
+    def _grow_for_decode(self, r: Request) -> bool:
+        """Chunk-admitted mappings may not cover the next write block yet —
+        grow one block ahead of the decode write, through the same
+        governed extend path every chunk uses."""
+        m = r.mapping
+        j = (r.length - 1) // self.cache.block_size
+        if j < m.num_blocks:
+            return False
+        grow = j + 1 - m.num_blocks
+        self._reserve_settle(
+            r, lambda: self.governor.on_extend(r, grow))
+        while True:
+            try:
+                self.cache.extend_sequence(m, grow,
+                                           worker=self._worker_of(r))
+                return True
+            except Exception as e:
+                if self._make_room(r):
+                    continue
+                if self.governor is not None:
+                    raise CapacityError(
+                        f"decode cannot grow request {r.rid} by {grow} "
+                        "blocks: pool exhausted and no eviction or "
+                        "preemption victim remains") from e
+                raise
+
     # -------------------------------------------------------- demand paging
     def _pager_fixpoint(self) -> bool:
         """Scan running windows to a resident fixpoint (bounded passes).
@@ -469,6 +638,19 @@ class Engine:
             if not self._outstanding_faults():
                 return
 
+    def _settle_residency(self) -> None:
+        """Run the pager to a resident fixpoint, escalating a give-up:
+        legacy mode counts it (``demand_pager_gave_up``), the governed
+        mode preempts victims until the pager converges.  Called once per
+        step before any device work, and again after mid-step allocations
+        (chunk/decode-boundary growth can evict an already-faulted
+        block)."""
+        if self._pager_fixpoint() and self._outstanding_faults():
+            if self.governor is None:
+                self.demand_pager_gave_up += 1
+            else:
+                self._relieve_pressure()
+
     # ----------------------------------------------------------------- step
     def step(self) -> int:
         """One engine iteration; returns tokens generated."""
@@ -491,13 +673,31 @@ class Engine:
         # give-up instead *preempts* victims until the pager converges
         # (raising CapacityError if no victim remains) — pressure becomes
         # preemption, never silent token divergence.
-        if self._pager_fixpoint() and self._outstanding_faults():
-            if self.governor is None:
-                self.demand_pager_gave_up += 1
-            else:
-                self._relieve_pressure()
+        self._settle_residency()
         if not self.sched.running:
             return 0
+
+        # chunked prefill: at most one fixed-shape chunk per prefill-state
+        # slot per step, interleaved with the decode below (a request
+        # whose last chunk lands this step decodes this step).  Chunk and
+        # decode-boundary growth allocate fresh blocks, which can evict an
+        # already-faulted block of another slot — so the residency
+        # fixpoint is restored afterwards, before the tables upload.
+        if self._chunked:
+            progressed = False
+            for slot in sorted(self.sched.running):
+                r = self.sched.running.get(slot)
+                if r is None:
+                    continue          # preempted by a mid-pass growth
+                if r.state == "prefill":
+                    self._prefill_chunk_step(r)
+                    progressed = True
+                elif r.state == "running":
+                    progressed |= self._grow_for_decode(r)
+            if progressed:
+                self._settle_residency()
+                if not self.sched.running:
+                    return 0
 
         # copy-on-write pass: the incoming token is (re)written at position
         # r.length−1, so a sequence still pointing a *shared* block at that
@@ -518,17 +718,30 @@ class Engine:
                     self._reserve_settle(
                         r, lambda: self.governor.on_extend(r, 1))
 
+        # decode covers only fully-prefilled slots; a mid-prefill slot is
+        # excluded from the tables upload (its row reads -1, so the decode
+        # kernel's write for it drops — never a corrupting write at
+        # position 0 of a half-built sequence)
+        decoders = {s: r for s, r in self.sched.running.items()
+                    if r.state == "running"}
+        if not decoders:
+            # every occupied slot is still mid-prefill: the step did its
+            # chunk work; decode resumes once a request promotes
+            self.steps += 1
+            self.wall_s += time.perf_counter() - t0
+            return 0
+
         # the incoming token is the last *known* token; it is (re)written at
         # its own position r.length−1 (idempotent for the prompt tail) and
         # the logits predict position r.length.
         lengths = np.zeros((self.cache.max_batch,), np.int32)
         tokens = np.zeros((self.cache.max_batch,), np.int32)
-        for slot, r in self.sched.running.items():
+        for slot, r in decoders.items():
             lengths[slot] = r.length - 1
             tokens[slot] = (r.generated[-1] if r.generated
                             else r.prompt[-1])
         self.cache.update_tables(
-            {s: r.mapping for s, r in self.sched.running.items()}, lengths)
+            {s: r.mapping for s, r in decoders.items()}, lengths)
 
         st = dict(self.cache.state)
         logits, new_state = self._decode(self.params, st,
@@ -537,7 +750,7 @@ class Engine:
         lg = np.asarray(logits)
 
         made = 0
-        for slot, r in list(self.sched.running.items()):
+        for slot, r in list(decoders.items()):
             nxt = int(lg[slot].argmax())
             r.generated.append(nxt)
             made += 1
@@ -575,4 +788,7 @@ class Engine:
                 self.tokens_generated / self.wall_s, 2)
             if self.wall_s else None,
             "completed": len(self.sched.done),
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_traces": self._prefill_traces,
+            "prefill_chunk_traces": self._prefill_chunk_traces,
         }

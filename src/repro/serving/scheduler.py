@@ -57,8 +57,10 @@ class Request:
     slot: Optional[int] = None
     mapping: Optional[Mapping] = None
     generated: list = field(default_factory=list)
-    state: str = "queued"              # queued|running|done
+    state: str = "queued"              # queued|prefill|running|done
     preemptions: int = 0
+    prefill_pos: int = 0               # prompt tokens already prefilled
+                                       # (chunked prefill state machine)
 
     @property
     def length(self) -> int:
@@ -91,12 +93,20 @@ class Scheduler:
     def admissible(self) -> list[int]:
         return [s for s in range(self.max_batch) if s not in self.running]
 
-    def place(self, r: Request, slot: int) -> None:
-        """Seat an already-dequeued request in a free slot."""
+    def place(self, r: Request, slot: int, state: str = "running") -> None:
+        """Seat an already-dequeued request in a free slot.
+
+        ``state="prefill"`` seats a chunked-prefill request: it occupies a
+        slot and its mapping participates in eviction/paging, but decode
+        skips it until the engine promotes it to ``"running"`` once every
+        prompt chunk is in the cache.
+        """
         if slot in self.running:
             raise ValueError(f"slot {slot} already occupied")
+        if state not in ("running", "prefill"):
+            raise ValueError(f"cannot place a request in state {state!r}")
         r.slot = slot
-        r.state = "running"
+        r.state = state
         self.running[slot] = r
 
     def admit(self) -> list[Request]:
@@ -140,6 +150,7 @@ class Scheduler:
                 free(r.mapping)
                 r.mapping = None
             r.generated.clear()        # re-prefill on re-admission
+            r.prefill_pos = 0          # chunked prefill restarts from 0
         self.queue.insert(0, r)
 
     @property

@@ -27,7 +27,8 @@ from repro.core.contexts import ContextScope, derive_context
 from repro.core.eviction import WatermarkEvictor, Watermarks
 from repro.core.fpr import FprMemoryManager
 from repro.core.shootdown import FenceCostModel, FenceEngine
-from repro.serving.admission import GovernorConfig, MemoryGovernor
+from repro.serving.admission import (CapacityError, GovernorConfig,
+                                     MemoryGovernor)
 
 
 @dataclass
@@ -319,6 +320,23 @@ class AdmissionSimConfig:
                                        # the SLA-aware deadline policy
     arrival_every: float = 0.0         # virtual steps between arrivals
                                        # (0 ⇒ closed loop, all at t=0)
+    chunk_blocks: int = 0              # >0 ⇒ chunked-prefill admission: a
+                                       # job is admitted on its first chunk
+                                       # (+1 tail block) and the ledger
+                                       # reservation grows one chunk per
+                                       # step — elephants take capacity
+                                       # gradually instead of blocking the
+                                       # whole window at admission, which
+                                       # is what bounds mice queue-wait.
+                                       # 0 ⇒ monolithic full-window admits.
+    num_workers: int = 1               # ledger shares (per-worker splits)
+    reshard_iters: tuple = ()          # ((step, new_num_workers), …):
+                                       # mid-run topology changes; the
+                                       # governor's reshard remaps ledger
+                                       # shares, and reshard-aware policies
+                                       # see the upcoming distance
+                                       # (note_reshard_distance) to defer
+                                       # elephant chunk growth across it
     seed: int = 0
 
 
@@ -336,18 +354,30 @@ class _SimJob:
     done_steps: int = 0
     wait_steps: int = 0
     swapped: bool = False
+    mapping: "object | None" = None    # swap-preempted holder: admit_blocks
+                                       # must re-reserve the held blocks,
+                                       # never a fresh chunk estimate
 
     def __post_init__(self) -> None:
         self.prompt = range(self.window)     # block_size 1 ⇒ window blocks
+
+
+@dataclass
+class _HeldBlocks:
+    """What a swap-preempted sim job still holds (mapping stand-in)."""
+
+    num_blocks: int
+    prefix_hits: int = 0
 
 
 def admission_sim(cfg: AdmissionSimConfig) -> dict:
     """Deterministic admission/preemption sweep point (virtual time)."""
     rng = np.random.default_rng(cfg.seed)
     gov = MemoryGovernor(
-        cfg.pool_blocks, block_size=1,
+        cfg.pool_blocks, block_size=1, num_workers=cfg.num_workers,
         config=GovernorConfig(policy=cfg.policy, preempt=cfg.preempt,
                               overcommit_ratio=cfg.overcommit_ratio))
+    gov.chunk_blocks = cfg.chunk_blocks or None
     jobs = []
     for i in range(cfg.n_requests):
         if cfg.large_frac > 0:
@@ -376,16 +406,39 @@ def admission_sim(cfg: AdmissionSimConfig) -> dict:
     def preempt(victim: _SimJob) -> None:
         nonlocal overhead, wasted_steps
         slot = next(s for s, j in running.items() if j is victim)
+        held = (gov.ledger.entries[victim.rid].blocks
+                if gov.ledger.holds(victim.rid) else victim.window)
         del running[slot]
         gov.on_release(victim)
         if cfg.preempt == "swap":
-            overhead += victim.window * cfg.swap_cost_per_block
+            overhead += held * cfg.swap_cost_per_block
             victim.swapped = True
+            # re-admission must re-reserve exactly what the victim still
+            # holds (its blocks fault back in full), not a chunk estimate
+            victim.mapping = _HeldBlocks(held)
         else:
             wasted_steps += victim.done_steps
-            victim.done_steps = 0
+            victim.done_steps = 0      # chunked growth restarts from 0 too
+            victim.mapping = None
         gov.count_preempt(cfg.preempt)
         queue.insert(0, victim)
+
+    def grow(job: _SimJob, n: int) -> bool:
+        """Grow ``job``'s reservation by ``n`` blocks; False = the chunk
+        stalls this step.  The sim's growth *waits* for freed capacity
+        rather than preempting seated jobs — evicting a seated mouse to
+        grow an elephant would invert every ordering the policies encode
+        (the real engine escalates through its evictor first, which the
+        block-ledger sim has no analogue for)."""
+        try:
+            gov.on_extend(job, n)
+            return True
+        except CapacityError:
+            return False
+
+    reshard_at = dict(cfg.reshard_iters)
+    workers = cfg.num_workers
+    reshards = 0
 
     while pending or queue or running:
         steps += 1
@@ -394,6 +447,15 @@ def admission_sim(cfg: AdmissionSimConfig) -> dict:
                                "a job can never be admitted")
         while pending and pending[0].arrival <= steps:
             queue.append(pending.pop(0))
+        # --- elastic topology: remap ledger shares, advertise distance ---
+        if steps in reshard_at:
+            new_w = reshard_at[steps]
+            gov.reshard(new_w, [w % new_w for w in range(workers)])
+            workers = new_w
+            reshards += 1
+        upcoming = [s for s in reshard_at if s > steps]
+        gov.note_reshard_distance(
+            min(upcoming) - steps if upcoming else None)
         # --- priority pressure: evict lower classes for a blocked one ----
         while True:
             bi = gov.wants_priority_preempt(queue)
@@ -404,6 +466,48 @@ def admission_sim(cfg: AdmissionSimConfig) -> dict:
             if victim is None:
                 break
             preempt(victim)
+        # --- chunked growth: reservations track written blocks -----------
+        # A chunk-admitted job holds only what it has written plus
+        # ``chunk_blocks + 1`` of headroom; its service fills one window
+        # block per ``steps_per_block``, so elephants take capacity
+        # gradually across their whole service instead of locking the
+        # full window at admission (what starves mice monolithically).
+        # Growers run *before* admission: freed capacity reaches a
+        # partially-grown sequence ahead of the queue by default, and it
+        # is the policy's defer_growth that explicitly yields a step's
+        # headroom to a more urgent queued mouse (or parks growth across
+        # an imminent reshard) — ranking growers vs mice is policy, not
+        # loop order.
+        if cfg.chunk_blocks:
+            def can_write(j: _SimJob) -> bool:
+                held_j = gov.ledger.entries[j.rid].blocks
+                return j.done_steps < held_j * cfg.steps_per_block
+            for slot, job in list(running.items()):
+                if running.get(slot) is not job:
+                    continue
+                held = gov.ledger.entries[job.rid].blocks
+                target = min(job.done_steps // cfg.steps_per_block
+                             + cfg.chunk_blocks + 1, job.window)
+                n = target - held
+                if n <= 0:
+                    continue
+                if gov.defer_growth(job, n, queue):
+                    continue           # policy yields the step's headroom
+                while not grow(job, n):
+                    # a stalled growth normally just waits for a decoder
+                    # to release capacity — but when *every* runner is a
+                    # stalled grower nothing will ever release, and the
+                    # pool deadlocks; escalate to preemption (the
+                    # engine's evict→preempt ladder) to keep it live
+                    if any(j is not job and can_write(j)
+                           for j in running.values()):
+                        break
+                    victim = (gov.choose_victim(running,
+                                                exclude=(job.rid,))
+                              if len(running) > 1 else None)
+                    if victim is None:
+                        break
+                    preempt(victim)
         # --- admission (policy order, ledger-checked) --------------------
         while len(running) < cfg.max_batch:
             idx = gov.select(queue)
@@ -413,6 +517,7 @@ def admission_sim(cfg: AdmissionSimConfig) -> dict:
             slot = next(s for s in range(cfg.max_batch) if s not in running)
             running[slot] = job
             gov.on_admit(job, slot)
+            job.mapping = None  # reservation re-seated; holder consumed
             if job.swapped:     # fault-back; out+in paid at preempt time
                 job.swapped = False
             else:
@@ -425,6 +530,10 @@ def admission_sim(cfg: AdmissionSimConfig) -> dict:
             preempt(victim)
         # --- decode + queue latency -------------------------------------
         for slot, job in list(running.items()):
+            if (cfg.chunk_blocks and job.done_steps
+                    >= gov.ledger.entries[job.rid].blocks
+                    * cfg.steps_per_block):
+                continue           # out of reserved blocks — stalled grower
             job.done_steps += 1
             if job.done_steps >= job.service_steps:
                 del running[slot]
@@ -434,15 +543,27 @@ def admission_sim(cfg: AdmissionSimConfig) -> dict:
             job.wait_steps += 1
 
     waits = [j.wait_steps * cfg.step_time for j in jobs]
+    # mice = the small-window class of the bimodal mix (everyone, when the
+    # workload is unimodal) — their tail is what chunked admission and the
+    # deadline policy's holds are protecting
+    mice = ([j for j in jobs if j.window == cfg.window_lo]
+            if cfg.large_frac > 0 else jobs)
+    mice_waits = ([j.wait_steps * cfg.step_time for j in mice] or [0.0])
     g = gov.stats
     return {
         "policy": cfg.policy, "preempt": cfg.preempt,
         "overcommit_ratio": cfg.overcommit_ratio,
+        "chunk_blocks": cfg.chunk_blocks,
         "completed": len(done),
         "makespan": steps * cfg.step_time,
         "queue_wait_mean": round(float(np.mean(waits)), 3),
         "queue_wait_p99": round(float(np.percentile(waits, 99)), 3),
         "queue_wait_max": round(float(np.max(waits)), 3),
+        "queue_wait_mean_mice": round(float(np.mean(mice_waits)), 3),
+        "queue_wait_p99_mice": round(float(np.percentile(mice_waits, 99)),
+                                     3),
+        "chunk_grows": g.chunk_grows,
+        "reshards": reshards,
         "preemptions_recompute": g.preemptions_recompute,
         "preemptions_swap": g.preemptions_swap,
         "rejected_overcommit": g.rejected_overcommit,

@@ -149,16 +149,24 @@ class TestGovernor:
 
 # ============================================== interleaving soundness property
 def run_interleaving(ops, *, capacity=12, max_batch=4, policy="fcfs",
-                     preempt="recompute", overcommit_ratio=1.0):
-    """Drive submit/admit/complete/preempt ops; the ledger must stay sound.
+                     preempt="recompute", overcommit_ratio=1.0,
+                     num_workers=1):
+    """Drive submit/admit/complete/preempt/grow/shrink/reshard ops; the
+    ledger must stay sound (``check()``) every step, and its entries must
+    exactly track an independently maintained shadow of every live
+    reservation across the whole interleaving.
 
     Returns the number of admissions, so callers can assert liveness.
     """
-    gov = MemoryGovernor(capacity, block_size=1, config=GovernorConfig(
-        policy=policy, preempt=preempt, overcommit_ratio=overcommit_ratio))
+    gov = MemoryGovernor(capacity, block_size=1, num_workers=num_workers,
+                         config=GovernorConfig(
+                             policy=policy, preempt=preempt,
+                             overcommit_ratio=overcommit_ratio))
     queue, running = [], {}
+    shadow = {}                                          # rid → held blocks
     rid = 0
     admitted = 0
+    workers = num_workers
     for kind, val in ops:
         if kind == 0:                                    # submit
             rid += 1
@@ -172,28 +180,52 @@ def run_interleaving(ops, *, capacity=12, max_batch=4, policy="fcfs",
                 slot = next(s for s in range(max_batch) if s not in running)
                 running[slot] = r
                 gov.on_admit(r, slot)
+                shadow[r.rid] = gov.admit_blocks(r)
                 admitted += 1
-        elif kind == 2 and running:                      # complete
+        elif kind == 2 and running:                      # complete (release)
             slot = sorted(running)[val % len(running)]
-            gov.on_release(running.pop(slot))
+            r = running.pop(slot)
+            gov.on_release(r)
+            shadow.pop(r.rid)
         elif kind == 3 and running:                      # preempt
             victim = gov.choose_victim(running)
             if victim is not None:
                 slot = next(s for s, r in running.items() if r is victim)
                 del running[slot]
                 gov.on_release(victim)
+                shadow.pop(victim.rid)
                 gov.count_preempt(preempt)
                 queue.insert(0, victim)
+        elif kind == 4 and running:                      # grow (chunk/extend)
+            slot = sorted(running)[val % len(running)]
+            r = running[slot]
+            n = 1 + val % 3
+            try:
+                gov.on_extend(r, n)
+                shadow[r.rid] += n
+            except CapacityError:                        # refused, no trace
+                pass
+        elif kind == 5 and running:                      # shrink (reconcile)
+            slot = sorted(running)[val % len(running)]
+            r = running[slot]
+            if shadow[r.rid] > 1:
+                n = 1 + val % (shadow[r.rid] - 1)
+                gov.ledger.shrink(r.rid, n)
+                shadow[r.rid] -= n
+        elif kind == 6:                                  # reshard
+            new_w = 1 + val % 4
+            gov.reshard(new_w, [w % new_w for w in range(workers)])
+            workers = new_w
         gov.ledger.check()
         assert gov.ledger.committed <= gov.ledger.limit
-        assert sum(gov.window_blocks(r) for r in running.values()) \
-            <= gov.ledger.committed
+        assert {i: e.blocks for i, e in gov.ledger.entries.items()} \
+            == shadow                                    # no drift, ever
     return admitted
 
 
-def seeded_ops(seed, n=200):
+def seeded_ops(seed, n=200, kinds=4):
     rng = np.random.RandomState(seed)
-    return [(int(rng.randint(0, 4)), int(rng.randint(0, 1 << 16)))
+    return [(int(rng.randint(0, kinds)), int(rng.randint(0, 1 << 16)))
             for _ in range(n)]
 
 
@@ -209,6 +241,15 @@ class TestInterleavingSoundness:
             run_interleaving(seeded_ops(seed), overcommit_ratio=1.7,
                              preempt="swap")
 
+    @pytest.mark.parametrize("seed", range(8))
+    def test_seeded_interleavings_grow_shrink_reshard(self, seed):
+        """The chunked-prefill op mix: reservations grow mid-flight,
+        shrink on prefix reconcile, and the worker topology reshards
+        underneath — the ledger stays sound and drift-free throughout."""
+        admitted = run_interleaving(seeded_ops(seed, kinds=7),
+                                    num_workers=4)
+        assert admitted > 0
+
     @pytest.mark.slow
     @settings(max_examples=200, deadline=None)
     @given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 1 << 16)),
@@ -217,6 +258,18 @@ class TestInterleavingSoundness:
            st.floats(1.0, 2.0))
     def test_random_interleavings_never_overcommit(self, ops, policy, ratio):
         run_interleaving(ops, policy=policy, overcommit_ratio=ratio)
+
+    @pytest.mark.slow
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.tuples(st.integers(0, 6), st.integers(0, 1 << 16)),
+                    max_size=400),
+           st.sampled_from(["fcfs", "recycle", "priority", "deadline"]),
+           st.floats(1.0, 2.0),
+           st.integers(1, 4))
+    def test_random_growth_interleavings_never_overcommit(
+            self, ops, policy, ratio, num_workers):
+        run_interleaving(ops, policy=policy, overcommit_ratio=ratio,
+                         num_workers=num_workers)
 
 
 # ================================================================ engine level

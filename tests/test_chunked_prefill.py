@@ -1,0 +1,222 @@
+"""Chunked-prefill continuous batching invariants.
+
+The chunk machine's contract: (1) chunking only changes *when* prompt
+blocks commit — decoded tokens are bit-identical to monolithic prefill
+for any mix of prompt lengths (the chunk kernel's extra causally-masked
+keys contribute exact zeros in f32); (2) the fixed chunk shape compiles
+exactly once across prompt lengths, killing the per-prompt-shape
+``jax.jit`` retrace of the monolithic path; (3) the evictor never yields
+the block the next decode write lands in (the ``_lru_victims`` active
+block regression); (4) ``Engine.submit`` fast-rejects on the governor's
+shared-adjusted admissibility estimate, not the raw prompt+budget window.
+"""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp  # noqa: E402
+
+from repro.models import transformer as tfm  # noqa: E402
+from repro.models.config import ModelConfig  # noqa: E402
+from repro.serving.admission import CapacityError  # noqa: E402
+from repro.serving.config import EngineConfig  # noqa: E402
+from repro.serving.engine import Engine  # noqa: E402
+
+TINY = ModelConfig(name="tiny", n_layers=2, d_model=32, n_heads=2,
+                   n_kv_heads=1, d_ff=64, vocab=64, head_dim=16)
+PARAMS = tfm.init_params(jax.random.PRNGKey(0), TINY, jnp.float32)
+
+#: deliberately mixed, non-block-aligned prompt lengths (BLOCK_SIZE=128):
+#: 1, 2, 2 and 3 window blocks — distinct padded shapes monolithically
+LENGTHS = (40, 200, 170, 300)
+
+
+def make_engine(*, chunked, admission="fcfs", num_blocks=64, max_batch=4,
+                prefill_chunk=1, prefix_sharing=False):
+    return Engine(TINY, PARAMS, config=EngineConfig(
+        num_blocks=num_blocks, max_batch=max_batch, max_seq_len=1024,
+        fpr_enabled=True, admission=admission, chunked_prefill=chunked,
+        prefill_chunk=prefill_chunk, prefix_sharing=prefix_sharing))
+
+
+def mixed_reqs(lengths=LENGTHS, mnt=8, seed=5):
+    rng = np.random.RandomState(seed)
+    return [(rng.randint(1, TINY.vocab, size=n), f"s{i % 2}", (i % 2) + 1,
+             mnt) for i, n in enumerate(lengths)]
+
+
+def run_to_tokens(eng, reqs):
+    for prompt, stream, gid, mnt in reqs:
+        eng.submit(prompt, max_new_tokens=mnt, stream=stream, group_id=gid)
+    eng.run()
+    return [r.generated for r in sorted(eng.sched.done, key=lambda r: r.rid)]
+
+
+class TestChunkedBitIdentity:
+    def test_tokens_identical_and_single_trace_across_lengths(self):
+        """The tentpole acceptance: mixed non-block-aligned prompts decode
+        bit-identically chunked vs monolithic, the chunk path compiles
+        once, and the monolithic baseline retraces per padded shape."""
+        reqs = mixed_reqs()
+        mono = make_engine(chunked=False)
+        t_mono = run_to_tokens(mono, reqs)
+        chunked = make_engine(chunked=True)
+        t_chunk = run_to_tokens(chunked, reqs)
+        assert t_chunk == t_mono
+        s_mono = mono.metrics.snapshot()
+        s_chunk = chunked.metrics.snapshot()
+        assert s_chunk["engine.prefill_chunk_traces"] == 1
+        assert s_chunk["engine.prefill_traces"] == 0
+        assert s_chunk["engine.prefill_chunks"] >= len(reqs)
+        assert s_mono["engine.prefill_traces"] >= 2    # per-shape retrace
+        assert s_chunk["admission.chunk_grows"] > 0    # reservations grew
+
+    def test_tokens_identical_without_governor(self):
+        """Chunking composes with the legacy (ungoverned) engine too."""
+        reqs = mixed_reqs(lengths=(40, 170), seed=9)
+        t_mono = run_to_tokens(make_engine(chunked=False, admission=None),
+                               reqs)
+        t_chunk = run_to_tokens(make_engine(chunked=True, admission=None),
+                                reqs)
+        assert t_chunk == t_mono
+
+    @pytest.mark.slow
+    def test_tokens_identical_under_pool_pressure(self):
+        """A tight pool forces mid-prefill growth through the evict →
+        preempt escalation ladder; tokens still match the uncontended
+        reference bit for bit."""
+        reqs = mixed_reqs(mnt=16, seed=13)
+        t_ref = run_to_tokens(make_engine(chunked=False, num_blocks=64),
+                              reqs)
+        eng = make_engine(chunked=True, num_blocks=8, max_batch=2)
+        t_chunk = run_to_tokens(eng, reqs)
+        assert t_chunk == t_ref
+        assert eng.metrics.snapshot()["admission.chunk_grows"] > 0
+
+
+class TestEvictionActiveBlock:
+    def test_active_decode_block_never_a_victim(self):
+        """The _lru_victims regression: mid-decode the active block
+        ``_used_blocks(r)-1`` sits below ``num_blocks-1`` — the old bound
+        would have yielded it (and the next decode write would land on a
+        -1 row and silently drop)."""
+        eng = make_engine(chunked=False, admission=None, num_blocks=16,
+                          max_batch=1)
+        rng = np.random.RandomState(3)
+        # 150-token prompt in a 4-block window: decode writes into block 1
+        # while blocks 2-3 are still unwritten tail
+        eng.submit(rng.randint(1, TINY.vocab, size=150), max_new_tokens=300)
+        eng.step()                                    # prefill + 1st decode
+        eng.step()
+        r = next(iter(eng.sched.running.values()))
+        active = eng._used_blocks(r) - 1
+        assert 0 < active < r.mapping.num_blocks - 1  # genuinely mid-window
+        victims = [(mid, idx) for mid, idx, _ in eng._lru_victims()]
+        assert (r.mapping.mapping_id, active) not in victims
+        # settled history and the unwritten tail are still offered
+        assert (r.mapping.mapping_id, 0) in victims
+        assert (r.mapping.mapping_id, r.mapping.num_blocks - 1) in victims
+
+    def test_mid_prefill_mapping_yields_no_victims(self):
+        """Every chunk attends the whole written history — a sequence in
+        the prefill state must contribute no eviction candidates."""
+        eng = make_engine(chunked=True, num_blocks=64, max_batch=2)
+        rng = np.random.RandomState(4)
+        eng.submit(rng.randint(1, TINY.vocab, size=300), max_new_tokens=8)
+        eng.step()                                    # first chunk only
+        r = next(iter(eng.sched.running.values()))
+        assert r.state == "prefill"
+        assert r.mapping is not None
+        mids = {mid for mid, _, _ in eng._lru_victims()}
+        assert r.mapping.mapping_id not in mids
+        eng.run()
+
+
+class TestSubmitAdmissibility:
+    def test_submit_accepts_shared_prompt_with_raw_window_over_limit(self):
+        """The satellite-2 regression: a heavily shared long prompt whose
+        raw prompt+budget window exceeds the pool must not be rejected at
+        submit — it attaches its prefix blocks instead of allocating
+        them, so the shared-adjusted window is what bounds residency."""
+        eng = make_engine(chunked=True, num_blocks=6, max_batch=2,
+                          prefix_sharing=True)
+        rng = np.random.RandomState(8)
+        system = rng.randint(1, TINY.vocab, size=512)  # 4 full blocks
+        eng.submit(system, max_new_tokens=30)
+        eng.step()                                     # r1 live: prefix
+        eng.step()                                     # blocks indexed
+        shared = np.concatenate(
+            [system, rng.randint(1, TINY.vocab, size=256)])
+        # raw window: (768 + 8)/128 → 7 blocks > limit 6; shared-adjusted
+        # it attaches the indexed prefix instead of allocating it — the
+        # old raw-window fast-reject refused exactly this prompt
+        rid = eng.submit(shared, max_new_tokens=8)     # must not raise
+        r = next(q for q in eng.sched.queue if q.rid == rid)
+        gov = eng.governor
+        raw = -(-(len(r.prompt) + r.max_new_tokens) // 128)
+        assert raw > gov.ledger.limit                  # the old reject bound
+        assert gov.window_blocks(r) <= gov.ledger.limit  # what now governs
+
+    def test_submit_still_refuses_truly_impossible_window(self):
+        eng = make_engine(chunked=True, num_blocks=6, max_batch=2,
+                          prefix_sharing=True)
+        rng = np.random.RandomState(8)
+        with pytest.raises(CapacityError):
+            eng.submit(rng.randint(1, TINY.vocab, size=896),
+                       max_new_tokens=8)               # 8 unshared blocks
+        assert not eng.sched.queue                     # no half-submitted leak
+
+
+class TestChunkedSim:
+    def test_chunked_admission_improves_mice_p99(self):
+        """The mice-and-elephants acceptance: chunk-grown elephants
+        release the pool to mice for most of their service."""
+        from repro.serving.sim import AdmissionSimConfig, admission_sim
+        kw = dict(pool_blocks=8, max_batch=8, window_lo=1, window_hi=8,
+                  arrival_every=1.5, large_frac=0.12, steps_per_block=4,
+                  sla_steps=32, seed=23, n_requests=48, policy="deadline")
+        mono = admission_sim(AdmissionSimConfig(chunk_blocks=0, **kw))
+        chunk = admission_sim(AdmissionSimConfig(chunk_blocks=1, **kw))
+        assert (chunk["queue_wait_p99_mice"]
+                < mono["queue_wait_p99_mice"])
+        assert chunk["completed"] == mono["completed"] == 48
+        assert chunk["chunk_grows"] > 0
+
+    def test_reshard_aware_growth_defers_and_drains(self):
+        """Satellite: the deadline policy parks elephant chunk-growth
+        across a reshard boundary (reshard_distance ≤ horizon) and the
+        sim still drains with the topology changing underneath."""
+        from repro.serving.sim import AdmissionSimConfig, admission_sim
+        out = admission_sim(AdmissionSimConfig(
+            policy="deadline", chunk_blocks=1, num_workers=2,
+            reshard_iters=((40, 4), (90, 2)), pool_blocks=8, max_batch=8,
+            window_lo=1, window_hi=8, arrival_every=1.5, large_frac=0.12,
+            steps_per_block=4, sla_steps=32, seed=23, n_requests=48))
+        assert out["completed"] == 48
+        assert out["reshards"] == 2
+
+
+class TestDeferGrowthPolicy:
+    def test_defer_growth_bounded_and_reshard_aware(self):
+        from repro.serving.admission import DeadlinePolicy
+
+        class R:
+            def __init__(self, rid, arrival, sla):
+                self.rid, self.arrival, self.sla = rid, arrival, sla
+
+        p = DeadlinePolicy(hold_after=2, reshard_horizon=1)
+        elephant = R(1, 0, 100.0)
+        mouse = R(2, 0, 1.0)
+        fits = lambda r: True
+        # a strictly-more-urgent fitting mouse defers the grower, but only
+        # hold_after times — growth is never livelocked
+        assert p.defer_growth(elephant, 2, [mouse], fits) is True
+        assert p.defer_growth(elephant, 2, [mouse], fits) is True
+        assert p.defer_growth(elephant, 2, [mouse], fits) is False
+        # an imminent reshard parks growth even with an empty queue
+        p.reshard_distance = 1
+        assert p.defer_growth(elephant, 2, [], fits) is True
+        p.reshard_distance = 5                         # beyond the horizon
+        p._grow_deferrals.clear()
+        assert p.defer_growth(elephant, 2, [], fits) is False

@@ -13,7 +13,10 @@ vs FCFS, over-commit give-up elimination, preemption counts),
 saving, prefix hit rate, unique-block admission concurrency) and
 ``BENCH_chunked.json`` (chunked prefill: tokens bit-identical vs
 monolithic, one compile across prompt lengths, mice-and-elephants p99
-win) — fast enough for every push.
+win) and ``BENCH_load.json`` (open-loop load harness: p50/p99 queue-wait
+and step latency from the pinned histograms, fences/token, refreshed
+bytes/token, fixed-seed token-identity, plus the ``trace_load.json``
+Chrome trace) — fast enough for every push.
 """
 
 from __future__ import annotations
@@ -34,8 +37,8 @@ def main() -> int:
 
     from benchmarks import (admission_bench, apache_like, baseline_sweep,
                             contexts_bench, device_latency, engine_trace,
-                            eviction, microbench, overhead, roofline,
-                            ycsb_kv)
+                            eviction, loadgen, microbench, overhead,
+                            roofline, ycsb_kv)
     if args.smoke:
         suites = [
             ("microbench smoke (Fig. 6-11 + scoped)",
@@ -48,6 +51,8 @@ def main() -> int:
              lambda: engine_trace.run_prefix(smoke=True)),
             ("chunked smoke (deterministic BENCH_chunked.json)",
              lambda: engine_trace.run_chunked(smoke=True)),
+            ("loadgen smoke (BENCH_load.json + trace_load.json)",
+             lambda: loadgen.run(smoke=True)),
         ]
     else:
         suites = [
@@ -61,6 +66,10 @@ def main() -> int:
              engine_trace.run_prefix),
             ("chunked prefill (BENCH_chunked.json mice & elephants)",
              engine_trace.run_chunked),
+            # nightly sustained variant — standalone:
+            #   python -m benchmarks.loadgen --sustained
+            ("loadgen sustained (BENCH_load.json open-loop harness)",
+             loadgen.run),
             ("device_latency (Fig. 12)", device_latency.run),
             ("eviction (Fig. 14-17)", eviction.run),
             ("contexts (§IV-C2)", contexts_bench.run),

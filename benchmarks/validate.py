@@ -20,9 +20,15 @@ unique-block saving, zero in-set fence violations and the concurrency
 win — and ``BENCH_chunked.json`` (chunked prefill) must keep tokens
 bit-identical to monolithic, the chunk path compiled exactly once
 across prompt lengths, and the mice-and-elephants ``queue_wait_p99``
-strictly better chunked than monolithic.  The schema itself must know the ``fpr.eviction.``,
+strictly better chunked than monolithic — and ``BENCH_load.json`` (the
+open-loop load harness) must carry every workload with a present
+queue-wait/step-latency p99, finite fences/token and refreshed
+bytes/token, tokens bit-identical to the fixed-seed replay, and a trace
+summary with at least one root span and zero left-open spans.  The
+schema itself must know the ``fpr.eviction.``,
 ``fpr.prefix.`` and topology (``table.reshards`` / ``device.reshard_*``)
-counter groups, so retiring them fails here too.
+counter groups plus the pinned observability histograms and the
+subscriber-error counter, so retiring them fails here too.
 
 This runs in the CI push lane right after ``benchmarks.run --smoke``:
 counter drift (a renamed, retired or misspelled key) fails the push
@@ -39,7 +45,11 @@ from repro.core.metrics import schema_violations
 
 #: the deterministic smoke artifacts the push lane publishes
 DEFAULT_ARTIFACTS = ("microbench_scoped.json", "admission_smoke.json",
-                     "BENCH_prefix.json", "BENCH_chunked.json")
+                     "BENCH_prefix.json", "BENCH_chunked.json",
+                     "BENCH_load.json")
+
+#: workloads the load harness must always exercise
+LOAD_WORKLOADS = ("poisson", "diurnal", "multi_tenant")
 
 #: counter groups that must stay in the flat schema (satellite coverage:
 #: eviction-pass counters + elastic-topology counters + prefix sharing)
@@ -65,6 +75,13 @@ REQUIRED_SCHEMA_KEYS = (
     "engine.prefill_chunk_traces",
     "engine.prefill_traces",
     "admission.chunk_grows",
+    # observability loop: pinned latency histograms + isolation counter
+    "engine.obs.subscriber_errors",
+    "engine.obs.step_latency_s",
+    "engine.obs.queue_wait_steps",
+    "admission.obs.queue_depth",
+    "fence.obs.scope_workers",
+    "device.obs.refresh_bytes",
 )
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
@@ -178,6 +195,52 @@ def chunked_violations(path: str) -> list[str]:
     return bad
 
 
+def load_violations(path: str) -> list[str]:
+    """Required-section check: the open-loop load harness trajectory.
+
+    Applies to ``BENCH_load.json``; fails the push lane when a workload
+    disappears, a percentile goes absent (empty histogram), the
+    per-token coherence ratios stop being finite numbers, the fixed-seed
+    replay stops being bit-identical, or the Chrome trace leaks spans
+    (root spans missing / spans left open at drain).
+    """
+    import math
+
+    with open(path) as f:
+        payload = json.load(f)
+    workloads = payload.get("workloads") or {}
+    bad = []
+    for name in LOAD_WORKLOADS:
+        wl = workloads.get(name)
+        if wl is None:
+            bad.append(f"missing workload section {name!r}")
+            continue
+        for hist in ("queue_wait_steps", "step_latency_s"):
+            p99 = (wl.get(hist) or {}).get("p99")
+            if not isinstance(p99, (int, float)) or not math.isfinite(p99):
+                bad.append(f"{name}: {hist} p99 absent "
+                           f"(empty histogram?) — got {p99!r}")
+        for ratio in ("fences_per_token", "refreshed_bytes_per_token"):
+            val = wl.get(ratio)
+            if not isinstance(val, (int, float)) or not math.isfinite(val):
+                bad.append(f"{name}: {ratio} not finite — got {val!r}")
+        if not wl.get("tokens_identical"):
+            bad.append(f"{name}: tokens diverged from fixed-seed replay")
+    if not payload.get("tokens_identical"):
+        bad.append("tokens_identical is not true across workloads")
+    trace = payload.get("trace")
+    if not trace:
+        bad.append("missing trace summary section")
+    else:
+        if not trace.get("root_spans"):
+            bad.append("trace has no root spans")
+        if trace.get("open_spans") != 0:
+            bad.append(f"trace left {trace.get('open_spans')} spans open")
+        if not trace.get("root_spans_match_completed"):
+            bad.append("trace root spans != completed requests")
+    return bad
+
+
 def main(argv: list[str]) -> int:
     paths = argv or [os.path.join(RESULTS, name)
                      for name in DEFAULT_ARTIFACTS]
@@ -202,6 +265,8 @@ def main(argv: list[str]) -> int:
             bad = bad + [f"prefix: {b}" for b in prefix_violations(path)]
         if name == "BENCH_chunked.json":
             bad = bad + [f"chunked: {b}" for b in chunked_violations(path)]
+        if name == "BENCH_load.json":
+            bad = bad + [f"load: {b}" for b in load_violations(path)]
         if bad:
             failed = True
             print(f"SCHEMA DRIFT in {name} — keys not in "

@@ -40,6 +40,7 @@ so an unobserved event costs one dict lookup, not an allocation.
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
 from typing import Callable, Type
 
@@ -230,11 +231,48 @@ class PreemptionResolved(Event):
     strategy: str
 
 
+# ----------------------------------------------------------------- lifecycle
+@dataclass(frozen=True)
+class PrefillChunkDone(Event):
+    """One fixed-shape prefill chunk landed for ``rid`` (tokens
+    ``[start, end)`` of the prompt are now in the cache).  The trace
+    layer stitches these into child spans of the request's root span."""
+
+    rid: int
+    start: int
+    end: int
+    step: int
+
+
+@dataclass(frozen=True)
+class RequestCompleted(Event):
+    """``rid`` finished decoding and released its mapping — the close of
+    the request's root span (admission opened it)."""
+
+    rid: int
+    n_tokens: int
+    step: int
+
+
+@dataclass(frozen=True)
+class StepCompleted(Event):
+    """One ``Engine.step`` finished.  ``wall_s`` is the step's wall time
+    (the span's duration — a tracer reconstructs the start as
+    ``now - wall_s``), ``tokens`` the decode tokens it produced,
+    ``running`` the occupied slots after the step."""
+
+    step: int
+    tokens: int
+    wall_s: float
+    running: int
+
+
 #: every event type this module defines, for docs/tests
 EVENT_TYPES = (FenceIssued, BlocksRecycled, ContextExit, BlocksShared,
                SharingExit, SwapDropped, ShardRefreshed, TopologyChanged,
                EvictionPass, AdmissionDecision, PreemptionStarted,
-               PreemptionResolved)
+               PreemptionResolved, PrefillChunkDone, RequestCompleted,
+               StepCompleted)
 
 
 Handler = Callable[[Event], None]
@@ -249,10 +287,26 @@ class EventBus:
     wildcard.  There is no queueing: ``publish`` returns after the last
     handler, so mechanism-critical subscribers (epoch bumps, device
     refreshes) see events in coherence order.
+
+    **Error isolation.**  A raising subscriber must never take the
+    publisher (or the subscribers behind it) down: the exception is
+    caught, counted in :attr:`subscriber_errors` (exported as
+    ``engine.obs.subscriber_errors``), remembered in :attr:`last_errors`,
+    and delivery continues with the next ordered handler — the
+    epoch-bump-before-device-refresh ordering survives a broken
+    observability plug-in.
     """
+
+    #: diagnostic ring size for :attr:`last_errors`
+    ERROR_RING = 16
 
     def __init__(self) -> None:
         self._handlers: dict[Type[Event], list[Handler]] = {}
+        #: deliveries dropped because the subscriber raised
+        self.subscriber_errors = 0
+        #: ``(event type name, handler repr, exception repr)`` ring of the
+        #: most recent isolated failures
+        self.last_errors: deque = deque(maxlen=self.ERROR_RING)
 
     # ---------------------------------------------------------- subscription
     def subscribe(self, event_type: Type[Event], handler: Handler,
@@ -290,16 +344,26 @@ class EventBus:
                     or self._handlers.get(Event))
 
     # --------------------------------------------------------------- publish
+    def _deliver(self, handler: Handler, event: Event) -> int:
+        try:
+            handler(event)
+            return 1
+        except Exception as exc:  # noqa: BLE001 — isolate, count, continue
+            self.subscriber_errors += 1
+            self.last_errors.append((type(event).__name__, repr(handler),
+                                     repr(exc)))
+            return 0
+
     def publish(self, event: Event) -> int:
-        """Dispatch ``event``; returns the number of handlers that ran."""
+        """Dispatch ``event``; returns the number of handlers that ran
+        without raising (a raising handler is isolated and counted — see
+        :attr:`subscriber_errors` — and delivery continues in order)."""
         ran = 0
         for handler in tuple(self._handlers.get(type(event), ())):
-            handler(event)
-            ran += 1
+            ran += self._deliver(handler, event)
         if type(event) is not Event:
             for handler in tuple(self._handlers.get(Event, ())):
-                handler(event)
-                ran += 1
+                ran += self._deliver(handler, event)
         return ran
 
 
@@ -307,4 +371,5 @@ __all__ = ["Event", "EventBus", "EVENT_TYPES", "FenceIssued",
            "BlocksRecycled", "ContextExit", "BlocksShared", "SharingExit",
            "SwapDropped", "ShardRefreshed", "TopologyChanged",
            "EvictionPass", "AdmissionDecision", "PreemptionStarted",
-           "PreemptionResolved"]
+           "PreemptionResolved", "PrefillChunkDone", "RequestCompleted",
+           "StepCompleted"]

@@ -160,6 +160,12 @@ class MemoryGovernor:
         # grows chunk-by-chunk through on_extend.  ``None`` keeps the
         # monolithic full-window reservation.
         self.chunk_blocks: "int | None" = None
+        # Observability hook (engine-installed): called with the queue
+        # depth of every non-empty admission round — feeds the
+        # ``admission.obs.queue_depth`` histogram directly, without the
+        # AdmissionDecision event's blocked_rid scan (the hook stays cheap
+        # even when a tracer forces bus.wants(AdmissionDecision) on).
+        self.observe_queue_depth = None
 
     # ------------------------------------------------------------- windows
     def window_blocks(self, r) -> int:
@@ -250,6 +256,8 @@ class MemoryGovernor:
         """
         if not queue:
             return None
+        if self.observe_queue_depth is not None:
+            self.observe_queue_depth(len(queue))
         fits = self.fits
         idx = self.policy.select(queue, fits, tuple(self._freed_streams))
         if idx is None:

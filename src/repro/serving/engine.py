@@ -36,7 +36,10 @@ import numpy as np
 
 from repro.core.config import validate_translation, validate_worker_count
 from repro.core.eviction import WatermarkEvictor
-from repro.core.events import PreemptionResolved, PreemptionStarted
+from repro.core.events import (FenceIssued, PrefillChunkDone,
+                               PreemptionResolved, PreemptionStarted,
+                               RequestCompleted, ShardRefreshed,
+                               StepCompleted)
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
 from repro.serving.admission import CapacityError, MemoryGovernor
@@ -108,6 +111,25 @@ class Engine:
             self.governor.shared_residual = self._shared_residual
         self.metrics.register("admission", self._admission_metrics)
         self.metrics.register("engine", self._engine_metrics)
+        # Observability histograms (schema-pinned; see HISTOGRAM_SCHEMA).
+        # All five exist on every engine so the snapshot key set is
+        # topology- and governor-independent; the fence/device ones are
+        # fed straight off the coherence event stream.
+        self._hist_step = self.metrics.histogram("engine.obs.step_latency_s")
+        self._hist_queue_wait = self.metrics.histogram(
+            "engine.obs.queue_wait_steps")
+        hist_depth = self.metrics.histogram("admission.obs.queue_depth")
+        hist_scope = self.metrics.histogram("fence.obs.scope_workers")
+        hist_refresh = self.metrics.histogram("device.obs.refresh_bytes")
+        self.bus.subscribe(
+            FenceIssued,
+            lambda e: hist_scope.observe(len(e.workers)
+                                         if e.workers is not None
+                                         else self.cache.num_workers))
+        self.bus.subscribe(ShardRefreshed,
+                           lambda e: hist_refresh.observe(e.nbytes))
+        if self.governor is not None:
+            self.governor.observe_queue_depth = hist_depth.observe
         self._slot_state_keys = [k for k in self.cache.state
                                  if k in _SLOT_STATE_KEYS]
         self.evictor = WatermarkEvictor(self.cache.mgr, self._lru_victims,
@@ -167,6 +189,8 @@ class Engine:
                                 priority, sla=sla,
                                 prefix_hashes=self.cache.prefix_hashes(
                                     prompt))
+        # queue-wait clock zero: the engine step this submit landed on
+        self.sched.queue[-1].submit_step = self.steps
         if self.governor is not None:
             # fast-reject on the governor's own admissibility estimate, not
             # the raw prompt+budget window: a heavily shared long prompt
@@ -275,6 +299,9 @@ class Engine:
                 # a later admission's allocation pressure preempted this
                 # one before its turn — it re-queued and retries next round
                 continue
+            # queue wait in engine steps: deterministic virtual time from
+            # (re-)enqueue to seating
+            self._hist_queue_wait.observe(self.steps - r.submit_step)
             # device refresh scoping must know which worker serves the slot
             self.cache.bind_slot_worker(r.slot, self._worker_of(r))
             if r.mapping is not None:
@@ -451,6 +478,8 @@ class Engine:
                 r, free=lambda m: self.cache.free_sequence(m, worker=worker))
         # the governor's preemption counters subscribe to this event
         self.bus.publish(PreemptionResolved(rid=r.rid, strategy=strategy))
+        # the re-queued victim's queue-wait clock restarts at preemption
+        r.submit_step = self.steps
         return strategy
 
     def _prefill_request(self, r: Request) -> None:
@@ -550,6 +579,9 @@ class Engine:
                 self.cache.state[k] = v
         r.prefill_pos = end
         self.prefill_chunks += 1
+        if self.bus.wants(PrefillChunkDone):
+            self.bus.publish(PrefillChunkDone(rid=r.rid, start=start,
+                                              end=end, step=self.steps))
         if r.prefill_pos >= S:
             r.state = "running"    # decodes this very step (interleaved)
 
@@ -728,7 +760,7 @@ class Engine:
             # every occupied slot is still mid-prefill: the step did its
             # chunk work; decode resumes once a request promotes
             self.steps += 1
-            self.wall_s += time.perf_counter() - t0
+            self._finish_step(t0, 0)
             return 0
 
         # the incoming token is the last *known* token; it is (re)written at
@@ -762,10 +794,25 @@ class Engine:
                 if self.governor is not None:
                     self.governor.on_release(r)
                 self.sched.complete(r)
+                if self.bus.wants(RequestCompleted):
+                    self.bus.publish(RequestCompleted(
+                        rid=r.rid, n_tokens=len(r.generated),
+                        step=self.steps))
         self.steps += 1
         self.tokens_generated += made
-        self.wall_s += time.perf_counter() - t0
+        self._finish_step(t0, made)
         return made
+
+    def _finish_step(self, t0: float, made: int) -> None:
+        """Step epilogue: wall-time accounting, the step-latency
+        histogram, and the :class:`StepCompleted` span event."""
+        dt = time.perf_counter() - t0
+        self.wall_s += dt
+        self._hist_step.observe(dt)
+        if self.bus.wants(StepCompleted):
+            self.bus.publish(StepCompleted(step=self.steps, tokens=made,
+                                           wall_s=dt,
+                                           running=len(self.sched.running)))
 
     def run(self, max_steps: int = 10_000) -> dict:
         while not self.sched.idle and self.steps < max_steps:
@@ -780,6 +827,7 @@ class Engine:
     def _engine_metrics(self) -> dict:
         return {
             "steps": self.steps,
+            "obs": {"subscriber_errors": self.bus.subscriber_errors},
             "demand_pager_gave_up": self.demand_pager_gave_up,
             "num_workers": self.cache.num_workers,
             "tokens": self.tokens_generated,

@@ -61,6 +61,9 @@ class Request:
     preemptions: int = 0
     prefill_pos: int = 0               # prompt tokens already prefilled
                                        # (chunked prefill state machine)
+    submit_step: int = 0               # engine step at (re-)enqueue — the
+                                       # queue-wait histogram's clock zero
+                                       # (reset on preemption re-queue)
 
     @property
     def length(self) -> int:

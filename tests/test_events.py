@@ -84,6 +84,80 @@ class TestEventBus:
             assert issubclass(et, Event)
 
 
+# ======================================================== subscriber isolation
+class TestSubscriberIsolation:
+    """A raising subscriber is isolated: the error is counted, delivery
+    continues to the remaining ordered subscribers, and the publisher
+    never sees the exception."""
+
+    def test_raising_subscriber_does_not_stop_delivery(self):
+        bus = EventBus()
+        order = []
+        bus.subscribe(SwapDropped, lambda e: order.append("first"))
+
+        def boom(e):
+            raise RuntimeError("broken observability plug-in")
+
+        bus.subscribe(SwapDropped, boom)
+        bus.subscribe(SwapDropped, lambda e: order.append("third"))
+        bus.subscribe(Event, lambda e: order.append("wildcard"))
+        ran = bus.publish(SwapDropped(mapping_id=1, logical_idx=0))
+        # ordering survives, the raising handler is the only drop
+        assert order == ["first", "third", "wildcard"]
+        assert ran == 3
+        assert bus.subscriber_errors == 1
+        etype, handler, exc = bus.last_errors[-1]
+        assert etype == "SwapDropped" and "RuntimeError" in exc
+
+    def test_raising_wildcard_is_isolated_too(self):
+        bus = EventBus()
+        got = []
+        bus.subscribe(Event, lambda e: (_ for _ in ()).throw(ValueError()))
+        bus.subscribe(Event, got.append)
+        evt = BlocksRecycled(ctx_id=1, n_blocks=1, worker=0)
+        assert bus.publish(evt) == 1
+        assert got == [evt]
+        assert bus.subscriber_errors == 1
+
+    def test_epoch_bump_ordering_survives_a_raising_observer(self):
+        """The mechanism-critical first-subscribed epoch bump still runs
+        (and still runs *first*) when a later observer raises."""
+        m = make_mgr()
+        seen = []
+        m.bus.subscribe(FenceIssued,
+                        lambda e: (_ for _ in ()).throw(RuntimeError()))
+        m.bus.subscribe(FenceIssued, lambda e: seen.append(m.tables.epoch))
+        before = m.tables.epoch
+        m.fences.fence("x", 1)
+        assert seen == [before + 1]          # bump applied before observer
+        assert m.bus.subscriber_errors == 1
+
+    def test_errors_surface_in_engine_snapshot(self):
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.models import transformer as tfm
+        from repro.models.config import ModelConfig
+        from repro.serving.config import EngineConfig
+        from repro.serving.engine import Engine
+
+        tiny = ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
+                           n_kv_heads=1, d_ff=64, vocab=64, head_dim=16)
+        params = tfm.init_params(jax.random.PRNGKey(0), tiny, jnp.float32)
+        eng = Engine(tiny, params, config=EngineConfig(
+            num_blocks=8, max_batch=2, max_seq_len=256, admission="fcfs"))
+        eng.bus.subscribe(FenceIssued,
+                          lambda e: (_ for _ in ()).throw(RuntimeError()))
+        rng = np.random.RandomState(0)
+        for i in range(3):
+            eng.submit(rng.randint(1, tiny.vocab, size=12),
+                       max_new_tokens=4, stream=f"s{i}", group_id=i + 1)
+        eng.run()
+        snap = eng.metrics.snapshot()
+        assert snap["engine.obs.subscriber_errors"] > 0
+        assert snap["engine.completed"] == 3   # the engine kept serving
+
+
 # ============================================================ stack integration
 class TestManagerEvents:
     def test_fence_issued_published_with_scope(self):

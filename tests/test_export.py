@@ -1,0 +1,185 @@
+"""Prometheus text-format exporter: golden fixture, label escaping,
+histogram exposition, key round-trip, and the opt-in /metrics endpoint.
+
+The exporter is the first *typed* consumer of the flat snapshot: every
+sample carries its dotted snapshot key as a ``key`` label, so the
+exposition body round-trips the pinned schema — the acceptance criterion
+the endpoint test checks end-to-end against a live engine.
+"""
+
+import json
+import urllib.error
+import urllib.request
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.export import (escape_label, parse_keys, prom_name, render,
+                               render_registry, serve)
+from repro.core.metrics import (HISTOGRAM_SCHEMA, MetricsRegistry,
+                                schema_violations)
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.serving.config import EngineConfig
+from repro.serving.engine import Engine
+
+TINY = ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
+                   n_kv_heads=1, d_ff=64, vocab=64, head_dim=16)
+
+
+def make_engine(admission="fcfs"):
+    params = tfm.init_params(jax.random.PRNGKey(0), TINY, jnp.float32)
+    return Engine(TINY, params, config=EngineConfig(
+        num_blocks=8, max_batch=2, max_seq_len=256, num_workers=2,
+        admission=admission))
+
+
+def drive(eng, n=4):
+    rng = np.random.RandomState(0)
+    for i in range(n):
+        eng.submit(rng.randint(1, TINY.vocab, size=12), max_new_tokens=4,
+                   stream=f"s{i % 2}", group_id=(i % 2) + 1)
+    eng.run()
+    return eng
+
+
+# ================================================================== rendering
+class TestRender:
+    def test_golden_text_format(self):
+        """The full exposition for a handcrafted snapshot: HELP/TYPE
+        lines, counter ``_total`` suffix, gauge NaN for absent values,
+        info samples for strings, index labels for list leaves."""
+        snap = {
+            "fence.fences": 7,
+            "fpr.prefix.hit_rate": 0.5,
+            "admission.policy": "fcfs",
+            "table.shard_epochs": [1, 2],
+            "engine.tokens_per_s": None,
+        }
+        expected = "\n".join([
+            "# HELP repro_fence_fences_total coherence fences - the "
+            "TLB-shootdown analogue",
+            "# TYPE repro_fence_fences_total counter",
+            'repro_fence_fences_total{key="fence.fences"} 7',
+            "# HELP repro_fpr_prefix_hit_rate prefix-sharing index "
+            "(attach/detach, COW, hit rate)",
+            "# TYPE repro_fpr_prefix_hit_rate gauge",
+            'repro_fpr_prefix_hit_rate{key="fpr.prefix.hit_rate"} 0.5',
+            "# HELP repro_admission_policy_info memory governor "
+            "admission/preemption accounting",
+            "# TYPE repro_admission_policy_info gauge",
+            'repro_admission_policy_info{key="admission.policy",'
+            'value="fcfs"} 1',
+            "# HELP repro_table_shard_epochs_total host block-table "
+            "epochs and shard diagnostics",
+            "# TYPE repro_table_shard_epochs_total counter",
+            'repro_table_shard_epochs_total{key="table.shard_epochs",'
+            'index="0"} 1',
+            'repro_table_shard_epochs_total{key="table.shard_epochs",'
+            'index="1"} 2',
+            "# HELP repro_engine_tokens_per_s continuous-batching "
+            "serving-loop totals",
+            "# TYPE repro_engine_tokens_per_s gauge",
+            'repro_engine_tokens_per_s{key="engine.tokens_per_s"} NaN',
+        ]) + "\n"
+        assert render(snap) == expected
+
+    def test_counter_gets_total_suffix_gauge_does_not(self):
+        assert prom_name("fence.fences", "counter") == \
+            "repro_fence_fences_total"
+        assert prom_name("fpr.prefix.hit_rate", "gauge") == \
+            "repro_fpr_prefix_hit_rate"
+        assert prom_name("admission.policy", "info") == \
+            "repro_admission_policy_info"
+
+    def test_label_escaping(self):
+        assert escape_label('a"b\\c\nd') == 'a\\"b\\\\c\\nd'
+        text = render({"admission.policy": 'odd"name\nhere'})
+        assert 'value="odd\\"name\\nhere"' in text
+        # the body parses back despite the escapes
+        assert parse_keys(text) == {"admission.policy"}
+
+    def test_bool_and_nan_values(self):
+        text = render({"admission.enabled": True,
+                       "admission.quota.enabled": False,
+                       "fpr.prefix.hit_rate": float("nan")})
+        assert 'repro_admission_enabled{key="admission.enabled"} 1' in text
+        assert ('repro_admission_quota_enabled'
+                '{key="admission.quota.enabled"} 0') in text
+        assert 'repro_fpr_prefix_hit_rate{key="fpr.prefix.hit_rate"} NaN' \
+            in text
+
+    def test_histogram_exposition_cumulative_buckets(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("fence.obs.scope_workers")
+        for v in (1, 1, 2, 8):
+            h.observe(v)
+        text = render_registry(reg)
+        name = "repro_fence_obs_scope_workers"
+        kl = 'key="fence.obs.scope_workers"'
+        assert f"# TYPE {name} histogram" in text
+        # cumulative le-buckets: ≤1 holds 2, ≤2 holds 3, ≤8 holds all 4
+        assert f'{name}_bucket{{{kl},le="1.0"}} 2' in text
+        assert f'{name}_bucket{{{kl},le="2.0"}} 3' in text
+        assert f'{name}_bucket{{{kl},le="4.0"}} 3' in text
+        assert f'{name}_bucket{{{kl},le="8.0"}} 4' in text
+        assert f'{name}_bucket{{{kl},le="+Inf"}} 4' in text
+        assert f"{name}_sum{{{kl}}} 12.0" in text
+        assert f"{name}_count{{{kl}}} 4" in text
+        # flat histogram leaves are not double-rendered
+        assert "scope_workers_p99" not in text
+
+    def test_round_trip_keys(self):
+        snap = {"fence.fences": 1, "device.refreshed_bytes": 2,
+                "admission.policy": "edf"}
+        assert parse_keys(render(snap)) == set(snap)
+
+
+# ==================================================================== endpoint
+class TestEndpoint:
+    def test_metrics_endpoint_round_trips_schema(self):
+        eng = drive(make_engine("fcfs"))
+        with serve(eng.metrics, port=0) as srv:
+            with urllib.request.urlopen(srv.url, timeout=10) as resp:
+                assert resp.status == 200
+                assert resp.headers["Content-Type"].startswith("text/plain")
+                body = resp.read().decode()
+        keys = parse_keys(body)
+        # every parsed key is schema-known …
+        assert schema_violations(keys) == []
+        # … and the snapshot round-trips exactly: flat keys come back
+        # verbatim, histogram families come back as their pinned names
+        snap = eng.metrics.snapshot()
+        hist_names = set(eng.metrics.histograms)
+        flat = {k for k in snap
+                if not any(k.startswith(n + ".") for n in hist_names)}
+        assert keys == flat | hist_names
+        assert hist_names == set(HISTOGRAM_SCHEMA)
+
+    def test_endpoint_404_off_path(self):
+        eng = make_engine(None)
+        with serve(eng.metrics, port=0) as srv:
+            bad = srv.url.replace("/metrics", "/other")
+            with pytest.raises(urllib.error.HTTPError) as ei:
+                urllib.request.urlopen(bad, timeout=10)
+            assert ei.value.code == 404
+
+    def test_scrape_is_fresh_per_request(self):
+        eng = make_engine("fcfs")
+        with serve(eng.metrics, port=0) as srv:
+            def scrape():
+                with urllib.request.urlopen(srv.url, timeout=10) as r:
+                    return r.read().decode()
+            before = scrape()
+            drive(eng)
+            after = scrape()
+        assert 'key="engine.steps"} 0' in before
+        assert 'key="engine.steps"} 0' not in after
+
+    def test_exposition_is_not_json(self):
+        # belt-and-braces: the body is the text format, not a JSON dump
+        text = render({"fence.fences": 1})
+        with pytest.raises(json.JSONDecodeError):
+            json.loads(text)

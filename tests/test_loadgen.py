@@ -1,0 +1,90 @@
+"""Open-loop load harness: arrival-generator determinism (fast) + the
+engine-driving smoke run with its artifact gate (slow, nightly lane).
+"""
+
+import json
+
+import pytest
+
+from benchmarks import loadgen
+from benchmarks.loadgen import (diurnal_arrivals, multi_tenant_arrivals,
+                                poisson_arrivals)
+from benchmarks.validate import load_violations
+
+
+# ================================================================= generators
+class TestArrivalGenerators:
+    def test_poisson_is_seed_deterministic(self):
+        a = poisson_arrivals(7, horizon=50, rate=0.5)
+        b = poisson_arrivals(7, horizon=50, rate=0.5)
+        assert a == b
+        assert a != poisson_arrivals(8, horizon=50, rate=0.5)
+
+    def test_poisson_mix_and_ordering(self):
+        arr = poisson_arrivals(1, horizon=200, rate=1.0)
+        assert arr == sorted(arr, key=lambda a: a["step"])
+        kinds = {a["kind"] for a in arr}
+        assert kinds == {"mouse", "elephant"}
+        frac = sum(a["kind"] == "elephant" for a in arr) / len(arr)
+        assert 0.03 < frac < 0.25            # ~10% elephants
+        for a in arr:
+            lo, hi = ((8, 32) if a["kind"] == "mouse" else (160, 224))
+            assert lo <= a["prompt_len"] <= hi
+            # window must fit the harness engine's max_seq_len
+            assert a["prompt_len"] + a["max_new"] <= 256
+            # distinct contexts per class → cross-context recycling
+            assert a["group"] == (1 if a["kind"] == "mouse" else 2)
+
+    def test_diurnal_bursts_beat_quiet_windows(self):
+        arr = diurnal_arrivals(3, horizon=400, base_rate=0.4,
+                               burst_factor=4.0, period=20)
+        quiet = sum(1 for a in arr if (a["step"] % 20) < 10)
+        burst = sum(1 for a in arr if (a["step"] % 20) >= 10)
+        assert burst > 2 * quiet
+
+    def test_multi_tenant_profiles(self):
+        arr = multi_tenant_arrivals(5, horizon=400)
+        tenants = {a["stream"] for a in arr}
+        assert tenants == {"tenant_mice", "tenant_heavy", "tenant_mixed"}
+        by = {t: [a for a in arr if a["stream"] == t] for t in tenants}
+        # tenant profiles hold: mice-only, elephant-only, mixed
+        assert all(a["kind"] == "mouse" for a in by["tenant_mice"])
+        assert all(a["kind"] == "elephant" for a in by["tenant_heavy"])
+        assert {a["kind"] for a in by["tenant_mixed"]} == {"mouse",
+                                                           "elephant"}
+        # tenant identity is the quota/context key
+        groups = {a["stream"]: a["group"] for a in arr}
+        assert len(set(groups.values())) == 3
+
+    def test_workload_table_covers_validator_contract(self):
+        wl = loadgen._workloads(smoke=True)
+        assert set(wl) == {"poisson", "diurnal", "multi_tenant"}
+        assert all(len(v) > 0 for v in wl.values())
+        sustained = loadgen._workloads(smoke=False)
+        assert all(len(sustained[k]) > len(wl[k]) for k in wl)
+
+
+# ================================================================ engine smoke
+@pytest.mark.slow
+class TestHarnessSmoke:
+    def test_smoke_run_emits_valid_artifact(self, tmp_path, monkeypatch):
+        monkeypatch.setattr("benchmarks.common.RESULTS", str(tmp_path))
+        monkeypatch.setattr(loadgen, "RESULTS", str(tmp_path))
+        payload = loadgen.run(smoke=True)
+        assert payload["tokens_identical"] is True
+        # the artifact satisfies its own CI gate
+        path = tmp_path / "BENCH_load.json"
+        assert load_violations(str(path)) == []
+        with open(path) as f:
+            disk = json.load(f)
+        assert set(disk["workloads"]) == {"poisson", "diurnal",
+                                          "multi_tenant"}
+        for wl in disk["workloads"].values():
+            assert wl["completed"] > 0
+            assert wl["queue_wait_steps"]["p99"] is not None
+            assert wl["snapshot"]["engine.obs.subscriber_errors"] == 0
+        trace = disk["trace"]
+        assert trace["root_spans_match_completed"] is True
+        assert trace["open_spans"] == 0
+        with open(tmp_path / "trace_load.json") as f:
+            assert json.load(f)["traceEvents"]

@@ -13,9 +13,11 @@ import pytest
 
 from repro.core import FprMemoryManager
 from repro.core.config import FprConfig
-from repro.core.metrics import (ADMISSION_SCHEMA, STABLE_SCHEMA,
-                                WILDCARD_PREFIXES, MetricsRegistry, flatten,
-                                schema_violations)
+from repro.core.metrics import (ADMISSION_SCHEMA, HISTOGRAM_SCHEMA,
+                                STABLE_SCHEMA, WILDCARD_KINDS,
+                                WILDCARD_PREFIXES, Histogram,
+                                MetricsRegistry, flatten, histogram_keys,
+                                kind_of, schema_violations)
 from repro.core.shootdown import FenceEngine
 from repro.models import transformer as tfm
 from repro.models.config import ModelConfig
@@ -97,14 +99,17 @@ class TestGoldenSchema:
         assert schema_violations(keys) == []
         stable = {k for k in keys
                   if not any(k.startswith(w) for w in WILDCARD_PREFIXES)}
-        assert stable == set(STABLE_SCHEMA) | set(ADMISSION_SCHEMA)
+        assert stable == (set(STABLE_SCHEMA) | set(ADMISSION_SCHEMA)
+                          | set(histogram_keys()))
 
     def test_engine_snapshot_without_governor(self):
         eng = drive(make_engine(None))
         keys = set(eng.metrics.snapshot())
         stable = {k for k in keys
                   if not any(k.startswith(w) for w in WILDCARD_PREFIXES)}
-        assert stable == set(STABLE_SCHEMA)      # admission.* collapses
+        # admission.* collapses to the enabled flag; the five pinned
+        # observability histograms exist on every engine regardless
+        assert stable == set(STABLE_SCHEMA) | set(histogram_keys())
         assert eng.metrics.snapshot()["admission.enabled"] is False
 
     def test_snapshot_values_are_json_scalars_or_lists(self):
@@ -135,3 +140,107 @@ class TestLegacySurfaceGone:
         snap = eng.run(max_steps=0)
         assert snap == eng.metrics.snapshot()
         assert "fence.fences" in snap
+
+
+# ================================================================ metric kinds
+class TestKinds:
+    """Every schema key must declare its exporter kind — the gate that
+    keeps ratios from silently exporting as monotonic counters."""
+
+    def test_every_stable_key_has_a_kind(self):
+        missing = [k for k in STABLE_SCHEMA if kind_of(k) is None]
+        assert missing == []
+
+    def test_every_admission_key_has_a_kind(self):
+        missing = [k for k in ADMISSION_SCHEMA if kind_of(k) is None]
+        assert missing == []
+
+    def test_every_wildcard_prefix_has_a_kind(self):
+        assert set(WILDCARD_KINDS) == set(WILDCARD_PREFIXES)
+
+    def test_ratios_and_levels_are_gauges_not_counters(self):
+        # the historic kind confusion: these are levels/ratios
+        for key in ("fpr.prefix.hit_rate", "fpr.prefix.indexed_live",
+                    "fpr.prefix.orphaned_live", "engine.tokens_per_s",
+                    "admission.affinity_hit_rate",
+                    "admission.ledger.committed", "table.num_shards"):
+            assert kind_of(key) == "gauge", key
+
+    def test_monotone_totals_are_counters(self):
+        for key in ("fence.fences", "fpr.recycled_hits",
+                    "device.refreshed_bytes", "engine.tokens",
+                    "engine.obs.subscriber_errors",
+                    "admission.preemptions_swap", "fence.by_reason.munmap",
+                    "fence.worker_epochs.w3"):
+            assert kind_of(key) == "counter", key
+
+    def test_strings_are_info(self):
+        assert kind_of("admission.policy") == "info"
+        assert kind_of("admission.preempt_strategy") == "info"
+
+    def test_histogram_subkeys_resolve(self):
+        assert kind_of("engine.obs.step_latency_s.p99") == "histogram"
+        assert kind_of("nonsense.key") is None
+
+
+# ================================================================== histograms
+class TestHistogram:
+    def test_bucket_boundaries_inclusive_upper(self):
+        h = Histogram("h", (1, 2, 4))
+        for v in (0.5, 1.0, 1.5, 2.0, 3.9, 4.0, 99.0):
+            h.observe(v)
+        # le-semantics: value ≤ bound lands in that bucket
+        assert h.counts == [2, 2, 2, 1]      # ≤1, ≤2, ≤4, +Inf
+        assert h.count == 7
+        assert h.sum == pytest.approx(sum((0.5, 1.0, 1.5, 2.0, 3.9,
+                                           4.0, 99.0)))
+
+    def test_percentile_interpolation(self):
+        h = Histogram("h", (10, 20, 40))
+        for _ in range(10):
+            h.observe(5)                      # all in the ≤10 bucket
+        # p50: 5/10 of the mass → midpoint of [0, 10]
+        assert h.percentile(50) == pytest.approx(5.0)
+        assert h.percentile(100) == pytest.approx(10.0)
+
+    def test_percentile_overflow_clamps_to_last_bound(self):
+        h = Histogram("h", (1, 2))
+        h.observe(1000)
+        assert h.percentile(99) == 2.0
+
+    def test_percentile_empty_is_none(self):
+        assert Histogram("h", (1,)).percentile(99) is None
+
+    def test_bounds_must_ascend(self):
+        with pytest.raises(ValueError):
+            Histogram("h", (2, 1))
+        with pytest.raises(ValueError):
+            Histogram("h", ())
+
+    def test_registry_pins_histogram_names(self):
+        reg = MetricsRegistry()
+        with pytest.raises(ValueError, match="not pinned"):
+            reg.histogram("engine.obs.made_up")
+        h = reg.histogram("engine.obs.step_latency_s")
+        assert h is reg.histogram("engine.obs.step_latency_s")  # idempotent
+        assert h.bounds == tuple(
+            float(b) for b in HISTOGRAM_SCHEMA["engine.obs.step_latency_s"])
+
+    def test_histogram_keys_in_snapshot_and_schema(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("fence.obs.scope_workers")
+        h.observe(2)
+        snap = reg.snapshot()
+        assert snap["fence.obs.scope_workers.count"] == 1
+        assert isinstance(snap["fence.obs.scope_workers.buckets"], list)
+        assert schema_violations(snap) == []
+
+    def test_engine_histograms_fill(self):
+        snap = drive(make_engine("fcfs")).metrics.snapshot()
+        # steps ran → latency histogram observed every step
+        assert snap["engine.obs.step_latency_s.count"] == snap["engine.steps"]
+        assert snap["engine.obs.step_latency_s.p99"] is not None
+        # requests were admitted → queue-wait observed per seating
+        assert snap["engine.obs.queue_wait_steps.count"] >= 4
+        # non-empty admission rounds observed queue depth
+        assert snap["admission.obs.queue_depth.count"] > 0

@@ -1,0 +1,193 @@
+"""Span/trace layer: lifecycle, nesting, Chrome-trace export, and the
+live-engine integration (one closed root span per completed request).
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.events import (AdmissionDecision, EventBus, FenceIssued,
+                               PrefillChunkDone, RequestCompleted,
+                               StepCompleted)
+from repro.core.tracing import TID_ENGINE, TID_REQUEST_BASE, TraceCollector
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.serving.config import EngineConfig
+from repro.serving.engine import Engine
+
+TINY = ModelConfig(name="tiny", n_layers=1, d_model=32, n_heads=2,
+                   n_kv_heads=1, d_ff=64, vocab=64, head_dim=16)
+
+
+class FakeClock:
+    """Settable monotonic clock (seconds) for deterministic span math."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def admit(rid, depth=3):
+    return AdmissionDecision(decision="admit", rid=rid, policy="fcfs",
+                             queue_depth=depth, window_blocks=4,
+                             blocked_rid=None, tenant="s0")
+
+
+# ===================================================================== spans
+class TestSpanLifecycle:
+    def test_admit_to_complete_is_one_closed_root_span(self):
+        bus = EventBus()
+        clk = FakeClock()
+        tc = TraceCollector(bus, clock=clk)
+        clk.t = 1.0
+        bus.publish(admit(rid=7, depth=5))
+        assert 7 in tc.open_spans and tc.root_spans() == []
+        clk.t = 3.0
+        bus.publish(RequestCompleted(rid=7, n_tokens=4, step=9))
+        roots = tc.root_spans()
+        assert len(roots) == 1 and not tc.open_spans
+        span = roots[0]
+        assert span["name"] == "request 7"
+        assert span["tid"] == TID_REQUEST_BASE + 7
+        assert span["ts"] == 1.0 * 1e6
+        assert span["dur"] == 2.0 * 1e6
+        assert span["args"]["queue_depth"] == 5
+        assert span["args"]["n_tokens"] == 4
+
+    def test_reject_opens_nothing(self):
+        bus = EventBus()
+        tc = TraceCollector(bus, clock=FakeClock())
+        bus.publish(AdmissionDecision(decision="reject", rid=None,
+                                      policy="fcfs", queue_depth=2,
+                                      window_blocks=None, blocked_rid=1))
+        assert not tc.open_spans and not tc.events
+
+    def test_completion_without_admission_is_ignored(self):
+        bus = EventBus()
+        tc = TraceCollector(bus, clock=FakeClock())
+        bus.publish(RequestCompleted(rid=1, n_tokens=2, step=1))
+        assert tc.root_spans() == []
+
+    def test_readmission_flushes_prior_segment_as_resumed(self):
+        bus = EventBus()
+        clk = FakeClock()
+        tc = TraceCollector(bus, clock=clk)
+        clk.t = 1.0
+        bus.publish(admit(rid=3))
+        clk.t = 2.0
+        bus.publish(admit(rid=3))            # preempt → re-admit
+        clk.t = 4.0
+        bus.publish(RequestCompleted(rid=3, n_tokens=1, step=5))
+        roots = tc.root_spans()
+        assert len(roots) == 2
+        assert roots[0]["args"].get("resumed") is True
+        assert roots[1]["args"].get("resumed") is None
+        assert not tc.open_spans
+
+    def test_prefill_chunks_land_on_the_request_track(self):
+        bus = EventBus()
+        tc = TraceCollector(bus, clock=FakeClock())
+        bus.publish(admit(rid=2))
+        bus.publish(PrefillChunkDone(rid=2, start=0, end=64, step=1))
+        bus.publish(PrefillChunkDone(rid=2, start=64, end=100, step=2))
+        chunks = [e for e in tc.events if e["name"] == "prefill_chunk"]
+        assert [c["args"]["start"] for c in chunks] == [0, 64]
+        assert all(c["tid"] == TID_REQUEST_BASE + 2 for c in chunks)
+
+
+# =================================================================== nesting
+class TestNesting:
+    def test_fence_nests_inside_its_step_span(self):
+        """StepCompleted reconstructs the step's start as now - wall_s,
+        so fences published mid-step fall inside the step span."""
+        bus = EventBus()
+        clk = FakeClock()
+        tc = TraceCollector(bus, clock=clk)
+        clk.t = 1.4                           # mid-step fence
+        bus.publish(FenceIssued(reason="munmap", n_blocks=2, workers=(1,),
+                                seq=1, epoch=2, scoped=True))
+        clk.t = 2.0                           # step ran [1.0, 2.0]
+        bus.publish(StepCompleted(step=1, tokens=3, wall_s=1.0, running=2))
+        step = next(e for e in tc.events if e["name"] == "engine.step")
+        fence = next(e for e in tc.events if e["name"] == "fence")
+        assert step["tid"] == fence["tid"] == TID_ENGINE
+        assert step["ts"] <= fence["ts"] <= step["ts"] + step["dur"]
+        assert fence["args"]["workers"] == [1]
+        assert fence["args"]["scoped"] is True
+
+
+# ==================================================================== export
+class TestChromeTrace:
+    def test_chrome_trace_shape_and_metadata(self):
+        bus = EventBus()
+        clk = FakeClock()
+        tc = TraceCollector(bus, clock=clk)
+        bus.publish(admit(rid=1))
+        clk.t = 1.0
+        bus.publish(RequestCompleted(rid=1, n_tokens=2, step=3))
+        trace = tc.chrome_trace()
+        payload = json.loads(json.dumps(trace))   # JSON-serializable
+        events = payload["traceEvents"]
+        metas = [e for e in events if e["ph"] == "M"]
+        assert any(m["name"] == "process_name" for m in metas)
+        assert any(m["args"]["name"] == "request 1" for m in metas
+                   if m["name"] == "thread_name")
+        for e in events:
+            assert {"name", "ph", "pid"} <= set(e)
+            if e["ph"] == "X":
+                assert e["dur"] >= 0 and e["ts"] >= 0
+
+    def test_detach_stops_collecting(self):
+        bus = EventBus()
+        tc = TraceCollector(bus, clock=FakeClock())
+        tc.detach()
+        bus.publish(admit(rid=1))
+        assert not tc.open_spans and not tc.events
+
+
+# ================================================================ integration
+class TestEngineIntegration:
+    def _engine(self, **kw):
+        params = tfm.init_params(jax.random.PRNGKey(0), TINY, jnp.float32)
+        cfg = dict(num_blocks=16, max_batch=2, max_seq_len=256,
+                   num_workers=2, admission="fcfs")
+        cfg.update(kw)
+        return Engine(TINY, params, config=EngineConfig(**cfg))
+
+    def test_one_closed_root_span_per_request(self, tmp_path):
+        eng = self._engine()
+        tc = TraceCollector(eng.bus)
+        rng = np.random.RandomState(0)
+        for i in range(5):
+            eng.submit(rng.randint(1, TINY.vocab, size=10),
+                       max_new_tokens=3, stream=f"s{i % 2}",
+                       group_id=(i % 2) + 1)
+        eng.run()
+        summary = tc.summary()
+        assert summary["root_spans"] == eng.metrics.snapshot()[
+            "engine.completed"] == 5
+        assert summary["open_spans"] == 0
+        # fences that fired during the run were collected on the engine
+        # track and each sits inside some step span
+        steps = [e for e in tc.events if e["name"] == "engine.step"]
+        for fence in (e for e in tc.events if e["name"] == "fence"):
+            assert any(s["ts"] <= fence["ts"] <= s["ts"] + s["dur"]
+                       for s in steps)
+        path = tc.save(str(tmp_path / "trace.json"))
+        with open(path) as f:
+            assert json.load(f)["traceEvents"]
+
+    def test_chunked_prefill_produces_chunk_spans(self):
+        eng = self._engine(chunked_prefill=True, prefill_chunk=1)
+        tc = TraceCollector(eng.bus)
+        rng = np.random.RandomState(1)
+        eng.submit(rng.randint(1, TINY.vocab, size=200), max_new_tokens=2)
+        eng.run()
+        chunks = [e for e in tc.events if e["name"] == "prefill_chunk"]
+        assert len(chunks) >= 2          # 200 tokens / 128-token chunks
+        assert tc.summary()["root_spans"] == 1
+        assert tc.summary()["open_spans"] == 0

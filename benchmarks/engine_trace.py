@@ -416,10 +416,199 @@ def chunked_report(out: dict) -> None:
             f"{sm['queue_wait_p99_mice']})")
 
 
+#: island partition of the hierarchical replay: 2 islands × 2 workers
+ISLANDS = ((0, 1), (2, 3))
+
+#: stream names whose crc32 routing pins them to workers 0/1/2/3 — the
+#: trace needs streams on *specific* workers so sharing sets span a known
+#: pair of islands (zlib.crc32("stream4") % 4 == 1, etc.)
+_STREAM_OF_WORKER = {0: "stream0", 1: "stream4", 2: "stream1", 3: "stream5"}
+
+
+def _topology_trace(n_requests: int, seed: int = SEED):
+    """Two interleaved sharing groups over pinned workers.
+
+    Group 1 shares system prompt A between workers 0 and 1 — both inside
+    island 0, so its sharing-exit/recycle fences are **intra**-island.
+    Group 2 shares system prompt B between workers 0 and 2 — islands 0
+    and 1, so its fences must **cross**.  Shared blocks carry multi-worker
+    presence masks (each attach touches them from that stream's worker),
+    which is what widens the fence scope past one worker in the first
+    place.
+    """
+    from repro.models import transformer as tfm
+
+    rng = np.random.RandomState(seed)
+    vocab = _CFG_KW["vocab"]
+    sys_a = rng.randint(1, vocab, size=tfm.BLOCK_SIZE)
+    sys_b = rng.randint(1, vocab, size=tfm.BLOCK_SIZE)
+    reqs = []
+    for i in range(n_requests):
+        if i % 2 == 0:
+            system, gid, w = sys_a, 1, (0, 1)[(i // 2) % 2]
+        else:
+            system, gid, w = sys_b, 2, (0, 2)[(i // 2) % 2]
+        prompt = np.concatenate(
+            [system, rng.randint(1, vocab, size=rng.randint(4, 16))])
+        reqs.append((prompt, _STREAM_OF_WORKER[w], gid, 4 + (i % 3)))
+    return reqs
+
+#: island counter keys reported for the multi-island replay (the
+#: ``ISLAND_SCHEMA`` groups materialized only under a hierarchy)
+_ISLAND_KEYS = (
+    "fence.island.num_islands",
+    "fence.island.fences_intra",
+    "fence.island.fences_cross",
+    "fence.island.deltas_propagated",
+    "fence.island.modeled_intra_s",
+    "fence.island.modeled_cross_s",
+    "table.island.fences_intra",
+    "table.island.fences_cross",
+    "table.island.shard_bumps_intra",
+    "table.island.shard_bumps_remote",
+    "device.island.intra_refreshes",
+    "device.island.remote_deltas",
+    "device.island.delta_entries",
+    "device.island.delta_bytes",
+)
+
+
+def topology_case(smoke: bool = False) -> dict:
+    """Hierarchical 2×2-island replay vs flat 4-worker scoped fencing.
+
+    The same seeded trace runs twice through a 4-worker engine under
+    ``worker_routing="stream"`` (so slot rows land outside their worker's
+    modulo shard — the foreign bindings a scoped fence must pull in):
+
+      * ``flat``    — single island: every covered shard is re-uploaded
+                      in full (pre-island scoped fencing, bit for bit);
+      * ``islands`` — ``((0,1),(2,3))``: shards inside the covered
+                      islands still re-upload in full, but foreign shards
+                      on *remote* islands receive the compact
+                      delta-propagated update instead (billed to
+                      ``device.island.delta_bytes``).
+
+    Acceptance (re-checked by ``benchmarks/validate.py``): decoded tokens
+    bit-identical, total ``device.refreshed_bytes`` strictly lower under
+    islands, and per-fence modeled cost strictly cheaper intra-island
+    than cross-island (the ``cross_island_cost`` multiplier).  A third
+    replay reshapes a *live* flat engine to the island partition and back
+    (``Engine.reshape`` — islands join/leave mid-trace) and must also
+    stay bit-identical.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.topology import Topology
+    from repro.models import transformer as tfm
+    from repro.models.config import ModelConfig
+    from repro.serving.config import EngineConfig
+    from repro.serving.engine import Engine
+
+    params = tfm.init_params(jax.random.PRNGKey(0), ModelConfig(**_CFG_KW),
+                             jnp.float32)
+    reqs = _topology_trace(n_requests=12 if smoke else 20)
+    kw = dict(num_blocks=6, max_batch=4)
+
+    def build(islands):
+        return Engine(ModelConfig(**_CFG_KW), params,
+                      config=EngineConfig(max_seq_len=256, fpr_enabled=True,
+                                          num_workers=4, scoped_fences=True,
+                                          worker_routing="stream",
+                                          admission="fcfs",
+                                          islands=islands, **kw))
+
+    out: dict = {"seed": SEED, "islands": [list(i) for i in ISLANDS],
+                 "requests": len(reqs), "num_workers": 4, **kw}
+    toks = {}
+    for mode, islands in (("flat", None), ("islands", ISLANDS)):
+        snap, toks[mode] = _replay(build(islands), reqs)
+        keys = _REPORT_KEYS + (_ISLAND_KEYS if islands else ())
+        out[mode] = {k: snap.get(k) for k in keys}
+    out["tokens_identical"] = toks["flat"] == toks["islands"]
+    f = out["flat"]["device.refreshed_bytes"]
+    i = out["islands"]["device.refreshed_bytes"]
+    out["cross_island_bytes_saving_pct"] = (round((1 - i / f) * 100.0, 2)
+                                            if f else 0.0)
+    isl = out["islands"]
+    fi = isl["fence.island.fences_intra"]
+    fx = isl["fence.island.fences_cross"]
+    out["modeled_intra_per_fence_s"] = (
+        round(isl["fence.island.modeled_intra_s"] / fi, 9) if fi else None)
+    out["modeled_cross_per_fence_s"] = (
+        round(isl["fence.island.modeled_cross_s"] / fx, 9) if fx else None)
+
+    # live reshape: the flat engine joins the island partition after two
+    # steps and dissolves it back to flat a few steps later — tokens must
+    # stay bit-identical to the fixed-flat run (reshape moves replica
+    # groups, never rows' contents)
+    eng = build(None)
+    for prompt, stream, gid, mnt in reqs:
+        eng.submit(prompt, max_new_tokens=mnt, stream=stream, group_id=gid)
+    schedule = {2: Topology.of(ISLANDS), 6: Topology.flat(4)}
+    steps = 0
+    while not eng.sched.idle and eng.steps < 10_000:
+        eng.step()
+        steps += 1
+        if steps in schedule:
+            eng.reshape(schedule[steps])
+    r_toks = [list(map(int, r.generated))
+              for r in sorted(eng.sched.done, key=lambda r: r.rid)]
+    r_snap = eng.metrics.snapshot()
+    out["reshape"] = {
+        "schedule": {"2": [list(i) for i in ISLANDS], "6": "flat"},
+        "tokens_identical": r_toks == toks["flat"],
+        "ended_flat": eng.cache.topology is None,
+        **{k: r_snap.get(k) for k in ("table.reshards",
+                                      "engine.num_workers")},
+    }
+    return out
+
+
+def topology_report(out: dict) -> None:
+    """Print the two-level summary; fail loud on any acceptance miss."""
+    f, i = out["flat"], out["islands"]
+    print(f"  2×2 islands:     refreshed bytes "
+          f"{f['device.refreshed_bytes']} → {i['device.refreshed_bytes']} "
+          f"(-{out['cross_island_bytes_saving_pct']:.0f}%), fences "
+          f"{i['fence.island.fences_intra']} intra / "
+          f"{i['fence.island.fences_cross']} cross "
+          f"({i['device.island.delta_bytes']}B deltas), tokens identical: "
+          f"{out['tokens_identical']}")
+    print(f"  live reshape:    flat→islands→flat, reshards "
+          f"{out['reshape']['table.reshards']}, tokens identical: "
+          f"{out['reshape']['tokens_identical']}")
+    if not out["tokens_identical"]:
+        raise AssertionError("island topology changed decoded tokens")
+    if not out["reshape"]["tokens_identical"]:
+        raise AssertionError("live reshape changed decoded tokens")
+    if not (i["device.refreshed_bytes"] < f["device.refreshed_bytes"]):
+        raise AssertionError(
+            f"island replay refreshed {i['device.refreshed_bytes']}B — "
+            f"not strictly below flat {f['device.refreshed_bytes']}B")
+    fi = i["fence.island.fences_intra"]
+    fx = i["fence.island.fences_cross"]
+    if not fi or not fx:
+        raise AssertionError(f"trace must exercise both fence levels "
+                             f"(got {fi} intra, {fx} cross)")
+    ci = out["modeled_intra_per_fence_s"]
+    cx = out["modeled_cross_per_fence_s"]
+    if not ci < cx:
+        raise AssertionError(
+            f"intra-island fences must be strictly cheaper per fence "
+            f"than cross-island (got {ci} vs {cx})")
+
+
 def run(smoke: bool = False) -> dict:
     out = case(smoke=smoke)
     save("engine_trace", out)
     report(out)
+    return out
+
+
+def run_topology(smoke: bool = False) -> dict:
+    out = topology_case(smoke=smoke)
+    save("BENCH_topology", out)
+    topology_report(out)
     return out
 
 
@@ -445,3 +634,4 @@ if __name__ == "__main__":
     run(smoke=args.smoke)
     run_prefix(smoke=args.smoke)
     run_chunked(smoke=args.smoke)
+    run_topology(smoke=args.smoke)

@@ -16,7 +16,11 @@ monolithic, one compile across prompt lengths, mice-and-elephants p99
 win) and ``BENCH_load.json`` (open-loop load harness: p50/p99 queue-wait
 and step latency from the pinned histograms, fences/token, refreshed
 bytes/token, fixed-seed token-identity, plus the ``trace_load.json``
-Chrome trace) — fast enough for every push.
+Chrome trace) and ``BENCH_topology.json`` (hierarchical 2×2-island
+replay: tokens bit-identical to flat 4-worker scoped fencing, strictly
+fewer device-refreshed bytes via remote-island delta propagation,
+intra-island fences strictly cheaper than cross-island in modeled cost)
+— fast enough for every push.
 """
 
 from __future__ import annotations
@@ -53,6 +57,8 @@ def main() -> int:
              lambda: engine_trace.run_chunked(smoke=True)),
             ("loadgen smoke (BENCH_load.json + trace_load.json)",
              lambda: loadgen.run(smoke=True)),
+            ("topology smoke (deterministic BENCH_topology.json)",
+             lambda: engine_trace.run_topology(smoke=True)),
         ]
     else:
         suites = [
@@ -70,6 +76,8 @@ def main() -> int:
             #   python -m benchmarks.loadgen --sustained
             ("loadgen sustained (BENCH_load.json open-loop harness)",
              loadgen.run),
+            ("hierarchical topology (BENCH_topology.json two-level fences)",
+             engine_trace.run_topology),
             ("device_latency (Fig. 12)", device_latency.run),
             ("eviction (Fig. 14-17)", eviction.run),
             ("contexts (§IV-C2)", contexts_bench.run),

@@ -1,0 +1,153 @@
+"""Cross-PR perf-trajectory differ over ``BENCH_load.json`` artifacts.
+
+    PYTHONPATH=src python -m benchmarks.trajectory DIR [--out trend.json]
+                                                       [--threshold 0.25]
+
+``DIR`` holds one load-harness artifact per PR — either flat files
+(``<label>.json``) or one subdirectory per PR containing a
+``BENCH_load.json`` (the layout a CI artifact download produces).
+Labels sort lexicographically, so name them in PR order (``pr07``,
+``pr08``, …).  The differ merges the per-workload tail latencies into
+one trend document::
+
+    {"labels": [...],
+     "workloads": {"poisson": {"queue_wait_p99": [...],
+                               "step_latency_p99": [...],
+                               "fences_per_token": [...]}, ...},
+     "threshold": 0.25,
+     "regressions": ["poisson: queue_wait_p99 124.59 -> 181.2 (+45.4%)"]}
+
+and renders a **regression verdict**: for every workload metric, the
+newest artifact is compared against the previous one, and a relative
+increase beyond ``--threshold`` (default +25%) is a regression — the
+process exits nonzero so a CI step can gate on it.  Missing
+workloads/metrics in the newest artifact also count (a vanished p99 is
+a silently-emptied histogram, not an improvement).  With fewer than two
+artifacts there is nothing to diff: the trend is still written, the
+verdict is vacuously clean.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+
+#: per-workload metrics tracked across PRs (lower is better for all)
+TREND_METRICS = ("queue_wait_p99", "step_latency_p99",
+                 "fences_per_token", "refreshed_bytes_per_token")
+
+#: workload sections expected in each artifact (same set validate.py pins)
+WORKLOADS = ("poisson", "diurnal", "multi_tenant")
+
+
+def _metric(workload: dict, metric: str):
+    """Extract one trend metric from a workload section (None = absent)."""
+    if metric == "queue_wait_p99":
+        return (workload.get("queue_wait_steps") or {}).get("p99")
+    if metric == "step_latency_p99":
+        return (workload.get("step_latency_s") or {}).get("p99")
+    return workload.get(metric)
+
+
+def discover(directory: str) -> list:
+    """``(label, path)`` pairs in label order: ``<label>.json`` files and
+    ``<label>/BENCH_load.json`` subdirectories."""
+    found = []
+    for name in sorted(os.listdir(directory)):
+        path = os.path.join(directory, name)
+        if os.path.isfile(path) and name.endswith(".json"):
+            found.append((name[:-len(".json")], path))
+        elif os.path.isdir(path):
+            nested = os.path.join(path, "BENCH_load.json")
+            if os.path.isfile(nested):
+                found.append((name, nested))
+    return found
+
+
+def merge(artifacts: list) -> dict:
+    """Merge ``(label, payload)`` pairs into the trend document."""
+    labels = [label for label, _ in artifacts]
+    workloads: dict = {}
+    for wl in WORKLOADS:
+        series = {m: [] for m in TREND_METRICS}
+        for _, payload in artifacts:
+            section = (payload.get("workloads") or {}).get(wl) or {}
+            for m in TREND_METRICS:
+                series[m].append(_metric(section, m))
+        workloads[wl] = series
+    return {"labels": labels, "workloads": workloads}
+
+
+def verdict(trend: dict, threshold: float) -> list:
+    """Human-readable regressions of the newest label vs its predecessor."""
+    labels = trend["labels"]
+    if len(labels) < 2:
+        return []
+    bad = []
+    for wl, series in trend["workloads"].items():
+        for metric, values in series.items():
+            prev, last = values[-2], values[-1]
+            if last is None or (isinstance(last, float)
+                                and not math.isfinite(last)):
+                if prev is not None:
+                    bad.append(f"{wl}: {metric} vanished in {labels[-1]} "
+                               f"(was {prev})")
+                continue
+            if prev in (None, 0) or (isinstance(prev, float)
+                                     and not math.isfinite(prev)):
+                continue            # no baseline to regress against
+            rel = (last - prev) / prev
+            if rel > threshold:
+                bad.append(f"{wl}: {metric} {round(prev, 4)} -> "
+                           f"{round(last, 4)} (+{round(rel * 100.0, 1)}%)")
+    return bad
+
+
+def run(directory: str, out: "str | None" = None,
+        threshold: float = 0.25) -> dict:
+    """Merge + verdict; returns the trend document (with verdict folded
+    in) and writes it to ``out`` when given."""
+    pairs = discover(directory)
+    artifacts = []
+    for label, path in pairs:
+        with open(path) as f:
+            artifacts.append((label, json.load(f)))
+    trend = merge(artifacts)
+    trend["threshold"] = threshold
+    trend["regressions"] = verdict(trend, threshold)
+    if out:
+        with open(out, "w") as f:
+            json.dump(trend, f, indent=1)
+    return trend
+
+
+def main(argv: list) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("directory", help="per-PR BENCH_load.json artifacts")
+    ap.add_argument("--out", default=None,
+                    help="write the merged trend JSON here")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative p99 increase that fails (default 0.25)")
+    args = ap.parse_args(argv)
+    trend = run(args.directory, out=args.out, threshold=args.threshold)
+    n = len(trend["labels"])
+    print(f"trajectory: {n} artifact(s) "
+          f"({', '.join(trend['labels']) or 'none'})")
+    for wl, series in trend["workloads"].items():
+        p99s = series["queue_wait_p99"]
+        print(f"  {wl}: queue_wait_p99 "
+              f"{' -> '.join(str(round(v, 2)) if isinstance(v, float) else str(v) for v in p99s)}")
+    if trend["regressions"]:
+        print(f"REGRESSION beyond +{trend['threshold'] * 100:.0f}%:")
+        for line in trend["regressions"]:
+            print(f"  {line}")
+        return 1
+    print("verdict: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -25,10 +25,16 @@ open-loop load harness) must carry every workload with a present
 queue-wait/step-latency p99, finite fences/token and refreshed
 bytes/token, tokens bit-identical to the fixed-seed replay, and a trace
 summary with at least one root span and zero left-open spans.  The
+``BENCH_topology.json`` (hierarchical islands) must keep the
+multi-island replay token-identical to flat scoped fencing, the strict
+cross-island device-bytes win, both fence levels exercised, and
+intra-island fences strictly cheaper per fence than cross-island.  The
 schema itself must know the ``fpr.eviction.``,
 ``fpr.prefix.`` and topology (``table.reshards`` / ``device.reshard_*``)
-counter groups plus the pinned observability histograms and the
-subscriber-error counter, so retiring them fails here too.
+counter groups, the two-level island groups (``fence.island.*`` /
+``table.island.*`` / ``device.island.*``), plus the pinned
+observability histograms and the subscriber-error counter, so retiring
+them fails here too.
 
 This runs in the CI push lane right after ``benchmarks.run --smoke``:
 counter drift (a renamed, retired or misspelled key) fails the push
@@ -46,7 +52,7 @@ from repro.core.metrics import schema_violations
 #: the deterministic smoke artifacts the push lane publishes
 DEFAULT_ARTIFACTS = ("microbench_scoped.json", "admission_smoke.json",
                      "BENCH_prefix.json", "BENCH_chunked.json",
-                     "BENCH_load.json")
+                     "BENCH_load.json", "BENCH_topology.json")
 
 #: workloads the load harness must always exercise
 LOAD_WORKLOADS = ("poisson", "diurnal", "multi_tenant")
@@ -82,6 +88,19 @@ REQUIRED_SCHEMA_KEYS = (
     "admission.obs.queue_depth",
     "fence.obs.scope_workers",
     "device.obs.refresh_bytes",
+    # hierarchical island topology: two-level fence + replica-group +
+    # delta-propagation counters (ISLAND_SCHEMA)
+    "fence.island.num_islands",
+    "fence.island.fences_intra",
+    "fence.island.fences_cross",
+    "fence.island.deltas_propagated",
+    "fence.island.modeled_intra_s",
+    "fence.island.modeled_cross_s",
+    "table.island.shard_bumps_intra",
+    "table.island.shard_bumps_remote",
+    "device.island.delta_entries",
+    "device.island.delta_bytes",
+    "admission.ledger.per_island_committed",
 )
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
@@ -241,6 +260,48 @@ def load_violations(path: str) -> list[str]:
     return bad
 
 
+def topology_violations(path: str) -> list[str]:
+    """Required-section check: the hierarchical-island replay.
+
+    Applies to ``BENCH_topology.json``; fails the push lane when the
+    multi-island replay stops being token-identical to flat scoped
+    fencing, loses the strict cross-island device-bytes win (remote
+    replicas must receive deltas, not full re-uploads), stops exercising
+    both fence levels, or intra-island fences stop being strictly
+    cheaper per fence than cross-island ones in modeled cost.
+    """
+    with open(path) as f:
+        payload = json.load(f)
+    flat = payload.get("flat")
+    isl = payload.get("islands")
+    if flat is None or isl is None:
+        return ["missing flat/islands sections"]
+    bad = []
+    if not payload.get("tokens_identical"):
+        bad.append("island replay tokens diverged from the flat run")
+    fb = flat.get("device.refreshed_bytes")
+    ib = isl.get("device.refreshed_bytes")
+    if fb is None or ib is None or not ib < fb:
+        bad.append(f"island refreshed bytes {ib} not strictly below "
+                   f"flat {fb}")
+    fi = isl.get("fence.island.fences_intra") or 0
+    fx = isl.get("fence.island.fences_cross") or 0
+    if not fi or not fx:
+        bad.append(f"replay must exercise both fence levels "
+                   f"(got {fi} intra, {fx} cross)")
+    ci = payload.get("modeled_intra_per_fence_s")
+    cx = payload.get("modeled_cross_per_fence_s")
+    if ci is None or cx is None or not ci < cx:
+        bad.append(f"intra-island per-fence modeled cost {ci} not "
+                   f"strictly below cross-island {cx}")
+    reshape = payload.get("reshape")
+    if not reshape:
+        bad.append("missing live-reshape section")
+    elif not reshape.get("tokens_identical"):
+        bad.append("live reshape (flat→islands→flat) changed tokens")
+    return bad
+
+
 def main(argv: list[str]) -> int:
     paths = argv or [os.path.join(RESULTS, name)
                      for name in DEFAULT_ARTIFACTS]
@@ -267,6 +328,9 @@ def main(argv: list[str]) -> int:
             bad = bad + [f"chunked: {b}" for b in chunked_violations(path)]
         if name == "BENCH_load.json":
             bad = bad + [f"load: {b}" for b in load_violations(path)]
+        if name == "BENCH_topology.json":
+            bad = bad + [f"topology: {b}"
+                         for b in topology_violations(path)]
         if bad:
             failed = True
             print(f"SCHEMA DRIFT in {name} — keys not in "

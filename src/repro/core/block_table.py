@@ -113,6 +113,40 @@ class BlockTableStore:
         #     linger until ONE covering fence bumps the shard.
         self._overflow_live: dict[tuple[int, int], int] = {}
         self._overflow_dead: set[tuple[int, int]] = set()
+        # Per-island replica groups: with a multi-island topology each
+        # island holds a replica group of the table shards, and a scoped
+        # fence only *re-uploads* the shards inside the covered islands —
+        # shards the fence must bump in remote islands receive a
+        # delta-propagated update instead (the numaPTE remote-shootdown
+        # direction).  Epochs are bumped identically either way, so the
+        # staleness check is untouched; only the accounting splits.
+        self._topology = None
+        self.island_bumps: "dict | None" = None
+
+    # ---------------------------------------------------------------- islands
+    def set_topology(self, topology) -> None:
+        """Install the worker → island partition for replica-group
+        accounting.  Flat (single-island or ``None``) drops it — no
+        island counters, bit-identical to the pre-island store."""
+        if topology is None or topology.is_flat:
+            self._topology = None
+            return
+        self._topology = topology
+        if self.island_bumps is None:
+            self.island_bumps = {"fences_intra": 0, "fences_cross": 0,
+                                 "shard_bumps_intra": 0,
+                                 "shard_bumps_remote": 0}
+
+    @property
+    def topology(self):
+        return self._topology
+
+    def island_totals(self) -> "dict | None":
+        """``table.island.*`` counter snapshot; ``None`` when the store
+        has never run multi-island (keeps flat snapshots key-identical)."""
+        if self.island_bumps is None:
+            return None
+        return dict(self.island_bumps)
 
     # ---------------------------------------------------------------- shards
     def shard_of_slot(self, slot: int) -> int:
@@ -263,6 +297,24 @@ class BlockTableStore:
                                    if k[1] not in bumped}
             idx = np.asarray(sorted(bumped), dtype=np.int64)
             self.shard_epochs[idx] = self.epoch
+            if self._topology is not None:
+                # Replica-group split: shards inside the covered islands
+                # re-upload in full; shards the overflow bookkeeping pulls
+                # in from *remote* islands take the delta-propagation path
+                # (same epoch bump, cheaper transfer — counted apart so
+                # the cross-island win is measurable).
+                t = self._topology
+                cov_isl = {t.island_of(s) for s in covered}
+                stats = self.island_bumps
+                if len(cov_isl) <= 1:
+                    stats["fences_intra"] += 1
+                else:
+                    stats["fences_cross"] += 1
+                for sh in bumped:
+                    if t.island_of(sh) in cov_isl:
+                        stats["shard_bumps_intra"] += 1
+                    else:
+                        stats["shard_bumps_remote"] += 1
         return self.epoch
 
     # ---------------------------------------------------------------- reshard
@@ -341,6 +393,10 @@ class BlockTableStore:
                 new_live[(nw, sh)] = new_live.get((nw, sh), 0) + 1
         self.worker_of_mapping = new_worker_of
         self._overflow_live = new_live
+        if self._topology is not None and self._topology.num_workers != new_num:
+            # The old partition no longer covers the shard set; drop to
+            # flat until the caller installs the reshaped topology.
+            self._topology = None
         return {"moved_slots": [int(s) for s in moved],
                 "moved_live_slots": moved_live,
                 "fence_workers": fence_workers}

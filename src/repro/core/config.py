@@ -33,10 +33,17 @@ class FprConfig(ConfigBase):
     runtime through :meth:`~repro.core.fpr.FprMemoryManager.reshard`
     (elastic scale up/down), which revalidates the new count through the
     same :func:`validate_worker_count` as construction.
+
+    ``islands`` optionally partitions the workers into islands (hosts /
+    NUMA domains) for two-level scoped fences — a tuple of worker-id
+    tuples covering ``range(num_workers)`` exactly, normalised through
+    :class:`~repro.core.topology.Topology`.  ``None`` (and any flat
+    single-island spec) keeps the pre-island behaviour bit for bit.
     """
 
     num_blocks: int = 4096
     num_workers: int = 1
+    islands: "tuple | None" = None
     max_seqs: int = 4096
     max_blocks_per_seq: int = 8192
     fpr_enabled: bool = True
@@ -59,12 +66,27 @@ class FprConfig(ConfigBase):
                              f"positive, got {self.max_seqs} / "
                              f"{self.max_blocks_per_seq}")
         validate_worker_count(self.num_workers)
+        if self.islands is not None:
+            # Validate + normalise to the serialisable spec (deferred
+            # import: topology sits above tracking, below config users).
+            from repro.core.topology import Topology
+            topo = Topology.of(self.islands, num_workers=self.num_workers)
+            object.__setattr__(self, "islands",
+                               None if topo.is_flat else topo.spec)
         if self.pcp_batch <= 0 or self.pcp_high < self.pcp_batch:
             raise ValueError(f"need 0 < pcp_batch <= pcp_high, got "
                              f"pcp_batch={self.pcp_batch} "
                              f"pcp_high={self.pcp_high}")
         if self.max_order < 0:
             raise ValueError(f"max_order must be >= 0, got {self.max_order}")
+
+    def topology(self):
+        """The configured :class:`~repro.core.topology.Topology`, or
+        ``None`` for the flat degenerate case."""
+        if self.islands is None:
+            return None
+        from repro.core.topology import Topology
+        return Topology.of(self.islands, num_workers=self.num_workers)
 
 
 def validate_worker_count(num_workers: int) -> int:

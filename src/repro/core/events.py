@@ -164,6 +164,11 @@ class TopologyChanged(Event):
     ``fence_workers`` names the pre-existing workers whose epoch the
     accompanying scoped ``reason="reshard"`` fence bumps (empty tuple ⇒
     no live row moved and the reshard was fence-free).
+
+    ``islands`` is the new topology's island spec (tuple of worker-id
+    tuples) when the reshape installed a multi-island topology, ``None``
+    for the flat degenerate case — a plain ``resize_workers`` publishes
+    exactly the pre-island event.
     """
 
     old_num_workers: int
@@ -171,6 +176,7 @@ class TopologyChanged(Event):
     translation: "tuple[int, ...]"       # old worker id → new worker id
     moved_slots: "tuple[int, ...]"
     fence_workers: "tuple[int, ...]"
+    islands: "tuple | None" = None       # new island spec (None ⇒ flat)
 
 
 @dataclass(frozen=True)

@@ -115,6 +115,17 @@ def _fmt(value) -> str:
     return str(value)
 
 
+def _exemplar_suffix(exemplar) -> str:
+    """OpenMetrics exemplar rendered after a ``_bucket`` sample: ``#
+    {trace_id="<id>"} <value>``.  ``exemplar`` is the histogram's
+    per-bucket ``(trace_id, value)`` pair (``None`` ⇒ no suffix — plain
+    v0.0.4 exposition, what every pre-exemplar golden fixture pins)."""
+    if exemplar is None:
+        return ""
+    trace_id, value = exemplar
+    return f' # {{trace_id="{escape_label(trace_id)}"}} {_fmt(value)}'
+
+
 def _help_for(key: str) -> str:
     for prefix, text in HELP_TEXT:
         if key.startswith(prefix):
@@ -150,12 +161,15 @@ def render(snapshot: dict, histograms: "dict | None" = None) -> str:
         mname = prom_name(name, "histogram")
         _emit_header(lines, mname, name, "histogram", seen)
         kl = f'key="{escape_label(name)}"'
+        exemplars = getattr(hist, "exemplars",
+                            [None] * len(hist.counts))
         cum = 0
-        for bound, count in zip(hist.bounds, hist.counts):
+        for i, (bound, count) in enumerate(zip(hist.bounds, hist.counts)):
             cum += count
             lines.append(f'{mname}_bucket{{{kl},le="{_fmt(float(bound))}"}}'
-                         f" {cum}")
-        lines.append(f'{mname}_bucket{{{kl},le="+Inf"}} {hist.count}')
+                         f" {cum}{_exemplar_suffix(exemplars[i])}")
+        lines.append(f'{mname}_bucket{{{kl},le="+Inf"}} {hist.count}'
+                     f"{_exemplar_suffix(exemplars[-1])}")
         lines.append(f"{mname}_sum{{{kl}}} {_fmt(hist.sum)}")
         lines.append(f"{mname}_count{{{kl}}} {hist.count}")
 

@@ -102,6 +102,8 @@ class FprMemoryManager:
         self.fences = fence_engine or FenceEngine()
         self.bus = self.fences.bus
         self.fences.ensure_workers(num_workers)
+        if config.islands is not None:
+            self.set_topology(config.topology())
         if config.scoped_fences is not None:  # None ⇒ respect engine's flag
             self.fences.scoped = config.scoped_fences
         # Every fence invalidates device-held tables: couple the epochs.  A
@@ -165,15 +167,46 @@ class FprMemoryManager:
     def _fence_metrics(self) -> dict:
         d = self.fences.totals()
         d["worker_epochs"] = self.fences.worker_epoch_counters()
+        if self.fences.island_stats is not None:
+            d["island_epochs"] = self.fences.island_epoch_counters()
         return d
 
     def _table_metrics(self) -> dict:
-        return {"epoch": self.tables.epoch,
-                "num_shards": self.tables.num_shards,
-                "reshards": self.reshards,
-                "shard_epochs": [int(e) for e in self.tables.shard_epochs],
-                "shard_overflows": self.tables.shard_overflows,
-                "stale_lookups_detected": self.tables.stale_lookups_detected}
+        d = {"epoch": self.tables.epoch,
+             "num_shards": self.tables.num_shards,
+             "reshards": self.reshards,
+             "shard_epochs": [int(e) for e in self.tables.shard_epochs],
+             "shard_overflows": self.tables.shard_overflows,
+             "stale_lookups_detected": self.tables.stale_lookups_detected}
+        isl = self.tables.island_totals()
+        if isl is not None:
+            d["island"] = isl
+        return d
+
+    # ================================================================= topology
+    @property
+    def topology(self):
+        """The installed multi-island topology, ``None`` when flat."""
+        return self.fences.topology
+
+    def set_topology(self, topology) -> None:
+        """Install a worker → island partition on every coherence layer
+        (tracker summary bits, two-level fence engine, table replica
+        groups).  ``None`` or a flat spec drops back to the single-level
+        engine.  The partition must cover exactly the current worker
+        count — reshaping worker counts goes through :meth:`reshard`.
+        """
+        from repro.core.topology import Topology
+        topo = (None if topology is None
+                else Topology.of(topology,
+                                 num_workers=self.config.num_workers))
+        if topo is not None and topo.is_flat:
+            topo = None
+        self.tracker.set_topology(topo)
+        self.fences.set_topology(topo)
+        self.tables.set_topology(topo)
+        self.config = self.config.replace(
+            islands=None if topo is None else topo.spec)
 
     # ================================================================== reshard
     @property
@@ -188,7 +221,7 @@ class FprMemoryManager:
                      for w in range(self.config.num_workers))
 
     def reshard(self, new_num_workers: int, translation=None,
-                extra_fence_workers=()) -> dict:
+                extra_fence_workers=(), topology=None) -> dict:
         """Elastic topology change: remap every per-worker structure onto
         ``new_num_workers`` without invalidating live mappings.
 
@@ -213,6 +246,12 @@ class FprMemoryManager:
         device cache's batch slots) merge the old owners of *its* moved
         live rows into the same single fence.
 
+        ``topology`` optionally installs a new worker → island partition
+        over the resharded workers (islands joining/leaving live); when
+        omitted and the worker count changes, any multi-island topology
+        drops to flat — the caller must reinstall one that covers the new
+        count (sound either way: flat fences globally within the level).
+
         Returns the block-table's reshard plan (moved/fenced sets).
         """
         old_num = self.config.num_workers
@@ -228,8 +267,20 @@ class FprMemoryManager:
             set(plan["fence_workers"])
             | {int(w) for w in extra_fence_workers
                if 0 <= int(w) < new_num_workers})
-        self.config = self.config.replace(num_workers=new_num_workers)
+        # the old island spec cannot survive a count change (the config
+        # validates islands against num_workers); it is reinstated below
+        # from whatever topology the fence engine kept or was given
+        self.config = self.config.replace(num_workers=new_num_workers,
+                                          islands=None)
         self.reshards += 1
+        if topology is not None:
+            # Installed before the event and the reshard fence so
+            # subscribers observe (and the fence is classified under)
+            # the final island layout.
+            self.set_topology(topology)
+        new_topo = self.fences.topology
+        self.config = self.config.replace(
+            islands=None if new_topo is None else new_topo.spec)
         if self.bus.wants(TopologyChanged):
             self.bus.publish(TopologyChanged(
                 old_num_workers=old_num,
@@ -237,7 +288,8 @@ class FprMemoryManager:
                 translation=tuple(int(translation[w])
                                   for w in range(old_num)),
                 moved_slots=tuple(plan["moved_slots"]),
-                fence_workers=tuple(plan["fence_workers"])))
+                fence_workers=tuple(plan["fence_workers"]),
+                islands=None if new_topo is None else new_topo.spec))
         if plan["fence_workers"]:
             mask = 0
             for w in plan["fence_workers"]:

@@ -47,6 +47,7 @@ NAMESPACES = ("fpr", "fpr.prefix", "fpr.eviction", "fence", "table",
 #: one epoch per worker, one ledger share per worker) — validated by prefix
 WILDCARD_PREFIXES = (
     "fence.by_reason.",
+    "fence.island_epochs.",
     "fence.worker_epochs.",
 )
 
@@ -135,6 +136,33 @@ STABLE_SCHEMA = (
     "engine.wall_s",
     # admission.* — governor + ledger (enabled=False collapses to one key)
     "admission.enabled",
+)
+
+#: island-topology keys, present only when a multi-island
+#: :class:`~repro.core.topology.Topology` is installed.  Kept out of
+#: :data:`STABLE_SCHEMA` so flat single-island snapshots stay bit for bit
+#: identical to the pre-island contract (the golden tests pin exact
+#: equality); schema validation still admits them.
+ISLAND_SCHEMA = (
+    # fence.island.* — two-level FenceEngine accounting
+    "fence.island.deltas_propagated",
+    "fence.island.fences_cross",
+    "fence.island.fences_intra",
+    "fence.island.modeled_cross_s",
+    "fence.island.modeled_intra_s",
+    "fence.island.num_islands",
+    # table.island.* — per-island replica-group bump classification
+    "table.island.fences_cross",
+    "table.island.fences_intra",
+    "table.island.shard_bumps_intra",
+    "table.island.shard_bumps_remote",
+    # device.island.* — delta propagation to remote-island replicas
+    "device.island.delta_bytes",
+    "device.island.delta_entries",
+    "device.island.intra_refreshes",
+    "device.island.remote_deltas",
+    # admission — per-island committed-block shares
+    "admission.ledger.per_island_committed",
 )
 
 #: admission.* keys present only when a MemoryGovernor is attached
@@ -269,12 +297,29 @@ SCHEMA_KINDS = {
     "admission.quota.rejections": "counter",
     "admission.quota.tenants": "gauge",
     "admission.rejected_overcommit": "counter",
+    # island.* groups (multi-island topologies only)
+    "fence.island.deltas_propagated": "counter",
+    "fence.island.fences_cross": "counter",
+    "fence.island.fences_intra": "counter",
+    "fence.island.modeled_cross_s": "counter",
+    "fence.island.modeled_intra_s": "counter",
+    "fence.island.num_islands": "gauge",
+    "table.island.fences_cross": "counter",
+    "table.island.fences_intra": "counter",
+    "table.island.shard_bumps_intra": "counter",
+    "table.island.shard_bumps_remote": "counter",
+    "device.island.delta_bytes": "counter",
+    "device.island.delta_entries": "counter",
+    "device.island.intra_refreshes": "counter",
+    "device.island.remote_deltas": "counter",
+    "admission.ledger.per_island_committed": "gauge",
 }
 
 #: kind per wildcard group (per-reason fence totals and per-worker fence
 #: epochs are both monotonic)
 WILDCARD_KINDS = {
     "fence.by_reason.": "counter",
+    "fence.island_epochs.": "counter",
     "fence.worker_epochs.": "counter",
 }
 
@@ -326,7 +371,7 @@ class Histogram:
     evaluates ``histogram_quantile`` over the same buckets.
     """
 
-    __slots__ = ("name", "bounds", "counts", "sum", "count")
+    __slots__ = ("name", "bounds", "counts", "sum", "count", "exemplars")
 
     def __init__(self, name: str, bounds: Iterable[float]):
         self.name = name
@@ -338,10 +383,18 @@ class Histogram:
         self.counts = [0] * (len(self.bounds) + 1)   # +1: +Inf overflow
         self.sum = 0.0
         self.count = 0
+        # per-bucket most-recent exemplar: (trace_id, value) or None.
+        # Kept out of snapshot() — HISTOGRAM_FIELDS is pinned; the
+        # OpenMetrics exporter (core/export.py) renders them inline.
+        self.exemplars: list = [None] * (len(self.bounds) + 1)
 
-    def observe(self, value: float) -> None:
+    def observe(self, value: float,
+                exemplar: "str | None" = None) -> None:
         value = float(value)
-        self.counts[bisect_left(self.bounds, value)] += 1
+        i = bisect_left(self.bounds, value)
+        self.counts[i] += 1
+        if exemplar is not None:
+            self.exemplars[i] = (str(exemplar), value)
         self.sum += value
         self.count += 1
 
@@ -369,6 +422,7 @@ class Histogram:
         self.counts = [0] * (len(self.bounds) + 1)
         self.sum = 0.0
         self.count = 0
+        self.exemplars = [None] * (len(self.bounds) + 1)
 
     def snapshot(self) -> dict:
         """Flat-snapshot leaf view (JSON scalars/lists only)."""
@@ -484,6 +538,7 @@ class MetricsRegistry:
 def schema_violations(keys: Iterable[str], *,
                       stable: Iterable[str] = STABLE_SCHEMA,
                       admission: Iterable[str] = ADMISSION_SCHEMA,
+                      island: Iterable[str] = ISLAND_SCHEMA,
                       wildcards: Iterable[str] = WILDCARD_PREFIXES
                       ) -> list[str]:
     """Namespaced keys in ``keys`` that the schema does not know.
@@ -492,7 +547,7 @@ def schema_violations(keys: Iterable[str], *,
     checked — artifact-local fields (``seed``, ``tokens_identical`` …)
     pass through untouched.
     """
-    known = set(stable) | set(admission)
+    known = set(stable) | set(admission) | set(island)
     hist_prefixes = tuple(f"{n}." for n in HISTOGRAM_SCHEMA)
     bad = []
     for key in keys:
@@ -509,7 +564,7 @@ def schema_violations(keys: Iterable[str], *,
 
 
 __all__ = ["ADMISSION_SCHEMA", "HISTOGRAM_FIELDS", "HISTOGRAM_SCHEMA",
-           "Histogram", "KINDS", "MetricsRegistry", "NAMESPACES",
-           "SCHEMA_KINDS", "STABLE_SCHEMA", "WILDCARD_KINDS",
+           "Histogram", "ISLAND_SCHEMA", "KINDS", "MetricsRegistry",
+           "NAMESPACES", "SCHEMA_KINDS", "STABLE_SCHEMA", "WILDCARD_KINDS",
            "WILDCARD_PREFIXES", "flatten", "histogram_keys", "kind_of",
            "schema_violations"]

@@ -118,6 +118,46 @@ that can only *add* fences, never lose one:
   start, which is the paper's argument applied to the topology event
   itself: invalidate what moved, not the whole machine.
 
+**Two-level island topology.**  With workers grouped into *islands*
+(:mod:`repro.core.topology` — hosts / NUMA domains, the numaPTE analogue
+of per-node page-table replicas), the scoped fence gains a second level
+above the per-worker one, and the soundness argument extends along three
+directions:
+
+  * **Island summary epochs are derived mins.**  ``island_epochs[i]`` is
+    *defined* as ``min(worker_epochs[w] for w in island i)`` and
+    re-derived after every fence and every reshape — so a merged island
+    is exactly as stale as its stalest constituent by construction, and
+    an island-level "covered since ``v``" claim
+    (``island_epochs[i] > v``) implies the same claim for every member
+    worker.  The island level can therefore only *elide less* than the
+    worker level, never more: any check it passes, the per-worker check
+    (which remains the authoritative one in ``stale_masks``) passes too.
+  * **Island summary presence bits are conservative ORs.**
+    :class:`~repro.core.tracking.BlockTracker` keeps, above the
+    per-worker presence mask, one summary bit per island — set whenever
+    any member worker's bit is set, recomputed from the worker mask on
+    every remap/reset, with the aliased top bit (workers ≥ 63) expanding
+    to *all* islands.  A clear summary bit is thus a proof that no
+    worker in that island holds the translation; a set bit claims
+    nothing beyond "some member might".  Exactly the per-worker mask
+    argument, one level up.
+  * **Cross-island fences are remote shootdowns.**  A scoped fence whose
+    covered worker set spans islands pays the ``cross_island_cost``
+    multiplier (the IPI crosses the interconnect) and propagates the
+    table change to each covered remote island's replica group as a
+    *delta* (``deltas_propagated`` / ``device.island.delta_bytes``) —
+    the update still reaches every replica that could hold the stale
+    translation, it is only *accounted* (and, on real hardware, shipped)
+    as an incremental remote invalidation instead of a local full
+    re-upload.  Intra-island fences touch no remote replica at all,
+    which is sound because the covered workers' presence bits all live
+    under one island summary bit: no other island's replica group can
+    hold a stale copy of the covered translations.  The flat
+    single-island topology degenerates to the pre-island engine
+    bit-for-bit — every fence is intra-island and no multiplier, delta,
+    or extra counter exists.
+
 **Averted fences and the admission phase.**  The paper's §IV-A check runs
 at allocation: a freed block's deferred invalidation is resolved when the
 block is next handed out — recycled in-context (no fence, ever), elided
@@ -205,6 +245,8 @@ class FenceCostModel:
     table_bytes: int = 4 << 20     # block tables + handles to rebroadcast
     link_bw: float = 50e9          # ~50 GB/s/link ICI (assignment constant)
     base_latency_s: float = 25e-6  # interrupt/RPC base cost per fence
+    cross_island_cost: float = 4.0  # multiplier a fence pays when its worker
+                                    # set spans islands (inter-host hop)
 
     def cost_s(self, replicas: int | None = None) -> float:
         """Modeled cost of refreshing ``replicas`` table copies.
@@ -250,6 +292,26 @@ class FenceStats:
         return d
 
 
+@dataclass
+class IslandFenceStats:
+    """Two-level accounting, materialised only for multi-island topologies
+    (the flat degenerate case keeps :class:`FenceStats` — and every
+    artifact — byte-identical to the single-level engine)."""
+
+    fences_intra: int = 0           # scoped fences inside one island
+    fences_cross: int = 0           # scoped fences spanning islands
+    deltas_propagated: int = 0      # Σ remote island replicas updated by
+                                    # delta (one per covered island beyond
+                                    # the first on every cross fence)
+    modeled_intra_s: float = 0.0    # Σ modeled cost of intra fences
+    modeled_cross_s: float = 0.0    # Σ modeled cost of cross fences
+                                    # (includes the cross_island_cost
+                                    # multiplier)
+
+    def snapshot(self) -> dict:
+        return dict(self.__dict__)
+
+
 class FenceEngine:
     """Owns the fence epochs and performs/records coherence fences.
 
@@ -262,7 +324,8 @@ class FenceEngine:
 
     def __init__(self, cost_model: FenceCostModel | None = None, *,
                  measure: bool = True, num_workers: int = 1,
-                 scoped: bool = True, bus: EventBus | None = None):
+                 scoped: bool = True, bus: EventBus | None = None,
+                 topology=None):
         self.seq = 1                      # total fence ordinal (all fences)
         self.epoch = 1                    # global shootdown counter (§IV-C5)
         self.cost_model = cost_model or FenceCostModel()
@@ -271,6 +334,15 @@ class FenceEngine:
         self.scoped = scoped              # False ⇒ every fence is global
         self.worker_epochs = np.full(max(1, num_workers), 1, dtype=np.int64)
         self.stats = FenceStats()
+        # two-level topology (None = flat): island summary epochs are the
+        # derived min over each island's worker epochs, so the merged-
+        # island invariant (as stale as the stalest constituent) holds by
+        # construction; island accounting only materialises multi-island
+        self.topology = None
+        self.island_epochs = np.full(1, 1, dtype=np.int64)
+        self.island_stats: IslandFenceStats | None = None
+        if topology is not None:
+            self.set_topology(topology)
 
     # The one-release ``on_fence`` deprecation window has closed.  A
     # raising tombstone (instead of plain attribute absence) keeps the
@@ -293,6 +365,58 @@ class FenceEngine:
     def num_workers(self) -> int:
         return len(self.worker_epochs)
 
+    # -------------------------------------------------------------- islands
+    @property
+    def num_islands(self) -> int:
+        return 1 if self.topology is None else self.topology.num_islands
+
+    def set_topology(self, topology) -> None:
+        """Install (or change) the worker → island partition.
+
+        Island epochs are re-derived as the min over each island's worker
+        epochs — a merged island is exactly as stale as its stalest
+        constituent, so no island-level summary ever claims a fence a
+        member worker did not receive.  A flat (single-island / ``None``)
+        topology drops the island accounting entirely: the engine is
+        bit-identical to the pre-island single-level one.
+        """
+        if topology is not None and topology.num_workers > self.num_workers:
+            # A topology may not name workers the engine has never seen;
+            # the converse (engine grown past the topology by a sharing
+            # observer) is fine — surplus workers fold through the modulo
+            # rule, exactly like the epoch-table default.
+            self.ensure_workers(topology.num_workers)
+        self.topology = topology
+        if topology is None or topology.is_flat:
+            self.island_stats = None
+        elif self.island_stats is None:
+            self.island_stats = IslandFenceStats()
+        self._derive_island_epochs()
+
+    def _derive_island_epochs(self) -> None:
+        """``island_epochs[i] = min(worker_epochs[w] for w in island i)``
+        (workers grown past the topology fold through the modulo rule)."""
+        t = self.topology
+        if t is None:
+            self.island_epochs = np.full(1, int(self.worker_epochs.min()),
+                                         dtype=np.int64)
+            return
+        mins = np.full(t.num_islands, self.seq, dtype=np.int64)
+        for w in range(len(self.worker_epochs)):
+            i = t.island_of(w)
+            mins[i] = min(int(mins[i]), int(self.worker_epochs[w]))
+        self.island_epochs = mins
+
+    def islands_of(self, workers) -> tuple:
+        """Island ids covered by a worker set (flat topology: ``(0,)``)."""
+        if self.topology is None:
+            return (0,)
+        return self.topology.islands_of(workers)
+
+    def island_epoch_counters(self) -> dict:
+        """Per-island summary-epoch snapshot for counters/benchmarks."""
+        return {f"i{i}": int(e) for i, e in enumerate(self.island_epochs)}
+
     def ensure_workers(self, n: int) -> None:
         """Grow the per-worker epoch table to at least ``n`` workers.
 
@@ -303,6 +427,7 @@ class FenceEngine:
             extra = np.full(n - len(self.worker_epochs), self.seq,
                             dtype=np.int64)
             self.worker_epochs = np.concatenate([self.worker_epochs, extra])
+            self._derive_island_epochs()
 
     def reshard_workers(self, new_num_workers: int, translation) -> None:
         """Carry per-worker fence epochs across an elastic reshard.
@@ -343,6 +468,14 @@ class FenceEngine:
                     f"topology of {new_num_workers} workers")
             new[t] = min(int(new[t]), int(old[w]))
         self.worker_epochs = new
+        # a reshard that changes the worker count invalidates the old
+        # island partition; fall back to flat until the caller installs
+        # the new one (FprMemoryManager.reshard passes it through)
+        if (self.topology is not None
+                and self.topology.num_workers != new_num_workers):
+            self.set_topology(None)
+        else:
+            self._derive_island_epochs()
 
     def _workers_in(self, mask: int) -> np.ndarray:
         """Worker ids selected by a presence mask (bit 63 ⇒ all high ids)."""
@@ -382,6 +515,7 @@ class FenceEngine:
         self.seq += 1
         self.epoch = self.seq
         self.worker_epochs[:] = self.seq
+        self.island_epochs[:] = self.seq   # every island fully covered
         st = self.stats
         st.fences += 1
         st.fences_by_reason[reason] += 1
@@ -416,7 +550,28 @@ class FenceEngine:
         affected = max(1, math.ceil(cm.n_replicas * len(workers)
                                     / self.num_workers))
         st.replicas_spared += cm.n_replicas - affected
-        st.modeled_s += cm.cost_s(affected)
+        cost = cm.cost_s(affected)
+        # two-level scoping: the narrowest level is picked from the
+        # covered worker set itself — one island ⇒ the ordinary scoped
+        # cost (bit-identical to the flat engine), several ⇒ the fence
+        # crosses the interconnect and pays the cross_island_cost
+        # multiplier while the remote covered islands' replicas take
+        # delta-propagated updates (counted, remote shootdowns)
+        isl = self.island_stats
+        if isl is not None:
+            covered = self.islands_of(workers)
+            if len(covered) <= 1:
+                isl.fences_intra += 1
+                isl.modeled_intra_s += cost
+            else:
+                cost *= cm.cross_island_cost
+                isl.fences_cross += 1
+                isl.deltas_propagated += len(covered) - 1
+                isl.modeled_cross_s += cost
+            # refresh the island summary epochs (derived min, so the
+            # two-level consistency invariant holds after every fence)
+            self._derive_island_epochs()
+        st.modeled_s += cost
         self._publish(reason, n_blocks, workers, scoped=True)
         return self.epoch
 
@@ -473,7 +628,7 @@ class FenceEngine:
     # Convenience for benchmarks: totals with/without FPR-visible savings.
     def totals(self) -> dict:
         s = self.stats
-        return {
+        out = {
             "fences": s.fences,
             "fences_scoped": s.fences_scoped,
             "fences_averted": s.fences_averted,
@@ -486,6 +641,19 @@ class FenceEngine:
             "modeled_s": round(s.modeled_s, 6),
             "by_reason": dict(s.fences_by_reason),
         }
+        # island accounting only exists multi-island — flat runs (and
+        # every pre-island artifact) keep a byte-identical key set
+        if self.island_stats is not None:
+            isl = self.island_stats
+            out["island"] = {
+                "num_islands": self.num_islands,
+                "fences_intra": isl.fences_intra,
+                "fences_cross": isl.fences_cross,
+                "deltas_propagated": isl.deltas_propagated,
+                "modeled_intra_s": round(isl.modeled_intra_s, 6),
+                "modeled_cross_s": round(isl.modeled_cross_s, 6),
+            }
+        return out
 
     def worker_epoch_counters(self) -> dict:
         """Per-worker epoch snapshot for counters()/benchmark reports."""

@@ -25,6 +25,18 @@ touch, survives an FPR free (that is exactly the staleness record), and is
 reset to the new owner's bit once the allocation-phase checks have fenced
 or elided.  Workers ≥ 63 share the top bit (conservative aliasing: a set
 top bit scopes the fence to all high workers).
+
+**Hierarchical island summary bits.**  Under a multi-island topology
+(:mod:`repro.core.topology`) each block additionally carries one summary
+bit per *island* — set whenever any member worker's presence bit is set,
+maintained incrementally on touch/attach and recomputed from the worker
+mask on every reset/remap.  The summary is conservative by construction
+(a clear bit proves no member worker holds a translation; a set bit
+claims nothing stronger than "some member might"), which is what lets
+the two-level fence engine and the per-island replica groups consult it
+without ever eliding a fence the per-worker mask would have required.
+Flat (single-island / no) topology keeps the summary machinery entirely
+absent — zero overhead and bit-identical behaviour.
 """
 
 from __future__ import annotations
@@ -76,7 +88,7 @@ class BlockTracker:
     """
 
     __slots__ = ("_packed", "_worker_mask", "_refcount", "_sharer_mask",
-                 "num_blocks")
+                 "num_blocks", "_topology", "_island_mask")
 
     def __init__(self, num_blocks: int):
         if num_blocks <= 0:
@@ -93,6 +105,11 @@ class BlockTracker:
         # stays inside its sharing set — that is the fence-free invariant.
         self._refcount = np.zeros(num_blocks, dtype=np.int32)
         self._sharer_mask = np.zeros(num_blocks, dtype=np.uint64)
+        # Hierarchical island summary bits (one bit per island over the
+        # per-worker bits); only materialised for multi-island topologies
+        # via set_topology — flat stays summary-free and bit-identical.
+        self._topology = None
+        self._island_mask: "np.ndarray | None" = None
 
     # -- scalar accessors ---------------------------------------------------
     def ctx_id(self, block: int) -> int:
@@ -125,6 +142,8 @@ class BlockTracker:
         """§IV-C4 (migration/split): copy tracking data verbatim."""
         self._packed[dst] = self._packed[src]
         self._worker_mask[dst] = self._worker_mask[src]
+        if self._island_mask is not None:
+            self._island_mask[dst] = self._island_mask[src]
 
     # -- worker-presence masks (scoped fences) --------------------------------
     def worker_mask(self, block: int) -> int:
@@ -136,14 +155,79 @@ class BlockTracker:
     def add_worker(self, block: int, worker: int) -> None:
         """Stamp worker presence on access (engine touch / fault path)."""
         self._worker_mask[block] |= worker_bit(worker)
+        if self._island_mask is not None:
+            self._island_mask[block] |= self._island_bit_of(worker)
 
     def add_worker_many(self, blocks: np.ndarray, worker: int) -> None:
         self._worker_mask[blocks] |= worker_bit(worker)
+        if self._island_mask is not None:
+            self._island_mask[blocks] |= self._island_bit_of(worker)
 
     def set_worker_masks(self, blocks: np.ndarray,
                          mask: int | np.uint64 | np.ndarray) -> None:
         """Set presence masks (scalar broadcast or per-block array)."""
         self._worker_mask[blocks] = np.asarray(mask, dtype=np.uint64)
+        self.refresh_islands(blocks)
+
+    # -- hierarchical island summary bits -------------------------------------
+    def set_topology(self, topology) -> None:
+        """Install the worker → island partition and (re)derive every
+        block's island summary bits from its current worker mask.  A flat
+        (single-island or ``None``) topology drops the summary arrays —
+        the tracker behaves exactly like the pre-island one."""
+        self._topology = topology
+        if topology is None or topology.is_flat:
+            self._topology = None
+            self._island_mask = None
+            return
+        self._island_mask = self._islands_from_masks(self._worker_mask)
+
+    @property
+    def topology(self):
+        return self._topology
+
+    def island_mask(self, block: int) -> int:
+        """The block's island summary bits (0 when no multi-island
+        topology is installed)."""
+        if self._island_mask is None:
+            return 0
+        return int(self._island_mask[block])
+
+    def island_masks(self, blocks: np.ndarray) -> np.ndarray:
+        if self._island_mask is None:
+            return np.zeros(len(blocks), dtype=np.uint64)
+        return self._island_mask[blocks]
+
+    def refresh_islands(self, blocks: np.ndarray) -> None:
+        """Recompute the given blocks' summary bits from their worker
+        masks — the reset sites (allocation-phase mask reset) call this
+        after overwriting ``_worker_mask`` directly."""
+        if self._island_mask is not None:
+            self._island_mask[blocks] = self._islands_from_masks(
+                self._worker_mask[blocks])
+
+    def _island_bit_of(self, worker: int) -> np.uint64:
+        """Summary bit(s) for one worker; aliased (≥ 63) or out-of-
+        topology workers expand conservatively to every island."""
+        t = self._topology
+        if worker >= WORKER_OVERFLOW_BIT or worker >= t.num_workers:
+            return np.uint64((1 << t.num_islands) - 1)
+        return np.uint64(1) << np.uint64(t.island_of(worker))
+
+    def _islands_from_masks(self, masks: np.ndarray) -> np.ndarray:
+        """Vectorised worker-mask → island-summary derivation: island bit
+        ``i`` is set iff the mask intersects island ``i``'s worker bits;
+        the aliased top bit expands to all islands."""
+        t = self._topology
+        out = np.zeros_like(masks)
+        for i in range(t.num_islands):
+            im = np.uint64(t.island_worker_mask(i))
+            out |= np.where(masks & im != 0,
+                            np.uint64(1) << np.uint64(i), np.uint64(0))
+        top = worker_bit(WORKER_OVERFLOW_BIT)
+        all_islands = np.uint64((1 << t.num_islands) - 1)
+        out |= np.where(masks & top != 0, all_islands, np.uint64(0))
+        return out
 
     # -- sharing refcounts (prefix index) -------------------------------------
     def refcount(self, block: int) -> int:
@@ -164,6 +248,8 @@ class BlockTracker:
         bit = worker_bit(worker)
         self._sharer_mask[blocks] |= bit
         self._worker_mask[blocks] |= bit
+        if self._island_mask is not None:
+            self._island_mask[blocks] |= self._island_bit_of(worker)
 
     def decref(self, block: int) -> int:
         """Detach one sharer; returns the remaining count.
@@ -219,6 +305,17 @@ class BlockTracker:
         # must still scope its fence to the workers that inherited the old
         # sharers' epochs.  Refcounts are per-block and do not move.
         self._sharer_mask = translate(self._sharer_mask)
+        if self._island_mask is not None:
+            if self._topology.num_workers == new_num_workers:
+                # Same worker count: the partition still applies — rederive
+                # the summaries from the translated worker masks.
+                self._island_mask = self._islands_from_masks(self._worker_mask)
+            else:
+                # Worker count changed: the old partition no longer covers
+                # the worker set.  Drop to flat until the caller installs
+                # the new topology (set_topology rederives everything).
+                self._topology = None
+                self._island_mask = None
 
     # -- vectorised views (hot path) -----------------------------------------
     def ctx_ids(self, blocks: np.ndarray) -> np.ndarray:
@@ -272,6 +369,9 @@ class BlockTracker:
         merged_mask = self._worker_mask[a] | self._worker_mask[b]
         self.set(dst, ctx_id=merged_id, version=max(va, vb), flags=fl)
         self._worker_mask[dst] = merged_mask
+        if self._island_mask is not None:
+            self._island_mask[dst] = (self._island_mask[a]
+                                      | self._island_mask[b])
 
     def split(self, src: int, dst_a: int, dst_b: int) -> None:
         """Buddy split: copy tracking data to both halves (§IV-C4)."""
@@ -280,6 +380,10 @@ class BlockTracker:
         self._packed[dst_b] = packed
         self._worker_mask[dst_a] = mask
         self._worker_mask[dst_b] = mask
+        if self._island_mask is not None:
+            imask = self._island_mask[src]
+            self._island_mask[dst_a] = imask
+            self._island_mask[dst_b] = imask
 
     def fan_out(self, head: int, count: int) -> None:
         """Broadcast the head's tracking over a contiguous run.
@@ -290,6 +394,8 @@ class BlockTracker:
         """
         self._packed[head:head + count] = self._packed[head]
         self._worker_mask[head:head + count] = self._worker_mask[head]
+        if self._island_mask is not None:
+            self._island_mask[head:head + count] = self._island_mask[head]
 
     # -- misc -----------------------------------------------------------------
     def reset(self) -> None:
@@ -298,6 +404,8 @@ class BlockTracker:
         self._worker_mask[:] = 0
         self._refcount[:] = 0
         self._sharer_mask[:] = 0
+        if self._island_mask is not None:
+            self._island_mask[:] = 0
 
     def nbytes(self) -> int:
         return self._packed.nbytes

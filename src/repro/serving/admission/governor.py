@@ -160,6 +160,11 @@ class MemoryGovernor:
         # grows chunk-by-chunk through on_extend.  ``None`` keeps the
         # monolithic full-window reservation.
         self.chunk_blocks: "int | None" = None
+        # Hierarchical island topology (engine-installed via reshard /
+        # construction): the worker → island partition, used only to
+        # aggregate per-worker ledger commitments per island in
+        # counters(); None (flat) keeps counter key sets unchanged.
+        self.topology = None
         # Observability hook (engine-installed): called with the queue
         # depth of every non-empty admission round — feeds the
         # ``admission.obs.queue_depth`` histogram directly, without the
@@ -235,10 +240,19 @@ class MemoryGovernor:
             return True
         return self.fits(r)
 
-    def reshard(self, new_num_workers: int, translation) -> None:
+    def reshard(self, new_num_workers: int, translation,
+                topology=None) -> None:
         """Elastic topology change: remap the ledger's per-worker shares
-        (quota caps are per-tenant, not per-worker — untouched)."""
+        (quota caps are per-tenant, not per-worker — untouched).
+        ``topology`` optionally installs the new worker → island partition
+        so the counters can aggregate commitments per island; omitting it
+        across a count change drops the partition to flat."""
         self.ledger.reshard(new_num_workers, translation)
+        if topology is not None:
+            self.topology = None if topology.is_flat else topology
+        elif (self.topology is not None
+              and self.topology.num_workers != new_num_workers):
+            self.topology = None
 
     # ----------------------------------------------------------- admission
     def select(self, queue: list) -> Optional[int]:
@@ -420,6 +434,13 @@ class MemoryGovernor:
         d["policy"] = self.policy.name
         d["preempt_strategy"] = self.config.preempt
         d["ledger"] = self.ledger.counters()
+        if self.topology is not None:
+            t = self.topology
+            per_worker = d["ledger"]["per_worker_committed"]
+            d["ledger"]["per_island_committed"] = [
+                sum(per_worker[w] for w in t.workers_in(i)
+                    if w < len(per_worker))
+                for i in range(t.num_islands)]
         d["quota"] = (self.quota.counters() if self.quota is not None
                       else {"enabled": False, "tenants": 0, "rejections": 0})
         return d

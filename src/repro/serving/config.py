@@ -49,6 +49,12 @@ class EngineConfig(ConfigBase):
     eos_token: Optional[int] = None
     greedy: bool = True
     num_workers: int = 1
+    # Hierarchical island topology: a tuple of worker-id tuples
+    # partitioning range(num_workers) into islands (hosts / NUMA
+    # domains) for two-level scoped fences; None / flat single-island
+    # keeps the pre-island engine bit for bit.  Engine.reshape swaps in
+    # a new partition on a live engine.
+    islands: "tuple | None" = None
     scoped_fences: bool = True
     worker_routing: str = "slot"
     cost_model: Any = None
@@ -75,6 +81,11 @@ class EngineConfig(ConfigBase):
                              f"got {self.max_seq_len}")
         # resize_workers revalidates new counts through the same check
         validate_worker_count(self.num_workers)
+        if self.islands is not None:
+            from repro.core.topology import Topology
+            topo = Topology.of(self.islands, num_workers=self.num_workers)
+            object.__setattr__(self, "islands",
+                               None if topo.is_flat else topo.spec)
         if self.worker_routing not in WORKER_ROUTINGS:
             raise ValueError(f"unknown worker_routing "
                              f"{self.worker_routing!r}; "

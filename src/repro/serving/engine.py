@@ -88,6 +88,7 @@ class Engine:
             cfg, config.num_blocks, config.max_batch, config.max_seq_len,
             fpr_enabled=config.fpr_enabled, scope=config.scope,
             dtype=config.dtype, num_workers=config.num_workers,
+            islands=config.islands,
             scoped_fences=config.scoped_fences,
             cost_model=config.cost_model,
             prefix_sharing=config.prefix_sharing)
@@ -102,6 +103,8 @@ class Engine:
             self.governor = MemoryGovernor(
                 config.num_blocks, self.cache.block_size,
                 num_workers=config.num_workers, config=gcfg, bus=self.bus)
+            # per-island ledger aggregation follows the cache's topology
+            self.governor.topology = self.cache.topology
             # prefix-sharing hooks: admission reserves only the estimated
             # unique remainder of a window, and charges capacity for
             # indexed blocks no running reservation covers (see
@@ -121,13 +124,19 @@ class Engine:
         hist_depth = self.metrics.histogram("admission.obs.queue_depth")
         hist_scope = self.metrics.histogram("fence.obs.scope_workers")
         hist_refresh = self.metrics.histogram("device.obs.refresh_bytes")
+        # each observation carries the nearest trace/span id as its
+        # exemplar so a latency bucket links back to the Chrome-trace /
+        # OpenMetrics exemplar that produced it (core/export.py renders
+        # them; snapshot() output is exemplar-free)
         self.bus.subscribe(
             FenceIssued,
             lambda e: hist_scope.observe(len(e.workers)
                                          if e.workers is not None
-                                         else self.cache.num_workers))
+                                         else self.cache.num_workers,
+                                         exemplar=f"fence-{e.seq}"))
         self.bus.subscribe(ShardRefreshed,
-                           lambda e: hist_refresh.observe(e.nbytes))
+                           lambda e: hist_refresh.observe(
+                               e.nbytes, exemplar=f"refresh-{e.reason}"))
         if self.governor is not None:
             self.governor.observe_queue_depth = hist_depth.observe
         self._slot_state_keys = [k for k in self.cache.state
@@ -261,32 +270,53 @@ class Engine:
     # ------------------------------------------------------ elastic topology
     def resize_workers(self, new_num_workers: int,
                        translation=None) -> dict:
-        """Reshard the live engine to ``new_num_workers`` (drain-free).
+        """Reshard the live engine to ``new_num_workers`` (drain-free) —
+        the flat special case of :meth:`reshape` (an explicit resize
+        installs the single-island topology, clearing any island
+        partition; pass a multi-island spec to :meth:`reshape` to keep
+        hierarchy across a count change)."""
+        from repro.core.topology import Topology
+        validate_worker_count(new_num_workers)
+        return self.reshape(Topology.flat(new_num_workers), translation)
 
-        Order: the admission ledger's per-worker commitments remap first
-        (capacity is governed through the topology change — total
-        ``committed`` never moves, so the admission invariant holds
-        throughout), then the cache/manager reshard carries masks, epochs,
-        table shards and free lists across (issuing the scoped
-        ``reason="reshard"`` fence iff live rows moved shards), and
-        finally every running slot is re-bound to its serving worker under
-        the *new* topology so future scoped refreshes stay covering.
-        Queued requests are untouched — no drain, no cold start.
+    def reshape(self, topology, translation=None) -> dict:
+        """Reshard the live engine onto a (possibly hierarchical) worker
+        topology — islands join/leave live, drain-free.
+
+        ``topology`` is anything :meth:`Topology.of` accepts: a worker
+        count (flat), an island spec (tuple of worker-id tuples), or a
+        :class:`~repro.core.topology.Topology`.  Order: the admission
+        ledger's per-worker commitments remap first (capacity is governed
+        through the topology change — total ``committed`` never moves, so
+        the admission invariant holds throughout), then the cache/manager
+        reshard carries masks, epochs, table shards and free lists across
+        and installs the island partition on every coherence layer
+        (issuing the scoped ``reason="reshard"`` fence iff live rows moved
+        shards), and finally every running slot is re-bound to its serving
+        worker under the *new* topology so future scoped refreshes stay
+        covering.  Queued requests are untouched — no drain, no cold
+        start.
 
         Returns the reshard plan (moved slots / fenced workers).
         """
+        from repro.core.topology import Topology
+        topo = Topology.of(topology)
+        new_num_workers = topo.num_workers
         validate_worker_count(new_num_workers)
         if translation is None:
             translation = self.cache.mgr.default_translation(new_num_workers)
         # reject malformed translations BEFORE the ledger (or any other
-        # per-worker structure) is remapped — resize applies fully or not
+        # per-worker structure) is remapped — reshape applies fully or not
         # at all
         validate_translation(translation, self.cache.num_workers,
                              new_num_workers)
         if self.governor is not None:
-            self.governor.reshard(new_num_workers, translation)
-        plan = self.cache.reshard(new_num_workers, translation)
-        self.config = self.config.replace(num_workers=new_num_workers)
+            self.governor.reshard(new_num_workers, translation,
+                                  topology=topo)
+        plan = self.cache.reshape(topo, translation)
+        self.config = self.config.replace(
+            num_workers=new_num_workers,
+            islands=None if topo.is_flat else topo.spec)
         for slot, r in self.sched.running.items():
             self.cache.bind_slot_worker(slot, self._worker_of(r))
         return plan
@@ -301,7 +331,8 @@ class Engine:
                 continue
             # queue wait in engine steps: deterministic virtual time from
             # (re-)enqueue to seating
-            self._hist_queue_wait.observe(self.steps - r.submit_step)
+            self._hist_queue_wait.observe(self.steps - r.submit_step,
+                                          exemplar=f"req-{r.rid}")
             # device refresh scoping must know which worker serves the slot
             self.cache.bind_slot_worker(r.slot, self._worker_of(r))
             if r.mapping is not None:
@@ -808,7 +839,7 @@ class Engine:
         histogram, and the :class:`StepCompleted` span event."""
         dt = time.perf_counter() - t0
         self.wall_s += dt
-        self._hist_step.observe(dt)
+        self._hist_step.observe(dt, exemplar=f"step-{self.steps}")
         if self.bus.wants(StepCompleted):
             self.bus.publish(StepCompleted(step=self.steps, tokens=made,
                                            wall_s=dt,

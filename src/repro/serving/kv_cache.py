@@ -65,6 +65,7 @@ class PagedKVCache:
                  max_seq_len: int, *, fpr_enabled: bool = True,
                  scope: ContextScope = ContextScope.PER_GROUP,
                  dtype=jnp.float32, num_workers: int = 1,
+                 islands=None,
                  scoped_fences: bool = True,
                  prefix_sharing: bool = True,
                  cost_model: FenceCostModel | None = None):
@@ -80,6 +81,7 @@ class PagedKVCache:
         # order: host epochs move before the device shards refresh).
         self.mgr = FprMemoryManager(
             config=FprConfig(num_blocks=num_blocks, num_workers=num_workers,
+                             islands=islands,
                              max_seqs=max_batch * 4,
                              max_blocks_per_seq=self.max_blocks_per_seq,
                              fpr_enabled=fpr_enabled,
@@ -117,6 +119,14 @@ class PagedKVCache:
         self._reshard_moved_entries = 0
         self._reshard_refreshed_bytes = 0
         self._in_reshard = False
+        # Per-island replica groups (numaPTE): a scoped fence re-uploads
+        # in full only the shards inside the covered islands; shards it
+        # must bump in *remote* islands take the delta-propagation path
+        # (same data lands on the device, accounted apart so the
+        # cross-island refreshed-bytes win is measurable).  Materialised
+        # lazily on the first multi-island fence; None keeps flat
+        # snapshots key-identical to the pre-island cache.
+        self._island_device: "dict | None" = None
         # swap "device": evicted block contents round-trip through host
         # memory (the storage behind the page cache; latency is real)
         self._swap_store: dict = {}
@@ -238,6 +248,21 @@ class PagedKVCache:
         jax.block_until_ready(self.state["tables"])      # the drain
         shards = (range(self.num_shards) if workers is None
                   else self._shards_of(workers))
+        # Per-island replica groups: under a multi-island topology a
+        # *scoped* fence splits its shard set — shards inside the covered
+        # islands re-upload in full, shards pulled in from remote islands
+        # (foreign-slot bindings under non-slot routing) receive a
+        # delta-propagated update instead: the same authoritative rows
+        # land on the device (token identity), but the transfer is the
+        # compact remote-shootdown delta, billed to device.island.* and
+        # excluded from refreshed_bytes.
+        topo = self.mgr.topology
+        remote: set = set()
+        if topo is not None and workers is not None:
+            cov_isl = set(topo.islands_of(int(w) % self.num_shards
+                                          for w in workers))
+            remote = {int(w) for w in shards
+                      if topo.island_of(int(w)) not in cov_isl}
         # Authoritative post-fence rows: re-derive from the mappings that
         # are still live in the manager (a fence can fire mid-step — after
         # an alloc/evict/free but before the next update_tables — so the
@@ -245,20 +270,40 @@ class PagedKVCache:
         # slots are rebuilt: host-side fence work scales with the mask
         # popcount, like the upload it feeds.
         entries = nbytes = 0
+        d_entries = d_bytes = 0
         tables = self.state["tables"]
         for w in shards:
             slots = self._shard_slots[w]
             rows = np.stack([self._live_row(s) for s in slots]) \
                 if len(slots) else np.zeros((0, self.max_blocks_per_seq),
                                             np.int32)
+            if int(w) in remote:
+                # delta propagation: only the rows that differ from the
+                # remote replica's current copy travel the interconnect
+                diff = int((rows != self._host_tables[slots]).sum()) \
+                    if len(slots) else 0
+                d_entries += diff
+                d_bytes += diff * rows.itemsize
+            else:
+                entries += rows.size
+                nbytes += rows.nbytes
             self._host_tables[slots] = rows              # device now has them
             tables = tables.at[w].set(
                 jnp.asarray(self._pad_shard_rows(rows), jnp.int32))
-            entries += rows.size
-            nbytes += rows.nbytes
         self.state["tables"] = tables
         self._refreshed_entries += entries
         self._refreshed_bytes += nbytes
+        if topo is not None and workers is not None:
+            if self._island_device is None:
+                self._island_device = {"intra_refreshes": 0,
+                                       "remote_deltas": 0,
+                                       "delta_entries": 0,
+                                       "delta_bytes": 0}
+            st = self._island_device
+            st["intra_refreshes"] += len(shards) - len(remote)
+            st["remote_deltas"] += len(remote)
+            st["delta_entries"] += d_entries
+            st["delta_bytes"] += d_bytes
         self._fence_drains += 1
         if workers is None:
             self._full_refreshes += 1
@@ -267,9 +312,15 @@ class PagedKVCache:
         if self.bus.wants(ShardRefreshed):
             self.bus.publish(ShardRefreshed(
                 reason=reason, shards=tuple(int(s) for s in shards),
-                entries=entries, nbytes=nbytes, full=workers is None))
+                entries=entries + d_entries, nbytes=nbytes + d_bytes,
+                full=workers is None))
 
     # ------------------------------------------------------------- reshard
+    @property
+    def topology(self):
+        """The installed multi-island topology, ``None`` when flat."""
+        return self.mgr.topology
+
     def reshard(self, new_num_workers: int, translation=None) -> dict:
         """Elastic topology change on a *live* cache (drain-free for every
         row that does not move shards).
@@ -281,6 +332,23 @@ class PagedKVCache:
         so the fence's epoch bump lands on the new layout.  Returns the
         manager's reshard plan.
         """
+        return self._reshape_impl(new_num_workers, translation, None)
+
+    def reshape(self, topology, translation=None) -> dict:
+        """Elastic *hierarchical* topology change: reshard onto the
+        topology's worker count AND install its island partition in the
+        same sync point (islands join/leave live).  A flat spec is exactly
+        :meth:`reshard`."""
+        from repro.core.topology import Topology
+        topo = Topology.of(topology)
+        # the topology is passed explicitly even when flat — reshape
+        # semantics are "install THIS partition", so a flat spec clears a
+        # previously multi-island layout (reshard's None keeps whatever
+        # survives the count change instead)
+        return self._reshape_impl(topo.num_workers, translation, topo)
+
+    def _reshape_impl(self, new_num_workers: int, translation,
+                      topology) -> dict:
         if translation is None:
             translation = self.mgr.default_translation(new_num_workers)
         jax.block_until_ready(self.state["tables"])      # topology sync point
@@ -296,7 +364,8 @@ class PagedKVCache:
         self._in_reshard = True
         try:
             plan = self.mgr.reshard(new_num_workers, translation,
-                                    extra_fence_workers=sorted(extra))
+                                    extra_fence_workers=sorted(extra),
+                                    topology=topology)
         finally:
             self._in_reshard = False
         return plan
@@ -437,13 +506,16 @@ class PagedKVCache:
         self.state["lengths"] = jnp.asarray(lengths, jnp.int32)
 
     def _device_metrics(self) -> dict:
-        return {"fence_drains": self._fence_drains,
-                "table_shards": self.num_shards,
-                "full_refreshes": self._full_refreshes,
-                "shard_refreshes": self._shard_refreshes,
-                "refreshed_entries": self._refreshed_entries,
-                "refreshed_bytes": self._refreshed_bytes,
-                "reshards": self._reshards,
-                "reshard_moved_entries": self._reshard_moved_entries,
-                "reshard_refreshed_bytes": self._reshard_refreshed_bytes,
-                "step_upload_entries": self._step_upload_entries}
+        d = {"fence_drains": self._fence_drains,
+             "table_shards": self.num_shards,
+             "full_refreshes": self._full_refreshes,
+             "shard_refreshes": self._shard_refreshes,
+             "refreshed_entries": self._refreshed_entries,
+             "refreshed_bytes": self._refreshed_bytes,
+             "reshards": self._reshards,
+             "reshard_moved_entries": self._reshard_moved_entries,
+             "reshard_refreshed_bytes": self._reshard_refreshed_bytes,
+             "step_upload_entries": self._step_upload_entries}
+        if self._island_device is not None:
+            d["island"] = dict(self._island_device)
+        return d

@@ -65,6 +65,13 @@ class SimConfig:
                                       # row fraction of the full table
                                       # (see device_refreshed_bytes),
                                       # never a cold re-upload
+    islands: tuple = ()               # island partition of ALL workers
+                                      # (io + mixed + compute) for the
+                                      # two-level fence engine; () ⇒ flat.
+                                      # Cross-island fences pay the cost
+                                      # model's cross_island_cost multiple
+                                      # of fence_cost (remote delta
+                                      # propagation)
     seed: int = 0
 
 
@@ -115,8 +122,20 @@ class FenceImpactSim:
             fence_engine=self.fences)
         # compute workers hold table replicas too (they are what a global
         # fence needlessly stalls); give them epoch slots after io+mixed
-        self.fences.ensure_workers(max(1, cfg.io_workers + cfg.mixed_workers
-                                       + cfg.compute_workers))
+        total = max(1, cfg.io_workers + cfg.mixed_workers
+                    + cfg.compute_workers)
+        self.fences.ensure_workers(total)
+        if cfg.islands:
+            # the partition covers *all* workers (compute included), so it
+            # is installed on each layer directly rather than through
+            # mgr.set_topology (which validates against the manager's
+            # io+mixed worker count)
+            from repro.core.topology import Topology
+            topo = Topology.of(cfg.islands, num_workers=total)
+            if not topo.is_flat:
+                self.mgr.tracker.set_topology(topo)
+                self.fences.set_topology(topo)
+                self.mgr.tables.set_topology(topo)
         self.res = SimResult()
 
     def run(self) -> SimResult:
@@ -126,7 +145,7 @@ class FenceImpactSim:
         n_cp = c.compute_workers
         n_mx = c.mixed_workers
 
-        def fence_stall(covered):
+        def fence_stall(covered, cross=False):
             # every worker the fence covered is stalled for recv_stall
             # (remote flush + refills); the initiating worker waits
             # fence_cost for all confirmations (grows weakly with
@@ -145,9 +164,13 @@ class FenceImpactSim:
             refresh = refreshed / c.refresh_bw
             res.refresh_time += refresh
             import math
-            return (c.fence_cost
-                    * (1 + 0.15 * math.log2(max(2, covered)))
-                    + refresh)
+            base = c.fence_cost * (1 + 0.15 * math.log2(max(2, covered)))
+            if cross:
+                # the fence's scope spans islands: the initiator also waits
+                # for remote-island delta propagation (the two-level
+                # engine's configurable multiplier)
+                base *= self.fences.cost_model.cross_island_cost
+            return base + refresh
 
         fences_before = self.fences.stats.fences
 
@@ -156,13 +179,16 @@ class FenceImpactSim:
             ctx = (derive_context(c.scope, group_id=ctx_gid)
                    if c.fpr else None)
             st = self.fences.stats
+            isl = self.fences.island_stats
             f0, w0 = st.fences, st.workers_covered
+            x0 = isl.fences_cross if isl is not None else 0
             m = self.mgr.mmap(c.blocks_per_map, ctx, worker=wid)
             self.mgr.munmap(m.mapping_id, worker=wid)
             res.io_ops += 1
             cost = c.alloc_cost + c.storage_latency
             if st.fences > f0:
-                cost += fence_stall(st.workers_covered - w0)
+                cross = isl is not None and isl.fences_cross > x0
+                cost += fence_stall(st.workers_covered - w0, cross)
             res.io_time += cost
 
         def reshard(new_workers):
@@ -203,6 +229,13 @@ class FenceImpactSim:
         res.fences = st.fences - fences_before
         res.fences_skipped = st.skipped_at_free
         res.elided = st.elided_by_version
+        isl = self.fences.island_stats
+        if isl is not None:
+            # attached only under a multi-island topology so flat-run
+            # as_dict() keeps its pre-island key set bit for bit
+            res.fences_intra = isl.fences_intra
+            res.fences_cross = isl.fences_cross
+            res.deltas_propagated = isl.deltas_propagated
         # compute workers absorb the accumulated stall into their time
         if n_cp or n_mx:
             res.compute_time += res.stall_time

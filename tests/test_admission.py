@@ -839,3 +839,49 @@ class TestTenantQuota:
         q = [FakeReq(1, 3, stream="anyone")]
         assert gov.select(q) is None             # 3 > uniform cap of 2
         assert gov.quota.rejections == 1
+
+
+# ====================================================== reshard-aware deadline
+class TestReshardDistance:
+    """Satellite of the island topology work: the governor exposes the
+    distance to the next planned topology change and the deadline policy
+    defers elephant chunk growth across the boundary."""
+
+    def test_note_reshard_distance_propagates_and_clears(self):
+        from repro.serving.admission import DeadlinePolicy
+        gov = make_gov(16, policy=DeadlinePolicy())
+        assert gov.policy.reshard_distance is None
+        gov.note_reshard_distance(3)
+        assert gov.policy.reshard_distance == 3
+        gov.note_reshard_distance(None)
+        assert gov.policy.reshard_distance is None
+
+    def test_deadline_policy_defers_growth_near_reshard(self):
+        from repro.serving.admission import DeadlinePolicy
+        p = DeadlinePolicy(reshard_horizon=2, hold_after=2)
+        grower = FakeReq(1, 2)
+        # no reshard scheduled: growth proceeds
+        assert p.defer_growth(grower, 1, [], fits_upto(9)) is False
+        p.reshard_distance = 2                  # within horizon: defer
+        assert p.defer_growth(grower, 1, [], fits_upto(9)) is True
+        p.reshard_distance = 5                  # beyond horizon: proceed
+        assert p.defer_growth(grower, 1, [], fits_upto(9)) is False
+        # bounded deferral: even inside the horizon a grower eventually
+        # proceeds (no livelock behind a persistent reshard schedule)
+        p.reshard_distance = 1
+        assert p.defer_growth(grower, 1, [], fits_upto(9)) is True
+        assert p.defer_growth(grower, 1, [], fits_upto(9)) is True
+        assert p.defer_growth(grower, 1, [], fits_upto(9)) is False
+
+    def test_governor_defer_growth_consults_policy_hook(self):
+        from repro.serving.admission import DeadlinePolicy
+        gov = make_gov(16, policy=DeadlinePolicy(reshard_horizon=2))
+        grower = FakeReq(1, 2)
+        gov.note_reshard_distance(1)
+        assert gov.defer_growth(grower, 1, []) is True
+        gov.note_reshard_distance(None)
+        assert gov.defer_growth(grower, 1, []) is False
+        # fcfs has no defer_growth hook: never defers, even mid-reshard
+        plain = make_gov(16, policy="fcfs")
+        plain.note_reshard_distance(1)
+        assert plain.defer_growth(grower, 1, []) is False

@@ -8,11 +8,14 @@ Three layers of coverage:
     masks through the translation), and the manager-level ``reshard``
     fences exactly the surviving old owners of moved live rows.
   * **property** — random traces interleaving alloc/free/touch/evict/
-    **reshard** uphold the scoped-fence soundness invariant (*no worker
-    reads a block version newer than its last covering fence*) and the
-    scoped/global differential (identical observable reads); the deep
-    hypothesis sweep is slow-marked for nightly, a seeded slice runs in
-    the fast lane.
+    **reshard** and **island join/leave** uphold the scoped-fence
+    soundness invariant (*no worker reads a block version newer than its
+    last covering fence, at either level*), the two-level epoch-merge
+    invariant (*a merged island is exactly as stale as its stalest
+    constituent* — ``island_epochs[i] == min(worker_epochs[w] for w in
+    island i)`` after every operation) and the scoped/global
+    differential (identical observable reads); the deep hypothesis sweep
+    is slow-marked for nightly, a seeded slice runs in the fast lane.
   * **engine** — a live engine resized 1→4→2 mid-trace decodes tokens
     bit-identical to the fixed-topology run, with reshard refresh traffic
     strictly below one full-table re-upload (the elastic acceptance
@@ -173,12 +176,17 @@ class TestEpochAndMaskCarry:
 
 
 # ============================================================ property layer
-# Random traces over alloc/free/touch/evict/fence/RESHARD.  The model
-# mirrors the kernel bookkeeping: per-block holder sets (remapped through
-# every reshard's translation) and free-time records; at re-allocation to
-# a foreign context every recorded holder must have a covering fence.
+# Random traces over alloc/free/touch/evict/fence/RESHARD/ISLAND.  The
+# model mirrors the kernel bookkeeping: per-block holder sets (remapped
+# through every reshard's translation) and free-time records; at
+# re-allocation to a foreign context every recorded holder must have a
+# covering fence.  The "island" op installs or dissolves a two-island
+# partition of the current workers mid-trace; after EVERY op the driver
+# asserts the two-level merge invariant (island summary epochs are the
+# exact min over their constituents' worker epochs, tracker island
+# summary bits cover every present worker's island).
 _OPS = ["map", "map", "map", "unmap", "touch", "evict", "gfence",
-        "sfence", "reshard"]
+        "sfence", "reshard", "island"]
 
 _TRACE_OPS = st.lists(
     st.tuples(st.sampled_from(_OPS),
@@ -204,12 +212,47 @@ def _drive_elastic_trace(trace, workers, *, scoped, check_soundness):
         for b in m.physical:
             fctx, fver, fholders = freed.pop(b, (None, None, set()))
             if fctx is not None and fctx != c.ctx_id:
+                topo = eng.topology
                 for hw in fholders:
                     assert int(eng.worker_epochs[hw]) > fver, (
                         f"worker {hw} reads block {b} (freed at v{fver}) "
                         f"without a covering fence "
                         f"(epoch {int(eng.worker_epochs[hw])})")
+                    if topo is not None:
+                        # island-level soundness: the summary epoch is a
+                        # min, so it may lag the member — but it must
+                        # never *lead* it (an island-level claim the
+                        # member worker did not receive)
+                        isl = topo.island_of(hw)
+                        assert (int(eng.island_epochs[isl])
+                                <= int(eng.worker_epochs[hw])), (
+                            f"island {isl} summary epoch leads member "
+                            f"worker {hw}")
                 holders[b] = set()     # staleness covered: fresh start
+
+    def check_two_level():
+        """The two-level merge invariant, asserted after every op."""
+        topo = eng.topology
+        tr = mgr.tracker
+        if topo is None:
+            assert tr._island_mask is None
+            assert eng.island_stats is None
+            return
+        # merged island exactly as stale as its stalest constituent
+        expect = [min(int(eng.worker_epochs[w])
+                      for w in range(len(eng.worker_epochs))
+                      if topo.island_of(w) == i)
+                  for i in range(topo.num_islands)]
+        assert list(int(e) for e in eng.island_epochs) == expect, (
+            f"island epochs {list(eng.island_epochs)} != min-merge "
+            f"{expect} over workers {list(eng.worker_epochs)}")
+        # tracker summary bits cover (at least) every present worker's
+        # island — conservative supersets (buddy merges OR summaries)
+        # are sound, a missing bit would let a scoped fence skip a
+        # stale holder's island
+        derived = tr._islands_from_masks(tr._worker_mask)
+        assert np.all(tr._island_mask & derived == derived), (
+            "island summary bits miss a present worker's island")
 
     for op, sel, size, w in trace:
         nw = mgr.config.num_workers
@@ -281,7 +324,12 @@ def _drive_elastic_trace(trace, workers, *, scoped, check_soundness):
         elif op == "reshard":
             new_workers = size                    # 1..4
             trans = mgr.default_translation(new_workers)
-            mgr.reshard(new_workers, trans)
+            topo = None
+            if sel == 2 and new_workers >= 2:
+                # island join riding the reshard: the new partition is
+                # installed atomically with the worker remap
+                topo = (tuple(range(new_workers - 1)), (new_workers - 1,))
+            mgr.reshard(new_workers, trans, topology=topo)
             if check_soundness:
                 tr = [int(trans[i]) for i in range(len(trans))]
 
@@ -293,7 +341,19 @@ def _drive_elastic_trace(trace, workers, *, scoped, check_soundness):
                                 for b, hs in holders.items()})
                 freed.update({b: (fc, fv, remap(fh))
                               for b, (fc, fv, fh) in freed.items()})
-            reads.append(("reshard", new_workers))
+            reads.append(("reshard", new_workers, topo))
+        elif op == "island":
+            if sel == 0 or nw < 2:
+                mgr.set_topology(None)            # leave: back to flat
+            else:
+                cut = 1 + (size % (nw - 1)) if nw > 2 else 1
+                mgr.set_topology((tuple(range(cut)),
+                                  tuple(range(cut, nw))))
+            topo = mgr.topology
+            reads.append(("island",
+                          None if topo is None else topo.spec))
+        if check_soundness:
+            check_two_level()
     return reads
 
 

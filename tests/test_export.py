@@ -183,3 +183,57 @@ class TestEndpoint:
         text = render({"fence.fences": 1})
         with pytest.raises(json.JSONDecodeError):
             json.loads(text)
+
+
+# ================================================================== exemplars
+class TestExemplars:
+    """Histogram → trace exemplars: each bucket remembers the most recent
+    observation's request/span id and the exposition renders it as an
+    OpenMetrics exemplar suffix, linking a latency bucket straight to a
+    trace."""
+
+    NAME = "repro_fence_obs_scope_workers"
+    KL = 'key="fence.obs.scope_workers"'
+
+    def test_golden_exemplar_suffix_on_owning_bucket_only(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("fence.obs.scope_workers")
+        h.observe(1, exemplar="req-7")
+        h.observe(2)                       # no exemplar: plain line
+        text = render_registry(reg)
+        assert (f'{self.NAME}_bucket{{{self.KL},le="1.0"}} 1 '
+                f'# {{trace_id="req-7"}} 1.0') in text
+        # buckets without an exemplar keep the plain (pre-exemplar) form
+        assert f'{self.NAME}_bucket{{{self.KL},le="2.0"}} 2\n' in text
+        assert f'{self.NAME}_bucket{{{self.KL},le="4.0"}} 2\n' in text
+
+    def test_latest_observation_wins_and_labels_escape(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("fence.obs.scope_workers")
+        h.observe(1, exemplar="req-1")
+        h.observe(1, exemplar="req-2")     # same bucket: newest kept
+        h.observe(1000, exemplar='sp"an')  # above top bound → +Inf bucket
+        text = render_registry(reg)
+        assert 'le="1.0"} 2 # {trace_id="req-2"} 1.0' in text
+        assert "req-1" not in text
+        assert 'le="+Inf"} 3 # {trace_id="sp\\"an"} 1000.0' in text
+
+    def test_exemplars_survive_parse_keys_and_reset(self):
+        reg = MetricsRegistry()
+        h = reg.histogram("fence.obs.scope_workers")
+        h.observe(1, exemplar="req-9")
+        assert parse_keys(render_registry(reg)) \
+            == {"fence.obs.scope_workers"}
+        h.reset()
+        assert h.exemplars == [None] * len(h.exemplars)
+        assert "req-9" not in render_registry(reg)
+
+    def test_live_engine_buckets_carry_exemplars(self):
+        """The engine feeds request/fence/step ids into its pinned
+        histograms — at least one rendered bucket line links a trace."""
+        eng = drive(make_engine())
+        text = render_registry(eng.metrics)
+        assert "# {trace_id=" in text
+        assert 'trace_id="req-' in text or 'trace_id="step-' in text
+        # the exposition stays schema-clean despite the suffixes
+        assert schema_violations(parse_keys(text)) == []

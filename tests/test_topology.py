@@ -1,0 +1,325 @@
+"""Hierarchical island topology: partition algebra + two-level fences.
+
+Unit coverage for the island subsystem (per-island block-table replica
+groups with two-level scoped fences):
+
+  * :class:`Topology` — partition validation, ``flat``/``grid``/``of``
+    normalisation, modulo folding for observer workers, overflow-bit
+    mask expansion.
+  * :class:`FenceEngine` — intra/cross classification, the
+    ``cross_island_cost`` multiplier, derived-min island epochs,
+    dissolving back to the flat single-level engine.
+  * :class:`BlockTracker` — island summary bits derived from (and kept
+    consistent with) the per-block worker masks.
+  * :class:`FprMemoryManager` — ``set_topology``/config sync, islands
+    riding (and dropping across) elastic reshard.
+  * :class:`FenceImpactSim` — the islands knob attaches two-level
+    counters without perturbing the flat virtual-time model.
+  * engine layer — ``Engine.reshape`` flips a live engine between flat
+    and multi-island layouts with bit-identical tokens (the fast-lane
+    twin of ``benchmarks/engine_trace.topology_case``).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import ContextScope, FprMemoryManager, derive_context
+from repro.core.config import FprConfig
+from repro.core.events import TopologyChanged
+from repro.core.shootdown import FenceEngine
+from repro.core.topology import Topology
+from repro.core.tracking import BlockTracker, worker_bit
+
+
+def ctx(gid):
+    return derive_context(ContextScope.PER_GROUP, group_id=gid)
+
+
+def make_mgr(n=64, workers=2, **kw):
+    return FprMemoryManager(
+        config=FprConfig(num_blocks=n, num_workers=workers,
+                         fpr_enabled=True, scoped_fences=True,
+                         max_order=5, **kw),
+        fence_engine=FenceEngine(measure=False))
+
+
+# ============================================================= partition layer
+class TestTopology:
+    def test_flat_is_the_single_island_degenerate_case(self):
+        t = Topology.flat(4)
+        assert t.is_flat
+        assert t.num_islands == 1
+        assert t.num_workers == 4
+        assert t.islands_of_mask(0b1010) == (0,)
+        assert t.islands_of(range(4)) == (0,)
+
+    def test_grid_builds_consecutive_islands(self):
+        assert Topology.grid(2, 2).islands == ((0, 1), (2, 3))
+        assert Topology.grid(3, 1).islands == ((0,), (1,), (2,))
+        assert Topology.grid(1, 4).is_flat
+
+    def test_of_normalises_every_spec_form(self):
+        t = Topology.of(((0, 1), (2, 3)))
+        assert Topology.of(t) is t                     # idempotent
+        assert Topology.of(None, num_workers=3).is_flat
+        assert Topology.of(4).num_workers == 4
+        assert Topology.of([(0,), (1,)]).spec == ((0,), (1,))
+        with pytest.raises(ValueError, match="covers"):
+            Topology.of(((0,), (1,)), num_workers=4)
+        with pytest.raises(ValueError, match="num_workers"):
+            Topology.of(None)
+
+    def test_partition_must_be_exact(self):
+        with pytest.raises(ValueError, match="exactly"):
+            Topology(islands=((0, 1), (1, 2)))         # overlap
+        with pytest.raises(ValueError, match="exactly"):
+            Topology(islands=((0,), (2,)))             # gap
+        with pytest.raises(ValueError, match="non-empty"):
+            Topology(islands=((0, 1), ()))             # empty island
+        with pytest.raises(ValueError, match="non-empty"):
+            Topology(islands=())
+        with pytest.raises(ValueError, match="sequence"):
+            Topology(islands=(0, 1))
+
+    def test_island_of_folds_observer_workers(self):
+        t = Topology.of(((0, 1), (2, 3)))
+        assert t.island_of(2) == 1
+        # workers beyond the topology (observer workers on a shared
+        # fence engine) fold through the modulo default rule
+        assert t.island_of(5) == t.island_of(1) == 0
+        assert t.islands_of([0, 3]) == (0, 1)
+        assert t.workers_in(1) == (2, 3)
+
+    def test_overflow_bit_expands_to_every_island(self):
+        t = Topology.of(((0, 1), (2, 3)))
+        assert t.island_worker_mask(0) == 0b0011
+        assert t.islands_of_mask(0b0100) == (1,)
+        # the aliased top bit (workers >= 63) could live anywhere
+        assert t.islands_of_mask(int(worker_bit(63))) == (0, 1)
+
+
+# ============================================================ two-level fences
+class TestTwoLevelFenceEngine:
+    def _eng(self):
+        eng = FenceEngine(measure=False, num_workers=4)
+        eng.set_topology(Topology.of(((0, 1), (2, 3))))
+        return eng
+
+    def test_scoped_fence_classifies_intra_vs_cross(self):
+        eng = self._eng()
+        eng.fence_scoped("x", worker_mask=0b0011)      # inside island 0
+        eng.fence_scoped("x", worker_mask=0b0101)      # spans both
+        s = eng.island_stats
+        assert (s.fences_intra, s.fences_cross) == (1, 1)
+        assert s.deltas_propagated == 1                # one remote island
+        # both fences covered two workers, so the modeled-cost ratio is
+        # exactly the interconnect multiplier
+        assert s.modeled_cross_s == pytest.approx(
+            eng.cost_model.cross_island_cost * s.modeled_intra_s)
+
+    def test_island_epochs_are_derived_mins(self):
+        eng = self._eng()
+        eng.fence_scoped("x", worker_mask=0b0011)      # w0, w1 -> 2
+        eng.fence_scoped("x", worker_mask=0b0101)      # w0, w2 -> 3
+        assert list(eng.worker_epochs) == [3, 2, 3, 1]
+        # merged island exactly as stale as its stalest constituent
+        assert list(eng.island_epochs) == [2, 1]
+        eng.fence("x")                                 # global: all covered
+        assert list(eng.island_epochs) == [eng.seq, eng.seq]
+
+    def test_dissolve_drops_island_accounting(self):
+        eng = self._eng()
+        eng.fence_scoped("x", worker_mask=0b0101)
+        eng.set_topology(None)
+        assert eng.island_stats is None
+        assert eng.num_islands == 1
+        assert list(eng.island_epochs) == [int(eng.worker_epochs.min())]
+
+    def test_flat_install_keeps_single_level_engine(self):
+        eng = FenceEngine(measure=False, num_workers=4)
+        eng.set_topology(Topology.flat(4))
+        assert eng.island_stats is None
+        eng.fence_scoped("x", worker_mask=0b0011)
+        assert eng.stats.fences_scoped == 1
+        assert list(eng.island_epochs) == [1]   # single derived summary
+
+
+# ======================================================== tracker summary bits
+class TestTrackerIslandBits:
+    def test_summary_bits_follow_worker_masks(self):
+        tr = BlockTracker(4)
+        tr.set_topology(Topology.of(((0, 1), (2, 3))))
+        tr.add_worker(0, 0)
+        assert tr.island_mask(0) == 0b01
+        tr.add_worker(0, 3)
+        assert tr.island_mask(0) == 0b11
+        # reset sites overwrite the worker mask directly, then refresh
+        tr._worker_mask[1] = worker_bit(2)
+        tr.refresh_islands(np.array([1]))
+        assert tr.island_mask(1) == 0b10
+
+    def test_overflow_worker_marks_every_island(self):
+        tr = BlockTracker(2)
+        tr.set_topology(Topology.of(((0, 1), (2, 3))))
+        tr.add_worker(0, 70)                  # aliases the top bit
+        assert tr.island_mask(0) == 0b11
+
+    def test_flat_drop_zeroes_summaries(self):
+        tr = BlockTracker(2)
+        tr.set_topology(Topology.of(((0,), (1,))))
+        tr.add_worker(0, 1)
+        tr.set_topology(None)
+        assert tr.island_mask(0) == 0
+        assert tr._island_mask is None
+
+
+# ========================================================== manager + reshard
+class TestManagerTopology:
+    def test_set_topology_syncs_config(self):
+        m = make_mgr(workers=2)
+        m.set_topology(((0,), (1,)))
+        assert m.config.islands == ((0,), (1,))
+        assert m.topology.num_islands == 2
+        m.set_topology(None)
+        assert m.config.islands is None
+        assert m.topology is None
+
+    def test_flat_spec_normalises_to_none(self):
+        m = make_mgr(workers=2)
+        m.set_topology(((0, 1),))
+        assert m.topology is None
+        assert m.config.islands is None
+
+    def test_set_topology_rejects_wrong_cover(self):
+        m = make_mgr(workers=2)
+        with pytest.raises(ValueError, match="covers"):
+            m.set_topology(((0, 1), (2, 3)))
+
+    def test_reshard_count_change_drops_islands(self):
+        """Regression: a reshard must not carry a stale island spec into
+        the resized config (FprConfig validates islands against the
+        worker count — this used to raise mid-reshard)."""
+        m = make_mgr(workers=2)
+        m.set_topology(((0,), (1,)))
+        m.reshard(1)                          # no ValueError
+        assert m.config.islands is None
+        assert m.topology is None
+
+    def test_reshard_installs_topology_atomically(self):
+        m = make_mgr(workers=2)
+        mp = m.mmap(4, ctx(1), worker=0)
+        m.reshard(4, topology=((0, 1), (2, 3)))
+        assert m.config.islands == ((0, 1), (2, 3))
+        assert m.topology.num_islands == 2
+        # presence summaries exist for the pre-reshard block holders
+        assert m.tracker.island_mask(int(mp.physical[0])) != 0
+        m.munmap(mp.mapping_id, worker=0)
+
+    def test_topology_changed_event_carries_islands(self):
+        m = make_mgr(workers=2)
+        seen = []
+        m.bus.subscribe(TopologyChanged, seen.append)
+        m.reshard(4, topology=((0, 1), (2, 3)))
+        assert seen[-1].islands == ((0, 1), (2, 3))
+        m.reshard(2)
+        assert seen[-1].islands is None
+
+    def test_scope_context_unused_island_fence_covers_members(self):
+        """A foreign-context reuse whose stale holders sit in one island
+        stays an intra-island fence; holders spanning islands classify
+        cross — the two-level analogue of the scoped-fence tests."""
+        m = make_mgr(n=8, workers=4, max_seqs=8)
+        m.set_topology(((0, 1), (2, 3)))
+        s = m.fences.island_stats
+        mp = m.mmap(8, ctx(1), worker=1)      # whole pool, island 0 only
+        m.munmap(mp.mapping_id, worker=1)
+        mp2 = m.mmap(8, ctx(2), worker=0)     # reuse fences island 0
+        assert s.fences_intra >= 1
+        cross_before = s.fences_cross
+        m.touch(mp2.mapping_id, 0, worker=2)  # now held from island 1 too
+        m.munmap(mp2.mapping_id, worker=2)
+        m.mmap(8, ctx(3), worker=0)           # holders span islands
+        assert s.fences_cross > cross_before
+
+
+# ==================================================================== sim knob
+class TestSimIslands:
+    def test_flat_result_schema_untouched(self):
+        from repro.serving.sim import FenceImpactSim, SimConfig
+        res = FenceImpactSim(SimConfig(io_workers=4, iters=30,
+                                       scoped=True, fpr=False)).run()
+        assert not hasattr(res, "fences_intra")
+        assert "fences_intra" not in res.as_dict()
+
+    def test_islands_attach_counters_without_perturbing_time(self):
+        """The sim's per-op masks are single-worker, so every scoped
+        fence is intra-island: the counters appear, the cross multiplier
+        never fires, and the virtual-time model is bit-identical to the
+        flat run."""
+        from repro.serving.sim import FenceImpactSim, SimConfig
+        kw = dict(io_workers=4, iters=60, scoped=True, fpr=False)
+        flat = FenceImpactSim(SimConfig(**kw)).run()
+        isl = FenceImpactSim(SimConfig(islands=((0, 1), (2, 3)),
+                                       **kw)).run()
+        assert isl.fences_intra == isl.fences == flat.fences > 0
+        assert isl.fences_cross == 0
+        assert isl.io_time == flat.io_time
+
+
+# ================================================================ engine layer
+class TestEngineReshape:
+    """Fast-lane twin of ``benchmarks/engine_trace.topology_case``."""
+
+    def _setup(self):
+        jax = pytest.importorskip("jax")
+        import jax.numpy as jnp
+        from repro.models import transformer as tfm
+        from repro.models.config import ModelConfig
+        tiny = ModelConfig(name="t", n_layers=1, d_model=32, n_heads=2,
+                           n_kv_heads=1, d_ff=64, vocab=64, head_dim=16)
+        params = tfm.init_params(jax.random.PRNGKey(0), tiny, jnp.float32)
+        rng = np.random.RandomState(7)
+        reqs = [(rng.randint(1, 64, size=rng.randint(4, 40)), f"s{i % 3}",
+                 (i % 3) + 1, 4 + (i % 3)) for i in range(8)]
+        return tiny, params, reqs
+
+    def _drive(self, tiny, params, reqs, schedule=None, islands=None):
+        from repro.serving.config import EngineConfig
+        from repro.serving.engine import Engine
+        eng = Engine(tiny, params, config=EngineConfig(
+            num_blocks=6, max_batch=4, max_seq_len=256, fpr_enabled=True,
+            num_workers=4, scoped_fences=True, admission="fcfs",
+            islands=islands))
+        for p, s, g, mnt in reqs:
+            eng.submit(p, max_new_tokens=mnt, stream=s, group_id=g)
+        steps = 0
+        while not eng.sched.idle and eng.steps < 500:
+            eng.step()
+            steps += 1
+            if schedule and steps in schedule:
+                eng.reshape(schedule[steps])
+        return eng, [list(map(int, r.generated))
+                     for r in sorted(eng.sched.done, key=lambda r: r.rid)]
+
+    def test_reshape_tokens_bit_identical(self):
+        tiny, params, reqs = self._setup()
+        _, t_flat = self._drive(tiny, params, reqs)
+        eng, t_re = self._drive(
+            tiny, params, reqs,
+            schedule={2: Topology.of(((0, 1), (2, 3))),
+                      5: Topology.flat(4)})
+        assert t_re == t_flat
+        snap = eng.metrics.snapshot()
+        assert snap["table.reshards"] == 2
+        assert snap["engine.num_workers"] == 4
+        # ended flat: the snapshot carries no island keys, so it stays
+        # schema-identical to a never-reshaped engine
+        assert not any(k.startswith("fence.island") for k in snap)
+
+    def test_static_islands_config_reaches_engine(self):
+        tiny, params, reqs = self._setup()
+        eng, toks = self._drive(tiny, params, reqs[:4],
+                                islands=((0, 1), (2, 3)))
+        assert eng.cache.mgr.topology.num_islands == 2
+        _, t_flat = self._drive(tiny, params, reqs[:4])
+        assert toks == t_flat

@@ -1,0 +1,116 @@
+"""Cross-PR perf-trajectory differ (``benchmarks/trajectory.py``).
+
+The differ merges per-PR ``BENCH_load.json`` artifacts into one trend
+document and renders a regression verdict for the newest artifact
+against its predecessor — these tests pin the discovery layouts, the
+merge shape, the verdict arithmetic (clean / regressed / vanished) and
+the CLI exit codes.
+"""
+
+import json
+import os
+
+from benchmarks import trajectory
+
+
+def _artifact(qw_p99=100.0, step_p99=0.02, fpt=0.5, rbpt=64.0,
+              workloads=trajectory.WORKLOADS):
+    return {"workloads": {
+        wl: {"queue_wait_steps": {"p50": qw_p99 / 2, "p99": qw_p99,
+                                  "count": 10},
+             "step_latency_s": {"p50": step_p99 / 2, "p99": step_p99,
+                                "count": 10},
+             "fences_per_token": fpt,
+             "refreshed_bytes_per_token": rbpt}
+        for wl in workloads}}
+
+
+def _write(tmp_path, label, payload, nested=False):
+    if nested:
+        d = tmp_path / label
+        d.mkdir()
+        path = d / "BENCH_load.json"
+    else:
+        path = tmp_path / f"{label}.json"
+    path.write_text(json.dumps(payload))
+    return str(path)
+
+
+class TestDiscovery:
+    def test_flat_and_nested_layouts_sort_by_label(self, tmp_path):
+        _write(tmp_path, "pr08", _artifact())
+        _write(tmp_path, "pr07", _artifact(), nested=True)
+        (tmp_path / "notes.txt").write_text("ignored")
+        (tmp_path / "empty_dir").mkdir()       # no BENCH_load.json inside
+        found = trajectory.discover(str(tmp_path))
+        assert [label for label, _ in found] == ["pr07", "pr08"]
+        assert found[0][1].endswith(os.path.join("pr07", "BENCH_load.json"))
+
+
+class TestMergeAndVerdict:
+    def test_clean_trend(self, tmp_path):
+        _write(tmp_path, "pr07", _artifact(qw_p99=100.0))
+        _write(tmp_path, "pr08", _artifact(qw_p99=110.0))   # +10% < +25%
+        out = str(tmp_path / "trend.json")
+        trend = trajectory.run(str(tmp_path), out=out)
+        assert trend["labels"] == ["pr07", "pr08"]
+        assert trend["workloads"]["poisson"]["queue_wait_p99"] \
+            == [100.0, 110.0]
+        assert trend["regressions"] == []
+        assert json.loads(open(out).read())["regressions"] == []
+
+    def test_regression_beyond_threshold(self, tmp_path):
+        _write(tmp_path, "pr07", _artifact(qw_p99=100.0))
+        _write(tmp_path, "pr08", _artifact(qw_p99=140.0))   # +40%
+        trend = trajectory.run(str(tmp_path))
+        # every workload regressed on queue_wait_p99, nothing else did
+        assert len(trend["regressions"]) == len(trajectory.WORKLOADS)
+        assert all("queue_wait_p99" in r for r in trend["regressions"])
+
+    def test_only_newest_pair_is_judged(self, tmp_path):
+        """A historical regression that later recovered is trend data,
+        not a verdict: only newest-vs-predecessor gates."""
+        _write(tmp_path, "pr06", _artifact(qw_p99=100.0))
+        _write(tmp_path, "pr07", _artifact(qw_p99=200.0))   # old spike
+        _write(tmp_path, "pr08", _artifact(qw_p99=210.0))   # +5% now
+        assert trajectory.run(str(tmp_path))["regressions"] == []
+
+    def test_vanished_metric_counts_as_regression(self, tmp_path):
+        _write(tmp_path, "pr07", _artifact())
+        broken = _artifact()
+        del broken["workloads"]["poisson"]["queue_wait_steps"]
+        _write(tmp_path, "pr08", broken)
+        regs = trajectory.run(str(tmp_path))["regressions"]
+        assert any("vanished" in r and "poisson" in r for r in regs)
+
+    def test_missing_baseline_is_skipped_not_divided(self, tmp_path):
+        """prev == 0 / absent gives no baseline: skip, don't crash."""
+        zero = _artifact()
+        zero["workloads"]["poisson"]["fences_per_token"] = 0
+        _write(tmp_path, "pr07", zero)
+        _write(tmp_path, "pr08", _artifact(fpt=0.9))
+        assert all("fences_per_token" not in r or "poisson" not in r
+                   for r in trajectory.run(str(tmp_path))["regressions"])
+
+    def test_single_artifact_is_vacuously_clean(self, tmp_path):
+        _write(tmp_path, "pr08", _artifact())
+        trend = trajectory.run(str(tmp_path))
+        assert trend["labels"] == ["pr08"]
+        assert trend["regressions"] == []
+
+
+class TestCli:
+    def test_exit_codes_and_threshold_flag(self, tmp_path, capsys):
+        _write(tmp_path, "pr07", _artifact(qw_p99=100.0))
+        _write(tmp_path, "pr08", _artifact(qw_p99=120.0))   # +20%
+        assert trajectory.main([str(tmp_path)]) == 0
+        assert trajectory.main([str(tmp_path), "--threshold", "0.1"]) == 1
+        assert "REGRESSION" in capsys.readouterr().out
+
+    def test_out_file_written(self, tmp_path):
+        _write(tmp_path, "pr08", _artifact())
+        out = str(tmp_path / "BENCH_trend.json")
+        assert trajectory.main([str(tmp_path), "--out", out]) == 0
+        doc = json.loads(open(out).read())
+        assert doc["threshold"] == 0.25
+        assert set(doc["workloads"]) == set(trajectory.WORKLOADS)

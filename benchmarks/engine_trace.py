@@ -51,6 +51,8 @@ JSON artifact is diffable run-to-run.
 
 from __future__ import annotations
 
+import zlib
+
 import numpy as np
 
 from benchmarks.common import save
@@ -416,6 +418,144 @@ def chunked_report(out: dict) -> None:
             f"{sm['queue_wait_p99_mice']})")
 
 
+#: snapshot keys the ragged-kernel comparison records per engine mode
+_KERNEL_KEYS = _CHUNK_KEYS + (
+    "engine.kernel.dma_bytes",
+    "engine.kernel.kernel_calls",
+    "engine.kernel.pipeline_depth",
+    "engine.kernel.ragged_steps",
+    "engine.steps",
+)
+
+
+def kernel_case(smoke: bool = False) -> dict:
+    """Ragged fused-KV serving: the whole mixed prefill+decode batch —
+    chunk rows and decode rows alike — through ONE ragged kernel call
+    per attention layer per engine step.
+
+    Three engines replay one trace of mixed, non-block-aligned prompts:
+
+    * ``chunked_ref`` — the per-slot chunked path (jnp reference
+      attention), the token oracle;
+    * ``ragged_ref`` — the ragged pass over the reference ragged
+      attention (isolates the batching rewrite from the kernel);
+    * ``ragged_kernel`` — the ragged pass over the pallas fused-KV
+      kernel under interpret mode (the real scalar-prefetched ragged
+      page walk).
+
+    Decoded tokens must be **bit-identical** across all three (the
+    ragged pack only changes *which call* serves a row, never what its
+    attention computes), every ragged engine must hold the one-trace
+    contract (``prefill_chunk_traces == 1``), and the kernel counters
+    must show exactly one ragged kernel call per attention layer per
+    step — ``kernel_calls == n_layers * ragged_steps`` — whatever the
+    step's prefill/decode blend.  The tuned-vs-naive delta is modeled
+    (``KernelCostModel``, like ``FenceCostModel``): interpret-mode wall
+    clocks on CPU are noise.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.paged_attention import autotune as pa_at
+    from repro.models import transformer as tfm
+    from repro.models.config import ModelConfig
+    from repro.serving.config import EngineConfig
+    from repro.serving.engine import Engine
+
+    cfg = ModelConfig(**_CFG_KW)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    rng = np.random.RandomState(SEED + 4)
+    lengths = ((40, 150, 90, 200) if smoke
+               else (40, 200, 170, 300, 90, 260))
+    reqs = [(rng.randint(1, _CFG_KW["vocab"], size=n), f"s{i % 2}",
+             (i % 2) + 1, 6 + (i % 3)) for i, n in enumerate(lengths)]
+    kw = dict(num_blocks=64, max_batch=4)
+    out: dict = {"seed": SEED + 4, "requests": len(reqs),
+                 "prompt_lengths": list(lengths), "prefill_chunk": 1, **kw}
+    modes = (("chunked_ref", False, "ref"),
+             ("ragged_ref", True, "ref"),
+             ("ragged_kernel", True, "pallas_interpret"))
+    toks = {}
+    for mode, ragged, impl in modes:
+        eng = Engine(cfg, params, config=EngineConfig(
+            max_seq_len=1024, fpr_enabled=True, admission="fcfs",
+            chunked_prefill=True, prefill_chunk=1, page_impl=impl,
+            ragged_kernel=ragged, **kw))
+        for prompt, stream, gid, mnt in reqs:
+            eng.submit(prompt, max_new_tokens=mnt, stream=stream,
+                       group_id=gid)
+        while not eng.sched.idle and eng.steps < 10_000:
+            eng.step()
+        toks[mode] = [list(map(int, r.generated))
+                      for r in sorted(eng.sched.done, key=lambda r: r.rid)]
+        snap = eng.metrics.snapshot()
+        out[mode] = {k: snap.get(k) for k in _KERNEL_KEYS}
+    out["tokens_identical"] = (toks["chunked_ref"] == toks["ragged_ref"]
+                               == toks["ragged_kernel"])
+    # fixed-seed fingerprint of the decoded stream — a run-to-run drift
+    # in kernel numerics shows up here before anything else does
+    flat = np.concatenate([np.asarray(t, np.int32)
+                           for t in toks["ragged_kernel"]] or
+                          [np.zeros(0, np.int32)])
+    out["token_crc"] = zlib.crc32(flat.tobytes())
+    out["n_layers"] = _CFG_KW["n_layers"]
+
+    # modeled tuned-vs-naive at the engine's own kernel shape
+    model = pa_at.KernelCostModel()
+    bs = tfm.BLOCK_SIZE
+    heads, hd = _CFG_KW["n_kv_heads"], _CFG_KW["head_dim"]
+    block_bytes = bs * heads * 2 * hd * 4
+    n_blocks = max(-(-n // bs) for n in lengths)
+    depth = pa_at.get_tuning(heads, hd, bs).buffer_depth
+    naive = model.step_s(n_blocks, block_bytes, bs, heads, hd,
+                         fused=False, buffer_depth=1)
+    tuned = model.step_s(n_blocks, block_bytes, bs, heads, hd,
+                         fused=True, buffer_depth=depth)
+    out["modeled"] = {
+        "block_bytes": block_bytes, "n_blocks": n_blocks,
+        "pipeline_depth": depth,
+        "naive_split_s": naive, "tuned_fused_s": tuned,
+        "tuned_vs_naive_pct": round((1 - tuned / naive) * 100.0, 2),
+    }
+    return out
+
+
+def kernel_report(out: dict) -> None:
+    """Print the ragged-kernel summary; fail loud on any regression."""
+    rk = out["ragged_kernel"]
+    md = out["modeled"]
+    print(f"  ragged kernel:   {rk['engine.kernel.ragged_steps']} steps, "
+          f"{rk['engine.kernel.kernel_calls']} kernel calls "
+          f"({out['n_layers']} layer(s)), "
+          f"{rk['engine.kernel.dma_bytes']} fused DMA bytes, "
+          f"depth {rk['engine.kernel.pipeline_depth']}; tokens identical: "
+          f"{out['tokens_identical']} (crc {out['token_crc']:#010x})")
+    print(f"  tuned vs naive:  {md['tuned_fused_s']:.3e}s vs "
+          f"{md['naive_split_s']:.3e}s modeled "
+          f"({md['tuned_vs_naive_pct']:.0f}% saved)")
+    if not out["tokens_identical"]:
+        raise AssertionError(
+            "ragged serving changed decoded tokens vs the chunked oracle")
+    for mode in ("ragged_ref", "ragged_kernel"):
+        m = out[mode]
+        if (m["engine.prefill_chunk_traces"] != 1
+                or m["engine.prefill_traces"]):
+            raise AssertionError(
+                f"{mode} must trace exactly once (got "
+                f"{m['engine.prefill_chunk_traces']} chunk traces, "
+                f"{m['engine.prefill_traces']} monolithic traces)")
+        calls, steps = (m["engine.kernel.kernel_calls"],
+                        m["engine.kernel.ragged_steps"])
+        if calls != out["n_layers"] * steps:
+            raise AssertionError(
+                f"{mode}: mixed prefill+decode batches must be served by "
+                f"one kernel call per layer per step — got {calls} calls "
+                f"over {steps} steps")
+    if md["tuned_fused_s"] > md["naive_split_s"]:
+        raise AssertionError(
+            "tuned fused pipeline lost to the naive split walk under the "
+            "kernel cost model")
+
+
 #: island partition of the hierarchical replay: 2 islands × 2 workers
 ISLANDS = ((0, 1), (2, 3))
 
@@ -626,6 +766,13 @@ def run_chunked(smoke: bool = False) -> dict:
     return out
 
 
+def run_kernel(smoke: bool = False) -> dict:
+    out = kernel_case(smoke=smoke)
+    save("BENCH_kernel", out)
+    kernel_report(out)
+    return out
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
@@ -634,4 +781,5 @@ if __name__ == "__main__":
     run(smoke=args.smoke)
     run_prefix(smoke=args.smoke)
     run_chunked(smoke=args.smoke)
+    run_kernel(smoke=args.smoke)
     run_topology(smoke=args.smoke)

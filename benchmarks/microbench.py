@@ -20,6 +20,13 @@ Extensions (``--mode scoped`` runs only these):
                  ``acquire``/``release`` lease hot path — wall time
                  (kept out of ``microbench_scoped.json``, which contains
                  only deterministic, seeded, diffable sections)
+
+Kernel sweep (``--mode kernel``): the fused paged-attention DMA-vs-
+compute sweep over (block_size × buffer_depth) — modeled latencies from
+``KernelCostModel`` (deterministic; interpret-mode wall clocks are
+noise), the autotune winner per shape, and a bitwise identity check of
+the real pipelined/fused/split kernels at a small shape.  Artifact:
+``microbench_kernel.json``.
 """
 
 from __future__ import annotations
@@ -167,6 +174,103 @@ def run_scoped(smoke: bool = False) -> dict:
     return out
 
 
+def kernel_sweep_case(smoke: bool = False) -> dict:
+    """(block_size × buffer_depth) sweep of the fused kernel's knobs.
+
+    For every pool block size the sweep prices one decode-row page walk
+    under the deterministic :class:`KernelCostModel`: the **naive**
+    configuration (split K/V pools — two DMA descriptors per block — and
+    no pipelining) against every fused buffer depth, records the
+    :func:`repro.kernels.paged_attention.autotune.autotune` winner, and
+    reports the tuned-vs-naive delta.  Larger blocks amortize descriptor
+    cost (the paper's "one translation, more reach"); deeper buffers
+    amortize the per-wait sync stall once compute can hide the copy.
+    """
+    from repro.kernels.paged_attention import autotune as at
+
+    model = at.KernelCostModel()
+    heads, head_dim = 8, 128
+    n_blocks = 4 if smoke else 16
+    block_sizes = (64, 128) if smoke else (32, 64, 128, 256)
+    at.clear()
+    rows = []
+    for bs in block_sizes:
+        block_bytes = bs * heads * 2 * head_dim * 4      # fused f32 block
+        naive = model.step_s(n_blocks, block_bytes, bs, heads, head_dim,
+                             fused=False, buffer_depth=1)
+        by_depth = {d: model.step_s(n_blocks, block_bytes, bs, heads,
+                                    head_dim, fused=True, buffer_depth=d)
+                    for d in at.BUFFER_DEPTHS}
+        tuned = at.autotune(heads, head_dim, bs, n_blocks, block_bytes)
+        best = by_depth[tuned.buffer_depth]
+        rows.append({
+            "block_size": bs, "block_bytes": block_bytes,
+            "naive_split_s": naive,
+            "fused_by_depth_s": {str(d): v for d, v in by_depth.items()},
+            "tuned_depth": tuned.buffer_depth,
+            "tuned_s": best,
+            # latency saved vs naive (positive = tuned faster)
+            "tuned_vs_naive_pct": round((1 - best / naive) * 100.0, 2),
+        })
+    at.clear()           # sweeps are advisory here; leave engines on the
+    #                      deterministic default unless they sweep too
+    return {"heads": heads, "head_dim": head_dim, "n_blocks": n_blocks,
+            "rows": rows}
+
+
+def kernel_identity_case() -> dict:
+    """Bitwise identity of the real kernels at one small shape: the
+    fused interleave is a pure permutation of the split walk, and
+    pipelining only moves *when* bytes reach VMEM — so fused == split
+    and every buffer depth == the unpipelined fused walk, exactly."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels.paged_attention.ops import (paged_attention,
+                                                   paged_attention_split)
+    from repro.models.attention import fuse_kv
+
+    B, H, KV, hd, bs, M, N = 3, 4, 2, 16, 8, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (N, bs, KV, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (N, bs, KV, hd), jnp.float32)
+    tables = jnp.asarray(np.random.RandomState(0).permutation(N)[
+        :B * M].reshape(B, M).astype(np.int32))
+    lengths = jnp.asarray([bs + 3, M * bs, 2 * bs - 1], jnp.int32)
+    split = paged_attention_split(q, kp, vp, tables, lengths,
+                                  interpret=True)
+    kv = fuse_kv(kp, vp)
+    fused = paged_attention(q, kv, tables, lengths, interpret=True)
+    out = {"fused_eq_split": bool(jnp.array_equal(fused, split))}
+    for d in (2, 4):
+        piped = paged_attention(q, kv, tables, lengths, buffer_depth=d,
+                                interpret=True)
+        out[f"depth{d}_eq_fused"] = bool(jnp.array_equal(piped, fused))
+    return out
+
+
+def run_kernel(smoke: bool = False) -> dict:
+    """The fused-kernel DMA sweep (deterministic artifact)."""
+    out = {
+        "sweep": kernel_sweep_case(smoke=smoke),
+        "identity": kernel_identity_case(),
+    }
+    save("microbench_kernel", out)
+    rows = out["sweep"]["rows"]
+    best = max(rows, key=lambda r: r["tuned_vs_naive_pct"])
+    print(f"  kernel sweep:    tuned depth {best['tuned_depth']} at "
+          f"bs={best['block_size']} beats naive split by "
+          f"{best['tuned_vs_naive_pct']:.0f}% (modeled); identity "
+          f"{out['identity']}")
+    if not all(out["identity"].values()):
+        raise AssertionError(f"kernel identity broken: {out['identity']}")
+    if any(r["tuned_s"] > r["naive_split_s"] for r in rows):
+        raise AssertionError("autotuned fused config lost to the naive "
+                             "split walk under its own cost model")
+    return out
+
+
 def run(smoke: bool = False) -> dict:
     grids = {
         "case1": [1, 2, 4, 8, 16, 32],
@@ -200,9 +304,12 @@ def run(smoke: bool = False) -> dict:
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["all", "scoped"], default="all",
+    ap.add_argument("--mode", choices=["all", "scoped", "kernel"],
+                    default="all",
                     help="'scoped' runs only the scoped-fence + "
-                         "batched-alloc extension benchmarks")
+                         "batched-alloc extension benchmarks; 'kernel' "
+                         "the fused paged-attention DMA sweep")
     ap.add_argument("--smoke", action="store_true")
     a = ap.parse_args()
-    (run_scoped if a.mode == "scoped" else run)(smoke=a.smoke)
+    {"scoped": run_scoped, "kernel": run_kernel}.get(a.mode, run)(
+        smoke=a.smoke)

@@ -13,7 +13,11 @@ vs FCFS, over-commit give-up elimination, preemption counts),
 saving, prefix hit rate, unique-block admission concurrency) and
 ``BENCH_chunked.json`` (chunked prefill: tokens bit-identical vs
 monolithic, one compile across prompt lengths, mice-and-elephants p99
-win) and ``BENCH_load.json`` (open-loop load harness: p50/p99 queue-wait
+win) and ``BENCH_kernel.json`` (ragged fused-KV paged attention: mixed
+prefill+decode batches served by one kernel call per layer per step,
+tokens bit-identical to the chunked oracle, autotuned pipeline at or
+below the naive split walk in modeled cost, fixed-seed token crc) and
+``BENCH_load.json`` (open-loop load harness: p50/p99 queue-wait
 and step latency from the pinned histograms, fences/token, refreshed
 bytes/token, fixed-seed token-identity, plus the ``trace_load.json``
 Chrome trace) and ``BENCH_topology.json`` (hierarchical 2×2-island
@@ -55,6 +59,8 @@ def main() -> int:
              lambda: engine_trace.run_prefix(smoke=True)),
             ("chunked smoke (deterministic BENCH_chunked.json)",
              lambda: engine_trace.run_chunked(smoke=True)),
+            ("kernel smoke (deterministic BENCH_kernel.json)",
+             lambda: engine_trace.run_kernel(smoke=True)),
             ("loadgen smoke (BENCH_load.json + trace_load.json)",
              lambda: loadgen.run(smoke=True)),
             ("topology smoke (deterministic BENCH_topology.json)",
@@ -72,6 +78,10 @@ def main() -> int:
              engine_trace.run_prefix),
             ("chunked prefill (BENCH_chunked.json mice & elephants)",
              engine_trace.run_chunked),
+            # heavy kernel sweep variant — standalone:
+            #   python -m benchmarks.microbench --mode kernel
+            ("ragged kernel (BENCH_kernel.json fused-KV serving)",
+             engine_trace.run_kernel),
             # nightly sustained variant — standalone:
             #   python -m benchmarks.loadgen --sustained
             ("loadgen sustained (BENCH_load.json open-loop harness)",

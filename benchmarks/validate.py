@@ -20,7 +20,11 @@ unique-block saving, zero in-set fence violations and the concurrency
 win — and ``BENCH_chunked.json`` (chunked prefill) must keep tokens
 bit-identical to monolithic, the chunk path compiled exactly once
 across prompt lengths, and the mice-and-elephants ``queue_wait_p99``
-strictly better chunked than monolithic — and ``BENCH_load.json`` (the
+strictly better chunked than monolithic — ``BENCH_kernel.json`` (ragged
+fused-KV serving) must keep tokens bit-identical to the chunked oracle,
+exactly one ragged kernel call per attention layer per step under mixed
+prefill+decode batches, a single compile, and the autotuned fused
+pipeline at or below the naive split walk — and ``BENCH_load.json`` (the
 open-loop load harness) must carry every workload with a present
 queue-wait/step-latency p99, finite fences/token and refreshed
 bytes/token, tokens bit-identical to the fixed-seed replay, and a trace
@@ -52,7 +56,8 @@ from repro.core.metrics import schema_violations
 #: the deterministic smoke artifacts the push lane publishes
 DEFAULT_ARTIFACTS = ("microbench_scoped.json", "admission_smoke.json",
                      "BENCH_prefix.json", "BENCH_chunked.json",
-                     "BENCH_load.json", "BENCH_topology.json")
+                     "BENCH_kernel.json", "BENCH_load.json",
+                     "BENCH_topology.json")
 
 #: workloads the load harness must always exercise
 LOAD_WORKLOADS = ("poisson", "diurnal", "multi_tenant")
@@ -88,6 +93,11 @@ REQUIRED_SCHEMA_KEYS = (
     "admission.obs.queue_depth",
     "fence.obs.scope_workers",
     "device.obs.refresh_bytes",
+    # ragged fused-KV kernel serving counters (KERNEL_SCHEMA)
+    "engine.kernel.dma_bytes",
+    "engine.kernel.kernel_calls",
+    "engine.kernel.pipeline_depth",
+    "engine.kernel.ragged_steps",
     # hierarchical island topology: two-level fence + replica-group +
     # delta-propagation counters (ISLAND_SCHEMA)
     "fence.island.num_islands",
@@ -214,6 +224,47 @@ def chunked_violations(path: str) -> list[str]:
     return bad
 
 
+def kernel_violations(path: str) -> list[str]:
+    """Required-section check: the ragged fused-KV kernel trajectory.
+
+    Applies to ``BENCH_kernel.json``; fails the push lane when the
+    ragged mixed prefill+decode batch stops being served by exactly one
+    kernel call per attention layer per step, decoded tokens stop being
+    bit-identical to the per-slot chunked oracle, the fixed-shape ragged
+    step starts retracing, or the autotuned fused pipeline loses to the
+    naive (split-KV, unpipelined) walk under the kernel cost model.
+    """
+    with open(path) as f:
+        payload = json.load(f)
+    rk = payload.get("ragged_kernel")
+    if rk is None or payload.get("chunked_ref") is None:
+        return ["missing ragged_kernel/chunked_ref sections"]
+    bad = []
+    if not payload.get("tokens_identical"):
+        bad.append("ragged tokens diverged from the chunked oracle")
+    n_layers = payload.get("n_layers") or 0
+    for mode in ("ragged_ref", "ragged_kernel"):
+        m = payload.get(mode) or {}
+        calls = m.get("engine.kernel.kernel_calls")
+        steps = m.get("engine.kernel.ragged_steps")
+        if calls is None or steps is None or calls != n_layers * steps:
+            bad.append(f"{mode}: {calls} kernel calls over {steps} steps "
+                       f"— a mixed batch must cost one call per layer "
+                       f"per step ({n_layers} layer(s))")
+        if m.get("engine.prefill_chunk_traces") != 1:
+            bad.append(f"{mode}: ragged step traced "
+                       f"{m.get('engine.prefill_chunk_traces')} times "
+                       f"(fixed descriptor shapes must compile once)")
+    md = payload.get("modeled") or {}
+    tuned, naive = md.get("tuned_fused_s"), md.get("naive_split_s")
+    if tuned is None or naive is None or tuned > naive:
+        bad.append(f"tuned fused pipeline {tuned}s not at or below the "
+                   f"naive split walk {naive}s (modeled)")
+    if payload.get("token_crc") is None:
+        bad.append("missing fixed-seed token_crc fingerprint")
+    return bad
+
+
 def load_violations(path: str) -> list[str]:
     """Required-section check: the open-loop load harness trajectory.
 
@@ -326,6 +377,8 @@ def main(argv: list[str]) -> int:
             bad = bad + [f"prefix: {b}" for b in prefix_violations(path)]
         if name == "BENCH_chunked.json":
             bad = bad + [f"chunked: {b}" for b in chunked_violations(path)]
+        if name == "BENCH_kernel.json":
+            bad = bad + [f"kernel: {b}" for b in kernel_violations(path)]
         if name == "BENCH_load.json":
             bad = bad + [f"load: {b}" for b in load_violations(path)]
         if name == "BENCH_topology.json":

@@ -165,6 +165,23 @@ ISLAND_SCHEMA = (
     "admission.ledger.per_island_committed",
 )
 
+#: ragged-kernel keys, present only when the engine serves mixed
+#: prefill + decode batches through the single ragged fused-KV kernel
+#: (``EngineConfig(ragged_kernel=True)``).  Like :data:`ISLAND_SCHEMA`,
+#: kept out of :data:`STABLE_SCHEMA` so default engines snapshot bit for
+#: bit as before; schema validation still admits the group.
+KERNEL_SCHEMA = (
+    # fused-KV bytes the step's page walks moved (one DMA per block)
+    "engine.kernel.dma_bytes",
+    # pallas kernel launches — under the ragged path exactly one per
+    # attention layer per engine step, whatever the prefill/decode mix
+    "engine.kernel.kernel_calls",
+    # revolving-buffer depth the autotune cache chose for this shape
+    "engine.kernel.pipeline_depth",
+    # engine steps served by the single ragged call
+    "engine.kernel.ragged_steps",
+)
+
 #: admission.* keys present only when a MemoryGovernor is attached
 ADMISSION_SCHEMA = (
     "admission.admitted",
@@ -313,6 +330,11 @@ SCHEMA_KINDS = {
     "device.island.intra_refreshes": "counter",
     "device.island.remote_deltas": "counter",
     "admission.ledger.per_island_committed": "gauge",
+    # engine.kernel.* (ragged fused-KV serving only)
+    "engine.kernel.dma_bytes": "counter",
+    "engine.kernel.kernel_calls": "counter",
+    "engine.kernel.pipeline_depth": "gauge",
+    "engine.kernel.ragged_steps": "counter",
 }
 
 #: kind per wildcard group (per-reason fence totals and per-worker fence
@@ -539,6 +561,7 @@ def schema_violations(keys: Iterable[str], *,
                       stable: Iterable[str] = STABLE_SCHEMA,
                       admission: Iterable[str] = ADMISSION_SCHEMA,
                       island: Iterable[str] = ISLAND_SCHEMA,
+                      kernel: Iterable[str] = KERNEL_SCHEMA,
                       wildcards: Iterable[str] = WILDCARD_PREFIXES
                       ) -> list[str]:
     """Namespaced keys in ``keys`` that the schema does not know.
@@ -547,7 +570,7 @@ def schema_violations(keys: Iterable[str], *,
     checked — artifact-local fields (``seed``, ``tokens_identical`` …)
     pass through untouched.
     """
-    known = set(stable) | set(admission) | set(island)
+    known = set(stable) | set(admission) | set(island) | set(kernel)
     hist_prefixes = tuple(f"{n}." for n in HISTOGRAM_SCHEMA)
     bad = []
     for key in keys:
@@ -564,7 +587,8 @@ def schema_violations(keys: Iterable[str], *,
 
 
 __all__ = ["ADMISSION_SCHEMA", "HISTOGRAM_FIELDS", "HISTOGRAM_SCHEMA",
-           "Histogram", "ISLAND_SCHEMA", "KINDS", "MetricsRegistry",
+           "Histogram", "ISLAND_SCHEMA", "KERNEL_SCHEMA", "KINDS",
+           "MetricsRegistry",
            "NAMESPACES", "SCHEMA_KINDS", "STABLE_SCHEMA", "WILDCARD_KINDS",
            "WILDCARD_PREFIXES", "flatten", "histogram_keys", "kind_of",
            "schema_violations"]

@@ -220,6 +220,29 @@ prefill.  Eviction interacts through ``Engine._lru_victims``, which
 never offers the block a sequence's next write lands in (and offers
 nothing at all from a still-growing prefill mapping, whose entire
 written history the next chunk reads).
+
+**Ragged fused-KV kernel.**  The serving kernel
+(:mod:`repro.kernels.paged_attention`) is the *reader* side of the paper's
+"one translation, more reach" argument.  A translation the fence protocol
+guarantees valid is a block-table row; what that row buys per lookup is
+the kernel's business.  Fusing K and V head-interleaved into one pool
+block means each validated row now covers **one** contiguous DMA carrying
+the block's entire KV payload instead of two half-sized descriptors
+walking two pools — twice the reach per translation, half the page walks
+per attended block, exactly the paper's economics of making each
+(expensively kept coherent) translation serve more bytes.  The ragged
+batch descriptor extends the same trade across *rows*: mixed
+prefill-chunk and decode sequences share one kernel launch, so one
+captured table snapshot per layer per step serves every slot's walk.
+None of this touches soundness: the kernel only changes how *resident*
+blocks are read — which descriptors, how many, how deeply the copies are
+pipelined — never when a block is freed, recycled, or fenced.  Every
+table row it dereferences was uploaded by the shard-refresh path above,
+its in-flight dispatches are drained by the same fence drain, and the
+multi-depth DMA pipeline lives entirely within one dispatch, so a fence
+never interleaves with a half-prefetched block.  The fence/version
+protocol is byte-for-byte the one documented above, with or without the
+fused kernel.
 """
 
 from __future__ import annotations

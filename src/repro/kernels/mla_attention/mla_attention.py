@@ -13,7 +13,12 @@ with bs = 128 and rank = 512 the score matmul is (H,512)·(512,128) — pure
 MXU work, and the page is ~9× smaller than the equivalent GQA page (the
 reason MLA pages recycle fastest; DESIGN.md §4).
 
-Grid: (B, M) — same scalar-prefetch page walk as paged_attention.
+Grid: (B, M) — same scalar-prefetch page walk as paged_attention,
+including its shard-native ``_table_index`` arithmetic: the serving
+cache's ``(W, Bs, M)`` interleaved shard stack is walked directly (slot
+``b`` at shard ``b % W``, row ``b // W``), with the classic monolithic
+``(B, M)`` table as the bit-identical ``W = 1`` degenerate case — no
+caller materializes a traced transpose of the stack anymore.
 """
 
 from __future__ import annotations
@@ -26,12 +31,14 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import tpu_compiler_params
+from repro.kernels.paged_attention.paged_attention import _table_index
 
 NEG_INF = -1e30
 
 
 def _mla_kernel(tables_ref, lengths_ref, ql_ref, qr_ref, c_ref, r_ref,
-                o_ref, m_sc, l_sc, acc_sc, *, bs: int, scale: float):
+                o_ref, m_sc, l_sc, acc_sc, *, bs: int, scale: float,
+                W: int, Bs: int, M: int):
     b = pl.program_id(0)
     mi = pl.program_id(1)
     nm = pl.num_programs(1)
@@ -44,7 +51,7 @@ def _mla_kernel(tables_ref, lengths_ref, ql_ref, qr_ref, c_ref, r_ref,
         acc_sc[...] = jnp.zeros_like(acc_sc)
 
     blk_start = mi * bs
-    resident = tables_ref[b * nm + mi] >= 0
+    resident = tables_ref[_table_index(b, mi, W=W, Bs=Bs, M=M)] >= 0
 
     @pl.when(jnp.logical_and(resident, blk_start < length))
     def _step():
@@ -81,17 +88,23 @@ def mla_paged_ctx_fwd(q_lat: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
                       lengths: jax.Array, *, scale: float,
                       interpret: bool = False) -> jax.Array:
     """q_lat: (B, H, rank); q_rope: (B, H, rope_hd); c_pool: (N, bs, rank);
-    rope_pool: (N, bs, rope_hd) → latent context (B, H, rank) f32."""
+    rope_pool: (N, bs, rope_hd); tables: (B, M) monolithic or (W, Bs, M)
+    interleaved shard stack → latent context (B, H, rank) f32."""
+    from repro.kernels.paged_attention.ops import shard_descriptor
+
     B, H, rank = q_lat.shape
     rope_hd = q_rope.shape[-1]
     N, bs, _ = c_pool.shape
-    M = tables.shape[1]
+    stack, W, Bs, M = shard_descriptor(tables)
+    if W * Bs < B:
+        raise ValueError(f"shard stack covers {W * Bs} slots < batch {B}")
 
     def q_map(b, m, t, l):
         return (b, 0, 0)
 
     def pool_map(b, m, t, l):
-        return (jnp.maximum(t[b * M + m], 0), 0, 0)
+        return (jnp.maximum(t[_table_index(b, m, W=W, Bs=Bs, M=M)], 0),
+                0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
@@ -109,7 +122,8 @@ def mla_paged_ctx_fwd(q_lat: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
             pltpu.VMEM((H, rank), jnp.float32),
         ],
     )
-    kern = functools.partial(_mla_kernel, bs=bs, scale=scale)
+    kern = functools.partial(_mla_kernel, bs=bs, scale=scale,
+                             W=W, Bs=Bs, M=M)
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
@@ -117,4 +131,4 @@ def mla_paged_ctx_fwd(q_lat: jax.Array, q_rope: jax.Array, c_pool: jax.Array,
         compiler_params=tpu_compiler_params(
             ("parallel", "arbitrary")),
         interpret=interpret,
-    )(tables.reshape(-1), lengths, q_lat, q_rope, c_pool, rope_pool)
+    )(stack.reshape(-1), lengths, q_lat, q_rope, c_pool, rope_pool)

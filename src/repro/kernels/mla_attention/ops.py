@@ -18,7 +18,12 @@ def mla_paged_decode(params: dict, x: jax.Array, positions: jax.Array,
                      c_pool: jax.Array, rope_pool: jax.Array,
                      block_tables: jax.Array, lengths: jax.Array, cfg, *,
                      interpret: bool = False) -> jax.Array:
-    """x: (B, D) current-token activations → (B, D) with residual added."""
+    """x: (B, D) current-token activations → (B, D) with residual added.
+
+    ``block_tables`` is either the monolithic ``(B, M)`` table or the
+    serving cache's ``(W, Bs, M)`` interleaved shard stack — the kernel
+    walks the stack natively, so callers hand the device arrays over
+    without a traced transpose."""
     m = cfg.mla
     B, D = x.shape
     h = rms_norm(x[:, None, :], params["norm"], cfg.norm_eps)

@@ -1,0 +1,130 @@
+"""In-process autotune cache for the fused paged-attention kernel.
+
+The two knobs the pipelined kernel exposes are the pool **block size**
+(``bs`` — how many tokens one translation's DMA covers) and the
+**buffer depth** (how many fused blocks the revolving VMEM buffer keeps
+in flight).  ``benchmarks/microbench.py --mode kernel`` sweeps both and
+records the winner here, keyed by the kernel-shape triple ``(heads,
+head_dim, bs)``; the serving engine reads the tuned depth at trace time
+through :func:`get_tuning`.  Without a recorded sweep every key falls
+back to :data:`DEFAULT_TUNING` — deterministic, so two engines built in
+the same process (or different processes) trace identical kernels and
+decode identical tokens whether or not a sweep ran.
+
+The latency model is *modeled*, not wall-clock: interpret-mode timings
+on CPU are noise, so — like ``FenceCostModel`` for fences — the sweep
+ranks candidates by a deterministic descriptor/byte/compute cost.  The
+model's structure is the point of the tentpole: a **fused** block costs
+ONE DMA descriptor where split K/V cost two (the paper's "one
+translation, more reach"), and a **pipelined** walk overlaps each
+block's copy with the previous block's flash step, so the steady state
+pays ``max(copy, compute)`` instead of ``copy + compute``, with deeper
+buffers amortizing the per-wait synchronization stall.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+#: sweepable buffer depths (1 = unpipelined BlockSpec walk)
+BUFFER_DEPTHS = (1, 2, 4)
+
+
+@dataclass(frozen=True)
+class KernelTuning:
+    """One autotune cache entry: the chosen (block_size, buffer_depth)."""
+
+    block_size: int
+    buffer_depth: int
+
+
+#: deterministic fallback when no sweep has recorded a winner
+DEFAULT_BUFFER_DEPTH = 2
+
+
+@dataclass(frozen=True)
+class KernelCostModel:
+    """Deterministic DMA-vs-compute latency model of one decode step.
+
+    ``descriptor_s`` is the fixed cost of issuing one DMA (the
+    translation walk the fused layout halves); ``byte_s`` the per-byte
+    streaming cost; ``flash_s`` the per-(token × head-dim) flash-step
+    compute cost; ``sync_s`` the per-wait semaphore stall that deeper
+    buffering amortizes.
+    """
+
+    descriptor_s: float = 2.0e-7
+    byte_s: float = 5.0e-12
+    # per (kv-token × kv-head × dim): each kv element feeds G grouped
+    # query heads through QK^T, softmax and PV, so the constant sits well
+    # above the per-byte copy cost — compute can genuinely hide the copy
+    # at serving shapes, which is what makes depth > 1 worth paying for
+    flash_s: float = 5.0e-11
+    sync_s: float = 5.0e-8
+
+    def copy_s(self, block_bytes: int, *, fused: bool) -> float:
+        """One block's DMA time: 1 descriptor fused, 2 split."""
+        descriptors = 1 if fused else 2
+        return descriptors * self.descriptor_s + block_bytes * self.byte_s
+
+    def compute_s(self, bs: int, heads: int, head_dim: int) -> float:
+        return bs * heads * head_dim * self.flash_s
+
+    def step_s(self, n_blocks: int, block_bytes: int, bs: int, heads: int,
+               head_dim: int, *, fused: bool, buffer_depth: int) -> float:
+        """Modeled latency of one n_blocks page walk.
+
+        Unpipelined (depth 1): every block pays copy + compute in
+        series.  Pipelined (depth >= 2): one warm-up copy, then the
+        steady state pays max(copy, compute) per block plus the
+        synchronization stall, amortized over ``buffer_depth``
+        outstanding copies.
+        """
+        copy = self.copy_s(block_bytes, fused=fused)
+        compute = self.compute_s(bs, heads, head_dim)
+        if buffer_depth <= 1:
+            return n_blocks * (copy + compute)
+        return (copy + n_blocks * max(copy, compute)
+                + (n_blocks / buffer_depth) * self.sync_s)
+
+
+_CACHE: dict[tuple[int, int, int], KernelTuning] = {}
+
+
+def tuning_key(heads: int, head_dim: int, bs: int) -> tuple[int, int, int]:
+    return (int(heads), int(head_dim), int(bs))
+
+
+def get_tuning(heads: int, head_dim: int, bs: int) -> KernelTuning:
+    """The recorded winner for this shape, or the deterministic default."""
+    return _CACHE.get(tuning_key(heads, head_dim, bs),
+                      KernelTuning(block_size=int(bs),
+                                   buffer_depth=DEFAULT_BUFFER_DEPTH))
+
+
+def set_tuning(heads: int, head_dim: int, bs: int,
+               tuning: KernelTuning) -> None:
+    _CACHE[tuning_key(heads, head_dim, bs)] = tuning
+
+
+def clear() -> None:
+    """Drop all recorded sweeps (tests)."""
+    _CACHE.clear()
+
+
+def autotune(heads: int, head_dim: int, bs: int, n_blocks: int,
+             block_bytes: int,
+             model: KernelCostModel = KernelCostModel()) -> KernelTuning:
+    """Rank fused buffer depths by modeled latency and record the winner."""
+    best = min(BUFFER_DEPTHS,
+               key=lambda d: model.step_s(n_blocks, block_bytes, bs, heads,
+                                          head_dim, fused=True,
+                                          buffer_depth=d))
+    tuning = KernelTuning(block_size=int(bs), buffer_depth=int(best))
+    set_tuning(heads, head_dim, bs, tuning)
+    return tuning
+
+
+__all__ = ["KernelTuning", "KernelCostModel", "BUFFER_DEPTHS",
+           "DEFAULT_BUFFER_DEPTH", "tuning_key", "get_tuning", "set_tuning",
+           "autotune", "clear"]

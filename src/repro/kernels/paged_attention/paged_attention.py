@@ -1,16 +1,42 @@
-"""Paged decode attention Pallas TPU kernel — the FPR hot path.
+"""Ragged fused-KV paged-attention Pallas TPU kernels — the FPR hot path.
 
-One query token per sequence attends to its KV cache, which lives in
-*physical blocks* of the FPR pool addressed through the per-sequence block
-table (repro.core.block_table).  This is the TPU-native adaptation of the
-paper's translation layer: the block table is the "page table", and the
-kernel walks it with **scalar prefetch** — the table rows are SMEM scalars
-available to the BlockSpec index maps, so each grid step DMAs exactly the
-one physical block (bs, KV, hd) it needs from HBM into VMEM.  Holes
-(non-resident / swapped blocks, table entry < 0) are clamped in the index
-map and masked in the kernel, never touched.
+Queries attend to a KV cache that lives in *physical blocks* of the FPR
+pool addressed through per-sequence block tables (repro.core.block_table).
+This is the TPU-native adaptation of the paper's translation layer: the
+block table is the "page table", and the kernels walk it with **scalar
+prefetch** — the table rows are SMEM scalars available to the BlockSpec
+index maps, so each grid step DMAs exactly the physical block it needs
+from HBM into VMEM.  Holes (non-resident / swapped blocks, table entry
+< 0) are clamped in the index map and masked in the kernel, never
+touched.  Four kernels share that walk:
 
-**Shard-native tables.**  The kernel consumes the block table in the
+  * ``paged_attention_fwd`` — the legacy split-KV decode kernel (separate
+    ``(N, bs, KV, hd)`` K and V pools, two DMA descriptors per logical
+    block).  Kept as the *naive* baseline the microbench sweep compares
+    against.
+  * ``paged_attention_fused_fwd`` — the fused-KV decode kernel.  The pool
+    is head-interleaved ``(N, bs, KV*2, hd)`` with K on even and V on odd
+    head indices, so one logical block is ONE contiguous DMA — one
+    translation covers twice the reach, the serving analogue of the
+    large-reach TLBs in PAPERS.md.  Bit-identical to the split kernel
+    (the interleave is a pure permutation; the flash math is unchanged).
+  * ``paged_attention_fused_pipelined_fwd`` — the fused kernel with
+    *manual multi-depth VMEM buffering*: the fused pool stays in
+    ``pltpu.ANY`` memory and the kernel issues its own
+    ``pltpu.make_async_copy`` per block into a revolving ``(depth, bs,
+    KV*2, hd)`` VMEM buffer, so block ``m + depth``'s copy overlaps block
+    ``m``'s flash step.  ``buffer_depth`` (2/4) and the pool block size
+    are the autotune knobs (see ``autotune.py``).
+  * ``ragged_fused_fwd`` — ragged batching over the fused pool: mixed
+    chunked-prefill rows and decode rows are packed into one ``(T, KV,
+    G, hd)`` query array (tiles of ``QT`` query rows, tiles never span
+    sequences) and served by ONE kernel call per step.  The descriptor —
+    derived from scalar-prefetched ``cu_q_lens`` / ``cu_kv_lens`` by
+    ``ops.build_ragged_descriptor`` — maps each query tile to its batch
+    slot and global position; causality, sequence length, sliding
+    window and holes are all masked per (query, key) element.
+
+**Shard-native tables.**  All kernels consume the block table in the
 device's *sharded* layout: a ``(W, Bs, M)`` int32 stack of per-worker
 shards, where batch slot ``b`` lives at shard ``b % W``, local row
 ``b // W`` (the interleaved slot layout of
@@ -19,14 +45,15 @@ flattened stack directly — ``(b % W) * Bs * M + (b // W) * M + m`` — so
 the serving cache hands its shard arrays straight to the kernel and a
 scoped fence or an elastic reshard never pays an O(full-table) host-side
 assemble.  The pre-sharding monolithic ``(B, M)`` layout is exactly the
-``W = 1`` case (the index arithmetic degenerates to ``b * M + m``), which
-is how the classic entry point in ``ops.py`` still works, bit for bit.
+``W = 1`` case (the index arithmetic degenerates to ``b * M + m``),
+which is how the classic entry points in ``ops.py`` still work, bit for
+bit.
 
-Grid: (B, M) with the block walk innermost and sequential; online-softmax
-state (m, l, acc) lives in VMEM scratch across the walk.  Fully-invalid
-blocks (beyond ``lengths`` or outside the sliding window) are skipped with
-pl.when, so decode cost is proportional to the *resident* cache, not the
-table capacity — with SWA (danube) only ceil(W/bs)+1 blocks are read.
+Grids: ``(B, M)`` (decode) / ``(T // QT, M)`` (ragged) with the block
+walk innermost and sequential; online-softmax state (m, l, acc) lives in
+VMEM scratch across the walk.  Fully-invalid blocks (beyond the kv
+length or outside the sliding window) are skipped with ``pl.when``, so
+cost is proportional to the *resident* cache, not the table capacity.
 """
 
 from __future__ import annotations
@@ -42,6 +69,10 @@ from repro.kernels._compat import tpu_compiler_params
 
 NEG_INF = -1e30
 
+#: query-tile height of the ragged kernel — packed rows are padded so a
+#: tile never spans two sequences
+QT = 8
+
 
 def _table_index(b, m, *, W: int, Bs: int, M: int):
     """Flattened index of (slot b, logical block m) in the (W, Bs, M)
@@ -49,6 +80,11 @@ def _table_index(b, m, *, W: int, Bs: int, M: int):
     if W == 1:
         return b * M + m
     return (b % W) * (Bs * M) + (b // W) * M + m
+
+
+# ---------------------------------------------------------------------------
+# legacy split-KV decode kernel (the naive baseline: 2 DMAs per block)
+# ---------------------------------------------------------------------------
 
 
 def _pa_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
@@ -76,29 +112,41 @@ def _pa_kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0].astype(jnp.float32)              # (KV, G, hd)
         k = k_ref[0].astype(jnp.float32)              # (bs, KV, hd)
         v = v_ref[0].astype(jnp.float32)              # (bs, KV, hd)
-        hd = q.shape[-1]
-        s = jnp.einsum("kgd,skd->kgs", q, k,
-                       preferred_element_type=jnp.float32) * (hd ** -0.5)
-        pos = blk_start + jax.lax.broadcasted_iota(
-            jnp.int32, s.shape, 2)                    # (KV, G, bs)
-        mask = pos < length
-        if window is not None:
-            mask = jnp.logical_and(mask, pos > length - 1 - window)
-        s = jnp.where(mask, s, NEG_INF)
-
-        m_prev = m_sc[...]                            # (KV, G, 1)
-        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
-        p = jnp.exp(s - m_new)                        # (KV, G, bs)
-        scale = jnp.exp(m_prev - m_new)
-        l_sc[...] = l_sc[...] * scale + p.sum(axis=-1, keepdims=True)
-        acc_sc[...] = acc_sc[...] * scale + jnp.einsum(
-            "kgs,skd->kgd", p, v, preferred_element_type=jnp.float32)
-        m_sc[...] = m_new
+        _flash_block_step(q, k, v, blk_start, length, window,
+                          m_sc, l_sc, acc_sc)
 
     @pl.when(mi == nm - 1)
     def _finalize():
         out = acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)
         o_ref[0] = out.astype(o_ref.dtype)
+
+
+def _flash_block_step(q, k, v, blk_start, length, window,
+                      m_sc, l_sc, acc_sc):
+    """One online-softmax step over a (bs, KV, hd) key/value block.
+
+    Shared verbatim by the split, fused and pipelined decode kernels —
+    same float ops in the same order, which is what makes the fused and
+    pipelined paths *bit-identical* to the naive baseline.
+    """
+    hd = q.shape[-1]
+    s = jnp.einsum("kgd,skd->kgs", q, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    pos = blk_start + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 2)                        # (KV, G, bs)
+    mask = pos < length
+    if window is not None:
+        mask = jnp.logical_and(mask, pos > length - 1 - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_sc[...]                                # (KV, G, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                            # (KV, G, bs)
+    scale = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_sc[...] * scale + p.sum(axis=-1, keepdims=True)
+    acc_sc[...] = acc_sc[...] * scale + jnp.einsum(
+        "kgs,skd->kgd", p, v, preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
 
 
 def paged_attention_fwd(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
@@ -148,3 +196,326 @@ def paged_attention_fwd(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
             ("parallel", "arbitrary")),
         interpret=interpret,
     )(shard_tables.reshape(-1), lengths, q, k_pool, v_pool)
+
+
+# ---------------------------------------------------------------------------
+# fused-KV decode kernel: one (bs, KV*2, hd) block, ONE DMA per block
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(tables_ref, lengths_ref, q_ref, kv_ref, o_ref,
+                  m_sc, l_sc, acc_sc, *, bs: int, window: int | None,
+                  W: int, Bs: int, M: int):
+    b = pl.program_id(0)
+    mi = pl.program_id(1)
+    nm = pl.num_programs(1)
+    length = lengths_ref[b]
+
+    @pl.when(mi == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    blk_start = mi * bs
+    resident = tables_ref[_table_index(b, mi, W=W, Bs=Bs, M=M)] >= 0
+    visible = blk_start < length
+    if window is not None:
+        visible = jnp.logical_and(visible, blk_start + bs > length - window)
+
+    @pl.when(jnp.logical_and(resident, visible))
+    def _step():
+        q = q_ref[0].astype(jnp.float32)              # (KV, G, hd)
+        kv = kv_ref[0].astype(jnp.float32)            # (bs, KV*2, hd)
+        _flash_block_step(q, kv[:, 0::2, :], kv[:, 1::2, :],
+                          blk_start, length, window, m_sc, l_sc, acc_sc)
+
+    @pl.when(mi == nm - 1)
+    def _finalize():
+        out = acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_fused_fwd(q: jax.Array, kv_pool: jax.Array,
+                              shard_tables: jax.Array, lengths: jax.Array, *,
+                              window: int | None = None,
+                              interpret: bool = False) -> jax.Array:
+    """q: (B, KV, G, hd); fused pool: (N, bs, KV*2, hd) head-interleaved
+    (K even, V odd); shard_tables: (W, Bs, M); lengths: (B,) →
+    (B, KV, G, hd).  Bit-identical to :func:`paged_attention_fwd` on the
+    split views of the same pool."""
+    B, KV, G, hd = q.shape
+    N, bs, KV2, _ = kv_pool.shape
+    if KV2 != 2 * KV:
+        raise ValueError(f"fused pool has {KV2} interleaved heads, "
+                         f"query expects {2 * KV}")
+    W, Bs, M = shard_tables.shape
+    if W * Bs < B:
+        raise ValueError(f"shard stack covers {W * Bs} slots < batch {B}")
+
+    def q_map(b, m, tables_ref, lengths_ref):
+        return (b, 0, 0, 0)
+
+    def kv_map(b, m, tables_ref, lengths_ref):
+        idx = _table_index(b, m, W=W, Bs=Bs, M=M)
+        return (jnp.maximum(tables_ref[idx], 0), 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, M),
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), q_map),
+            pl.BlockSpec((1, bs, KV2, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G, 1), jnp.float32),
+            pltpu.VMEM((KV, G, 1), jnp.float32),
+            pltpu.VMEM((KV, G, hd), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_fused_kernel, bs=bs, window=window,
+                             W=W, Bs=Bs, M=M)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary")),
+        interpret=interpret,
+    )(shard_tables.reshape(-1), lengths, q, kv_pool)
+
+
+# ---------------------------------------------------------------------------
+# fused-KV decode kernel with manual multi-depth DMA pipelining
+# ---------------------------------------------------------------------------
+
+
+def _fused_pipelined_kernel(tables_ref, lengths_ref, q_ref, kv_hbm_ref,
+                            o_ref, m_sc, l_sc, acc_sc, buf, sem, *,
+                            bs: int, window: int | None,
+                            W: int, Bs: int, M: int, depth: int):
+    """The fused kernel with the block walk's DMA issued by hand.
+
+    The fused pool stays in ``ANY`` (HBM) memory; a revolving ``(depth,
+    bs, KV*2, hd)`` VMEM buffer holds the next ``depth`` blocks in
+    flight, so block ``mi + depth``'s copy overlaps block ``mi``'s flash
+    step.  Copy starts/waits are balanced per sequence row: ``min(depth,
+    nm)`` warm-up starts at ``mi == 0``, one wait + (if another block
+    remains) one start per step.
+    """
+    b = pl.program_id(0)
+    mi = pl.program_id(1)
+    nm = pl.num_programs(1)
+    length = lengths_ref[b]
+
+    def copy(m, slot):
+        phys = jnp.maximum(
+            tables_ref[_table_index(b, m, W=W, Bs=Bs, M=M)], 0)
+        return pltpu.make_async_copy(kv_hbm_ref.at[phys], buf.at[slot],
+                                     sem.at[slot])
+
+    @pl.when(mi == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+        for j in range(min(depth, nm)):               # warm-up fills
+            copy(j, j).start()
+
+    slot = jax.lax.rem(mi, depth)
+    copy(mi, slot).wait()
+
+    blk_start = mi * bs
+    resident = tables_ref[_table_index(b, mi, W=W, Bs=Bs, M=M)] >= 0
+    visible = blk_start < length
+    if window is not None:
+        visible = jnp.logical_and(visible, blk_start + bs > length - window)
+
+    @pl.when(jnp.logical_and(resident, visible))
+    def _step():
+        q = q_ref[0].astype(jnp.float32)              # (KV, G, hd)
+        kv = buf[slot].astype(jnp.float32)            # (bs, KV*2, hd)
+        _flash_block_step(q, kv[:, 0::2, :], kv[:, 1::2, :],
+                          blk_start, length, window, m_sc, l_sc, acc_sc)
+
+    @pl.when(mi + depth < nm)
+    def _prefetch_next():
+        copy(mi + depth, slot).start()
+
+    @pl.when(mi == nm - 1)
+    def _finalize():
+        out = acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_fused_pipelined_fwd(
+        q: jax.Array, kv_pool: jax.Array, shard_tables: jax.Array,
+        lengths: jax.Array, *, window: int | None = None,
+        buffer_depth: int = 2, interpret: bool = False) -> jax.Array:
+    """:func:`paged_attention_fused_fwd` with ``buffer_depth`` blocks of
+    manual DMA pipelining.  Bit-identical output — pipelining only moves
+    *when* bytes arrive in VMEM, never what the flash step computes."""
+    B, KV, G, hd = q.shape
+    N, bs, KV2, _ = kv_pool.shape
+    if KV2 != 2 * KV:
+        raise ValueError(f"fused pool has {KV2} interleaved heads, "
+                         f"query expects {2 * KV}")
+    if buffer_depth < 1:
+        raise ValueError(f"buffer_depth must be >= 1, got {buffer_depth}")
+    W, Bs, M = shard_tables.shape
+    if W * Bs < B:
+        raise ValueError(f"shard stack covers {W * Bs} slots < batch {B}")
+
+    def q_map(b, m, tables_ref, lengths_ref):
+        return (b, 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, M),
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), q_map),
+            pl.BlockSpec(memory_space=pltpu.ANY),     # whole fused pool
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G, 1), jnp.float32),
+            pltpu.VMEM((KV, G, 1), jnp.float32),
+            pltpu.VMEM((KV, G, hd), jnp.float32),
+            pltpu.VMEM((buffer_depth, bs, KV2, hd), kv_pool.dtype),
+            pltpu.SemaphoreType.DMA((buffer_depth,)),
+        ],
+    )
+    kern = functools.partial(_fused_pipelined_kernel, bs=bs, window=window,
+                             W=W, Bs=Bs, M=M, depth=buffer_depth)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary")),
+        interpret=interpret,
+    )(shard_tables.reshape(-1), lengths, q, kv_pool)
+
+
+# ---------------------------------------------------------------------------
+# ragged fused-KV kernel: mixed prefill + decode rows, one call per step
+# ---------------------------------------------------------------------------
+
+
+def _ragged_kernel(tables_ref, tile_row_ref, tile_pos_ref, kv_lens_ref,
+                   q_ref, kv_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                   bs: int, window: int | None, W: int, Bs: int, M: int):
+    t = pl.program_id(0)
+    mi = pl.program_id(1)
+    nm = pl.num_programs(1)
+    row = tile_row_ref[t]                             # batch slot, -1 = pad
+    qpos0 = tile_pos_ref[t]                           # tile's first q pos
+    slot = jnp.maximum(row, 0)
+    kv_len = kv_lens_ref[slot]
+
+    @pl.when(mi == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    blk_start = mi * bs
+    resident = tables_ref[_table_index(slot, mi, W=W, Bs=Bs, M=M)] >= 0
+    # causal upper bound: no query in this tile sees keys >= kv_len
+    visible = jnp.logical_and(row >= 0, blk_start < kv_len)
+    if window is not None:
+        # lowest query of the tile reaches back to qpos0 - window + 1
+        visible = jnp.logical_and(visible, blk_start + bs > qpos0 - window)
+
+    @pl.when(jnp.logical_and(resident, visible))
+    def _step():
+        q = q_ref[...].astype(jnp.float32)            # (QT, KV, G, hd)
+        kv = kv_ref[0].astype(jnp.float32)            # (bs, KV*2, hd)
+        k = kv[:, 0::2, :]
+        v = kv[:, 1::2, :]
+        hd = q.shape[-1]
+        s = jnp.einsum("qkgd,skd->kgqs", q, k,
+                       preferred_element_type=jnp.float32) * (hd ** -0.5)
+        qpos = qpos0 + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 2)                    # (KV, G, QT, bs)
+        kpos = blk_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 3)
+        mask = jnp.logical_and(kpos <= qpos, kpos < kv_len)
+        if window is not None:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_sc[...]                            # (KV, G, QT, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)                        # (KV, G, QT, bs)
+        scale = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * scale + p.sum(axis=-1, keepdims=True)
+        acc_sc[...] = acc_sc[...] * scale + jnp.einsum(
+            "kgqs,skd->kgqd", p, v, preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    @pl.when(mi == nm - 1)
+    def _finalize():
+        out = acc_sc[...] / jnp.maximum(l_sc[...], 1e-30)
+        o_ref[...] = out.transpose(2, 0, 1, 3).astype(o_ref.dtype)
+
+
+def ragged_fused_fwd(q: jax.Array, kv_pool: jax.Array,
+                     shard_tables: jax.Array, tile_row: jax.Array,
+                     tile_pos: jax.Array, kv_lens: jax.Array, *,
+                     window: int | None = None,
+                     interpret: bool = False) -> jax.Array:
+    """Ragged fused-KV attention over packed query rows.
+
+    q: (T, KV, G, hd) packed queries, T a multiple of :data:`QT`, each
+    row's segment padded so tiles never span rows; fused pool: (N, bs,
+    KV*2, hd); shard_tables: (W, Bs, M); tile_row: (T // QT,) batch slot
+    per tile (-1 = padding tile, skipped); tile_pos: (T // QT,) global
+    position of each tile's first query; kv_lens: (W * Bs,) kv length
+    per batch slot → (T, KV, G, hd).  Padded rows produce finite
+    garbage (``NEG_INF`` is finite) and are dropped by the caller.
+    """
+    T, KV, G, hd = q.shape
+    if T % QT:
+        raise ValueError(f"packed length {T} not a multiple of QT={QT}")
+    N, bs, KV2, _ = kv_pool.shape
+    if KV2 != 2 * KV:
+        raise ValueError(f"fused pool has {KV2} interleaved heads, "
+                         f"query expects {2 * KV}")
+    W, Bs, M = shard_tables.shape
+    tiles = T // QT
+
+    def q_map(t, m, tables_ref, tile_row_ref, tile_pos_ref, kv_lens_ref):
+        return (t, 0, 0, 0)
+
+    def kv_map(t, m, tables_ref, tile_row_ref, tile_pos_ref, kv_lens_ref):
+        slot = jnp.maximum(tile_row_ref[t], 0)
+        idx = _table_index(slot, m, W=W, Bs=Bs, M=M)
+        return (jnp.maximum(tables_ref[idx], 0), 0, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(tiles, M),
+        in_specs=[
+            pl.BlockSpec((QT, KV, G, hd), q_map),
+            pl.BlockSpec((1, bs, KV2, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((QT, KV, G, hd), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G, QT, 1), jnp.float32),
+            pltpu.VMEM((KV, G, QT, 1), jnp.float32),
+            pltpu.VMEM((KV, G, QT, hd), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_ragged_kernel, bs=bs, window=window,
+                             W=W, Bs=Bs, M=M)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, KV, G, hd), q.dtype),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "arbitrary")),
+        interpret=interpret,
+    )(shard_tables.reshape(-1), tile_row, tile_pos, kv_lens,
+      q, kv_pool)

@@ -188,7 +188,7 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         # XLA:CPU legalises bf16 scatter through f32 operand round-trips;
         # on TPU the paged write is a native in-place bf16 scatter.  The
         # estimate lets fits_hbm subtract the CPU-only artifact.
-        pool_keys = ("k", "v", "mla_c", "mla_rope")
+        pool_keys = ("kv", "mla_c", "mla_rope")
         pool_global = sum(
             int(np_prod(st_specs[k].shape)) * st_specs[k].dtype.itemsize
             for k in pool_keys if k in st_specs)

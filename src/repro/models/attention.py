@@ -318,6 +318,24 @@ def lookup_slot_blocks(tables: jax.Array, slots: jax.Array,
     return tables[slots % W, slots // W, blk_idx]
 
 
+def fuse_kv(k: jax.Array, v: jax.Array) -> jax.Array:
+    """Head-interleave K and V along the head axis (K even, V odd).
+
+    ``(..., KV, hd) × 2 → (..., KV*2, hd)`` — the fused-pool layout of
+    the paged-attention kernel, where one logical block is ONE
+    contiguous DMA instead of two.  Pure permutation: ``split_fused_kv``
+    inverts it bit for bit.
+    """
+    return jnp.stack([k, v], axis=-2).reshape(
+        *k.shape[:-2], 2 * k.shape[-2], k.shape[-1])
+
+
+def split_fused_kv(kv: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Strided K/V views of a head-interleaved fused array (inverse of
+    :func:`fuse_kv`)."""
+    return kv[..., 0::2, :], kv[..., 1::2, :]
+
+
 def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
                                v_pool: jax.Array, block_tables: jax.Array,
                                lengths: jax.Array,

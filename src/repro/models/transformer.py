@@ -7,7 +7,9 @@ parameters (HLO stays small at 512 devices).  Each layer = mixer + ffn
 
 Decode state is a dict pytree of per-kind cache pools:
 
-  kv:    k/v     (L_attn, N+1, bs, KV, hd)   paged GQA cache (+1 = scatter sink)
+  kv:    fused k/v (L_attn, N, bs, KV*2, hd) paged GQA cache, head-
+         interleaved (K even, V odd) so one logical block is ONE
+         contiguous DMA (writes past the pool scatter-drop)
   mla:   c/rope  (L, N+1, bs, rank|rope_hd)  paged latent cache
   mamba: conv/ssm (L_m, B, K-1, DI) / (L_m, B, DI, dstate)
   rwkv:  last_x/wkv (L, B, D) / (L, B, nH, 64, 64)
@@ -361,8 +363,9 @@ def cache_spec(cfg: ModelConfig, batch: int, max_len: int,
         spec["mla_c"] = ((L, N, bs, m.kv_lora_rank), dtype)
         spec["mla_rope"] = ((L, N, bs, m.rope_head_dim), dtype)
     if n_attn:
-        spec["k"] = ((n_attn, N, bs, KV, hd), dtype)
-        spec["v"] = ((n_attn, N, bs, KV, hd), dtype)
+        # fused head-interleaved K/V pool: K on even, V on odd head
+        # indices — one block, one DMA (see kernels/paged_attention)
+        spec["kv"] = ((n_attn, N, bs, 2 * KV, hd), dtype)
     if n_mamba:
         mm = cfg.mamba
         spec["conv"] = ((n_mamba, batch, mm.d_conv - 1, cfg.d_inner), dtype)
@@ -413,7 +416,7 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
         st["tables"] = tables
     else:
         (B_, M), _ = spec["tables"]
-        N = spec["k"][0][1] if "k" in spec else (
+        N = spec["kv"][0][1] if "kv" in spec else (
             spec["mla_c"][0][1] if "mla_c" in spec else batch * M)
         st["tables"] = sp_identity_tables(batch, M, N, batch_shards,
                                           seq_shards)
@@ -423,17 +426,30 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
 
 
 # ================================================================ decode step
-def _paged_attn(q, k_pool, v_pool, tables, lengths, *, page_impl, window,
+def _paged_attn(q, kv_pool, tables, lengths, *, page_impl, window,
                 mesh=None, batch_axes=(), seq_axes=()):
     """Dispatch one decode-attention step over either table layout.
 
+    ``kv_pool`` is the fused head-interleaved ``(N, bs, KV*2, hd)`` pool;
     ``tables`` is the monolithic ``(B, M)`` table or the device-native
-    ``(W, Bs, M)`` shard stack.  The Pallas kernel consumes the stack
-    directly (shard-native page walk — no assembly anywhere); the jnp
-    reference and the sequence-parallel collectives view it monolithically
-    through a traced transpose (never a host-side rebuild).
+    ``(W, Bs, M)`` shard stack.  The Pallas kernel consumes both
+    directly (shard-native page walk over one-DMA fused blocks, with the
+    autotuned multi-depth pipeline); the jnp reference and the
+    sequence-parallel collectives see the split K/V *views* of the fused
+    pool and the monolithic table through traced slices/transposes
+    (never a host-side rebuild).
     """
     B = q.shape[0]
+    if page_impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.paged_attention import autotune as pa_autotune
+        from repro.kernels.paged_attention import ops as pa_ops
+        _, bs, KV2, hd = kv_pool.shape
+        tuned = pa_autotune.get_tuning(KV2 // 2, hd, bs)
+        return pa_ops.paged_attention(
+            q, kv_pool, tables, lengths, window=window,
+            buffer_depth=tuned.buffer_depth,
+            interpret=(page_impl == "pallas_interpret"))
+    k_pool, v_pool = attn_mod.split_fused_kv(kv_pool)
     if page_impl in ("sp", "sp_opt"):
         from repro.distributed.collectives import paged_decode_attention_sp
         return paged_decode_attention_sp(
@@ -441,11 +457,6 @@ def _paged_attn(q, k_pool, v_pool, tables, lengths, *, page_impl, window,
             attn_mod.assemble_shard_tables(tables)[:B], lengths, mesh=mesh,
             batch_axes=batch_axes, seq_axes=seq_axes, window=window,
             table_cols_sharded=(page_impl == "sp_opt"))
-    if page_impl in ("pallas", "pallas_interpret"):
-        from repro.kernels.paged_attention import ops as pa_ops
-        return pa_ops.paged_attention(
-            q, k_pool, v_pool, tables, lengths, window=window,
-            interpret=(page_impl == "pallas_interpret"))
     return attn_mod.paged_decode_attention_ref(
         q, k_pool, v_pool, attn_mod.assemble_shard_tables(tables)[:B],
         lengths, window=window)
@@ -527,11 +538,10 @@ def decode_step(params, cfg: ModelConfig, state: dict, tokens: jax.Array, *,
             a = attn_ids.index(i)
             h = rms_norm(x[:, None], lp["mix"]["norm"], cfg.norm_eps)
             q, k, v = attn_mod.qkv_proj(lp["mix"], h, cfg, positions)
-            st["k"] = _write_token_kv_stacked(st["k"], a, st["tables"],
-                                              pos, k[:, 0], bs)
-            st["v"] = _write_token_kv_stacked(st["v"], a, st["tables"],
-                                              pos, v[:, 0], bs)
-            o = _paged_attn(q[:, 0], st["k"][a], st["v"][a], st["tables"],
+            st["kv"] = _write_token_kv_stacked(
+                st["kv"], a, st["tables"], pos,
+                attn_mod.fuse_kv(k[:, 0], v[:, 0]), bs)
+            o = _paged_attn(q[:, 0], st["kv"][a], st["tables"],
                             pos + 1, page_impl=page_impl,
                             window=cfg.attn.window, mesh=mesh,
                             batch_axes=batch_axes, seq_axes=seq_axes)
@@ -584,8 +594,17 @@ def decode_step(params, cfg: ModelConfig, state: dict, tokens: jax.Array, *,
 
 def _mla_paged_decode(lp, x, positions, st, layer, cfg, *, page_impl, mesh,
                       batch_axes, seq_axes):
-    # the MLA kernels are not shard-native (yet): view the shard stack
-    # monolithically through a traced transpose
+    if page_impl in ("pallas", "pallas_interpret"):
+        # shard-native: the MLA kernel walks the (W, Bs, M) stack through
+        # the same _table_index arithmetic as paged_attention — no traced
+        # transpose is materialized on this path
+        from repro.kernels.mla_attention import ops as mla_ops
+        return mla_ops.mla_paged_decode(
+            lp, x, positions, st["mla_c"][layer], st["mla_rope"][layer],
+            st["tables"], st["lengths"] + 1, cfg,
+            interpret=(page_impl == "pallas_interpret"))
+    # the jnp reference and sp collectives view the stack monolithically
+    # through a traced transpose (never a host-side rebuild)
     tables = attn_mod.assemble_shard_tables(st["tables"])[:x.shape[0]]
     if page_impl in ("sp", "sp_opt"):
         from repro.distributed.collectives import mla_decode_sp
@@ -594,12 +613,6 @@ def _mla_paged_decode(lp, x, positions, st, layer, cfg, *, page_impl, mesh,
                              st["lengths"] + 1, cfg, mesh=mesh,
                              batch_axes=batch_axes, seq_axes=seq_axes,
                              table_cols_sharded=(page_impl == "sp_opt"))
-    if page_impl in ("pallas", "pallas_interpret"):
-        from repro.kernels.mla_attention import ops as mla_ops
-        return mla_ops.mla_paged_decode(
-            lp, x, positions, st["mla_c"][layer], st["mla_rope"][layer],
-            tables, st["lengths"] + 1, cfg,
-            interpret=(page_impl == "pallas_interpret"))
     return mla_mod.mla_decode_ref(lp, x, positions, st["mla_c"][layer],
                                   st["mla_rope"][layer], tables,
                                   st["lengths"] + 1, cfg)
@@ -709,8 +722,8 @@ def prefill(params, cfg: ModelConfig, tokens: jax.Array, state: dict, *,
     def write_caches(stt, i_dyn, a_dyn, m_dyn, c):
         if "kv" in c:
             k, v = c["kv"]
-            stt["k"] = _dyn_scatter(stt["k"], a_dyn, k)
-            stt["v"] = _dyn_scatter(stt["v"], a_dyn, v)
+            stt["kv"] = _dyn_scatter(stt["kv"], a_dyn,
+                                     attn_mod.fuse_kv(k, v))
         if "mla" in c and c["mla"] is not None:
             ckv, krope = c["mla"]
             stt["mla_c"] = _dyn_scatter(stt["mla_c"], i_dyn, ckv)
@@ -839,19 +852,15 @@ def prefill_chunk(params, cfg: ModelConfig, tokens: jax.Array, state: dict,
         _, ffn = sig
         h = rms_norm(x, lp["mix"]["norm"], cfg.norm_eps)
         q, k, v = attn_mod.qkv_proj(lp["mix"], h, cfg, positions)
-        kp = jax.lax.dynamic_index_in_dim(pools["k"], a_dyn, 0,
-                                          keepdims=False)
-        vp = jax.lax.dynamic_index_in_dim(pools["v"], a_dyn, 0,
-                                          keepdims=False)
-        kp = scatter_chunk(kp, k)
-        vp = scatter_chunk(vp, v)
+        kvp = jax.lax.dynamic_index_in_dim(pools["kv"], a_dyn, 0,
+                                           keepdims=False)
+        kvp = scatter_chunk(kvp, attn_mod.fuse_kv(k, v))
         pools = dict(pools)
-        pools["k"] = jax.lax.dynamic_update_index_in_dim(pools["k"], kp,
-                                                         a_dyn, 0)
-        pools["v"] = jax.lax.dynamic_update_index_in_dim(pools["v"], vp,
-                                                         a_dyn, 0)
+        pools["kv"] = jax.lax.dynamic_update_index_in_dim(pools["kv"], kvp,
+                                                          a_dyn, 0)
+        kw, vw = attn_mod.split_fused_kv(gather_window(kvp))
         o = attn_mod.chunked_attention_fwd(
-            q, gather_window(kp), gather_window(vp), causal=True,
+            q, kw, vw, causal=True,
             window=cfg.attn.window, q_offset=start)
         B_, C_, H, hd = o.shape
         x = x + o.reshape(B_, C_, H * hd) @ lp["mix"]["wo"]
@@ -884,3 +893,120 @@ def prefill_chunk(params, cfg: ModelConfig, tokens: jax.Array, state: dict,
             blk, (x, pools), (params["body"], jnp.arange(n_blocks)))
     st.update(pools)
     return st
+
+
+def ragged_step(params, cfg: ModelConfig, state: dict, tokens: jax.Array,
+                token_row: jax.Array, token_pos: jax.Array,
+                tile_row: jax.Array, tile_pos: jax.Array,
+                kv_lens: jax.Array, last_index: jax.Array, *,
+                page_impl: str = "ref",
+                moe_groups: int = 1) -> tuple[jax.Array, dict]:
+    """One *ragged* engine step: every chunked-prefill AND decode row of
+    the scheduler batch packed into one fixed-shape token stream and one
+    attention kernel call per layer.
+
+    tokens/token_row/token_pos: (T,) packed incoming tokens, their batch
+    slots (-1 = padding, writes drop) and global positions; tile_row/
+    tile_pos: (T // QT,) per-query-tile descriptor for the kernel;
+    kv_lens: (num_slots,) kv length of each slot *after* this step's
+    writes land; last_index: (num_slots,) packed index of each slot's
+    final real token (-1 = inactive slot — its logits row is garbage and
+    its length is left untouched).  All shapes are static, so the whole
+    mixed step — any blend of prefill chunks and single-token decodes —
+    compiles exactly once.  Returns (logits (num_slots, V) gathered at
+    each slot's last token, new state).
+
+    Per layer the incoming fused K/V rows are scattered *before* the
+    attention call (so a chunk attends its own tokens, matching
+    :func:`prefill_chunk`), and the ragged fused kernel masks causality,
+    length, window and holes per (query, key) element — decode rows are
+    simply q_len-1 chunks, so the numerics match :func:`decode_step` and
+    :func:`prefill_chunk` exactly.
+    """
+    if any(m != "attn" for m in cfg.mixers) or cfg.enc_dec:
+        raise NotImplementedError(
+            "ragged_step supports attention-only decoder models; "
+            f"got mixers={cfg.mixers} enc_dec={cfg.enc_dec}")
+    T = tokens.shape[0]
+    bs = BLOCK_SIZE
+    st = dict(state)
+    M = st["tables"].shape[-1]
+    x = embed(tokens, params["embed"])                   # (T, D)
+    positions = token_pos[None]                          # (1, T)
+    prefix, period = cfg.segmentation()
+
+    # per-token scatter targets: padding rows, non-resident blocks and
+    # out-of-window positions all map past the pool end (mode="drop")
+    valid = token_row >= 0
+    slot = jnp.maximum(token_row, 0)
+    blk_idx = token_pos // bs
+    off = token_pos % bs
+    phys = attn_mod.lookup_slot_blocks(
+        st["tables"], slot, jnp.minimum(blk_idx, M - 1))
+    drop = valid & (phys >= 0) & (blk_idx < M)
+
+    def ragged_attn(q, kvp):
+        """q: (T, H, hd) over the fused (N, bs, KV*2, hd) layer pool."""
+        if page_impl in ("pallas", "pallas_interpret"):
+            from repro.kernels.paged_attention import ops as pa_ops
+            return pa_ops.ragged_paged_attention(
+                q, kvp, st["tables"], tile_row, tile_pos, kv_lens,
+                window=cfg.attn.window,
+                interpret=(page_impl == "pallas_interpret"))
+        from repro.kernels.paged_attention.ref import ragged_fused_ref
+        return ragged_fused_ref(q, kvp, st["tables"], token_row,
+                                token_pos, kv_lens,
+                                window=cfg.attn.window)
+
+    def run_layer(lp, x, pools, a_dyn, sig):
+        _, ffn = sig
+        h = rms_norm(x[None], lp["mix"]["norm"], cfg.norm_eps)
+        q, k, v = attn_mod.qkv_proj(lp["mix"], h, cfg, positions)
+        rows = attn_mod.fuse_kv(k[0], v[0])              # (T, KV*2, hd)
+        kvp = jax.lax.dynamic_index_in_dim(pools["kv"], a_dyn, 0,
+                                           keepdims=False)
+        tgt = jnp.where(drop, jnp.maximum(phys, 0), kvp.shape[0])
+        kvp = kvp.at[tgt, off].set(rows.astype(kvp.dtype), mode="drop")
+        pools = dict(pools)
+        pools["kv"] = jax.lax.dynamic_update_index_in_dim(
+            pools["kv"], kvp, a_dyn, 0)
+        o = ragged_attn(q[0], kvp)                       # (T, H, hd)
+        x = x + o.reshape(T, -1) @ lp["mix"]["wo"]
+        if ffn == "dense":
+            from repro.models.layers import dense_ffn
+            x = dense_ffn(lp["ffn"], x[None], cfg.norm_eps)[0]
+        else:
+            out, _ = moe_mod.moe_ffn(lp["ffn"], x[None], cfg,
+                                     num_groups=moe_groups)
+            x = out[0]
+        return x, pools
+
+    pools = {k: st[k] for k in st if k not in ("tables", "lengths")}
+    for i in range(prefix):
+        x, pools = run_layer(params["prefix"][i], x, pools, i,
+                             cfg.layer_sig(i))
+    if period and params["body"]:
+        sigs = [cfg.layer_sig(prefix + j) for j in range(period)]
+        n_blocks = (cfg.n_layers - prefix) // period
+
+        def blk(carry, inp):
+            x, pl = carry
+            lps, b = inp
+            for j in range(period):
+                x, pl = run_layer(lps[j], x, pl, prefix + b * period + j,
+                                  sigs[j])
+            return (x, pl), None
+
+        (x, pools), _ = jax.lax.scan(
+            blk, (x, pools), (params["body"], jnp.arange(n_blocks)))
+    st.update(pools)
+
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)  # (T, D)
+    h_last = h[jnp.maximum(last_index, 0)]               # (slots, D)
+    table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = unembed(h_last[:, None], table)[:, 0]
+    st["lengths"] = jnp.where(last_index >= 0,
+                              kv_lens[:st["lengths"].shape[0]].astype(
+                                  jnp.int32),
+                              st["lengths"])
+    return logits, st

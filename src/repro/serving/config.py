@@ -71,6 +71,13 @@ class EngineConfig(ConfigBase):
     # (the engine falls back to monolithic prefill otherwise).
     chunked_prefill: bool = False
     prefill_chunk: int = 2             # blocks per prefill chunk
+    # Ragged fused-KV serving: fold every slot's incoming tokens —
+    # prefill chunks and decode rows alike — into ONE ragged kernel call
+    # per engine step (scalar-prefetched cu_q_lens/cu_kv_lens drive the
+    # in-kernel row walk).  Requires ``chunked_prefill`` (the chunk state
+    # machine provides admission/growth); non-attention mixers fall back
+    # to the per-slot path exactly like chunked prefill does.
+    ragged_kernel: bool = False
 
     def __post_init__(self) -> None:
         if self.num_blocks <= 0 or self.max_batch <= 0:
@@ -98,6 +105,10 @@ class EngineConfig(ConfigBase):
         if self.prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1 block, "
                              f"got {self.prefill_chunk}")
+        if self.ragged_kernel and not self.chunked_prefill:
+            raise ValueError("ragged_kernel requires chunked_prefill "
+                             "(the chunk state machine drives admission "
+                             "and reservation growth)")
 
     def governor_config(self) -> Optional[GovernorConfig]:
         """The resolved admission config (None ⇒ governor disabled)."""

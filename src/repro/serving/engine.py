@@ -173,9 +173,33 @@ class Engine:
         if self._chunked and self.governor is not None:
             self.governor.chunk_blocks = config.prefill_chunk
 
+        # Ragged fused-KV serving: every slot's incoming tokens — prefill
+        # chunks and decode rows alike — pack into ONE fixed-shape token
+        # stream and one ragged kernel call per layer per step.  The
+        # token capacity is static (max_batch rows, each padded to the
+        # kernel's query-tile multiple), so the whole mixed step keeps
+        # the chunk path's one-trace contract (_prefill_chunk_traces).
+        self._ragged = config.ragged_kernel and self._chunked
+        self._kernel_calls = 0
+        self._ragged_steps = 0
+        self._kernel_dma_bytes = 0
+        if self._ragged:
+            from repro.kernels.paged_attention.ops import QT
+            seg = -(-self.chunk_tokens // QT) * QT
+            self._t_cap = config.max_batch * seg
+
         self._decode = jax.jit(
             lambda p, st, t: tfm.decode_step(p, cfg, st, t,
                                              page_impl=config.page_impl))
+
+        def _ragged_traced(p, st, toks, token_row, token_pos, tile_row,
+                           tile_pos, kv_lens, last_index):
+            self._prefill_chunk_traces += 1
+            return tfm.ragged_step(p, cfg, st, toks, token_row, token_pos,
+                                   tile_row, tile_pos, kv_lens, last_index,
+                                   page_impl=config.page_impl)
+
+        self._ragged_call = jax.jit(_ragged_traced)
 
         def _prefill_traced(p, t, st):
             self._prefill_traces += 1
@@ -562,36 +586,12 @@ class Engine:
         seat a more urgent queued request first — bounded, never a
         livelock.
         """
-        m = r.mapping
-        bs = self.cache.block_size
+        if not self._grow_for_chunk(r):
+            return                    # policy deferred this step's growth
         S = len(r.prompt)
         start = r.prefill_pos
         C = self.chunk_tokens
-        full = max(1, -(-(S + r.max_new_tokens) // bs))
-        # cover this chunk's tokens plus one active tail block, capped at
-        # the full window (which admission already proved can ever fit)
-        target = min(-(-(start + C) // bs) + 1, full)
-        grow = target - m.num_blocks
-        if grow > 0:
-            gov = self.governor
-            if gov is not None:
-                if gov.defer_growth(r, grow, self.sched.queue):
-                    return            # yield this step's headroom
-                self._reserve_settle(r, lambda: gov.on_extend(r, grow))
-            while True:
-                try:
-                    self.cache.extend_sequence(m, grow,
-                                               worker=self._worker_of(r))
-                    break
-                except Exception as e:
-                    if self._make_room(r):
-                        continue
-                    if gov is not None:
-                        raise CapacityError(
-                            f"chunked prefill cannot grow request {r.rid} "
-                            f"by {grow} blocks: pool exhausted and no "
-                            "eviction or preemption victim remains") from e
-                    raise
+        m = r.mapping
         end = min(S, start + C)
         toks = np.zeros((1, C), np.int32)
         toks[0, :end - start] = r.prompt[start:end]
@@ -615,6 +615,41 @@ class Engine:
                                               end=end, step=self.steps))
         if r.prefill_pos >= S:
             r.state = "running"    # decodes this very step (interleaved)
+
+    def _grow_for_chunk(self, r: Request) -> bool:
+        """Grow ``r``'s reservation and mapping ahead of its next prefill
+        chunk — the growth half of :meth:`_prefill_chunk_step`, shared
+        with the ragged pass.  Covers the chunk's tokens plus one active
+        tail block, capped at the full window (which admission already
+        proved can ever fit); returns False when the policy deferred the
+        growth to seat a more urgent queued request first."""
+        m = r.mapping
+        bs = self.cache.block_size
+        S = len(r.prompt)
+        full = max(1, -(-(S + r.max_new_tokens) // bs))
+        target = min(-(-(r.prefill_pos + self.chunk_tokens) // bs) + 1, full)
+        grow = target - m.num_blocks
+        if grow <= 0:
+            return True
+        gov = self.governor
+        if gov is not None:
+            if gov.defer_growth(r, grow, self.sched.queue):
+                return False          # yield this step's headroom
+            self._reserve_settle(r, lambda: gov.on_extend(r, grow))
+        while True:
+            try:
+                self.cache.extend_sequence(m, grow,
+                                           worker=self._worker_of(r))
+                return True
+            except Exception as e:
+                if self._make_room(r):
+                    continue
+                if gov is not None:
+                    raise CapacityError(
+                        f"chunked prefill cannot grow request {r.rid} "
+                        f"by {grow} blocks: pool exhausted and no "
+                        "eviction or preemption victim remains") from e
+                raise
 
     def _grow_for_decode(self, r: Request) -> bool:
         """Chunk-admitted mappings may not cover the next write block yet —
@@ -740,6 +775,11 @@ class Engine:
         if not self.sched.running:
             return 0
 
+        # ragged serving: the whole mixed batch — chunk rows and decode
+        # rows — goes through one fused-KV kernel call per layer
+        if self._ragged:
+            return self._ragged_pass(t0)
+
         # chunked prefill: at most one fixed-shape chunk per prefill-state
         # slot per step, interleaved with the decode below (a request
         # whose last chunk lands this step decodes this step).  Chunk and
@@ -762,24 +802,7 @@ class Engine:
                 if not self.sched.running:
                     return 0
 
-        # copy-on-write pass: the incoming token is (re)written at position
-        # r.length−1, so a sequence still pointing a *shared* block at that
-        # position must diverge onto a private copy first — before the
-        # tables upload below ever shows the decode kernel a shared row it
-        # would write.  At most one copy per request (only a fully-shared
-        # block-aligned prompt leaves the write position shared); the copy
-        # grows the reservation by one block, the detached original stays
-        # in its sharing set (no fence).
-        if self.cache.prefix_sharing:
-            for r in list(self.sched.running.values()):
-                if r.state != "running" or r.mapping is None:
-                    continue     # preempted by a mid-pass reservation grow
-                j = (r.length - 1) // self.cache.block_size
-                if (j < r.mapping.num_blocks
-                        and self.cache.ensure_private(
-                            r.mapping, j, worker=self._worker_of(r))):
-                    self._reserve_settle(
-                        r, lambda: self.governor.on_extend(r, 1))
+        self._cow_pass()
 
         # decode covers only fully-prefilled slots; a mid-prefill slot is
         # excluded from the tables upload (its row reads -1, so the decode
@@ -834,6 +857,153 @@ class Engine:
         self._finish_step(t0, made)
         return made
 
+    def _cow_pass(self) -> None:
+        """Copy-on-write pass: the incoming token is (re)written at
+        position r.length−1, so a sequence still pointing a *shared*
+        block at that position must diverge onto a private copy first —
+        before the tables upload ever shows the kernel a shared row it
+        would write.  At most one copy per request (only a fully-shared
+        block-aligned prompt leaves the write position shared); the copy
+        grows the reservation by one block, the detached original stays
+        in its sharing set (no fence)."""
+        if not self.cache.prefix_sharing:
+            return
+        for r in list(self.sched.running.values()):
+            if r.state != "running" or r.mapping is None:
+                continue         # preempted by a mid-pass reservation grow
+            j = (r.length - 1) // self.cache.block_size
+            if (j < r.mapping.num_blocks
+                    and self.cache.ensure_private(
+                        r.mapping, j, worker=self._worker_of(r))):
+                self._reserve_settle(
+                    r, lambda: self.governor.on_extend(r, 1))
+
+    def _ragged_pass(self, t0: float) -> int:
+        """One ragged engine iteration: every slot's incoming tokens —
+        prefill chunks and single-token decode rows alike — pack into one
+        fixed-shape stream served by ONE ragged fused-KV kernel call per
+        attention layer.  A request whose last chunk lands this step
+        promotes in place: its chunk's last-token logits *are* the first
+        decode logits (same position, same attended prefix), so it emits
+        a token this very step, exactly like the per-slot chunk path.
+        All descriptor shapes are static (``max_batch`` rows padded to
+        the kernel's query-tile multiple), so the whole mixed step keeps
+        the one-trace contract the chunk path pins."""
+        from repro.kernels.paged_attention.ops import build_ragged_descriptor
+
+        # growth (chunk reservations + decode write blocks), then restore
+        # the residency fixpoint, exactly like the per-slot chunk path
+        chunkable: dict[int, Request] = {}
+        progressed = False
+        for slot in sorted(self.sched.running):
+            r = self.sched.running.get(slot)
+            if r is None:
+                continue              # preempted by a mid-pass growth
+            if r.state == "prefill":
+                if self._grow_for_chunk(r):
+                    chunkable[slot] = r
+                    progressed = True
+            elif r.state == "running":
+                progressed |= self._grow_for_decode(r)
+        if progressed:
+            self._settle_residency()
+            if not self.sched.running:
+                return 0
+        self._cow_pass()
+
+        rows = []                     # (slot, request, start, end)
+        for slot in sorted(self.sched.running):
+            r = self.sched.running[slot]
+            if r.state == "prefill":
+                if chunkable.get(slot) is not r:
+                    continue          # growth deferred this step
+                start = r.prefill_pos
+                end = min(len(r.prompt), start + self.chunk_tokens)
+            elif r.state == "running":
+                start, end = r.length - 1, r.length
+            else:
+                continue
+            rows.append((slot, r, start, end))
+        if not rows:
+            self.steps += 1
+            self._finish_step(t0, 0)
+            return 0
+
+        # tables upload covers every row's slot — chunk rows included,
+        # since their scatters and page walks go through the same kernel
+        lengths = np.zeros((self.cache.max_batch,), np.int32)
+        for slot, r, start, end in rows:
+            lengths[slot] = start
+        self.cache.update_tables(
+            {slot: r.mapping for slot, r, _, _ in rows}, lengths)
+
+        d = build_ragged_descriptor(
+            [slot for slot, *_ in rows],
+            [end - start for _, _, start, end in rows],
+            [start for _, _, start, _ in rows],
+            [end for *_, end in rows],
+            num_slots=self.cache.max_batch, t_cap=self._t_cap)
+        flat = np.concatenate([
+            np.asarray(r.prompt[start:end], np.int32)
+            if r.state == "prefill"
+            else np.asarray([r.generated[-1] if r.generated
+                             else r.prompt[-1]], np.int32)
+            for slot, r, start, end in rows])
+        toks = np.zeros((self._t_cap,), np.int32)
+        real = d["token_src"] >= 0
+        toks[real] = flat[d["token_src"][real]]
+
+        logits, new_state = self._ragged_call(
+            self.params, dict(self.cache.state), jnp.asarray(toks),
+            jnp.asarray(d["token_row"]), jnp.asarray(d["token_pos"]),
+            jnp.asarray(d["tile_row"]), jnp.asarray(d["tile_pos"]),
+            jnp.asarray(d["kv_lens"]), jnp.asarray(d["last_index"]))
+        self.cache.state = new_state
+        lg = np.asarray(logits)
+
+        # host-side kernel accounting: one fused descriptor per resident
+        # block per row per attention layer (the split layout would pay
+        # two — see kernels/paged_attention/autotune.KernelCostModel)
+        kvp = self.cache.state["kv"]
+        block_bytes = int(np.prod(kvp.shape[2:])) * kvp.dtype.itemsize
+        bs = self.cache.block_size
+        n_layers = int(kvp.shape[0])
+        self._ragged_steps += 1
+        self._kernel_calls += n_layers
+        self._kernel_dma_bytes += n_layers * block_bytes * sum(
+            -(-end // bs) for *_, end in rows)
+
+        made = 0
+        for slot, r, start, end in rows:
+            if r.state == "prefill":
+                r.prefill_pos = end
+                self.prefill_chunks += 1
+                if self.bus.wants(PrefillChunkDone):
+                    self.bus.publish(PrefillChunkDone(
+                        rid=r.rid, start=start, end=end, step=self.steps))
+                if end < len(r.prompt):
+                    continue          # mid-prompt: no token this step
+                r.state = "running"
+            nxt = int(lg[slot].argmax())
+            r.generated.append(nxt)
+            made += 1
+            if (len(r.generated) >= r.max_new_tokens
+                    or (self.eos is not None and nxt == self.eos)):
+                self.cache.free_sequence(r.mapping,
+                                         worker=self._worker_of(r))
+                r.mapping = None
+                if self.governor is not None:
+                    self.governor.on_release(r)
+                self.sched.complete(r)
+                if self.bus.wants(RequestCompleted):
+                    self.bus.publish(RequestCompleted(
+                        rid=r.rid, n_tokens=len(r.generated),
+                        step=self.steps))
+        self.steps += 1
+        self.tokens_generated += made
+        self._finish_step(t0, made)
+        return made
+
     def _finish_step(self, t0: float, made: int) -> None:
         """Step epilogue: wall-time accounting, the step-latency
         histogram, and the :class:`StepCompleted` span event."""
@@ -856,6 +1026,23 @@ class Engine:
         return {"enabled": True, **self.governor.counters()}
 
     def _engine_metrics(self) -> dict:
+        d = self._base_engine_metrics()
+        if self._ragged:
+            # KERNEL_SCHEMA group — present only on ragged engines, so
+            # default snapshots stay bit for bit on the stable contract
+            from repro.kernels.paged_attention import autotune as pa_at
+            tuned = pa_at.get_tuning(self.cfg.n_kv_heads,
+                                     self.cfg.head_dim,
+                                     self.cache.block_size)
+            d["kernel"] = {
+                "dma_bytes": self._kernel_dma_bytes,
+                "kernel_calls": self._kernel_calls,
+                "pipeline_depth": tuned.buffer_depth,
+                "ragged_steps": self._ragged_steps,
+            }
+        return d
+
+    def _base_engine_metrics(self) -> dict:
         return {
             "steps": self.steps,
             "obs": {"subscriber_errors": self.bus.subscriber_errors},

@@ -130,8 +130,11 @@ class PagedKVCache:
         # swap "device": evicted block contents round-trip through host
         # memory (the storage behind the page cache; latency is real)
         self._swap_store: dict = {}
+        # "kv" is the fused head-interleaved K/V pool — swap, COW
+        # divergence and shard refresh all move ONE contiguous array per
+        # block instead of separate K and V halves
         self._pool_keys = [k for k in self.state
-                           if k in ("k", "v", "mla_c", "mla_rope")]
+                           if k in ("kv", "mla_c", "mla_rope")]
         self.mgr.on_swap_out = self._swap_out
         self.mgr.on_swap_in = self._swap_in
         # event-bus subscriptions: the measured device-shard refresh runs on

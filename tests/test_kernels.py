@@ -11,8 +11,14 @@ from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
 from repro.kernels.mamba_scan.ops import mamba_scan
 from repro.kernels.mamba_scan.ref import mamba_scan_ref
-from repro.kernels.paged_attention.ops import paged_attention
-from repro.kernels.paged_attention.ref import paged_decode_attention_ref
+from repro.kernels.paged_attention.ops import (build_ragged_descriptor,
+                                               paged_attention,
+                                               paged_attention_split,
+                                               ragged_paged_attention,
+                                               shard_descriptor)
+from repro.kernels.paged_attention.ref import (paged_decode_attention_ref,
+                                               ragged_fused_ref)
+from repro.models.attention import fuse_kv, split_fused_kv
 from repro.kernels.rwkv6_scan.ops import rwkv6_scan
 from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
 
@@ -69,26 +75,46 @@ def test_flash_attention_hypothesis(sq, sk, g, causal):
 
 
 # ------------------------------------------------------------ paged attn
+def _paged_case(B, H, KV, hd, bs, M, N, W, seed=0):
+    """Pools, fused pool, monolithic table (+hole) and (W, Bs, M) stack."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
+    kp = jax.random.normal(ks[1], (N, bs, KV, hd), jnp.float32)
+    vp = jax.random.normal(ks[2], (N, bs, KV, hd), jnp.float32)
+    perm = np.random.RandomState(seed).permutation(N)[:B * M]
+    mono = perm.reshape(B, M).astype(np.int32)
+    mono[0, M - 1] = -1                             # hole
+    lengths = jnp.asarray(
+        np.random.RandomState(seed + 1).randint(1, M * bs + 1, (B,)),
+        jnp.int32)
+    if W == 1:
+        tables = jnp.asarray(mono)
+    else:
+        Bs = -(-B // W)
+        stack = np.full((W, Bs, M), -1, np.int32)
+        for b in range(B):
+            stack[b % W, b // W] = mono[b]          # interleaved slot layout
+        tables = jnp.asarray(stack)
+    return q, kp, vp, fuse_kv(kp, vp), tables, jnp.asarray(mono), lengths
+
+
 @pytest.mark.parametrize("B,H,KV,hd,bs,M,N,win", [
     (2, 4, 2, 32, 16, 4, 16, None),
     (3, 8, 8, 64, 32, 3, 12, None),
     (2, 4, 1, 16, 8, 6, 32, 20),
 ])
 def test_paged_attention(B, H, KV, hd, bs, M, N, win):
-    ks = jax.random.split(KEY, 3)
-    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
-    kp = jax.random.normal(ks[1], (N, bs, KV, hd), jnp.float32)
-    vp = jax.random.normal(ks[2], (N, bs, KV, hd), jnp.float32)
-    perm = np.random.RandomState(0).permutation(N)[:B * M]
-    tables = jnp.asarray(perm.reshape(B, M).astype(np.int32))
-    tables = tables.at[0, M - 1].set(-1)            # hole
-    lengths = jnp.asarray(
-        np.random.RandomState(1).randint(1, M * bs + 1, (B,)), jnp.int32)
-    got = paged_attention(q, kp, vp, tables, lengths, window=win,
+    """Fused kernel vs the jnp oracle AND bit-identical to the legacy
+    split-KV baseline (the interleave is a pure permutation)."""
+    q, kp, vp, kv, tables, _, lengths = _paged_case(B, H, KV, hd, bs, M, N, 1)
+    got = paged_attention(q, kv, tables, lengths, window=win,
                           interpret=True)
     want = paged_decode_attention_ref(q, kp, vp, tables, lengths,
                                       window=win)
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    split = paged_attention_split(q, kp, vp, tables, lengths, window=win,
+                                  interpret=True)
+    assert jnp.array_equal(got, split), "fused kernel drifted from split"
 
 
 @pytest.mark.parametrize("B,H,KV,hd,bs,M,N,win,W", [
@@ -98,33 +124,126 @@ def test_paged_attention(B, H, KV, hd, bs, M, N, win):
     (4, 4, 2, 32, 16, 4, 24, None, 4),
 ])
 def test_paged_attention_sharded_layout(B, H, KV, hd, bs, M, N, win, W):
-    """The shard-native page walk: the kernel consumes the (W, Bs, M)
-    interleaved shard stack directly and must match both the sharded
-    oracle and the monolithic run on the equivalent 2-D table."""
+    """The shard-native page walk: the fused kernel consumes the
+    (W, Bs, M) interleaved shard stack directly and must match both the
+    fused oracle and the monolithic run on the equivalent 2-D table."""
     from repro.kernels.paged_attention.ref import (
-        paged_decode_attention_sharded_ref)
-    ks = jax.random.split(KEY, 3)
-    q = jax.random.normal(ks[0], (B, H, hd), jnp.float32)
-    kp = jax.random.normal(ks[1], (N, bs, KV, hd), jnp.float32)
-    vp = jax.random.normal(ks[2], (N, bs, KV, hd), jnp.float32)
-    perm = np.random.RandomState(0).permutation(N)[:B * M]
-    mono = perm.reshape(B, M).astype(np.int32)
-    mono[0, M - 1] = -1                             # hole
-    lengths = jnp.asarray(
-        np.random.RandomState(1).randint(1, M * bs + 1, (B,)), jnp.int32)
-    Bs = -(-B // W)
-    stack = np.full((W, Bs, M), -1, np.int32)
-    for b in range(B):
-        stack[b % W, b // W] = mono[b]              # interleaved slot layout
-    stack = jnp.asarray(stack)
-    got = paged_attention(q, kp, vp, stack, lengths, window=win,
+        paged_decode_attention_fused_ref)
+    q, kp, vp, kv, stack, mono, lengths = _paged_case(
+        B, H, KV, hd, bs, M, N, W)
+    got = paged_attention(q, kv, stack, lengths, window=win,
                           interpret=True)
-    want = paged_decode_attention_sharded_ref(q, kp, vp, stack, lengths,
-                                              window=win)
+    want = paged_decode_attention_fused_ref(q, kv, stack, lengths,
+                                            window=win)
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
-    mono_run = paged_attention(q, kp, vp, jnp.asarray(mono), lengths,
+    mono_run = paged_attention(q, kv, mono, lengths,
                                window=win, interpret=True)
     np.testing.assert_allclose(got, mono_run, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("depth", [2, 4])
+@pytest.mark.parametrize("W,win", [(1, None), (2, 20), (4, None)])
+def test_paged_attention_pipelined(W, win, depth):
+    """Multi-depth manual DMA buffering is bit-identical to the
+    unpipelined fused walk — pipelining only moves *when* bytes arrive
+    in VMEM, never what the flash step computes."""
+    B, H, KV, hd, bs, M, N = 4, 4, 2, 16, 8, 5, 24
+    q, _, _, kv, tables, _, lengths = _paged_case(B, H, KV, hd, bs, M, N, W)
+    base = paged_attention(q, kv, tables, lengths, window=win,
+                           interpret=True)
+    piped = paged_attention(q, kv, tables, lengths, window=win,
+                            buffer_depth=depth, interpret=True)
+    assert jnp.array_equal(base, piped), f"depth={depth} drifted"
+
+
+def test_shard_descriptor_collapses_layout_dispatch():
+    t2 = jnp.zeros((3, 4), jnp.int32)
+    flat, W, Bs, M = shard_descriptor(t2)
+    assert (W, Bs, M) == (1, 3, 4) and flat.shape == (1, 3, 4)
+    t3 = jnp.zeros((2, 2, 4), jnp.int32)
+    flat, W, Bs, M = shard_descriptor(t3)
+    assert (W, Bs, M) == (2, 2, 4)
+    with pytest.raises(ValueError):
+        shard_descriptor(jnp.zeros((4,), jnp.int32))
+
+
+# ----------------------------------------------------------- ragged fused
+@pytest.mark.parametrize("W", [1, 2, 4])
+@pytest.mark.parametrize("win", [None, 12])
+def test_ragged_fused(W, win):
+    """Mixed chunked-prefill + decode rows in ONE kernel call, swept over
+    shard layouts, holes and SWA windows, vs the pure-jnp oracle."""
+    B, H, KV, hd, bs, M, N = 5, 4, 2, 16, 8, 5, 40
+    q0, kp, vp, kv, tables, mono, _ = _paged_case(B, H, KV, hd, bs, M, N, W,
+                                                  seed=3 + W)
+    # slot 0: mid-prompt chunk; slot 2: decode; slot 3: prompt head chunk
+    slot_ids, q_lens, q_starts, kv_lens = [0, 2, 3], [11, 1, 5], [3, 19, 0], \
+        [14, 20, 5]
+    num_slots = B if W == 1 else tables.shape[0] * tables.shape[1]
+    d = build_ragged_descriptor(slot_ids, q_lens, q_starts, kv_lens,
+                                num_slots=num_slots, t_cap=48)
+    assert list(d["cu_q_lens"]) == [0, 11, 12, 17]
+    assert list(d["cu_kv_lens"]) == [0, 14, 34, 39]
+    rng = np.random.RandomState(0)
+    qp = np.zeros((48, H, hd), np.float32)
+    real = rng.randn(17, H, hd).astype(np.float32)
+    m = d["token_src"] >= 0
+    qp[m] = real[d["token_src"][m]]
+    qp = jnp.asarray(qp)
+    got = ragged_paged_attention(
+        qp, kv, tables, jnp.asarray(d["tile_row"]),
+        jnp.asarray(d["tile_pos"]), jnp.asarray(d["kv_lens"]),
+        window=win, interpret=True)
+    want = ragged_fused_ref(
+        qp, kv, tables, jnp.asarray(d["token_row"]),
+        jnp.asarray(d["token_pos"]), jnp.asarray(d["kv_lens"]), window=win)
+    np.testing.assert_allclose(np.asarray(got)[m], np.asarray(want)[m],
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ragged_decode_rows_match_decode_kernel():
+    """A ragged batch of pure decode rows reproduces the decode kernel's
+    output for every row (same masks: causal ≡ length cut at q = last)."""
+    B, H, KV, hd, bs, M, N = 3, 4, 2, 16, 8, 4, 24
+    q, _, _, kv, tables, _, lengths = _paged_case(B, H, KV, hd, bs, M, N, 1)
+    lengths = jnp.asarray([5, 17, 26], jnp.int32)
+    d = build_ragged_descriptor(
+        list(range(B)), [1] * B, [int(x) - 1 for x in lengths],
+        [int(x) for x in lengths], num_slots=B, t_cap=B * 8)
+    qp = np.zeros((B * 8, H, hd), np.float32)
+    qp[d["token_src"] >= 0] = np.asarray(q)
+    got = ragged_paged_attention(
+        jnp.asarray(qp), kv, tables, jnp.asarray(d["tile_row"]),
+        jnp.asarray(d["tile_pos"]), jnp.asarray(d["kv_lens"]),
+        interpret=True)
+    want = paged_attention(q, kv, tables, lengths, interpret=True)
+    got_rows = np.asarray(got)[np.asarray(d["last_index"])]
+    np.testing.assert_allclose(got_rows, np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- autotune
+def test_autotune_deterministic_and_prefers_pipeline():
+    from repro.kernels.paged_attention import autotune as at
+    at.clear()
+    try:
+        d0 = at.get_tuning(2, 64, 128)
+        assert d0 == at.get_tuning(2, 64, 128)          # deterministic
+        assert d0.buffer_depth == at.DEFAULT_BUFFER_DEPTH
+        model = at.KernelCostModel()
+        # compute-heavy shape: overlap is worth a deeper buffer
+        block_bytes = 128 * 4 * 128 * 4          # bs * KV*2 * hd * f32
+        tuned = at.autotune(32, 128, 128, n_blocks=8,
+                            block_bytes=block_bytes)
+        assert at.get_tuning(32, 128, 128) == tuned      # persisted
+        assert tuned.buffer_depth >= 2                   # pipelined wins
+        naive = model.step_s(8, block_bytes, 128, 32, 128, fused=False,
+                             buffer_depth=1)
+        best = model.step_s(8, block_bytes, 128, 32, 128, fused=True,
+                            buffer_depth=tuned.buffer_depth)
+        assert best < naive                              # tuned <= naive
+    finally:
+        at.clear()
 
 
 # -------------------------------------------------------------- MLA decode
@@ -152,6 +271,18 @@ def test_mla_paged_decode():
                            cfg, interpret=True)
     want = mla_decode_ref(p, x, lengths - 1, cp, rp, tables, lengths, cfg)
     np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+    # shard-native: the kernel walks the (W, Bs, M) stack directly and
+    # must be bit-identical to the monolithic run (no traced transpose)
+    W = 2
+    Bs = -(-B // W)
+    stack = np.full((W, Bs, M), -1, np.int32)
+    mono = np.asarray(tables)
+    for b in range(B):
+        stack[b % W, b // W] = mono[b]
+    sharded = mla_paged_decode(p, x, lengths - 1, cp, rp,
+                               jnp.asarray(stack), lengths, cfg,
+                               interpret=True)
+    np.testing.assert_allclose(sharded, got, rtol=1e-6, atol=1e-6)
 
 
 # -------------------------------------------------------------- mamba scan

@@ -1,0 +1,109 @@
+"""Ragged fused-KV serving: mixed prefill+decode batches through ONE
+ragged kernel call per attention layer per engine step.
+
+The fast lane pins the batching rewrite (ragged pass vs the per-slot
+chunked path, reference attention on both sides): bit-identical tokens,
+the one-trace contract, and the one-call-per-layer-per-step counter
+invariant.  The slow lane re-runs the comparison over the interpreted
+pallas kernel (the real scalar-prefetched ragged page walk) and sweeps
+heavier mixes for the nightly lane.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import transformer as tfm
+from repro.models.config import ModelConfig
+from repro.serving.config import EngineConfig
+from repro.serving.engine import Engine
+
+_CFG_KW = dict(name="t", n_layers=1, d_model=32, n_heads=2, n_kv_heads=1,
+               d_ff=64, vocab=64, head_dim=16)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = ModelConfig(**_CFG_KW)
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg, jnp.float32)
+    return cfg, params
+
+
+def _drive(model, *, ragged: bool, page_impl: str, lengths, seed: int = 7,
+           max_batch: int = 4):
+    cfg, params = model
+    eng = Engine(cfg, params, config=EngineConfig(
+        num_blocks=64, max_batch=max_batch, max_seq_len=1024,
+        fpr_enabled=True, admission="fcfs", chunked_prefill=True,
+        prefill_chunk=1, page_impl=page_impl, ragged_kernel=ragged))
+    rng = np.random.RandomState(seed)
+    for i, n in enumerate(lengths):
+        eng.submit(rng.randint(1, _CFG_KW["vocab"], size=n),
+                   max_new_tokens=6 + (i % 3), stream=f"s{i % 2}",
+                   group_id=(i % 2) + 1)
+    while not eng.sched.idle and eng.steps < 10_000:
+        eng.step()
+    toks = [list(map(int, r.generated))
+            for r in sorted(eng.sched.done, key=lambda r: r.rid)]
+    return toks, eng.metrics.snapshot()
+
+
+def test_ragged_tokens_match_chunked(model):
+    """The ragged pass only changes *which call* serves a row — decoded
+    tokens are bit-identical to the per-slot chunked engine, the mixed
+    step compiles exactly once, and every step costs one kernel call per
+    attention layer whatever its prefill/decode blend."""
+    lengths = (40, 200, 170, 300)
+    ref, _ = _drive(model, ragged=False, page_impl="ref", lengths=lengths)
+    got, snap = _drive(model, ragged=True, page_impl="ref",
+                       lengths=lengths)
+    assert got == ref
+    assert snap["engine.prefill_chunk_traces"] == 1
+    assert not snap["engine.prefill_traces"]
+    assert (snap["engine.kernel.kernel_calls"]
+            == _CFG_KW["n_layers"] * snap["engine.kernel.ragged_steps"])
+    assert snap["engine.kernel.dma_bytes"] > 0
+
+
+def test_ragged_kernel_keys_absent_on_default_engines(model):
+    """KERNEL_SCHEMA is an optional group: engines not serving through
+    the ragged kernel must not grow new snapshot keys (the golden schema
+    tests pin exact equality for the default stack)."""
+    _, snap = _drive(model, ragged=False, page_impl="ref", lengths=(40,))
+    assert not [k for k in snap if k.startswith("engine.kernel.")]
+
+
+def test_ragged_requires_chunked_prefill():
+    with pytest.raises(ValueError):
+        EngineConfig(ragged_kernel=True, chunked_prefill=False)
+
+
+@pytest.mark.slow
+def test_ragged_pallas_tokens_match_chunked(model):
+    """The interpreted pallas ragged kernel decodes the exact same
+    tokens as both reference engines."""
+    lengths = (40, 150, 90, 200)
+    ref, _ = _drive(model, ragged=False, page_impl="ref", lengths=lengths)
+    got, snap = _drive(model, ragged=True, page_impl="pallas_interpret",
+                       lengths=lengths)
+    assert got == ref
+    assert snap["engine.prefill_chunk_traces"] == 1
+    assert (snap["engine.kernel.kernel_calls"]
+            == snap["engine.kernel.ragged_steps"])
+
+
+@pytest.mark.slow
+def test_ragged_heavy_mix_sweep(model):
+    """Nightly sweep: more rows than slots, re-queued admissions, and a
+    decode-heavy tail — ragged stays bit-identical to chunked."""
+    for seed, lengths in ((11, (40, 200, 170, 300, 90, 260)),
+                          (12, (310, 20, 150, 40, 90))):
+        ref, _ = _drive(model, ragged=False, page_impl="ref",
+                        lengths=lengths, seed=seed)
+        got, snap = _drive(model, ragged=True, page_impl="ref",
+                           lengths=lengths, seed=seed)
+        assert got == ref, f"seed {seed} diverged"
+        assert snap["engine.prefill_chunk_traces"] == 1
